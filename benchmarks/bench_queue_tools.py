@@ -1,0 +1,71 @@
+"""Queue-tool benchmark (paper Figure 1 / §lsjobs-viewjobs).
+
+A 2,000-job simulated cluster: time lsjobs table rendering, viewjobs
+ViewModel refresh + full interaction script, whojobs aggregation — the
+tools must stay interactive on production-sized queues.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.cli.lsjobs import HEADERS, queue_rows
+from repro.cli.render import render_table
+from repro.cli.viewjobs import ViewModel
+from repro.cli.whojobs import utilisation_rows
+from repro.core import Job, Opts, Queue, SimCluster, SimNode
+
+
+def big_sim(n_jobs: int = 2000) -> SimCluster:
+    sim = SimCluster(nodes=[SimNode(f"n{i:03d}", cpus=128) for i in range(64)])
+    opts = Opts.new(threads=2, memory="2GB", time="10h")
+    for i in range(n_jobs):
+        j = Job(name=f"task-{i % 37}", command="true", opts=opts,
+                sim_duration_s=36000)
+        jid = j.run(sim)
+        sim.get(jid).user = f"user{i % 23}"
+    return sim
+
+
+def run() -> dict:
+    sim = big_sim()
+    q = Queue(backend=sim)
+    n = len(q)
+
+    t0 = time.perf_counter()
+    table = render_table(HEADERS, queue_rows(q), enabled=False)
+    t_ls = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    vm = ViewModel(lambda: list(Queue(backend=sim)))
+    t_vm_init = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    vm.keys("jjjjjG")      # scroll + jump to bottom
+    vm.key("l"); vm.key("s")  # sort by user
+    vm.key("f")
+    for ch in "task-3":
+        vm.key(ch)
+    vm.key("ENTER")        # apply filter
+    vm.render()
+    t_interact = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    render_table(["User", "Running", "Pending", "CPUs", "Mem(GB)", "Share"],
+                 utilisation_rows(q), enabled=False)
+    t_who = time.perf_counter() - t0
+
+    out = {
+        "queue_size": n,
+        "lsjobs_render_ms": t_ls * 1e3,
+        "viewjobs_refresh_ms": t_vm_init * 1e3,
+        "viewjobs_interaction_ms": t_interact * 1e3,
+        "whojobs_ms": t_who * 1e3,
+        "filtered_rows": len(vm.state.rows),
+    }
+    print(f"  {n} jobs in queue")
+    print(f"  lsjobs render:      {out['lsjobs_render_ms']:7.1f} ms")
+    print(f"  viewjobs refresh:   {out['viewjobs_refresh_ms']:7.1f} ms")
+    print(f"  viewjobs interact:  {out['viewjobs_interaction_ms']:7.1f} ms "
+          f"(scroll+sort+filter→{out['filtered_rows']} rows)")
+    print(f"  whojobs aggregate:  {out['whojobs_ms']:7.1f} ms")
+    return out

@@ -1,0 +1,62 @@
+"""End-to-end training benchmark: tokens/s on the local device + the
+fault-tolerance overheads that matter at fleet scale (checkpoint save cost,
+resume cost, data-pipeline straggler recovery)."""
+
+from __future__ import annotations
+
+import tempfile
+import time
+
+import numpy as np
+
+import repro.configs.nbi100m as nbi100m_mod
+from repro.launch.train import build_argparser, train
+
+
+def _mini_config(orig):
+    return orig().replace(
+        name="bench-mini", n_layers=4, d_model=256, n_heads=8, n_kv_heads=8,
+        head_dim=32, d_ff=512, vocab_size=2048,
+    )
+
+
+def run() -> dict:
+    orig = nbi100m_mod.config
+    nbi100m_mod.config = lambda: _mini_config(orig)
+    try:
+        ckpt = tempfile.mkdtemp(prefix="bench-train-")
+        args = build_argparser().parse_args([
+            "--arch", "nbi-100m", "--steps", "30", "--global-batch", "8",
+            "--seq", "128", "--ckpt-dir", ckpt, "--ckpt-every", "10",
+            "--log-every", "10",
+        ])
+        t0 = time.perf_counter()
+        result = train(args)
+        wall = time.perf_counter() - t0
+        losses = [m["loss"] for m in result["metrics"]]
+        toks = 30 * 8 * 128
+
+        # resume cost: restart the same run for 5 more steps
+        t0 = time.perf_counter()
+        args2 = build_argparser().parse_args([
+            "--arch", "nbi-100m", "--steps", "35", "--global-batch", "8",
+            "--seq", "128", "--ckpt-dir", ckpt, "--ckpt-every", "100",
+            "--log-every", "5",
+        ])
+        train(args2)
+        resume_wall = time.perf_counter() - t0
+
+        out = {
+            "steps": 30,
+            "tokens_per_s": toks / wall,
+            "loss_first": losses[0],
+            "loss_last": losses[-1],
+            "learned": losses[-1] < losses[0],
+            "resume_5_steps_s": resume_wall,
+        }
+        print(f"  30 steps of bench-mini: {out['tokens_per_s']:.0f} tok/s, "
+              f"loss {out['loss_first']:.3f} → {out['loss_last']:.3f}")
+        print(f"  restart+5 steps (restore incl. jit): {resume_wall:.1f}s")
+        return out
+    finally:
+        nbi100m_mod.config = orig

@@ -1,0 +1,167 @@
+"""Perf-iteration driver (§Perf): lower one cell with config overrides,
+report the three roofline terms + per-op attribution, and append the
+iteration to results/perf/<arch>__<shape>.jsonl.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --arch mistral-large-123b \
+        --shape train_4k --set seq_shard=True --set remat=selective \
+        --tag seqpar+selremat
+
+Each run is one hypothesis→change→measure cycle; the EXPERIMENTS.md §Perf
+log is written from these artifacts.
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax  # noqa: E402
+
+from repro.analysis.hlo import analyze_hlo  # noqa: E402
+from repro.analysis.roofline import roofline_report  # noqa: E402
+from repro.configs import get_config  # noqa: E402
+from repro.launch.dryrun import SHAPES  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models.registry import build_model  # noqa: E402
+from repro.optim import make_optimizer  # noqa: E402
+from repro.parallel.sharding import resolve_tree, rules_for  # noqa: E402
+from repro.training.steps import (  # noqa: E402
+    abstract_train_state, make_prefill_step, make_serve_step, make_train_step,
+    train_state_logical,
+)
+
+RESULTS = Path(__file__).resolve().parent.parent / "results" / "perf"
+
+
+def parse_override(s: str):
+    key, _, val = s.partition("=")
+    for cast in (int, float):
+        try:
+            return key, cast(val)
+        except ValueError:
+            pass
+    if val in ("True", "False"):
+        return key, val == "True"
+    return key, val
+
+
+def lower_with_overrides(arch, shape, overrides, multi_pod=False):
+    kind, seq, batch = SHAPES[shape]
+    cfg = get_config(arch).replace(**overrides)
+    model = build_model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules_for(
+        cfg, mesh, param_defs=model.param_defs, batch_size=batch,
+        extra_dims={"kv_seq": seq, "heads": cfg.n_heads, "seq": seq},
+        fsdp=cfg.fsdp and kind == "train",
+    )
+    t0 = time.time()
+    if kind == "train":
+        optimizer = make_optimizer(cfg.optimizer)
+        state = abstract_train_state(model, optimizer)
+        state_sh = resolve_tree(mesh, train_state_logical(model, optimizer), rules)
+        batch_sh = resolve_tree(mesh, model.train_input_logical(), rules)
+        step = make_train_step(model, optimizer, rules, mesh)
+        with mesh:
+            lowered = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                              out_shardings=(state_sh, None),
+                              donate_argnums=(0,)).lower(
+                state, model.train_inputs(batch, seq))
+    elif kind == "prefill":
+        params = model.abstract_params()
+        params_sh = resolve_tree(mesh, model.param_logical(), rules)
+        batch_sh = resolve_tree(mesh, model.prefill_input_logical(), rules)
+        step = make_prefill_step(model, rules, mesh)
+        with mesh:
+            lowered = jax.jit(step, in_shardings=(params_sh, batch_sh)).lower(
+                params, model.prefill_inputs(batch, seq))
+    else:
+        params = model.abstract_params()
+        params_sh = resolve_tree(mesh, model.param_logical(), rules)
+        cache = model.cache_defs_fn(batch, seq)
+        cache_sh = resolve_tree(mesh, model.cache_logical_fn(), rules)
+        toks = model.decode_inputs(batch)
+        step = make_serve_step(model, rules, mesh)
+        with mesh:
+            lowered = jax.jit(step, in_shardings=(params_sh, cache_sh, None, None),
+                              out_shardings=(None, cache_sh),
+                              donate_argnums=(1,)).lower(
+                params, cache, toks["tokens"], toks["pos"])
+    compiled = lowered.compile()
+    qb = min(cfg.attn_chunk, seq)
+    st = analyze_hlo(compiled.as_text(), tile_dims=(qb, cfg.attn_chunk))
+    kindmul = {"train": 6.0, "prefill": 2.0, "decode": 2.0}[kind]
+    tokens = batch if kind == "decode" else batch * seq
+    model_flops = kindmul * cfg.active_param_count() * tokens
+    rep = roofline_report(
+        per_device_flops=st.flops,
+        per_device_hbm_bytes=st.hbm_bytes,
+        per_device_wire_bytes=st.collective_wire_bytes,
+        chips=mesh.devices.size,
+        model_flops=model_flops,
+        tokens=tokens,
+    )
+    rep["compile_s"] = round(time.time() - t0, 1)
+    # Pallas-path projection: flash kernel keeps score tiles in VMEM
+    rep["attn_tile_bytes"] = st.attn_tile_bytes
+    rep["memory_s_pallas"] = (st.hbm_bytes - st.attn_tile_bytes) / 819e9
+    rep["step_lb_pallas_s"] = max(
+        rep["compute_s"], rep["memory_s_pallas"], rep["collective_s"]
+    )
+    rep["mfu_pallas"] = (
+        model_flops / (rep["step_lb_pallas_s"] * mesh.devices.size * 197e12)
+        if rep["step_lb_pallas_s"] > 0 else 0.0
+    )
+    rep["top_bytes"] = st.top_bytes(8)
+    rep["collective_by_type"] = st.collective_by_type
+    rep["rules"] = {k: (list(v) if isinstance(v, tuple) else v)
+                    for k, v in rules.items()}
+    return rep
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--set", action="append", default=[], dest="sets",
+                    help="cfg override key=value (repeatable)")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--multi", action="store_true")
+    args = ap.parse_args(argv)
+
+    overrides = dict(parse_override(s) for s in args.sets)
+    rep = lower_with_overrides(args.arch, args.shape, overrides, args.multi)
+    rep.update(arch=args.arch, shape=args.shape, tag=args.tag,
+               overrides=overrides)
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    log = RESULTS / f"{args.arch.replace('-', '_')}__{args.shape}.jsonl"
+    with log.open("a") as fh:
+        fh.write(json.dumps(rep, default=str) + "\n")
+
+    print(f"\n[{args.tag}] {args.arch} × {args.shape} "
+          f"(overrides: {overrides or 'none'})")
+    print(f"  compute    {rep['compute_s']:9.3f} s")
+    print(f"  memory     {rep['memory_s']:9.3f} s   "
+          f"(pallas-path: {rep['memory_s_pallas']:.3f} s — tiles in VMEM)")
+    print(f"  collective {rep['collective_s']:9.3f} s")
+    print(f"  mfu pallas-path {rep['mfu_pallas']:.2%}")
+    print(f"  bottleneck {rep['bottleneck']}   roofline fraction "
+          f"{rep['roofline_fraction_mfu']:.2%}   useful-FLOP ratio "
+          f"{rep['useful_flop_ratio']:.2f}")
+    print(f"  collectives: " + ", ".join(
+        f"{k}={v:.2e}" for k, v in rep["collective_by_type"].items()))
+    print("  top HBM traffic:")
+    for op, b in rep["top_bytes"]:
+        print(f"    {op:22s} {b:.3e}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,123 @@
+"""Roofline table from the dry-run artifacts (deliverable g).
+
+Reads results/dryrun/*.json (written by repro.launch.dryrun), computes the
+three terms per (arch × shape × mesh), identifies the bottleneck and the
+useful-FLOP ratio, and writes results/roofline.md + results/roofline.json.
+
+MODEL_FLOPS conventions (per step):
+  train:   6·N·tokens   (fwd 2·N·T + bwd 4·N·T; N = active params)
+  prefill: 2·N·tokens
+  decode:  2·N·batch    (one new token per sequence)
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+import sys
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.analysis.roofline import V5E, roofline_report  # noqa: E402
+
+RESULTS = Path(__file__).resolve().parent.parent / "results"
+
+
+def model_flops(rec: dict) -> float:
+    n_active = rec["active_param_count"]
+    if rec["kind"] == "train":
+        return 6.0 * n_active * rec["batch"] * rec["seq"]
+    if rec["kind"] == "prefill":
+        return 2.0 * n_active * rec["batch"] * rec["seq"]
+    return 2.0 * n_active * rec["batch"]  # decode: 1 token/row
+
+
+def tokens_per_step(rec: dict) -> float:
+    if rec["kind"] == "decode":
+        return float(rec["batch"])
+    return float(rec["batch"] * rec["seq"])
+
+
+def load_cells(mesh: str = "single") -> list[dict]:
+    out = []
+    for f in sorted(glob.glob(str(RESULTS / "dryrun" / f"*__{mesh}.json"))):
+        rec = json.loads(Path(f).read_text())
+        rec["_file"] = f
+        out.append(rec)
+    return out
+
+
+def analyse(rec: dict) -> dict:
+    rep = roofline_report(
+        per_device_flops=rec["hlo_flops_per_device"],
+        per_device_hbm_bytes=rec["hlo_hbm_bytes_per_device"],
+        per_device_wire_bytes=rec["collective_wire_bytes_per_device"],
+        chips=rec["chips"],
+        model_flops=model_flops(rec),
+        tokens=tokens_per_step(rec),
+    )
+    rep.update(arch=rec["arch"], shape=rec["shape"], kind=rec["kind"],
+               mesh=rec["mesh"])
+    return rep
+
+
+_SUGGEST = {
+    "compute": "reduce recompute (selective remat) / raise arithmetic intensity",
+    "memory": "shrink activation traffic: seq-parallel residual, bf16 stores, fused norms",
+    "collective": "sequence-parallel RS/AG instead of TP all-reduce; overlap with compute",
+}
+
+
+def markdown_table(mesh: str = "single") -> str:
+    rows = []
+    for rec in load_cells(mesh):
+        if rec.get("status") == "skipped":
+            rows.append(
+                f"| {rec['arch']} | {rec['shape']} | — | — | — | — | skipped | "
+                f"{rec['skip_reason'][:46]} |"
+            )
+            continue
+        if rec.get("status") != "ok":
+            rows.append(f"| {rec['arch']} | {rec['shape']} | — | — | — | — | ERROR | |")
+            continue
+        rep = analyse(rec)
+        rows.append(
+            "| {arch} | {shape} | {c:.3f} | {m:.3f} | {l:.3f} | {mfu:.1%} | {bn} | {sg} |".format(
+                arch=rep["arch"], shape=rep["shape"],
+                c=rep["compute_s"], m=rep["memory_s"], l=rep["collective_s"],
+                mfu=rep["roofline_fraction_mfu"], bn=rep["bottleneck"],
+                sg=_SUGGEST[rep["bottleneck"]][:52],
+            )
+        )
+    header = (
+        f"| arch | shape | compute (s) | memory (s) | collective (s) | "
+        f"roofline frac | bottleneck | lever |\n|---|---|---|---|---|---|---|---|"
+    )
+    return header + "\n" + "\n".join(rows)
+
+
+def main() -> int:
+    reports = []
+    for mesh in ("single",):
+        for rec in load_cells(mesh):
+            if rec.get("status") == "ok":
+                reports.append(analyse(rec))
+    (RESULTS / "roofline.json").write_text(json.dumps(reports, indent=1))
+    md = "# Roofline (single-pod 16×16, v5e constants)\n\n" + markdown_table("single")
+    (RESULTS / "roofline.md").write_text(md + "\n")
+    print(md)
+    # headline stats
+    if reports:
+        worst = min(reports, key=lambda r: r["roofline_fraction_mfu"])
+        best = max(reports, key=lambda r: r["roofline_fraction_mfu"])
+        print(f"\nbest  roofline fraction: {best['arch']}/{best['shape']} "
+              f"= {best['roofline_fraction_mfu']:.1%}")
+        print(f"worst roofline fraction: {worst['arch']}/{worst['shape']} "
+              f"= {worst['roofline_fraction_mfu']:.2%}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

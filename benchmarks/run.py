@@ -1,0 +1,139 @@
+"""Benchmark harness — one section per paper claim/table.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run --only eco,roofline
+
+| section    | paper claim it quantifies                                    |
+|------------|--------------------------------------------------------------|
+| eco        | §EcoScheduler: tiers, deferral, peak compute avoided, latency |
+| submission | §Statement of Need: boilerplate reduction, submit throughput  |
+| queue      | Figure 1 / lsjobs-viewjobs-whojobs on a 2,000-job cluster     |
+| kernels    | kernels vs oracles + VMEM budgets (TPU-facing)                |
+| train      | end-to-end training driver: tokens/s, learn, resume           |
+| serve      | batched decode service: prefill/decode throughput             |
+| roofline   | the 40-cell dry-run roofline table (deliverable g)            |
+
+Results land in results/benchmarks.json (+ results/roofline.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+RESULTS = Path(__file__).resolve().parent.parent / "results"
+
+
+def bench_serve() -> dict:
+    import numpy as np
+
+    from repro.configs import get_smoke_config
+    from repro.launch.serve import ServeEngine
+
+    cfg = get_smoke_config("codeqwen1.5-7b")
+    engine = ServeEngine(cfg, batch=4, max_seq=64, seed=0)
+    rng = np.random.default_rng(0)
+    reqs = [rng.integers(0, cfg.vocab_size, size=24).astype(np.int32)
+            for _ in range(8)]
+    t0 = time.perf_counter()
+    engine.serve_requests(reqs, gen_len=16)
+    wall = time.perf_counter() - t0
+    s = engine.stats
+    out = {
+        "requests": len(reqs),
+        "wall_s": wall,
+        "prefill_tok_s": s["prefill_tokens"] / max(s["prefill_s"], 1e-9),
+        "decode_tok_s": s["decode_tokens"] / max(s["decode_s"], 1e-9),
+    }
+    print(f"  {len(reqs)} requests in {wall:.2f}s | "
+          f"prefill {out['prefill_tok_s']:.0f} tok/s | "
+          f"decode {out['decode_tok_s']:.0f} tok/s")
+
+    # continuous batching on a mixed-length load: steps + occupancy
+    from repro.launch.serve import ContinuousBatchingEngine
+
+    mixed = [rng.integers(0, cfg.vocab_size, size=int(n)).astype(np.int32)
+             for n in (6, 20, 6, 20, 6, 20, 6, 20)]
+    cb = ContinuousBatchingEngine(cfg, batch=4, max_seq=64, seed=0)
+    t0 = time.perf_counter()
+    cb.serve(mixed, gen_len=12)
+    out["cb_wall_s"] = time.perf_counter() - t0
+    out["cb_decode_steps"] = cb.stats["decode_steps"]
+    out["cb_occupancy"] = cb.stats["occupancy_sum"] / cb.stats["decode_steps"]
+    static_lb = -(-len(mixed) // 4) * 12
+    print(f"  continuous batching: {len(mixed)} mixed requests, "
+          f"{out['cb_decode_steps']} decode steps "
+          f"(static lower bound {static_lb}), "
+          f"occupancy {out['cb_occupancy']:.2f}")
+    return out
+
+
+def bench_roofline() -> dict:
+    from benchmarks import roofline
+
+    roofline.main()
+    path = RESULTS / "roofline.json"
+    return {"cells": len(json.loads(path.read_text())) if path.exists() else 0}
+
+
+SECTIONS = ["eco", "submission", "queue", "kernels", "train", "serve", "roofline"]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="benchmarks.run")
+    ap.add_argument("--only", default="", help="comma list of sections")
+    args = ap.parse_args(argv)
+    want = [s for s in args.only.split(",") if s] or SECTIONS
+
+    RESULTS.mkdir(exist_ok=True)
+    all_out: dict = {}
+    failures = 0
+    for name in want:
+        print(f"\n=== bench: {name} ===")
+        t0 = time.perf_counter()
+        try:
+            if name == "eco":
+                from benchmarks import bench_eco
+
+                all_out[name] = bench_eco.run()
+            elif name == "submission":
+                from benchmarks import bench_submission
+
+                all_out[name] = bench_submission.run()
+            elif name == "queue":
+                from benchmarks import bench_queue_tools
+
+                all_out[name] = bench_queue_tools.run()
+            elif name == "kernels":
+                from benchmarks import bench_kernels
+
+                all_out[name] = bench_kernels.run()
+            elif name == "train":
+                from benchmarks import bench_train
+
+                all_out[name] = bench_train.run()
+            elif name == "serve":
+                all_out[name] = bench_serve()
+            elif name == "roofline":
+                all_out[name] = bench_roofline()
+            else:
+                print(f"  unknown section {name!r}")
+                continue
+            print(f"  [{name} done in {time.perf_counter() - t0:.1f}s]")
+        except Exception as e:  # noqa: BLE001 — record, keep benching
+            failures += 1
+            all_out[name] = {"error": f"{type(e).__name__}: {e}"}
+            traceback.print_exc()
+    (RESULTS / "benchmarks.json").write_text(json.dumps(all_out, indent=1, default=str))
+    print(f"\nwrote results/benchmarks.json; failures={failures}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,42 @@
+"""Batched serving demo: fixed-shape engine + dynamic request batching.
+
+    PYTHONPATH=src python examples/serve_batched.py
+
+Builds a small dense model, then serves 10 variable-length requests
+through the :class:`repro.launch.serve.ServeEngine`: prompts are grouped
+into fixed (batch, seq) blocks (compile once, reuse for every group),
+prefilled, and decoded token-by-token against the padded KV cache.
+Prints per-phase throughput. Greedy decoding on a random-init model is
+gibberish — the assert is determinism: the same request always yields the
+same tokens regardless of which batch it lands in.
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.launch.serve import ServeEngine
+
+cfg = get_smoke_config("codeqwen1.5-7b").replace(name="serve-demo")
+engine = ServeEngine(cfg, batch=4, max_seq=64, seed=0)
+
+rng = np.random.default_rng(7)
+requests = [
+    rng.integers(0, cfg.vocab_size, size=int(n)).astype(np.int32)
+    for n in rng.integers(4, 32, size=10)
+]
+outs = engine.serve_requests(requests, gen_len=12)
+for i, (req, out) in enumerate(zip(requests, outs)):
+    print(f"req{i}: len={len(req):2d} → {out.tolist()}")
+
+# determinism: rerun one request alone in a different grouping
+again = engine.serve_requests([requests[3]], gen_len=12)[0]
+assert np.array_equal(again, outs[3]), "batching changed a request's output"
+s = engine.stats
+print(f"\nprefill {s['prefill_tokens']} tok in {s['prefill_s']:.2f}s | "
+      f"decode {s['decode_tokens']} tok in {s['decode_s']:.2f}s")
+print("serve_batched OK")

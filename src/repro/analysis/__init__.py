@@ -1,0 +1,4 @@
+from .hlo import HloStats, analyze_hlo
+from .roofline import HW, roofline_report
+
+__all__ = ["HloStats", "analyze_hlo", "HW", "roofline_report"]

@@ -1,0 +1,448 @@
+"""Trip-count-aware HLO accounting for the roofline analysis.
+
+``jax.stages.Compiled.cost_analysis()`` visits each ``while`` body ONCE —
+for scan-over-layers models that undercounts FLOPs by the layer count
+(verified empirically; see EXPERIMENTS.md §Roofline/Method). This module
+parses the *optimized, partitioned* HLO text instead:
+
+* splits the module into computations and builds a name → shape symbol
+  table (operands are name references in optimized HLO),
+* recovers each ``while`` trip count from its
+  ``backend_config={"known_trip_count":{"n":...}}`` (falls back to the
+  condition's compare-against-constant),
+* multiplies nested body costs by trip counts,
+* FLOPs: ``dot`` ops — 2 × result_elems × contracted_extent (elementwise
+  FLOPs ignored; sub-% for these models),
+* HBM bytes: operand + result bytes at op/fusion boundaries (fusion
+  internals excluded — they live in registers/VMEM),
+* collective "wire bytes" per participant with ring formulas:
+    all-reduce 2·s·(N−1)/N · all-gather r·(N−1)/N · reduce-scatter r·(N−1)
+    all-to-all s·(N−1)/N · collective-permute s
+
+Shapes in partitioned HLO are per-device, so all quantities are per-chip.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+    "s2": 1, "u2": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([\d,]*)\]")
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_WHILE_ATTR_RE = re.compile(r"condition=%?([\w\.\-]+),?\s+body=%?([\w\.\-]+)")
+_TRIP_BC_RE = re.compile(r'known_trip_count.*?"n"\s*:\s*"(\d+)"')
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_REPL_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_REPL_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+
+_COLLECTIVE_KINDS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+_FREE_OPS = (
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id",
+)
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_wire_bytes: float = 0.0
+    collective_by_type: dict = dataclasses.field(default_factory=dict)
+    collective_count: float = 0.0
+    while_trip_counts: list = dataclasses.field(default_factory=list)
+    notes: list = dataclasses.field(default_factory=list)
+    # op-kind → accumulated hbm bytes (trip-scaled); for §Perf diagnosis
+    bytes_by_op: dict = dataclasses.field(default_factory=dict)
+    flops_by_op: dict = dataclasses.field(default_factory=dict)
+    # f32 attention score-tile traffic (elementwise fusions whose result is a
+    # (…, qb, kv_chunk) tile). The Pallas flash kernel keeps these tiles in
+    # VMEM, so the kernel-path memory term subtracts them (dot-boundary
+    # streaming of q/k/v/acc stays counted — that is real HBM traffic both
+    # ways). See §Roofline/Method in EXPERIMENTS.md.
+    attn_tile_bytes: float = 0.0
+
+    def merge_scaled(self, other: "HloStats", k: float) -> None:
+        self.flops += k * other.flops
+        self.hbm_bytes += k * other.hbm_bytes
+        self.collective_wire_bytes += k * other.collective_wire_bytes
+        for t, v in other.collective_by_type.items():
+            self.collective_by_type[t] = self.collective_by_type.get(t, 0.0) + k * v
+        self.collective_count += k * other.collective_count
+        self.attn_tile_bytes += k * other.attn_tile_bytes
+        self.while_trip_counts.extend(other.while_trip_counts)
+        for t, v in other.bytes_by_op.items():
+            self.bytes_by_op[t] = self.bytes_by_op.get(t, 0.0) + k * v
+        for t, v in other.flops_by_op.items():
+            self.flops_by_op[t] = self.flops_by_op.get(t, 0.0) + k * v
+
+    def top_bytes(self, n: int = 12) -> list:
+        return sorted(self.bytes_by_op.items(), key=lambda kv: -kv[1])[:n]
+
+
+def _shape_list_bytes(text: str) -> float:
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _first_shape_elems(text: str) -> float:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return 0.0
+    n = 1
+    if m.group(2):
+        for d in m.group(2).split(","):
+            n *= int(d)
+    return float(n)
+
+
+def _split(line: str):
+    """(name, result_text, body_text) for an instruction line."""
+    nm = _NAME_RE.match(line)
+    if not nm:
+        return None, "", line
+    rest = line.split("=", 1)[1]
+    # result shapes run until the op token; op token = first bare word
+    # followed by '(' that is not a shape. Split at the op-name boundary:
+    m = re.search(r"\s([a-z][\w\-]*)\(", rest)
+    if m:
+        return nm.group(1), rest[: m.start()], rest[m.start() :]
+    return nm.group(1), rest, rest
+
+
+class _Module:
+    def __init__(self, hlo: str):
+        self.comps: dict[str, list[str]] = {}
+        self.shapes: dict[str, str] = {}  # op name → result-shape text
+        current = None
+        for raw in hlo.splitlines():
+            line = raw.rstrip()
+            s = line.strip()
+            if s.endswith("{") and (") -> " in s or s.startswith("ENTRY")):
+                name = s.split("(", 1)[0].replace("ENTRY", "").strip().lstrip("%").strip()
+                current = name
+                self.comps[current] = []
+                self.entry = name if s.lstrip().startswith("ENTRY") else getattr(self, "entry", None)
+                continue
+            if s.startswith("}"):
+                current = None
+                continue
+            if current is not None and "=" in s and s.startswith(("%", "ROOT")):
+                self.comps[current].append(s)
+                name, result, _ = _split(s)
+                if name:
+                    self.shapes[name] = result
+        # parameters: "%param_0.1 = f32[...] parameter(0)" already covered.
+
+    def operand_bytes(self, body: str) -> float:
+        total = 0.0
+        inner = body[body.find("(") + 1 :]
+        for name in _OPERAND_RE.findall(inner.split("), ")[0] if "), " in inner else inner):
+            total += _shape_list_bytes(self.shapes.get(name, ""))
+        return total
+
+    def operand_names(self, body: str) -> list:
+        inner = body[body.find("(") + 1 :]
+        return _OPERAND_RE.findall(inner.split("), ")[0] if "), " in inner else inner)
+
+    def fusion_traffic_bytes(self, result_text: str, body: str) -> float:
+        """Realistic HBM traffic (reads + writes) for one fusion.
+
+        Two scan-over-layers corrections, both measured to dominate the
+        naive boundary count on deep stacked models (88-layer mistral:
+        4.7e14 → ~1e13 bytes/step/device, a ~40× fix):
+
+        * a parameter whose only in-fusion consumers are ``dynamic-slice``
+          ops reads only the slices (one layer of the (L, ...) stack), not
+          the stack;
+        * a ``dynamic-update-slice`` whose target is a parameter is an
+          in-place write of the update region (XLA aliases the buffer) —
+          the (L, ...) accumulator is neither fully read nor fully written
+          per trip; the fusion result charges update bytes, not stack bytes.
+        """
+        cm = _CALLS_RE.search(body)
+        names = self.operand_names(body.split("calls=")[0])
+        full_result = _shape_list_bytes(result_text)
+        if not cm or cm.group(1) not in self.comps:
+            return full_result + sum(
+                _shape_list_bytes(self.shapes.get(n, "")) for n in names
+            )
+        lines = self.comps[cm.group(1)]
+        parsed = [(nm, res, bd) for nm, res, bd in map(_split, lines) if nm]
+        op_of = {
+            nm: (re.match(r"\s*([a-z][\w\-]*)\(", bd) or [None, ""])[1]
+            for nm, _, bd in parsed
+        }
+        operands_of = {
+            nm: _OPERAND_RE.findall(bd[bd.find("(") + 1 :]) for nm, _, bd in parsed
+        }
+        result_of = {nm: res for nm, res, _ in parsed}
+        param_of: dict[int, str] = {}
+        dus_updates: dict[str, float] = {}  # DUS name → update bytes
+        root_name = ""
+        for nm, res, bd in parsed:
+            pm = re.search(r"parameter\((\d+)\)", bd)
+            if pm:
+                param_of[int(pm.group(1))] = nm
+            if op_of[nm] == "dynamic-update-slice" and len(operands_of[nm]) >= 2:
+                dus_updates[nm] = _shape_list_bytes(
+                    self.shapes.get(operands_of[nm][1], "")
+                )
+        for ln in lines:
+            if ln.lstrip().startswith("ROOT"):
+                root_name = _split(ln)[0]
+
+        # dtype/layout transforms XLA-TPU folds into the surrounding access —
+        # a convert/copy of the stack never round-trips HBM on the target.
+        _ALIAS_OPS = ("convert", "bitcast", "copy", "reshape")
+
+        def alias_set(seed: str) -> set:
+            out = {seed}
+            grew = True
+            while grew:
+                grew = False
+                for nm in op_of:
+                    if nm in out or op_of[nm] not in _ALIAS_OPS:
+                        continue
+                    if any(o in out for o in operands_of[nm]):
+                        out.add(nm)
+                        grew = True
+            return out
+
+        # ---- reads -------------------------------------------------------
+        total = 0.0
+        for idx, opname in enumerate(names):
+            full = _shape_list_bytes(self.shapes.get(opname, ""))
+            local = param_of.get(idx)
+            if local is None:
+                total += full
+                continue
+            aliases = alias_set(local)
+            charged = 0.0
+            only_cheap = True
+            used = False
+            for nm in op_of:
+                if nm in aliases:
+                    continue
+                hit = [o for o in operands_of[nm] if o in aliases]
+                if not hit:
+                    continue
+                used = True
+                if op_of[nm] == "dynamic-slice":
+                    charged += _shape_list_bytes(result_of.get(nm, ""))
+                elif (
+                    op_of[nm] == "dynamic-update-slice"
+                    and operands_of[nm]
+                    and operands_of[nm][0] in aliases
+                    and all(h == operands_of[nm][0] for h in hit)
+                ):
+                    charged += 0.0  # in-place target: stack not re-read
+                else:
+                    only_cheap = False
+                    break
+            if not used:
+                continue
+            total += charged if only_cheap else full
+
+        # ---- writes ------------------------------------------------------
+        def resolve_write(nm: str) -> float:
+            seen = set()
+            while nm in op_of and op_of[nm] in _ALIAS_OPS and nm not in seen:
+                seen.add(nm)
+                ops = operands_of[nm]
+                if not ops:
+                    break
+                nm = ops[0]
+            if nm in dus_updates:
+                return dus_updates[nm]
+            return _shape_list_bytes(
+                result_of.get(nm, "")
+            ) or full_result
+
+        if root_name and op_of.get(root_name) == "tuple":
+            for el in operands_of[root_name]:
+                total += resolve_write(el)
+        elif root_name:
+            total += resolve_write(root_name)
+        else:
+            total += full_result
+        return total
+
+    def lhs_shape_dims(self, body: str) -> list[int]:
+        inner = body[body.find("(") + 1 :]
+        ops = _OPERAND_RE.findall(inner)
+        if not ops:
+            return []
+        m = _SHAPE_RE.search(self.shapes.get(ops[0], ""))
+        if not m or not m.group(2):
+            return []
+        return [int(d) for d in m.group(2).split(",")]
+
+
+def _group_size(line: str) -> int:
+    m = _REPL_GROUPS_V2_RE.search(line)
+    if m:
+        return max(1, int(m.group(2)))
+    m = _REPL_GROUPS_RE.search(line)
+    if m:
+        return max(1, len([x for x in m.group(1).split(",") if x.strip() != ""]))
+    return 2
+
+
+def analyze_hlo(hlo_text: str, tile_dims: "tuple | None" = None) -> HloStats:
+    """``tile_dims=(qb, kv_chunk)``: classify f32 fusions whose result's two
+    trailing dims equal the attention tile as score-tile traffic (VMEM-
+    resident under the Pallas kernel)."""
+    mod = _Module(hlo_text)
+    memo: dict[str, HloStats] = {}
+
+    def is_tile(result_text: str) -> bool:
+        if tile_dims is None:
+            return False
+        m = _SHAPE_RE.search(result_text)
+        if not m or m.group(1) != "f32" or not m.group(2):
+            return False
+        dims = [int(d) for d in m.group(2).split(",")]
+        return len(dims) >= 2 and tuple(dims[-2:]) == tuple(tile_dims)
+
+    def dot_flops(result: str, body: str) -> float:
+        out = 2.0 * _first_shape_elems(result)
+        m = _CONTRACT_RE.search(body)
+        if not m:
+            return out
+        lhs = mod.lhs_shape_dims(body)
+        contracted = 1
+        for c in (int(x) for x in m.group(1).split(",") if x != ""):
+            if c < len(lhs):
+                contracted *= lhs[c]
+        return out * contracted
+
+    def collective_wire(result: str, body: str, kind: str) -> float:
+        n = _group_size(body)
+        size = _shape_list_bytes(result)
+        if kind == "all-gather":
+            return size * (n - 1) / n
+        if kind == "reduce-scatter":
+            return size * (n - 1)
+        if kind == "all-reduce":
+            return 2.0 * size * (n - 1) / n
+        if kind == "all-to-all":
+            return size * (n - 1) / n
+        return size  # collective-permute
+
+    def cost(comp: str, seen=()) -> HloStats:
+        if comp in memo:
+            return memo[comp]
+        if comp in seen or comp not in mod.comps:
+            return HloStats()
+        st = HloStats()
+        for line in mod.comps[comp]:
+            name, result, body = _split(line)
+            opm = re.match(r"\s*([a-z][\w\-]*)\(", body)
+            op = opm.group(1) if opm else ""
+            if op in _FREE_OPS:
+                continue
+            if op == "while":
+                wm = _WHILE_ATTR_RE.search(body)
+                trips = 1
+                tm = _TRIP_BC_RE.search(line)
+                if tm:
+                    trips = int(tm.group(1))
+                elif wm:
+                    consts = []
+                    for cl in mod.comps.get(wm.group(1), []):
+                        cm = _CONST_RE.search(cl)
+                        if cm:
+                            consts.append(int(cm.group(1)))
+                    trips = max(consts) if consts else 1
+                if wm:
+                    inner = cost(wm.group(2), seen + (comp,))
+                    st.merge_scaled(inner, trips)
+                st.while_trip_counts.append(trips)
+                continue
+            if op in ("conditional", "call", "async-start"):
+                cm = _CALLS_RE.search(body)
+                if cm:
+                    st.merge_scaled(cost(cm.group(1), seen + (comp,)), 1.0)
+                continue
+            coll = next(
+                (k for k in _COLLECTIVE_KINDS if op.startswith(k)), None
+            )
+            if coll and not op.endswith("-done"):
+                wire = collective_wire(result, body, coll)
+                st.collective_wire_bytes += wire
+                st.collective_by_type[coll] = st.collective_by_type.get(coll, 0.0) + wire
+                st.collective_count += 1
+                b = _shape_list_bytes(result)
+                st.hbm_bytes += b
+                st.bytes_by_op[coll] = st.bytes_by_op.get(coll, 0.0) + b
+                continue
+            if op == "dot":
+                fl = dot_flops(result, body)
+                st.flops += fl
+                st.flops_by_op["dot"] = st.flops_by_op.get("dot", 0.0) + fl
+                b = _shape_list_bytes(result) + mod.operand_bytes(body)
+                st.hbm_bytes += b
+                st.bytes_by_op["dot"] = st.bytes_by_op.get("dot", 0.0) + b
+                continue
+            if op == "fusion":
+                b = mod.fusion_traffic_bytes(result, body)
+                st.hbm_bytes += b
+                st.bytes_by_op["fusion"] = st.bytes_by_op.get("fusion", 0.0) + b
+                if is_tile(result):
+                    st.attn_tile_bytes += b
+                cm = _CALLS_RE.search(body)
+                if cm:
+                    for fl_line in mod.comps.get(cm.group(1), []):
+                        fname, fres, fbody = _split(fl_line)
+                        if re.match(r"\s*dot\(", fbody):
+                            fl = dot_flops(fres, fbody)
+                            st.flops += fl
+                            st.flops_by_op["fusion.dot"] = (
+                                st.flops_by_op.get("fusion.dot", 0.0) + fl
+                            )
+                continue
+            if op == "custom-call":
+                # e.g. oneDNN matmul on CPU, TopK — count boundary bytes;
+                # matmul custom-calls also carry flops we cannot see → note.
+                b = _shape_list_bytes(result) + mod.operand_bytes(body)
+                st.hbm_bytes += b
+                st.bytes_by_op["custom-call"] = st.bytes_by_op.get("custom-call", 0.0) + b
+                if "matmul" in body or "dot" in body:
+                    st.notes.append(f"custom-call matmul uncounted: {name}")
+                continue
+            # remaining real ops: boundary bytes (result + operands)
+            b = _shape_list_bytes(result) + mod.operand_bytes(body)
+            st.hbm_bytes += b
+            st.bytes_by_op[op] = st.bytes_by_op.get(op, 0.0) + b
+        memo[comp] = st
+        return st
+
+    entry = getattr(mod, "entry", None)
+    if entry is None:
+        out = HloStats()
+        out.notes.append("no ENTRY found")
+        return out
+    total = cost(entry)
+    total.notes = list(dict.fromkeys(total.notes))
+    return total

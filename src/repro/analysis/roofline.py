@@ -1,0 +1,65 @@
+"""Three-term roofline from dry-run artifacts (TPU v5e constants).
+
+    compute term    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory term     = HLO_bytes / (chips × HBM_bw)
+    collective term = collective_bytes / (chips × link_bw)
+
+HLO quantities come from :mod:`repro.analysis.hlo` (trip-count-aware,
+per-device); ``MODEL_FLOPS = 6·N·D`` (dense) or ``6·N_active·D`` (MoE).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    """TPU v5e per-chip constants (assignment-specified)."""
+
+    peak_flops: float = 197e12  # bf16 FLOP/s
+    hbm_bw: float = 819e9  # bytes/s
+    link_bw: float = 50e9  # bytes/s per ICI link
+    hbm_bytes: float = 16e9  # capacity
+
+
+V5E = HW()
+
+
+def roofline_report(
+    *,
+    per_device_flops: float,
+    per_device_hbm_bytes: float,
+    per_device_wire_bytes: float,
+    chips: int,
+    model_flops: float,
+    tokens: float,
+    hw: HW = V5E,
+) -> dict:
+    """All quantities per step. Returns terms in seconds + diagnosis."""
+    compute_t = per_device_flops / hw.peak_flops
+    memory_t = per_device_hbm_bytes / hw.hbm_bw
+    collective_t = per_device_wire_bytes / hw.link_bw
+    terms = {"compute": compute_t, "memory": memory_t, "collective": collective_t}
+    bottleneck = max(terms, key=terms.get)
+    step_time = max(terms.values())  # perfectly-overlapped lower bound
+    total_hlo_flops = per_device_flops * chips
+    useful_ratio = model_flops / total_hlo_flops if total_hlo_flops else 0.0
+    # roofline fraction: useful model FLOP/s achieved vs peak, at the
+    # overlapped-lower-bound step time
+    mfu = (
+        model_flops / (step_time * chips * hw.peak_flops) if step_time > 0 else 0.0
+    )
+    return {
+        "compute_s": compute_t,
+        "memory_s": memory_t,
+        "collective_s": collective_t,
+        "bottleneck": bottleneck,
+        "step_time_lb_s": step_time,
+        "model_flops": model_flops,
+        "hlo_flops_total": total_hlo_flops,
+        "useful_flop_ratio": useful_ratio,
+        "roofline_fraction_mfu": mfu,
+        "tokens_per_s_lb": tokens / step_time if step_time > 0 else 0.0,
+        "chips": chips,
+    }

@@ -1,0 +1,5 @@
+"""Fault-tolerant sharded checkpointing (save/restore, async, elastic)."""
+
+from .manager import CheckpointManager, restore_tree, save_tree
+
+__all__ = ["CheckpointManager", "restore_tree", "save_tree"]

@@ -1,0 +1,12 @@
+"""Command-line tools (ports of the paper's bin/ suite).
+
+| tool      | purpose                                             |
+|-----------|-----------------------------------------------------|
+| runjob    | submit a command as a SLURM job with resource flags |
+| lsjobs    | list/filter/cancel user jobs (colour table)         |
+| viewjobs  | interactive terminal UI for job management          |
+| waitjobs  | block until jobs matching a pattern complete        |
+| whojobs   | cluster utilisation grouped by user                 |
+| session   | launch an interactive SLURM session                 |
+| nbilaunch | run a declarative tool wrapper (Launcher)           |
+"""

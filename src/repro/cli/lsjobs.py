@@ -1,0 +1,83 @@
+"""lsjobs — colour-coded, human-readable snapshot of the job queue.
+
+A static-table alternative to raw ``squeue`` (the interactive companion is
+``viewjobs``). Supports filtering and bulk-cancel of the filtered set.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.core import Queue, get_backend
+from repro.cli.render import render_table, state_color
+
+HEADERS = ["JobID", "User", "Queue", "JobName", "State",
+           "TimeUsed", "TimeLeft", "TimeLimit", "NodeList", "Reason"]
+
+
+def queue_rows(q: Queue) -> list[list[str]]:
+    return [
+        [j.jobid, j.user, j.queue, j.name, j.state,
+         j.time_used, j.time_left, j.time_limit, j.nodelist, j.reason]
+        for j in q
+    ]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="lsjobs")
+    ap.add_argument("-u", "--user", default=None, help="filter by user")
+    ap.add_argument("--all", action="store_true", help="all users")
+    ap.add_argument("-s", "--state", default=None, help="PENDING/RUNNING/...")
+    ap.add_argument("-n", "--name", default=None, help="job-name regex")
+    ap.add_argument("-q", "--queue", dest="partition", default=None)
+    ap.add_argument("--cancel", action="store_true",
+                    help="cancel every job matching the filters")
+    ap.add_argument("--yes", action="store_true", help="skip confirmation")
+    ap.add_argument("--no-color", action="store_true")
+    args = ap.parse_args(argv)
+
+    backend = get_backend()
+    user = None if args.all else args.user
+    if user is None and not args.all:
+        import getpass
+
+        try:
+            user = getpass.getuser()
+        except Exception:
+            user = None
+    q = Queue(user=user, state=args.state, name=args.name,
+              queue=args.partition, backend=backend)
+
+    if args.cancel:
+        ids = q.ids()
+        if not ids:
+            print("no matching jobs")
+            return 0
+        if not args.yes:
+            print(f"about to cancel {len(ids)} job(s): {' '.join(ids)}")
+            reply = input("proceed? [y/N] ").strip().lower()
+            if reply != "y":
+                print("aborted")
+                return 1
+        q.cancel()
+        print(f"cancelled {len(ids)} job(s)")
+        return 0
+
+    if not len(q):
+        print("no jobs in queue")
+        return 0
+    print(
+        render_table(
+            HEADERS,
+            queue_rows(q),
+            color_for_row=lambda r: state_color(r[4]),
+            enabled=False if args.no_color else None,
+        )
+    )
+    print(f"{len(q)} job(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

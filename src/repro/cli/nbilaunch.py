@@ -1,0 +1,98 @@
+"""nbilaunch — run a declarative tool wrapper (NBI::Launcher port).
+
+    nbilaunch --list                             # discover available wrappers
+    nbilaunch kraken2 reads1=r1.fq db=/dbs/k2 -- --cpus 16 --mem 200
+    nbilaunch train arch=nbi-100m steps=200 --no-eco
+
+Wrapper arguments are ``key=value`` pairs (validated against the wrapper's
+declared inputs/params); flags after ``--`` adjust SLURM resources. Third-
+party wrappers in ``~/.nbi/launchers/*.py`` are discovered automatically.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.core import discover_launchers, LauncherError
+
+
+def parse_kv(pairs: list[str]) -> dict:
+    out = {}
+    for p in pairs:
+        if "=" not in p:
+            raise SystemExit(f"expected key=value, got {p!r}")
+        k, _, v = p.partition("=")
+        # best-effort typing: int → float → str
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        out[k] = v
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="nbilaunch")
+    ap.add_argument("tool", nargs="?", help="wrapper name (see --list)")
+    ap.add_argument("args", nargs="*", help="key=value wrapper arguments")
+    ap.add_argument("--list", action="store_true", help="list available wrappers")
+    ap.add_argument("--launcher-dir", default=None, help=argparse.SUPPRESS)
+    ap.add_argument("--outdir", default=".")
+    ap.add_argument("--cpus", type=int, default=None)
+    ap.add_argument("--mem", default=None, help="GB (bare) or 500MB/8GB")
+    ap.add_argument("--time", default=None, help="hours (bare) or 2h30m")
+    ap.add_argument("--queue", default=None)
+    ap.add_argument("--eco", dest="eco", action="store_true", default=None)
+    ap.add_argument("--no-eco", dest="eco", action="store_false")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="print the generated script, do not submit")
+    ap.add_argument("--now", default=None, help=argparse.SUPPRESS)  # tests
+    args = ap.parse_args(argv)
+
+    found = discover_launchers(args.launcher_dir)
+    if args.list or not args.tool:
+        for name, cls in sorted(found.items()):
+            doc = (cls.__doc__ or "").strip().splitlines()[0] if cls.__doc__ else ""
+            print(f"{name:12s} {doc}")
+        return 0
+
+    if args.tool not in found:
+        print(f"unknown wrapper {args.tool!r}; try --list")
+        return 1
+
+    cls = found[args.tool]
+    try:
+        launcher = cls(outdir=args.outdir, eco=args.eco, **parse_kv(args.args))
+    except LauncherError as e:
+        print(f"error: {e}")
+        return 1
+
+    # resource overrides after construction (mirror runjob's units)
+    from repro.cli.runjob import memory_mb_from_cli
+    from repro.core import parse_time_s
+
+    if args.cpus is not None:
+        launcher.opts.threads = args.cpus
+    if args.mem is not None:
+        launcher.opts.memory_mb = memory_mb_from_cli(args.mem)
+    if args.time is not None:
+        launcher.opts.time_s = parse_time_s(args.time)
+    if args.queue is not None:
+        launcher.opts.queue = args.queue
+
+    if args.dry_run:
+        print(launcher.to_job().script(), end="")
+        return 0
+
+    from datetime import datetime
+
+    now = datetime.fromisoformat(args.now) if args.now else None
+    jobid = launcher.submit(now=now)
+    print(jobid)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

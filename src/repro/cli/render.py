@@ -1,0 +1,90 @@
+"""ANSI table rendering shared by lsjobs / viewjobs / whojobs.
+
+No external dependency (the Perl original uses Text::ASCIITable +
+Term::ANSIColor; this is the equivalent, honouring NO_COLOR and non-tty).
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+RESET = "\x1b[0m"
+COLORS = {
+    "red": "\x1b[31m", "green": "\x1b[32m", "yellow": "\x1b[33m",
+    "blue": "\x1b[34m", "magenta": "\x1b[35m", "cyan": "\x1b[36m",
+    "grey": "\x1b[90m", "bold": "\x1b[1m", "inverse": "\x1b[7m",
+}
+
+STATE_COLORS = {
+    "RUNNING": "green",
+    "PENDING": "yellow",
+    "SUSPENDED": "magenta",
+    "COMPLETING": "cyan",
+    "CONFIGURING": "cyan",
+    "FAILED": "red",
+    "TIMEOUT": "red",
+    "NODE_FAIL": "red",
+    "CANCELLED": "grey",
+    "COMPLETED": "blue",
+}
+
+
+def use_color(force: bool | None = None) -> bool:
+    if force is not None:
+        return force
+    if os.environ.get("NO_COLOR"):
+        return False
+    return sys.stdout.isatty()
+
+
+def paint(text: str, color: str, enabled: bool = True) -> str:
+    if not enabled or color not in COLORS:
+        return text
+    return f"{COLORS[color]}{text}{RESET}"
+
+
+def state_color(state: str) -> str:
+    return STATE_COLORS.get(state, "")
+
+
+def render_table(
+    headers: list[str],
+    rows: list[list[str]],
+    *,
+    color_for_row=None,
+    max_widths: dict | None = None,
+    enabled: bool | None = None,
+) -> str:
+    """Fixed-width ASCII table with optional per-row colouring."""
+    en = use_color(enabled)
+    cols = len(headers)
+    widths = [len(h) for h in headers]
+    srows = [[str(c) for c in r] for r in rows]
+    for r in srows:
+        for i in range(cols):
+            widths[i] = max(widths[i], len(r[i]) if i < len(r) else 0)
+    if max_widths:
+        for i, h in enumerate(headers):
+            if h in max_widths:
+                widths[i] = min(widths[i], max_widths[h])
+
+    def fmt_cell(text, w):
+        text = text if len(text) <= w else text[: max(0, w - 1)] + "…"
+        return text.ljust(w)
+
+    sep = "+".join("-" * (w + 2) for w in widths)
+    sep = f"+{sep}+"
+    out = [sep, "| " + " | ".join(fmt_cell(h, w) for h, w in zip(headers, widths)) + " |", sep]
+    for r in srows:
+        cells = " | ".join(
+            fmt_cell(r[i] if i < len(r) else "", widths[i]) for i in range(cols)
+        )
+        line = f"| {cells} |"
+        if color_for_row:
+            c = color_for_row(r)
+            if c:
+                line = paint(line, c, en)
+        out.append(line)
+    out.append(sep)
+    return "\n".join(out)

@@ -1,0 +1,131 @@
+"""runjob — submit a command as a SLURM job with resource flags.
+
+Paper examples, reproduced exactly:
+
+  runjob -n "assembly" -c 18 -m 64 -t 12 -w ./logs/ \\
+      "flye --nano-raw reads.fastq --out-dir asm"
+
+  runjob -n "align" -c 8 -m 16 --files samples.txt \\
+      "bwa mem ref.fa #FILE# > #FILE#.bam"
+
+  runjob --eco -n "annotate" -t 6 "prokka genome.fa"
+
+Bare ``-m`` is gigabytes and bare ``-t`` is hours (unit suffixes accepted:
+``-m 500MB``, ``-t 2h30m``). Eco mode is ON by default (config key
+``economy_mode``; override per-job with --eco/--no-eco): the EcoScheduler
+injects ``--begin=<next eco window>`` with no change to the command.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from datetime import datetime
+
+from repro.core import (
+    EcoScheduler,
+    Job,
+    Opts,
+    get_backend,
+    load_config,
+    parse_memory_mb,
+    parse_time_s,
+)
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="runjob", description="Submit a command as a SLURM job."
+    )
+    ap.add_argument("command", nargs="+", help="command to run (quote it)")
+    ap.add_argument("-n", "--name", default="job")
+    ap.add_argument("-c", "--cpus", type=int, default=1)
+    ap.add_argument("-m", "--memory", default="1GB",
+                    help="bare number = GB; accepts 500MB / 8GB / 1TB")
+    ap.add_argument("-t", "--time", default="1h",
+                    help="bare number = hours; accepts 2h30m / 0-12:00:00")
+    ap.add_argument("-q", "--queue", default=None)
+    ap.add_argument("-w", "--workdir-logs", dest="output_dir", default="",
+                    help="directory for stdout/err logs")
+    ap.add_argument("--files", default=None,
+                    help="file list → job array; use #FILE# in the command")
+    ap.add_argument("--email", default="")
+    ap.add_argument("--after", action="append", default=[],
+                    help="job id this job depends on (afterok; repeatable)")
+    ap.add_argument("--begin", default="", help="explicit --begin (ISO8601)")
+    ap.add_argument("--eco", dest="eco", action="store_true", default=None,
+                    help="defer to the next eco window (default: config)")
+    ap.add_argument("--no-eco", dest="eco", action="store_false")
+    ap.add_argument("--gres", default="")
+    ap.add_argument("--sbatch", action="append", default=[],
+                    help="raw #SBATCH pass-through (repeatable)")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="print the generated script, do not submit")
+    ap.add_argument("--now", default=None, help=argparse.SUPPRESS)  # tests
+    return ap
+
+
+def memory_mb_from_cli(value) -> int:
+    """Bare numbers are GB on the CLI (paper: ``-m 64`` = 64 GB)."""
+    s = str(value).strip()
+    if s.replace(".", "", 1).isdigit():
+        return int(float(s) * 1024)
+    return parse_memory_mb(s)
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    cfg = load_config()
+
+    opts = Opts(
+        queue=args.queue if args.queue is not None else cfg.get("queue"),
+        threads=args.cpus,
+        memory_mb=memory_mb_from_cli(args.memory),
+        time_s=parse_time_s(args.time),
+        email_address=args.email,
+        email_type="END" if args.email else "NONE",
+        output_dir=args.output_dir,
+        gres=args.gres,
+        extra=list(args.sbatch),
+        tmpdir=cfg.get("tmpdir") or "",
+    )
+    if args.after:
+        opts.dependencies = [int(a) for a in args.after]
+    if args.begin:
+        opts.set_begin(args.begin)
+
+    # --- eco mode (paper: ON by default, --no-eco / economy_mode=0 disable)
+    use_eco = cfg.get_bool("economy_mode") if args.eco is None else args.eco
+    eco_note = ""
+    if use_eco and not opts.begin:
+        now = datetime.fromisoformat(args.now) if args.now else datetime.now()
+        decision = EcoScheduler(cfg).next_window(opts.time_s, now)
+        if decision.deferred:
+            opts.set_begin(decision.begin_directive)
+            eco_note = (
+                f"eco mode: deferred to {decision.begin_directive} "
+                f"(tier {decision.tier})"
+            )
+
+    command = " ".join(args.command)
+    job = Job(
+        name=args.name,
+        command=command,
+        opts=opts,
+        files=args.files,
+        workdir="",
+    )
+    if args.dry_run:
+        print(job.script(), end="")
+        if eco_note:
+            print(f"# {eco_note}", file=sys.stderr)
+        return 0
+    jobid = job.run(get_backend())
+    if eco_note:
+        print(eco_note)
+    print(jobid)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

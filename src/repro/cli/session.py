@@ -1,0 +1,65 @@
+"""session — launch an interactive SLURM session.
+
+    session                 # 1 CPU, 4 GB, 2 h on the default partition
+    session -c 8 -m 16 -t 4 # 8 CPUs, 16 GB, 4 hours
+    session --print         # show the srun command without executing
+
+Runs ``srun --pty bash`` with the requested resources. With ``--print`` (or
+when srun is unavailable — e.g. under the simulator backend) the fully
+formed command line is printed instead, which is also what the tests assert.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import shutil
+
+from repro.core import load_config, parse_time_s, format_slurm_time
+from repro.cli.runjob import memory_mb_from_cli
+
+
+def srun_command(
+    *, cpus: int, memory_mb: int, time_s: int, queue: str = "", gres: str = ""
+) -> list[str]:
+    cmd = [
+        "srun",
+        f"--cpus-per-task={cpus}",
+        f"--mem={memory_mb}",
+        f"--time={format_slurm_time(time_s)}",
+        "--job-name=interactive",
+    ]
+    if queue:
+        cmd.append(f"--partition={queue}")
+    if gres:
+        cmd.append(f"--gres={gres}")
+    cmd += ["--pty", "bash", "-l"]
+    return cmd
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="session")
+    ap.add_argument("-c", "--cpus", type=int, default=1)
+    ap.add_argument("-m", "--memory", default="4GB", help="bare number = GB")
+    ap.add_argument("-t", "--time", default="2h", help="bare number = hours")
+    ap.add_argument("-q", "--queue", default=None)
+    ap.add_argument("--gres", default="")
+    ap.add_argument("--print", dest="print_only", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = load_config()
+    cmd = srun_command(
+        cpus=args.cpus,
+        memory_mb=memory_mb_from_cli(args.memory),
+        time_s=parse_time_s(args.time),
+        queue=args.queue if args.queue is not None else cfg.get("queue"),
+        gres=args.gres,
+    )
+    if args.print_only or not shutil.which("srun"):
+        print(" ".join(cmd))
+        return 0
+    os.execvp("srun", cmd)  # replaces the process; no return on success
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

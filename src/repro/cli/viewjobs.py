@@ -1,0 +1,381 @@
+"""viewjobs — interactive terminal UI for job management (paper Figure 1).
+
+Browse the live queue without leaving the terminal: scroll with arrow or Vim
+keys, sort columns, inspect per-job details, toggle column visibility and
+adjust column widths interactively. Select jobs with Space and cancel the
+selection in bulk with a single keypress — no copy-pasting ids into scancel.
+
+Architecture: all interaction logic lives in :class:`ViewModel`, a pure
+state machine ``(state, key) → state`` that renders to a list of strings —
+fully unit-testable without a terminal. The curses driver at the bottom is a
+thin I/O shell around it (and the only part that needs a tty).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from dataclasses import dataclass, field
+
+from repro.core import Queue, QueuedJob, get_backend
+from repro.cli.render import COLORS, RESET, STATE_COLORS
+
+COLUMNS = [  # (key, header, default width, default visible)
+    ("jobid", "JobID", 10, True),
+    ("user", "User", 9, True),
+    ("queue", "Queue", 13, True),
+    ("name", "JobName", 16, True),
+    ("state", "State", 10, True),
+    ("time_used", "TimeUsed", 11, False),
+    ("time_left", "TimeLeft", 11, True),
+    ("time_limit", "TimeLimit", 11, True),
+    ("nodelist", "NodeList", 10, True),
+    ("reason", "Reason", 12, False),
+]
+
+HELP_LINE = (
+    "q:quit Enter:details f:filter s:sort-col o:asc/desc Space:select "
+    "C:cancel-selected j/k:scroll h/l:column </>:width v:visibility r:refresh"
+)
+
+
+@dataclass
+class ViewState:
+    rows: list = field(default_factory=list)  # QueuedJob
+    cursor: int = 0
+    col_cursor: int = 0
+    scroll: int = 0
+    height: int = 20  # visible body rows
+    sort_key: str = "jobid"
+    sort_desc: bool = False
+    selected: set = field(default_factory=set)  # jobids
+    visible: dict = field(default_factory=dict)  # col key → bool
+    widths: dict = field(default_factory=dict)  # col key → int
+    filter_text: str = ""
+    mode: str = "list"  # list | details | filter | confirm
+    status: str = ""
+    pending_cancel: list = field(default_factory=list)
+    quit: bool = False
+
+
+class ViewModel:
+    """The TUI's engine: feed key events, read rendered lines."""
+
+    def __init__(self, queue_source, canceller=None):
+        """``queue_source()`` → list[QueuedJob]; ``canceller(ids)`` cancels."""
+        self._source = queue_source
+        self._cancel = canceller or (lambda ids: None)
+        s = ViewState()
+        for key, _, width, vis in COLUMNS:
+            s.visible[key] = vis
+            s.widths[key] = width
+        self.state = s
+        self.refresh()
+
+    # -- data ------------------------------------------------------------------
+
+    def refresh(self) -> None:
+        s = self.state
+        jobs = list(self._source())
+        if s.filter_text:
+            needle = s.filter_text.lower()
+            jobs = [
+                j
+                for j in jobs
+                if needle in j.name.lower()
+                or needle in j.user.lower()
+                or needle in j.state.lower()
+                or needle in j.queue.lower()
+                or needle in j.jobid
+            ]
+        key = s.sort_key
+
+        def sort_val(j: QueuedJob):
+            if key == "jobid":
+                return (j.jobid_num, j.jobid)
+            return getattr(j, key, "")
+
+        jobs.sort(key=sort_val, reverse=s.sort_desc)
+        s.rows = jobs
+        live = {j.jobid for j in jobs}
+        s.selected &= live
+        s.cursor = min(s.cursor, max(0, len(jobs) - 1))
+        self._clamp_scroll()
+
+    # -- key handling -----------------------------------------------------------
+
+    def key(self, k: str) -> None:
+        """One key event. Multi-char names: 'UP','DOWN','LEFT','RIGHT','ENTER','ESC','BACKSPACE'."""
+        s = self.state
+        if s.mode == "filter":
+            self._key_filter(k)
+            return
+        if s.mode == "confirm":
+            self._key_confirm(k)
+            return
+        if s.mode == "details":
+            if k in ("q", "ESC", "ENTER"):
+                s.mode = "list"
+            return
+        self._key_list(k)
+
+    def keys(self, seq: str) -> None:
+        for ch in seq:
+            self.key(ch)
+
+    def _visible_cols(self) -> list:
+        return [c for c in COLUMNS if self.state.visible[c[0]]]
+
+    def _key_list(self, k: str) -> None:
+        s = self.state
+        n = len(s.rows)
+        cols = self._visible_cols()
+        if k == "q":
+            s.quit = True
+        elif k in ("j", "DOWN"):
+            s.cursor = min(n - 1, s.cursor + 1) if n else 0
+        elif k in ("k", "UP"):
+            s.cursor = max(0, s.cursor - 1)
+        elif k == "g":
+            s.cursor = 0
+        elif k == "G":
+            s.cursor = max(0, n - 1)
+        elif k in ("h", "LEFT"):
+            s.col_cursor = max(0, s.col_cursor - 1)
+        elif k in ("l", "RIGHT"):
+            s.col_cursor = min(len(cols) - 1, s.col_cursor + 1)
+        elif k == "s":  # sort by the column under the cursor
+            ckey = cols[s.col_cursor][0]
+            if s.sort_key == ckey:
+                s.sort_desc = not s.sort_desc
+            else:
+                s.sort_key, s.sort_desc = ckey, False
+            self.refresh()
+        elif k == "o":
+            s.sort_desc = not s.sort_desc
+            self.refresh()
+        elif k == "<":
+            ckey = cols[s.col_cursor][0]
+            s.widths[ckey] = max(4, s.widths[ckey] - 2)
+        elif k == ">":
+            ckey = cols[s.col_cursor][0]
+            s.widths[ckey] = min(60, s.widths[ckey] + 2)
+        elif k == "v":  # toggle visibility of the column under the cursor
+            ckey = cols[s.col_cursor][0]
+            shown = [c for c in COLUMNS if s.visible[c[0]]]
+            if len(shown) > 1:
+                s.visible[ckey] = False
+                s.col_cursor = min(s.col_cursor, len(self._visible_cols()) - 1)
+        elif k == "V":  # show all columns
+            for ckey, *_ in COLUMNS:
+                s.visible[ckey] = True
+        elif k == " ":
+            if n:
+                jid = s.rows[s.cursor].jobid
+                if jid in s.selected:
+                    s.selected.discard(jid)
+                else:
+                    s.selected.add(jid)
+                s.cursor = min(n - 1, s.cursor + 1)
+        elif k == "a":  # select all (filtered) rows
+            s.selected = {j.jobid for j in s.rows}
+        elif k == "u":
+            s.selected.clear()
+        elif k == "C":
+            targets = sorted(s.selected) or ([s.rows[s.cursor].jobid] if n else [])
+            if targets:
+                s.pending_cancel = targets
+                s.mode = "confirm"
+        elif k == "f":
+            s.mode = "filter"
+        elif k == "F":
+            s.filter_text = ""
+            self.refresh()
+        elif k == "ENTER":
+            if n:
+                s.mode = "details"
+        elif k == "r":
+            self.refresh()
+            s.status = "refreshed"
+        self._clamp_scroll()
+
+    def _key_filter(self, k: str) -> None:
+        s = self.state
+        if k == "ENTER":
+            s.mode = "list"
+            self.refresh()
+        elif k == "ESC":
+            s.filter_text = ""
+            s.mode = "list"
+            self.refresh()
+        elif k == "BACKSPACE":
+            s.filter_text = s.filter_text[:-1]
+        elif len(k) == 1 and k.isprintable():
+            s.filter_text += k
+
+    def _key_confirm(self, k: str) -> None:
+        s = self.state
+        if k in ("y", "Y"):
+            ids = list(s.pending_cancel)
+            self._cancel(ids)
+            s.status = f"cancelled {len(ids)} job(s)"
+            s.selected.clear()
+            s.pending_cancel = []
+            s.mode = "list"
+            self.refresh()
+        elif k in ("n", "N", "ESC", "q"):
+            s.pending_cancel = []
+            s.mode = "list"
+            s.status = "cancel aborted"
+
+    def _clamp_scroll(self) -> None:
+        s = self.state
+        if s.cursor < s.scroll:
+            s.scroll = s.cursor
+        if s.cursor >= s.scroll + s.height:
+            s.scroll = s.cursor - s.height + 1
+
+    # -- rendering -----------------------------------------------------------------
+
+    def render(self, *, color: bool = False) -> list[str]:
+        s = self.state
+        if s.mode == "details":
+            return self._render_details()
+        cols = self._visible_cols()
+        out = []
+        hdr_cells = []
+        for i, (key, header, _, _) in enumerate(cols):
+            w = s.widths[key]
+            mark = ""
+            if key == s.sort_key:
+                mark = "▼" if s.sort_desc else "▲"
+            text = _fit(header + mark, w)
+            if i == s.col_cursor:
+                text = f"[{text[: max(0, w - 2)].strip():<{max(0, w - 2)}}]"
+                text = _fit(text, w)
+            hdr_cells.append(text)
+        out.append("  " + " ".join(hdr_cells))
+        body = s.rows[s.scroll : s.scroll + s.height]
+        for i, j in enumerate(body):
+            ridx = s.scroll + i
+            sel = "*" if j.jobid in s.selected else " "
+            cur = ">" if ridx == s.cursor else " "
+            cells = [_fit(getattr(j, key, ""), s.widths[key]) for key, *_ in cols]
+            line = f"{cur}{sel}" + " ".join(cells)
+            if color:
+                cname = STATE_COLORS.get(j.state, "")
+                if ridx == s.cursor:
+                    line = f"{COLORS['inverse']}{line}{RESET}"
+                elif cname:
+                    line = f"{COLORS[cname]}{line}{RESET}"
+            out.append(line)
+        if s.mode == "filter":
+            out.append(f"filter: {s.filter_text}_")
+        elif s.mode == "confirm":
+            out.append(
+                f"cancel {len(s.pending_cancel)} job(s) "
+                f"[{' '.join(s.pending_cancel[:8])}{'…' if len(s.pending_cancel) > 8 else ''}]? y/N"
+            )
+        else:
+            nsel = len(s.selected)
+            parts = [f"{len(s.rows)} job(s)"]
+            if nsel:
+                parts.append(f"{nsel} selected")
+            if s.filter_text:
+                parts.append(f"filter={s.filter_text!r}")
+            if s.status:
+                parts.append(s.status)
+            out.append(" | ".join(parts))
+        out.append(HELP_LINE)
+        return out
+
+    def _render_details(self) -> list[str]:
+        s = self.state
+        j = s.rows[s.cursor]
+        fields = [
+            ("JobID", j.jobid), ("User", j.user), ("Partition", j.queue),
+            ("Name", j.name), ("State", j.state), ("TimeUsed", j.time_used),
+            ("TimeLeft", j.time_left), ("TimeLimit", j.time_limit),
+            ("Nodes", j.nodelist), ("Reason", j.reason),
+            ("CPUs", j.cpus), ("Memory(MB)", j.memory),
+        ]
+        width = max(len(k) for k, _ in fields)
+        lines = [f"─── job {j.jobid} ───"]
+        lines += [f"{k:>{width}} : {v}" for k, v in fields]
+        lines.append("(Enter/q to close)")
+        return lines
+
+
+def _fit(text: str, w: int) -> str:
+    text = str(text)
+    if len(text) > w:
+        text = text[: max(0, w - 1)] + "…"
+    return text.ljust(w)
+
+
+# ---------------------------------------------------------------------------
+# curses driver (thin shell; everything above is testable without a tty)
+# ---------------------------------------------------------------------------
+
+
+def _curses_main(stdscr, vm: ViewModel, refresh_s: float):
+    import curses
+
+    curses.curs_set(0)
+    stdscr.timeout(int(refresh_s * 1000))
+    keymap = {
+        curses.KEY_UP: "UP", curses.KEY_DOWN: "DOWN",
+        curses.KEY_LEFT: "LEFT", curses.KEY_RIGHT: "RIGHT",
+        10: "ENTER", 13: "ENTER", 27: "ESC",
+        curses.KEY_BACKSPACE: "BACKSPACE", 127: "BACKSPACE",
+    }
+    while not vm.state.quit:
+        h, w = stdscr.getmaxyx()
+        vm.state.height = max(3, h - 3)
+        stdscr.erase()
+        for y, line in enumerate(vm.render()[: h - 1]):
+            stdscr.addnstr(y, 0, line, w - 1)
+        stdscr.refresh()
+        c = stdscr.getch()
+        if c == -1:  # timeout → periodic refresh
+            vm.refresh()
+            continue
+        vm.key(keymap.get(c, chr(c) if 0 < c < 256 else ""))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="viewjobs")
+    ap.add_argument("-u", "--user", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--refresh", type=float, default=2.0, help="seconds")
+    ap.add_argument("--once", action="store_true",
+                    help="render one frame to stdout (no tty needed)")
+    args = ap.parse_args(argv)
+
+    backend = get_backend()
+    user = None
+    if not args.all:
+        user = args.user
+        if user is None:
+            import getpass
+
+            try:
+                user = getpass.getuser()
+            except Exception:
+                user = None
+
+    def source():
+        return list(Queue(user=user, backend=backend))
+
+    vm = ViewModel(source, canceller=backend.cancel)
+    if args.once:
+        print("\n".join(vm.render()))
+        return 0
+    import curses
+
+    curses.wrapper(_curses_main, vm, args.refresh)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,104 @@
+"""waitjobs — block until jobs matching a pattern complete.
+
+    waitjobs                     # wait for all of my jobs
+    waitjobs -n 'align.*'        # wait for jobs whose name matches
+    waitjobs 123456 123457       # wait for specific ids
+    waitjobs --timeout 3600      # give up after an hour (exit 2)
+
+Exit status: 0 when every watched job left the queue, 2 on timeout.
+Against the simulator backend the poll loop advances simulated time, so
+integration tests run instantly.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+from repro.core import Queue, get_backend
+from repro.core.simcluster import SimCluster
+
+
+def matching_ids(backend, *, user=None, name=None, ids=None) -> list[str]:
+    q = Queue(user=user, name=name, backend=backend)
+    if ids:
+        want = {str(i) for i in ids}
+        return [j.jobid for j in q if j.jobid in want or str(j.jobid_num) in want]
+    return q.ids()
+
+
+def wait_for(
+    backend,
+    *,
+    user=None,
+    name=None,
+    ids=None,
+    poll_s: float = 15.0,
+    timeout_s: float = 0.0,
+    progress=None,
+) -> bool:
+    """Poll until no watched job is active. Returns True on success."""
+    watched = set(matching_ids(backend, user=user, name=name, ids=ids))
+    if ids and not watched:
+        # ids given but already gone from the queue → done
+        return True
+    start = time.monotonic()
+    while True:
+        q = Queue(user=user, backend=backend)
+        active = {j.jobid for j in q if j.is_active()}
+        left = watched & active if watched else active
+        if not left:
+            return True
+        if progress:
+            progress(len(left))
+        if timeout_s and time.monotonic() - start > timeout_s:
+            return False
+        if isinstance(backend, SimCluster):
+            backend.advance(poll_s)  # simulated clock: tests run instantly
+        else:
+            time.sleep(poll_s)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="waitjobs")
+    ap.add_argument("ids", nargs="*", help="specific job ids to wait for")
+    ap.add_argument("-u", "--user", default=None)
+    ap.add_argument("-n", "--name", default=None, help="job-name regex")
+    ap.add_argument("--poll", type=float, default=15.0, help="seconds between polls")
+    ap.add_argument("--timeout", type=float, default=0.0, help="0 = forever")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    backend = get_backend()
+    user = args.user
+    if user is None and not args.ids and not args.name:
+        import getpass
+
+        try:
+            user = getpass.getuser()
+        except Exception:
+            user = None
+
+    def progress(n):
+        if not args.quiet:
+            print(f"waiting on {n} job(s)...", flush=True)
+
+    ok = wait_for(
+        backend,
+        user=user,
+        name=args.name,
+        ids=args.ids or None,
+        poll_s=args.poll,
+        timeout_s=args.timeout,
+        progress=progress,
+    )
+    if not ok:
+        print("timeout")
+        return 2
+    if not args.quiet:
+        print("all jobs finished")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

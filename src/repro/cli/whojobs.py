@@ -1,0 +1,69 @@
+"""whojobs — cluster utilisation grouped by user.
+
+One row per user: running/pending job counts, CPUs and memory in use, and a
+share bar — the at-a-glance "who is using the cluster" view.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.core import Queue, get_backend
+from repro.cli.render import render_table
+
+
+def utilisation_rows(q: Queue) -> list[list[str]]:
+    per_user: dict[str, dict] = {}
+    total_cpus = 0
+    for j in q:
+        u = per_user.setdefault(
+            j.user, {"run": 0, "pend": 0, "cpus": 0, "mem_mb": 0}
+        )
+        cpus = int(j.cpus or 0)
+        mem = int(j.memory or 0)
+        if j.state == "RUNNING":
+            u["run"] += 1
+            u["cpus"] += cpus
+            u["mem_mb"] += mem
+            total_cpus += cpus
+        elif j.state == "PENDING":
+            u["pend"] += 1
+    rows = []
+    for user, u in sorted(per_user.items(), key=lambda kv: -kv[1]["cpus"]):
+        share = u["cpus"] / total_cpus if total_cpus else 0.0
+        bar = "#" * round(share * 20)
+        rows.append(
+            [
+                user,
+                str(u["run"]),
+                str(u["pend"]),
+                str(u["cpus"]),
+                f"{u['mem_mb'] / 1024:.0f}",
+                f"{share * 100:4.0f}% {bar}",
+            ]
+        )
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="whojobs")
+    ap.add_argument("-q", "--queue", dest="partition", default=None)
+    ap.add_argument("--no-color", action="store_true")
+    args = ap.parse_args(argv)
+
+    q = Queue(queue=args.partition, backend=get_backend())
+    if not len(q):
+        print("cluster is idle")
+        return 0
+    print(
+        render_table(
+            ["User", "Running", "Pending", "CPUs", "Mem(GB)", "Share"],
+            utilisation_rows(q),
+            enabled=False if args.no_color else None,
+        )
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,53 @@
+"""Architecture configs — one module per assigned architecture.
+
+``get_config(name)`` returns the full published config;
+``get_smoke_config(name)`` returns a reduced same-family config for CPU
+smoke tests (small widths/depths/vocabs, same code paths).
+"""
+
+from __future__ import annotations
+
+import importlib
+
+ARCHS = [
+    "deepseek_moe_16b",
+    "kimi_k2_1t_a32b",
+    "rwkv6_7b",
+    "codeqwen15_7b",
+    "minicpm3_4b",
+    "mistral_large_123b",
+    "starcoder2_7b",
+    "recurrentgemma_2b",
+    "whisper_small",
+    "llava_next_mistral_7b",
+    "nbi100m",  # the framework's own end-to-end example model
+]
+
+_ALIASES = {
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "rwkv6-7b": "rwkv6_7b",
+    "codeqwen1.5-7b": "codeqwen15_7b",
+    "minicpm3-4b": "minicpm3_4b",
+    "mistral-large-123b": "mistral_large_123b",
+    "starcoder2-7b": "starcoder2_7b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "whisper-small": "whisper_small",
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+    "nbi-100m": "nbi100m",
+}
+
+ASSIGNED = [a for a in ARCHS if a != "nbi100m"]
+
+
+def _module(name: str):
+    mod_name = _ALIASES.get(name, name.replace("-", "_").replace(".", ""))
+    return importlib.import_module(f"repro.configs.{mod_name}")
+
+
+def get_config(name: str):
+    return _module(name).config()
+
+
+def get_smoke_config(name: str):
+    return _module(name).smoke_config()

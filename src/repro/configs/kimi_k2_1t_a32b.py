@@ -1,0 +1,67 @@
+"""kimi-k2-1t-a32b — trillion-parameter MoE, 384 routed experts top-8.
+
+61L d_model=7168 64H (GQA kv=8 per assignment) d_ff=2048(expert)
+vocab=163840 [arXiv:2501.kimi2; unverified]. 1 shared expert, 1 leading
+dense layer (DeepSeek-V3 lineage).
+
+Memory note (see EXPERIMENTS.md): ~1.03 T params do not fit a single
+256×16 GB pod with fp32 AdamW state — this config uses the block-quantized
+8-bit optimizer and gradient-accumulation microbatching by default.
+"""
+
+from repro.models.config import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="kimi-k2-1t-a32b",
+        family="moe",
+        n_layers=61,
+        d_model=7168,
+        n_heads=64,
+        n_kv_heads=8,
+        d_ff=18432,  # dense (layer-0) MLP width
+        vocab_size=163840,
+        head_dim=128,
+        n_experts=384,
+        n_shared_experts=1,
+        top_k=8,
+        moe_d_ff=2048,
+        n_dense_layers=1,
+        rope_theta=5e4,
+        # §Perf hillclimb: capacity C∝N makes one-hot dispatch cost linear
+        # in group size — 256 saves ~2.3 s/step of dispatch-einsum compute.
+        moe_group_tokens=256,
+        optimizer="adamw8bit",
+        microbatch=8,
+        remat="selective",  # §Perf: −4% collective (fewer recompute psums)
+        # Capacity: adamw8bit state ≈ 4.2 TB; model-axis-only sharding is
+        # 256 GB/chip. ZeRO-3 2D sharding → 16.4 GB (single pod, at the
+        # edge) / 8.2 GB (2-pod production mesh) — see EXPERIMENTS §Dry-run.
+        fsdp=True,
+    )
+
+
+def smoke_config() -> ArchConfig:
+    return config().replace(
+        name="kimi-k2-smoke",
+        n_layers=3,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=128,
+        moe_d_ff=32,
+        n_experts=8,
+        n_shared_experts=1,
+        top_k=2,
+        n_dense_layers=1,
+        vocab_size=512,
+        moe_group_tokens=32,
+        attn_chunk=16,
+        param_dtype="float32",
+        dtype="float32",
+        optimizer="adamw8bit",
+        microbatch=1,
+        remat="none",
+    )

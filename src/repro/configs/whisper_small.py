@@ -1,0 +1,45 @@
+"""whisper-small — encoder-decoder; conv audio frontend is a stub.
+
+12L(+12 enc) d_model=768 12H d_ff=3072 vocab=51865 [arXiv:2212.04356;
+unverified]. ``input_specs()`` provides precomputed frame embeddings
+(B, 1500, 768); shapes apply to the decoder side. 12 heads / 51865 vocab do
+not divide the 16-way model axis → those rules auto-disable (FF shards).
+"""
+
+from repro.models.config import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="whisper-small",
+        family="encdec",
+        n_layers=12,
+        d_model=768,
+        n_heads=12,
+        n_kv_heads=12,
+        d_ff=3072,
+        vocab_size=51865,
+        n_enc_layers=12,
+        enc_len=1500,
+        tie_embeddings=True,
+        attn_chunk=512,  # 12 heads cannot shard on a 16-way model axis →
+        remat="full",    # keep attention tiles small instead
+    )
+
+
+def smoke_config() -> ArchConfig:
+    return config().replace(
+        name="whisper-smoke",
+        n_layers=2,
+        n_enc_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        d_ff=128,
+        vocab_size=512,
+        enc_len=24,
+        attn_chunk=8,
+        param_dtype="float32",
+        dtype="float32",
+        remat="none",
+    )

@@ -1,0 +1,37 @@
+"""NBI-Slurm core — the paper's contribution, reproduced in Python.
+
+Programmatic use mirrors the paper's Perl API::
+
+    from repro.core import Job, Opts
+
+    opts = Opts.new(queue="main", threads=4, memory=8, time="1h")
+    job1 = Job(name="step1", command="bash analyse.sh", opts=opts)
+    jid = job1.run()
+
+    job2 = Job(name="step2", command="python report.py --input results/")
+    job2.set_dependencies(jid)
+    job2.run()
+"""
+
+from .backend import SlurmBackend, get_backend, reset_shared_sim
+from .config import NBIConfig, load_config, write_config
+from .eco import CarbonTrace, EcoDecision, EcoScheduler
+from .job import FILE_PLACEHOLDER, Job
+from .launcher import InputSpec, Kraken2, Launcher, LauncherError, discover_launchers
+from .manifest import Manifest
+from .pipeline import Pipeline, PipelineError
+from .queue import Queue, QueuedJob
+from .resources import Opts, format_slurm_time, parse_memory_mb, parse_time_s
+from .simcluster import SimCluster, SimJob, SimNode
+
+__all__ = [
+    "CarbonTrace", "EcoDecision", "EcoScheduler",
+    "FILE_PLACEHOLDER", "Job", "Opts",
+    "InputSpec", "Kraken2", "Launcher", "LauncherError", "discover_launchers",
+    "Manifest", "Pipeline", "PipelineError",
+    "Queue", "QueuedJob",
+    "NBIConfig", "load_config", "write_config",
+    "SimCluster", "SimJob", "SimNode",
+    "SlurmBackend", "get_backend", "reset_shared_sim",
+    "format_slurm_time", "parse_memory_mb", "parse_time_s",
+]

@@ -1,0 +1,116 @@
+"""Workload-manager backends.
+
+``SlurmBackend`` shells out to real ``sbatch``/``squeue``/``scancel``;
+``SimCluster`` (see :mod:`repro.core.simcluster`) is a deterministic
+in-process simulator. Both expose the same surface, so — exactly as the
+paper requires — every tool and test runs without Slurm installed.
+
+Selection: ``$REPRO_BACKEND`` = ``slurm`` | ``sim``; default is ``slurm``
+when ``sbatch`` is on PATH, else the shared simulator instance.
+"""
+
+from __future__ import annotations
+
+import getpass
+import os
+import shutil
+import subprocess
+from typing import Protocol, runtime_checkable
+
+from .queue import SQUEUE_FIELDS, SQUEUE_FORMAT
+
+
+@runtime_checkable
+class Backend(Protocol):
+    def submit(self, job) -> int:  # job: repro.core.job.Job (script written)
+        ...
+
+    def queue(self) -> list[dict]:  # records with SQUEUE_FIELDS keys
+        ...
+
+    def cancel(self, jobids: list) -> None:
+        ...
+
+    def nodes_info(self) -> list[dict]:  # {name, cpus, memory_mb, state}
+        ...
+
+
+class SlurmBackend:
+    """Real SLURM via subprocess. Used on clusters; never in unit tests."""
+
+    def submit(self, job) -> int:
+        out = subprocess.run(
+            ["sbatch", "--parsable", job.script_path],
+            check=True,
+            capture_output=True,
+            text=True,
+        ).stdout.strip()
+        return int(out.split(";")[0])
+
+    def queue(self) -> list[dict]:
+        out = subprocess.run(
+            ["squeue", "--noheader", "-o", SQUEUE_FORMAT],
+            check=True,
+            capture_output=True,
+            text=True,
+        ).stdout
+        rows = []
+        for line in out.splitlines():
+            parts = [p.strip() for p in line.split("|")]
+            if len(parts) == len(SQUEUE_FIELDS):
+                rows.append(dict(zip(SQUEUE_FIELDS, parts)))
+        return rows
+
+    def cancel(self, jobids: list) -> None:
+        if jobids:
+            subprocess.run(["scancel", *[str(j) for j in jobids]], check=True)
+
+    def nodes_info(self) -> list[dict]:
+        out = subprocess.run(
+            ["sinfo", "--noheader", "-N", "-o", "%N|%c|%m|%T"],
+            check=True,
+            capture_output=True,
+            text=True,
+        ).stdout
+        rows = []
+        for line in out.splitlines():
+            parts = [p.strip() for p in line.split("|")]
+            if len(parts) == 4:
+                rows.append(
+                    {
+                        "name": parts[0],
+                        "cpus": int(parts[1]),
+                        "memory_mb": int(parts[2]),
+                        "state": parts[3],
+                    }
+                )
+        return rows
+
+
+_SHARED_SIM = None
+
+
+def get_backend(kind: str | None = None):
+    """Resolve the active backend (env-driven, simulator fallback)."""
+    global _SHARED_SIM
+    kind = kind or os.environ.get("REPRO_BACKEND", "")
+    if kind == "slurm" or (not kind and shutil.which("sbatch")):
+        return SlurmBackend()
+    from .simcluster import SimCluster
+
+    if _SHARED_SIM is None:
+        _SHARED_SIM = SimCluster(default_user=_current_user())
+    return _SHARED_SIM
+
+
+def reset_shared_sim() -> None:
+    """Forget the shared simulator (test isolation)."""
+    global _SHARED_SIM
+    _SHARED_SIM = None
+
+
+def _current_user() -> str:
+    try:
+        return getpass.getuser()
+    except Exception:
+        return os.environ.get("USER", "user")

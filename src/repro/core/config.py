@@ -1,0 +1,116 @@
+"""Configuration file handling for NBI-Slurm (``~/.nbislurm.config``).
+
+The paper specifies a user-level settings file, by default
+``~/.nbislurm.config``, controlling queue defaults and the eco-mode windows.
+The format is intentionally trivial (``key=value`` lines, ``#`` comments) so a
+user can edit it without documentation.
+
+Recognised keys (all optional):
+
+``economy_mode``            1/0 — eco mode on by default (paper: default ON)
+``queue``                   default partition name
+``tmpdir``                  scratch directory for generated scripts
+``email``                   notification address
+``eco_weekday_windows``     comma list of HH:MM-HH:MM windows (Mon-Fri)
+``eco_weekend_windows``     comma list of HH:MM-HH:MM windows (Sat-Sun)
+``peak_hours``              comma list of HH:MM-HH:MM peak windows (daily)
+``eco_horizon_days``        how far ahead the scheduler searches
+``eco_min_delay_minutes``   do not schedule sooner than now + this
+``carbon_trace``            optional CSV path for carbon-aware scoring
+"""
+
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, field
+from pathlib import Path
+
+DEFAULT_CONFIG_PATH = "~/.nbislurm.config"
+
+_DEFAULTS = {
+    "economy_mode": "1",
+    "queue": "",
+    "tmpdir": "",
+    "email": "",
+    "eco_weekday_windows": "00:00-06:00",
+    "eco_weekend_windows": "00:00-07:00,11:00-16:00",
+    "peak_hours": "17:00-20:00",
+    "eco_horizon_days": "14",
+    "eco_min_delay_minutes": "0",
+    "carbon_trace": "",
+}
+
+
+@dataclass
+class NBIConfig:
+    """Parsed contents of an ``.nbislurm.config`` file (plus defaults)."""
+
+    values: dict = field(default_factory=dict)
+    path: str = ""
+
+    def get(self, key: str, default: str | None = None) -> str:
+        if key in self.values:
+            return self.values[key]
+        if key in _DEFAULTS:
+            return _DEFAULTS[key]
+        if default is not None:
+            return default
+        raise KeyError(key)
+
+    def get_bool(self, key: str) -> bool:
+        return self.get(key).strip().lower() in ("1", "true", "yes", "on")
+
+    def get_int(self, key: str) -> int:
+        return int(self.get(key).strip())
+
+    def get_windows(self, key: str) -> list[tuple[int, int]]:
+        """Parse ``HH:MM-HH:MM[,HH:MM-HH:MM...]`` into minute-of-day pairs."""
+        out: list[tuple[int, int]] = []
+        raw = self.get(key).strip()
+        if not raw:
+            return out
+        for part in raw.split(","):
+            part = part.strip()
+            if not part:
+                continue
+            lo, hi = part.split("-")
+            out.append((_parse_hhmm(lo), _parse_hhmm(hi)))
+        return out
+
+
+def _parse_hhmm(s: str) -> int:
+    """``HH:MM`` → minute of day. ``24:00`` is accepted as end-of-day."""
+    h, m = s.strip().split(":")
+    minute = int(h) * 60 + int(m)
+    if not (0 <= minute <= 24 * 60):
+        raise ValueError(f"time of day out of range: {s!r}")
+    return minute
+
+
+def load_config(path: str | None = None) -> NBIConfig:
+    """Load the config file; missing file yields pure defaults.
+
+    Precedence: explicit ``path`` arg > ``$NBISLURM_CONFIG`` > default path.
+    """
+    if path is None:
+        path = os.environ.get("NBISLURM_CONFIG", DEFAULT_CONFIG_PATH)
+    p = Path(path).expanduser()
+    values: dict[str, str] = {}
+    if p.is_file():
+        for line in p.read_text().splitlines():
+            line = line.strip()
+            if not line or line.startswith("#"):
+                continue
+            if "=" not in line:
+                continue
+            key, _, val = line.partition("=")
+            values[key.strip()] = val.strip()
+    return NBIConfig(values=values, path=str(p))
+
+
+def write_config(cfg: dict, path: str) -> None:
+    """Write a key=value config file (used by tests and ``session --init``)."""
+    p = Path(path).expanduser()
+    p.parent.mkdir(parents=True, exist_ok=True)
+    lines = [f"{k}={v}" for k, v in cfg.items()]
+    p.write_text("\n".join(lines) + "\n")

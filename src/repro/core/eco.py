@@ -1,0 +1,278 @@
+"""``EcoScheduler`` — energy-aware scheduling ("eco mode").
+
+Python port of ``NBI::EcoScheduler``, the paper's distinctive contribution.
+Given a job's expected duration and a set of configurable windows, it finds
+the next period satisfying a three-tier preference:
+
+  Tier 1: the job *completes* within an eco window and avoids peak hours;
+  Tier 2: the job *starts* in an eco window and avoids peak hours but may
+          overrun the window;
+  Tier 3: the job starts in an eco window and partially overlaps peak hours.
+
+Default windows target weekday nights (00:00-06:00) and weekend off-peak
+periods (00:00-07:00, 11:00-16:00), avoiding evening peaks (17:00-20:00);
+all configurable through ``~/.nbislurm.config`` (see :mod:`repro.core.config`).
+
+The scheduler's only side effect on a submission is injecting a
+``--begin=<ISO8601>`` directive — no change to the underlying command.
+
+Beyond the paper, the scheduler can *score* candidate starts against a
+carbon-intensity trace (gCO2/kWh per hour-of-week): among candidates of the
+best achievable tier it picks the lowest-carbon start. With no trace the
+behaviour is exactly the paper's (earliest candidate of the best tier).
+"""
+
+from __future__ import annotations
+
+import csv
+from dataclasses import dataclass
+from datetime import datetime, timedelta
+from pathlib import Path
+
+from .config import NBIConfig, load_config
+
+# Minute-of-day window pair: (start_minute, end_minute), end exclusive-ish
+MinuteWindow = tuple[int, int]
+
+_DAY = 86400
+
+
+@dataclass(frozen=True)
+class EcoDecision:
+    """Outcome of a scheduling query."""
+
+    begin: datetime  # when the job should start
+    tier: int  # 1/2/3 per the paper; 0 = no eco window found (run now)
+    deferred: bool  # False when begin == now (job may start immediately)
+    window_start: datetime | None = None
+    window_end: datetime | None = None
+    carbon_gco2_kwh: float | None = None  # mean intensity over the job span
+
+    @property
+    def begin_directive(self) -> str:
+        """Value for ``--begin=`` (second resolution, ISO 8601)."""
+        return self.begin.strftime("%Y-%m-%dT%H:%M:%S")
+
+
+@dataclass(frozen=True)
+class _Candidate:
+    start: datetime
+    window_start: datetime
+    window_end: datetime
+    tier: int
+    carbon: float | None
+
+
+class EcoScheduler:
+    """Energy-aware window scheduler (three-tier preference).
+
+    Parameters mirror the config file; any explicit keyword overrides it.
+    """
+
+    def __init__(
+        self,
+        config: NBIConfig | None = None,
+        *,
+        weekday_windows: list[MinuteWindow] | None = None,
+        weekend_windows: list[MinuteWindow] | None = None,
+        peak_hours: list[MinuteWindow] | None = None,
+        horizon_days: int | None = None,
+        min_delay_s: int | None = None,
+        carbon_trace: "CarbonTrace | None" = None,
+    ):
+        cfg = config if config is not None else load_config()
+        self.weekday_windows = (
+            weekday_windows
+            if weekday_windows is not None
+            else cfg.get_windows("eco_weekday_windows")
+        )
+        self.weekend_windows = (
+            weekend_windows
+            if weekend_windows is not None
+            else cfg.get_windows("eco_weekend_windows")
+        )
+        self.peak_hours = (
+            peak_hours if peak_hours is not None else cfg.get_windows("peak_hours")
+        )
+        self.horizon_days = (
+            horizon_days if horizon_days is not None else cfg.get_int("eco_horizon_days")
+        )
+        self.min_delay_s = (
+            min_delay_s
+            if min_delay_s is not None
+            else cfg.get_int("eco_min_delay_minutes") * 60
+        )
+        if carbon_trace is None:
+            trace_path = cfg.get("carbon_trace")
+            carbon_trace = CarbonTrace.from_csv(trace_path) if trace_path else None
+        self.carbon_trace = carbon_trace
+
+    # -- public API ---------------------------------------------------------
+
+    def next_window(self, duration_s: int, now: datetime) -> EcoDecision:
+        """Find the next start time for a ``duration_s``-second job.
+
+        Returns the earliest candidate achieving the best achievable tier
+        within the horizon (lowest-carbon candidate of that tier when a
+        carbon trace is configured).
+        """
+        if duration_s <= 0:
+            raise ValueError("duration must be positive")
+        candidates = self._candidates(duration_s, now)
+        if not candidates:
+            # No eco windows configured / none in horizon → do not defer.
+            return EcoDecision(
+                begin=now,
+                tier=0,
+                deferred=False,
+                carbon_gco2_kwh=self._mean_carbon(now, duration_s),
+            )
+        best_tier = min(c.tier for c in candidates)
+        pool = [c for c in candidates if c.tier == best_tier]
+        if self.carbon_trace is not None:
+            chosen = min(pool, key=lambda c: (c.carbon, c.start))
+        else:
+            chosen = pool[0]  # candidates are generated in chronological order
+        return EcoDecision(
+            begin=chosen.start,
+            tier=chosen.tier,
+            deferred=chosen.start > now,
+            window_start=chosen.window_start,
+            window_end=chosen.window_end,
+            carbon_gco2_kwh=chosen.carbon,
+        )
+
+    def begin_directive(self, duration_s: int, now: datetime) -> str | None:
+        """The ``--begin`` value for a job, or None when no deferral needed."""
+        decision = self.next_window(duration_s, now)
+        return decision.begin_directive if decision.deferred else None
+
+    def in_eco_window(self, t: datetime) -> bool:
+        for ws, we in self._absolute_eco_windows(t, t + timedelta(seconds=1)):
+            if ws <= t < we:
+                return True
+        return False
+
+    def in_peak(self, t: datetime) -> bool:
+        for ps, pe in self._absolute_peak_windows(t, t + timedelta(seconds=1)):
+            if ps <= t < pe:
+                return True
+        return False
+
+    def next_peak_start(self, now: datetime) -> datetime | None:
+        """Start of the next peak period at or after ``now`` (for
+        eco-preemption: a training run checkpoints itself at this boundary)."""
+        horizon = now + timedelta(days=self.horizon_days)
+        peaks = self._absolute_peak_windows(now, horizon)
+        starts = [ps for ps, pe in peaks if pe > now]
+        if not starts:
+            return None
+        first = min(starts)
+        return max(first, now)
+
+    # -- internals ------------------------------------------------------------
+
+    def _windows_for_day(self, day: datetime) -> list[MinuteWindow]:
+        return self.weekend_windows if day.weekday() >= 5 else self.weekday_windows
+
+    def _absolute_eco_windows(self, lo: datetime, hi: datetime):
+        """All eco windows as absolute (start, end) intersecting [lo, hi)."""
+        out = []
+        day = lo.replace(hour=0, minute=0, second=0, microsecond=0)
+        while day < hi:
+            for ws_min, we_min in self._windows_for_day(day):
+                ws = day + timedelta(minutes=ws_min)
+                we = day + timedelta(minutes=we_min)
+                if we > lo and ws < hi:
+                    out.append((ws, we))
+            day += timedelta(days=1)
+        out.sort()
+        return out
+
+    def _absolute_peak_windows(self, lo: datetime, hi: datetime):
+        out = []
+        day = (lo - timedelta(days=1)).replace(hour=0, minute=0, second=0, microsecond=0)
+        while day < hi:
+            for ps_min, pe_min in self.peak_hours:
+                ps = day + timedelta(minutes=ps_min)
+                pe = day + timedelta(minutes=pe_min)
+                if pe > lo and ps < hi:
+                    out.append((ps, pe))
+            day += timedelta(days=1)
+        out.sort()
+        return out
+
+    def _candidates(self, duration_s: int, now: datetime) -> list[_Candidate]:
+        earliest = now + timedelta(seconds=self.min_delay_s)
+        horizon = now + timedelta(days=self.horizon_days)
+        dur = timedelta(seconds=duration_s)
+        cands: list[_Candidate] = []
+        for ws, we in self._absolute_eco_windows(earliest, horizon):
+            start = max(ws, earliest)
+            if start >= we:
+                continue  # window already over by the time we may start
+            end = start + dur
+            overlaps_peak = any(
+                ps < end and start < pe
+                for ps, pe in self._absolute_peak_windows(start, end)
+            )
+            fits_window = end <= we
+            if fits_window and not overlaps_peak:
+                tier = 1
+            elif not overlaps_peak:
+                tier = 2
+            else:
+                tier = 3
+            cands.append(
+                _Candidate(
+                    start=start,
+                    window_start=ws,
+                    window_end=we,
+                    tier=tier,
+                    carbon=self._mean_carbon(start, duration_s),
+                )
+            )
+        return cands
+
+    def _mean_carbon(self, start: datetime, duration_s: int) -> float | None:
+        if self.carbon_trace is None:
+            return None
+        return self.carbon_trace.mean_over(start, duration_s)
+
+
+class CarbonTrace:
+    """gCO2/kWh grid-intensity by hour-of-week (0 = Monday 00:00).
+
+    CSV format: two columns ``hour_of_week,gco2_kwh`` (header optional),
+    168 rows. Shorter traces wrap modulo their length.
+    """
+
+    def __init__(self, hourly: list[float]):
+        if not hourly:
+            raise ValueError("empty carbon trace")
+        self.hourly = list(hourly)
+
+    @classmethod
+    def from_csv(cls, path: str) -> "CarbonTrace":
+        rows: list[float] = []
+        with Path(path).expanduser().open() as fh:
+            for rec in csv.reader(fh):
+                if not rec:
+                    continue
+                try:
+                    rows.append(float(rec[-1]))
+                except ValueError:
+                    continue  # header
+        return cls(rows)
+
+    def at(self, t: datetime) -> float:
+        hour_of_week = t.weekday() * 24 + t.hour
+        return self.hourly[hour_of_week % len(self.hourly)]
+
+    def mean_over(self, start: datetime, duration_s: int) -> float:
+        """Mean intensity over [start, start+duration], hourly sampling."""
+        hours = max(1, int(round(duration_s / 3600)))
+        total = 0.0
+        for i in range(hours):
+            total += self.at(start + timedelta(hours=i))
+        return total / hours

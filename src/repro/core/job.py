@@ -1,0 +1,143 @@
+"""``Job`` — a submittable SLURM job (port of ``NBI::Job``).
+
+Holds a command (or list of commands) plus an :class:`~repro.core.resources.Opts`
+object. ``script()`` generates a complete sbatch script; ``run()`` submits it
+through the configured backend and returns the job identifier.
+
+Job arrays: pass ``files`` (a list of inputs, or a path to a text file with
+one input per line) and use the ``#FILE#`` placeholder inside the command —
+the generated script maps ``SLURM_ARRAY_TASK_ID`` to the corresponding line.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import tempfile
+import time
+from pathlib import Path
+
+from .resources import Opts
+
+FILE_PLACEHOLDER = "#FILE#"
+
+
+class Job:
+    """One SLURM job: name + command(s) + resource opts."""
+
+    def __init__(
+        self,
+        name: str = "job",
+        command: "str | list[str] | None" = None,
+        opts: Opts | None = None,
+        files: "list[str] | str | None" = None,
+        backend=None,
+        workdir: str = "",
+        sim_duration_s: int | None = None,
+    ):
+        self.name = _sanitize_name(name)
+        if command is None:
+            commands: list[str] = []
+        elif isinstance(command, str):
+            commands = [command]
+        else:
+            commands = list(command)
+        self.commands = commands
+        self.opts = opts if opts is not None else Opts()
+        self.workdir = workdir
+        self.files = self._load_files(files)
+        self.backend = backend
+        self.jobid: int | None = None
+        self.script_path: str | None = None
+        # Simulator hint: how long this job "runs" in simulated time.
+        self.sim_duration_s = sim_duration_s
+        # Optional lines injected before the commands (module loads, env).
+        self.prelude: list[str] = []
+        # Optional lines injected after the commands (manifest patching).
+        self.trailer: list[str] = []
+
+    # -- composition ---------------------------------------------------------
+
+    def add_command(self, command: str) -> "Job":
+        self.commands.append(command)
+        return self
+
+    def set_dependencies(self, jobids: "int | list[int]") -> "Job":
+        if isinstance(jobids, int):
+            jobids = [jobids]
+        self.opts.dependencies = list(jobids)
+        return self
+
+    @staticmethod
+    def _load_files(files) -> list[str]:
+        if files is None:
+            return []
+        if isinstance(files, (list, tuple)):
+            return [str(f) for f in files]
+        # a path to a list file: one entry per line, '#' comments allowed
+        entries = []
+        for line in Path(files).read_text().splitlines():
+            line = line.strip()
+            if line and not line.startswith("#"):
+                entries.append(line)
+        return entries
+
+    # -- script generation ----------------------------------------------------
+
+    def script(self) -> str:
+        """Generate the complete sbatch script for this job."""
+        if not self.commands:
+            raise ValueError(f"job {self.name!r} has no command")
+        opts = self.opts
+        if self.files:
+            opts.array_size = len(self.files)
+        lines = ["#!/bin/bash"]
+        lines += opts.sbatch_directives(self.name)
+        lines += ["", "set -euo pipefail", ""]
+        if self.workdir:
+            lines.append(f"cd {_shquote(self.workdir)}")
+        lines += self.prelude
+        if self.files:
+            listing = " ".join(_shquote(f) for f in self.files)
+            lines.append(f"NBI_FILES=({listing})")
+            lines.append('FILE="${NBI_FILES[$SLURM_ARRAY_TASK_ID]}"')
+            for cmd in self.commands:
+                lines.append(cmd.replace(FILE_PLACEHOLDER, '"$FILE"'))
+        else:
+            lines += list(self.commands)
+        lines += self.trailer
+        return "\n".join(lines) + "\n"
+
+    # -- submission ------------------------------------------------------------
+
+    def run(self, backend=None) -> int:
+        """Submit the job; returns the SLURM job id."""
+        be = backend or self.backend
+        if be is None:
+            from .backend import get_backend
+
+            be = get_backend()
+        script_text = self.script()
+        self.script_path = self._write_script(script_text)
+        self.jobid = be.submit(self)
+        return self.jobid
+
+    def _write_script(self, text: str) -> str:
+        tmpdir = self.opts.tmpdir or os.environ.get("NBI_TMPDIR") or tempfile.gettempdir()
+        Path(tmpdir).mkdir(parents=True, exist_ok=True)
+        stamp = time.strftime("%Y%m%d-%H%M%S")
+        path = Path(tmpdir) / f"nbi-{self.name}-{stamp}-{os.getpid()}-{id(self) & 0xFFFF}.sh"
+        path.write_text(text)
+        path.chmod(0o755)
+        return str(path)
+
+
+def _sanitize_name(name: str) -> str:
+    name = re.sub(r"\s+", "_", name.strip()) or "job"
+    return re.sub(r"[^A-Za-z0-9._+-]", "", name)
+
+
+def _shquote(s: str) -> str:
+    if re.match(r"^[A-Za-z0-9._/+=:,@%^-]+$", s):
+        return s
+    return "'" + s.replace("'", "'\"'\"'") + "'"

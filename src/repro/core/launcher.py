@@ -1,0 +1,310 @@
+"""``Launcher`` — declarative tool wrappers (port of ``NBI::Launcher``).
+
+A wrapper is a small class that subclasses :class:`Launcher` and describes a
+tool — its inputs, parameters, outputs, activation method (HPC module, conda
+environment, or Singularity image) and SLURM resource defaults — in a single
+constructor call. The only method subclasses typically override is
+``make_command()``; the base class handles input validation, scratch-directory
+setup, shell-script generation, manifest writing and job submission.
+
+Two bundled wrappers illustrate the pattern:
+
+* :class:`Kraken2` — the paper's own example: measures the database folder
+  size at submission time and inflates the memory request accordingly
+  (40% headroom plus a 100 GB fixed overhead).
+* :class:`TrainLauncher` (in :mod:`repro.launch.submit`) — the TPU-era
+  analogue: wraps ``python -m repro.launch.train`` and inflates host memory /
+  chip count from the model configuration.
+
+Third-party wrappers dropped into ``~/.nbi/launchers/`` are discovered
+automatically by the ``nbilaunch`` command-line tool.
+"""
+
+from __future__ import annotations
+
+import importlib.util
+import os
+import sys
+from dataclasses import dataclass, field
+from pathlib import Path
+
+from .eco import EcoScheduler
+from .job import Job
+from .manifest import Manifest
+from .resources import Opts
+
+GB = 1024  # MB per GB
+
+
+@dataclass
+class InputSpec:
+    """One declared input of a wrapped tool."""
+
+    name: str
+    required: bool = True
+    kind: str = "file"  # file | dir | str | int | float | flag
+    default: object = None
+    default_env: str = ""  # environment variable supplying the default
+    help: str = ""
+
+
+class LauncherError(ValueError):
+    pass
+
+
+class Launcher:
+    """Base class for declarative tool wrappers."""
+
+    #: subclasses override these class attributes (or pass to __init__)
+    tool_name: str = "tool"
+    tool_version: str = ""
+    inputs_spec: list[InputSpec] = []
+    params_spec: list[InputSpec] = []
+    #: activation: ("module", "kraken2/2.1.2") | ("conda", "env") |
+    #: ("singularity", "img.sif") | ("none", "")
+    activation: tuple = ("none", "")
+
+    def __init__(self, *, outdir: str = ".", opts: Opts | None = None,
+                 eco: bool | None = None, now=None, backend=None, **kwargs):
+        self.outdir = outdir
+        self.opts = opts if opts is not None else self.default_opts()
+        self.backend = backend
+        self._now = now  # injectable clock for deterministic tests
+        self.eco = eco
+        self.inputs: dict = {}
+        self.params: dict = {}
+        self._resolve(self.inputs_spec, self.inputs, kwargs)
+        self._resolve(self.params_spec, self.params, kwargs)
+        unknown = set(kwargs) - {s.name for s in self.inputs_spec + self.params_spec}
+        if unknown:
+            raise LauncherError(f"{self.tool_name}: unknown arguments {sorted(unknown)}")
+        self.build()
+
+    # -- override points --------------------------------------------------------
+
+    def default_opts(self) -> Opts:
+        return Opts.new(threads=4, memory="8GB", time="8h")
+
+    def make_command(self) -> str:
+        """Return the tool invocation string. Subclasses must override."""
+        raise NotImplementedError
+
+    def build(self) -> None:
+        """Hook for resource inflation / derived parameters. Optional."""
+
+    def outputs(self) -> dict:
+        """Declared output artefacts (paths relative to outdir)."""
+        return {}
+
+    # -- machinery ---------------------------------------------------------------
+
+    def _resolve(self, spec: list[InputSpec], into: dict, kwargs: dict) -> None:
+        for s in spec:
+            if s.name in kwargs:
+                into[s.name] = kwargs.pop(s.name)
+            elif s.default_env and os.environ.get(s.default_env):
+                into[s.name] = os.environ[s.default_env]
+            elif s.default is not None:
+                into[s.name] = s.default
+            elif s.required:
+                raise LauncherError(
+                    f"{self.tool_name}: missing required input {s.name!r}"
+                    + (f" (or set ${s.default_env})" if s.default_env else "")
+                )
+
+    def activation_lines(self) -> list[str]:
+        kind, what = self.activation
+        if kind == "module":
+            return [f"module load {what}"]
+        if kind == "conda":
+            return [f"conda activate {what}"]
+        if kind == "singularity":
+            return [f"# tool runs inside {what}"]
+        return []
+
+    def scratch_lines(self) -> list[str]:
+        return [
+            'NBI_SCRATCH="${TMPDIR:-/tmp}/nbi-$SLURM_JOB_ID"',
+            'mkdir -p "$NBI_SCRATCH"',
+            f"mkdir -p {self.outdir}",
+        ]
+
+    def manifest_path(self) -> str:
+        return str(Path(self.outdir) / f"{self.tool_name}.manifest.json")
+
+    def command_with_activation(self) -> str:
+        kind, what = self.activation
+        cmd = self.make_command()
+        if kind == "singularity":
+            return f"singularity exec {what} {cmd}"
+        return cmd
+
+    def to_job(self) -> Job:
+        """Materialise the wrapper as a submittable Job (script incl. manifest
+        patch trailer and scratch setup)."""
+        job = Job(
+            name=self.tool_name,
+            command=self.command_with_activation(),
+            opts=self.opts,
+            backend=self.backend,
+        )
+        manifest = Manifest(
+            self.manifest_path(),
+            tool=self.tool_name,
+            version=self.tool_version,
+            inputs=self.inputs,
+            params=self.params,
+            outputs=self.outputs(),
+            resources={
+                "queue": self.opts.queue,
+                "threads": self.opts.threads,
+                "memory_mb": self.opts.memory_mb,
+                "time": self.opts.slurm_time,
+                "begin": self.opts.begin,
+            },
+        )
+        job._manifest = manifest  # kept for submit()
+        # the patch-on-exit trap must be installed BEFORE any command can
+        # fail (the script runs `set -e`), so it leads the prelude
+        job.prelude = (
+            manifest.trailer_lines()
+            + self.scratch_lines()
+            + self.activation_lines()
+        )
+        return job
+
+    def submit(self, *, now=None, eco: bool | None = None) -> int:
+        """Validate, apply eco deferral, write the manifest, submit.
+
+        Eco mode is ON by default (paper: enabled unless ``--no-eco`` or
+        ``economy_mode=0``); launchers may override per instance.
+        """
+        from .config import load_config
+
+        cfg = load_config()
+        use_eco = self.eco if self.eco is not None else cfg.get_bool("economy_mode")
+        if eco is not None:
+            use_eco = eco
+        if use_eco and not self.opts.begin:
+            from datetime import datetime
+
+            clock = now or self._now or datetime.now()
+            sched = EcoScheduler(cfg)
+            directive = sched.begin_directive(self.opts.time_s, clock)
+            if directive:
+                self.opts.set_begin(directive)
+        job = self.to_job()
+        jobid = job.run(self.backend)
+        job._manifest.record["resources"]["begin"] = self.opts.begin
+        job._manifest.write_submitted(jobid)
+        self.last_job = job
+        return jobid
+
+
+# -----------------------------------------------------------------------------
+# The paper's bundled example wrapper
+# -----------------------------------------------------------------------------
+
+
+class Kraken2(Launcher):
+    """Taxonomic classification — the paper's reference wrapper.
+
+    Declares paired- or single-end FASTQ inputs, a database directory that
+    defaults to ``$KRAKEN2_DB``, and a ``threads`` parameter automatically
+    synchronised from the ``--cpus`` SLURM flag. ``build()`` measures the
+    database folder size at submission time and inflates the memory request:
+    40% headroom plus a 100 GB fixed overhead.
+    """
+
+    tool_name = "kraken2"
+    tool_version = "2.1.3"
+    activation = ("module", "kraken2")
+    inputs_spec = [
+        InputSpec("reads1", required=True, kind="file", help="FASTQ R1 / single-end"),
+        InputSpec("reads2", required=False, kind="file", help="FASTQ R2 (paired)"),
+        InputSpec("db", required=True, kind="dir", default_env="KRAKEN2_DB"),
+    ]
+    params_spec = [
+        InputSpec("threads", required=False, kind="int", default=0),
+        InputSpec("confidence", required=False, kind="float", default=0.0),
+    ]
+
+    MEM_HEADROOM = 1.4
+    MEM_OVERHEAD_GB = 100
+
+    def default_opts(self) -> Opts:
+        return Opts.new(threads=8, memory="16GB", time="6h")
+
+    def build(self) -> None:
+        # threads synchronised from the SLURM --cpus flag unless given
+        if not self.params.get("threads"):
+            self.params["threads"] = self.opts.threads
+        db = self.inputs.get("db", "")
+        size_gb = dir_size_bytes(db) / 1e9 if db and os.path.isdir(db) else 0.0
+        mem_gb = size_gb * self.MEM_HEADROOM + self.MEM_OVERHEAD_GB
+        self.opts.memory_mb = max(self.opts.memory_mb, int(mem_gb * GB))
+
+    def outputs(self) -> dict:
+        return {
+            "report": f"{self.outdir}/kraken2.report.txt",
+            "assignments": f"{self.outdir}/kraken2.out",
+        }
+
+    def make_command(self) -> str:
+        r1 = self.inputs["reads1"]
+        r2 = self.inputs.get("reads2")
+        reads = f"--paired {r1} {r2}" if r2 else str(r1)
+        return (
+            f"kraken2 --db {self.inputs['db']} --threads {self.params['threads']} "
+            f"--confidence {self.params['confidence']} "
+            f"--report {self.outputs()['report']} "
+            f"--output {self.outputs()['assignments']} {reads}"
+        )
+
+
+def dir_size_bytes(path: str) -> int:
+    total = 0
+    for root, _dirs, files in os.walk(path):
+        for f in files:
+            try:
+                total += os.path.getsize(os.path.join(root, f))
+            except OSError:
+                pass
+    return total
+
+
+# -----------------------------------------------------------------------------
+# Third-party wrapper discovery (~/.nbi/launchers/)
+# -----------------------------------------------------------------------------
+
+LAUNCHER_DIR = "~/.nbi/launchers"
+
+
+def discover_launchers(extra_dir: str | None = None) -> dict[str, type]:
+    """Find Launcher subclasses: built-ins + ``~/.nbi/launchers/*.py``."""
+    found: dict[str, type] = {"kraken2": Kraken2}
+    try:
+        from repro.launch.submit import TrainLauncher, ServeLauncher
+
+        found["train"] = TrainLauncher
+        found["serve"] = ServeLauncher
+    except Exception:
+        pass
+    search = Path(extra_dir or LAUNCHER_DIR).expanduser()
+    if search.is_dir():
+        for py in sorted(search.glob("*.py")):
+            spec = importlib.util.spec_from_file_location(f"nbi_launchers.{py.stem}", py)
+            mod = importlib.util.module_from_spec(spec)
+            sys.modules[spec.name] = mod
+            try:
+                spec.loader.exec_module(mod)
+            except Exception:
+                continue
+            for obj in vars(mod).values():
+                if (
+                    isinstance(obj, type)
+                    and issubclass(obj, Launcher)
+                    and obj is not Launcher
+                ):
+                    found[obj.tool_name] = obj
+    return found

@@ -1,0 +1,99 @@
+"""``Manifest`` — JSON provenance records (port of ``NBI::Manifest``).
+
+Serialises all resolved inputs, parameters, outputs and SLURM resources to a
+JSON file written alongside the results at submission time, then *patched
+in-place by the job script itself* upon completion or failure — with no
+dependency on external tools such as ``jq`` (the patch trailer uses only
+``python3 -c`` with the standard library, the Python analogue of the Perl
+original patching with its own interpreter).
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+SCHEMA_VERSION = 2
+
+
+class Manifest:
+    """Provenance record for one submitted analysis/training job."""
+
+    def __init__(
+        self,
+        path: str,
+        *,
+        tool: str = "",
+        version: str = "",
+        inputs: dict | None = None,
+        params: dict | None = None,
+        outputs: dict | None = None,
+        resources: dict | None = None,
+    ):
+        self.path = str(Path(path))
+        self.record = {
+            "schema_version": SCHEMA_VERSION,
+            "tool": tool,
+            "tool_version": version,
+            "inputs": inputs or {},
+            "params": params or {},
+            "outputs": outputs or {},
+            "resources": resources or {},
+            "status": "created",
+            "jobid": None,
+            "submitted_at": None,
+            "finished_at": None,
+            "exit_status": None,
+        }
+
+    # -- lifecycle -------------------------------------------------------------
+
+    def write_submitted(self, jobid: "int | None" = None) -> str:
+        """Write the manifest at submission time."""
+        self.record["status"] = "submitted"
+        self.record["jobid"] = jobid
+        self.record["submitted_at"] = _now_iso()
+        Path(self.path).parent.mkdir(parents=True, exist_ok=True)
+        Path(self.path).write_text(json.dumps(self.record, indent=2, sort_keys=True) + "\n")
+        return self.path
+
+    @staticmethod
+    def load(path: str) -> dict:
+        return json.loads(Path(path).read_text())
+
+    @staticmethod
+    def patch(path: str, **updates) -> dict:
+        """In-place JSON patch (what the job trailer does at completion)."""
+        rec = Manifest.load(path)
+        rec.update(updates)
+        Path(path).write_text(json.dumps(rec, indent=2, sort_keys=True) + "\n")
+        return rec
+
+    # -- script integration ------------------------------------------------------
+
+    def trailer_lines(self) -> list[str]:
+        """Shell lines appended to the job script: patch the manifest with the
+        job's outcome. Uses a shell EXIT trap so failures are recorded too."""
+        patcher = (
+            "python3 -c \"import json,sys,datetime;"
+            "p=sys.argv[1];rec=json.load(open(p));"
+            "rec['status']='completed' if sys.argv[2]=='0' else 'failed';"
+            "rec['exit_status']=int(sys.argv[2]);"
+            "rec['finished_at']=datetime.datetime.now().isoformat(timespec='seconds');"
+            "json.dump(rec,open(p,'w'),indent=2,sort_keys=True)\""
+            f" {_shq(self.path)} \"$NBI_RC\""
+        )
+        return [
+            "# --- NBI manifest patch-on-exit (stdlib only, no external JSON tool) ---",
+            f"nbi_manifest_patch() {{ NBI_RC=$?; {patcher}; }}",
+            "trap nbi_manifest_patch EXIT",
+        ]
+
+
+def _now_iso() -> str:
+    return time.strftime("%Y-%m-%dT%H:%M:%S")
+
+
+def _shq(s: str) -> str:
+    return "'" + s.replace("'", "'\"'\"'") + "'"

@@ -1,0 +1,91 @@
+"""``Pipeline`` — multistep analyses with automatic ``afterok`` wiring.
+
+Port of ``NBI::Pipeline``: wire SLURM dependencies between ``Job`` (or
+``Launcher``) instances automatically. Steps are named; edges are declared
+with ``after=[...]``; ``run()`` submits in topological order, threading the
+real job ids into each dependant's ``--dependency=afterok:...``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from .job import Job
+from .launcher import Launcher
+
+
+class PipelineError(ValueError):
+    pass
+
+
+@dataclass
+class _Step:
+    name: str
+    payload: object  # Job | Launcher
+    after: list = field(default_factory=list)
+    jobid: int | None = None
+
+
+class Pipeline:
+    """A DAG of jobs with afterok dependencies."""
+
+    def __init__(self, name: str = "pipeline", backend=None):
+        self.name = name
+        self.backend = backend
+        self.steps: dict[str, _Step] = {}
+
+    def add(self, name: str, payload, after: "list[str] | str | None" = None) -> "Pipeline":
+        if name in self.steps:
+            raise PipelineError(f"duplicate step {name!r}")
+        if isinstance(after, str):
+            after = [after]
+        self.steps[name] = _Step(name=name, payload=payload, after=list(after or []))
+        return self
+
+    # -- ordering -----------------------------------------------------------
+
+    def toposort(self) -> list[_Step]:
+        for s in self.steps.values():
+            for dep in s.after:
+                if dep not in self.steps:
+                    raise PipelineError(f"step {s.name!r} depends on unknown {dep!r}")
+        order: list[_Step] = []
+        seen: dict[str, int] = {}  # 0=visiting, 1=done
+
+        def visit(name: str):
+            state = seen.get(name)
+            if state == 1:
+                return
+            if state == 0:
+                raise PipelineError(f"dependency cycle involving {name!r}")
+            seen[name] = 0
+            for dep in self.steps[name].after:
+                visit(dep)
+            seen[name] = 1
+            order.append(self.steps[name])
+
+        for name in self.steps:
+            visit(name)
+        return order
+
+    # -- submission -----------------------------------------------------------
+
+    def run(self, **submit_kw) -> dict[str, int]:
+        """Submit every step in dependency order; returns name → jobid."""
+        ids: dict[str, int] = {}
+        for step in self.toposort():
+            dep_ids = [ids[d] for d in step.after]
+            payload = step.payload
+            if isinstance(payload, Launcher):
+                payload.opts.dependencies = dep_ids
+                if self.backend is not None and payload.backend is None:
+                    payload.backend = self.backend
+                jobid = payload.submit(**submit_kw)
+            elif isinstance(payload, Job):
+                payload.opts.dependencies = dep_ids
+                jobid = payload.run(self.backend or payload.backend)
+            else:
+                raise PipelineError(f"step {step.name!r}: unsupported payload type")
+            step.jobid = jobid
+            ids[step.name] = jobid
+        return ids

@@ -1,0 +1,125 @@
+"""``Queue`` / ``QueuedJob`` — live queue querying (port of ``NBI::Queue``).
+
+``Queue`` queries the workload manager (real ``squeue`` or the simulator)
+and returns a list of :class:`QueuedJob` objects, optionally filtered by
+user, status, name, or queue. ``QueuedJob`` is a lightweight data object
+used by the queue-management tools (lsjobs, viewjobs, whojobs, waitjobs).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+# Canonical squeue format used by the real backend; the simulator emits the
+# same record schema so every tool works identically against both.
+SQUEUE_FORMAT = "%i|%u|%P|%j|%T|%M|%L|%l|%N|%R|%C|%m"
+SQUEUE_FIELDS = (
+    "jobid", "user", "queue", "name", "state",
+    "time_used", "time_left", "time_limit", "nodelist", "reason",
+    "cpus", "memory",
+)
+
+ACTIVE_STATES = ("PENDING", "RUNNING", "SUSPENDED", "CONFIGURING", "COMPLETING")
+
+
+@dataclass
+class QueuedJob:
+    """One row of the queue."""
+
+    jobid: str = ""
+    user: str = ""
+    queue: str = ""
+    name: str = ""
+    state: str = ""
+    time_used: str = ""
+    time_left: str = ""
+    time_limit: str = ""
+    nodelist: str = ""
+    reason: str = ""
+    cpus: str = ""
+    memory: str = ""
+
+    @property
+    def jobid_num(self) -> int:
+        """Numeric job id (array tasks ``123_4`` → 123)."""
+        m = re.match(r"^(\d+)", self.jobid)
+        return int(m.group(1)) if m else -1
+
+    def is_active(self) -> bool:
+        return self.state in ACTIVE_STATES
+
+    @classmethod
+    def from_record(cls, rec: dict) -> "QueuedJob":
+        return cls(**{k: str(rec.get(k, "")) for k in SQUEUE_FIELDS})
+
+    @classmethod
+    def from_squeue_line(cls, line: str) -> "QueuedJob | None":
+        parts = line.rstrip("\n").split("|")
+        if len(parts) != len(SQUEUE_FIELDS):
+            return None
+        return cls(**dict(zip(SQUEUE_FIELDS, (p.strip() for p in parts))))
+
+
+@dataclass
+class Queue:
+    """A filtered snapshot of the queue (fetched on construction)."""
+
+    user: str | None = None
+    state: "str | list[str] | None" = None
+    name: str | None = None  # regex on job name
+    queue: str | None = None  # partition
+    backend: object = None
+    jobs: list[QueuedJob] = field(default_factory=list)
+
+    def __post_init__(self):
+        self.refresh()
+
+    def refresh(self) -> "Queue":
+        be = self.backend
+        if be is None:
+            from .backend import get_backend
+
+            be = get_backend()
+            self.backend = be
+        rows = [QueuedJob.from_record(r) for r in be.queue()]
+        self.jobs = [j for j in rows if self._match(j)]
+        return self
+
+    def _match(self, j: QueuedJob) -> bool:
+        if self.user and j.user != self.user:
+            return False
+        if self.state:
+            states = [self.state] if isinstance(self.state, str) else self.state
+            if j.state not in [s.upper() for s in states]:
+                return False
+        if self.name and not re.search(self.name, j.name):
+            return False
+        if self.queue and j.queue != self.queue:
+            return False
+        return True
+
+    # -- conveniences used by the CLI tools ----------------------------------
+
+    def __len__(self) -> int:
+        return len(self.jobs)
+
+    def __iter__(self):
+        return iter(self.jobs)
+
+    def ids(self) -> list[str]:
+        return [j.jobid for j in self.jobs]
+
+    def by_user(self) -> dict[str, list[QueuedJob]]:
+        out: dict[str, list[QueuedJob]] = {}
+        for j in self.jobs:
+            out.setdefault(j.user, []).append(j)
+        return out
+
+    def cancel(self, jobids: "list[str] | None" = None) -> int:
+        """Cancel the given ids (default: everything in this snapshot)."""
+        ids = jobids if jobids is not None else self.ids()
+        if not ids:
+            return 0
+        self.backend.cancel(ids)
+        return len(ids)

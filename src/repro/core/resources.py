@@ -1,0 +1,223 @@
+"""``Opts`` — SLURM resource directives with human-friendly parsing.
+
+Python port of ``NBI::Opts``: encapsulates queue, threads, memory, wall-time,
+email, job arrays and start time, accepting inputs such as ``"8GB"`` or
+``"2h30m"`` and converting them to SLURM's expected formats (memory in
+megabytes, time in ``D-HH:MM:SS``).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+# ---------------------------------------------------------------------------
+# Unit parsing
+# ---------------------------------------------------------------------------
+
+_MEM_UNITS = {
+    "": 1,  # bare numbers are megabytes (SLURM convention)
+    "k": 1 / 1024,
+    "kb": 1 / 1024,
+    "m": 1,
+    "mb": 1,
+    "g": 1024,
+    "gb": 1024,
+    "t": 1024 * 1024,
+    "tb": 1024 * 1024,
+}
+
+_TIME_UNITS = {"s": 1, "m": 60, "h": 3600, "d": 86400}
+
+_MEM_RE = re.compile(r"^\s*(\d+(?:\.\d+)?)\s*([a-zA-Z]*)\s*$")
+_TIME_TOKEN_RE = re.compile(r"(\d+(?:\.\d+)?)\s*([smhd])", re.IGNORECASE)
+
+
+def parse_memory_mb(value) -> int:
+    """Parse a human-friendly memory amount into integer megabytes.
+
+    ``64`` → 64 (MB); ``"8GB"`` → 8192; ``"500 MB"`` → 500; ``"1.5G"`` → 1536.
+    """
+    if isinstance(value, (int, float)):
+        if value <= 0:
+            raise ValueError(f"memory must be positive, got {value}")
+        return int(value)
+    m = _MEM_RE.match(str(value))
+    if not m:
+        raise ValueError(f"cannot parse memory: {value!r}")
+    qty, unit = float(m.group(1)), m.group(2).lower()
+    if unit not in _MEM_UNITS:
+        raise ValueError(f"unknown memory unit {unit!r} in {value!r}")
+    mb = int(round(qty * _MEM_UNITS[unit]))
+    if mb <= 0:
+        raise ValueError(f"memory must be positive, got {value!r}")
+    return mb
+
+
+def parse_time_s(value) -> int:
+    """Parse a human-friendly duration into integer seconds.
+
+    Accepted forms:
+      * int/float      → hours               (paper: ``-t 12`` = 12 h)
+      * ``"2h30m"``    → unit suffix tokens  (s/m/h/d)
+      * ``"1d2h"``
+      * ``"0-12:00:00"`` / ``"2-12:00"``  → SLURM D-HH:MM[:SS]
+      * ``"12:30:00"`` → HH:MM:SS
+      * ``"12:30"``    → HH:MM
+    """
+    if isinstance(value, (int, float)):
+        if value <= 0:
+            raise ValueError(f"time must be positive, got {value}")
+        return int(round(float(value) * 3600))
+    s = str(value).strip().lower()
+    if not s:
+        raise ValueError("empty time string")
+    # SLURM D-HH:MM[:SS]
+    m = re.match(r"^(\d+)-(\d{1,2}):(\d{1,2})(?::(\d{1,2}))?$", s)
+    if m:
+        d, h, mi, sec = (int(g or 0) for g in m.groups())
+        return d * 86400 + h * 3600 + mi * 60 + sec
+    # HH:MM[:SS]
+    m = re.match(r"^(\d+):(\d{1,2})(?::(\d{1,2}))?$", s)
+    if m:
+        h, mi, sec = (int(g or 0) for g in m.groups())
+        return h * 3600 + mi * 60 + sec
+    # token form: 2h30m, 1d, 90s ...
+    tokens = _TIME_TOKEN_RE.findall(s)
+    if tokens and "".join(f"{q}{u}" for q, u in tokens).replace(" ", "") == s.replace(" ", ""):
+        total = sum(float(q) * _TIME_UNITS[u.lower()] for q, u in tokens)
+        return int(round(total))
+    # bare number (string) → hours, mirroring the int behaviour
+    if re.match(r"^\d+(\.\d+)?$", s):
+        return int(round(float(s) * 3600))
+    raise ValueError(f"cannot parse time: {value!r}")
+
+
+def format_slurm_time(seconds: int) -> str:
+    """Seconds → SLURM ``D-HH:MM:SS``."""
+    d, rem = divmod(int(seconds), 86400)
+    h, rem = divmod(rem, 3600)
+    m, s = divmod(rem, 60)
+    return f"{d}-{h:02d}:{m:02d}:{s:02d}"
+
+
+# ---------------------------------------------------------------------------
+# Opts
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Opts:
+    """SLURM resource directives for one job (port of ``NBI::Opts``).
+
+    Memory is stored in MB, wall-time in seconds; ``sbatch_directives()``
+    renders SLURM's expected units.
+    """
+
+    queue: str = ""
+    threads: int = 1
+    memory_mb: int = 1024
+    time_s: int = 3600
+    email_address: str = ""
+    email_type: str = "NONE"  # NONE|BEGIN|END|FAIL|ALL
+    tmpdir: str = ""
+    output_dir: str = ""  # -w in runjob: where stdout/err logs go
+    begin: str = ""  # ISO8601 --begin directive (eco mode injects this)
+    array_size: int = 0  # >0 → job array 0..array_size-1
+    array_throttle: int = 0  # simultaneous array tasks (0 = unlimited)
+    dependencies: list = field(default_factory=list)  # job ids (afterok)
+    dependency_type: str = "afterok"
+    nodes: int = 1
+    ntasks: int = 1
+    gres: str = ""  # e.g. "tpu:v5e:4"
+    account: str = ""
+    requeue: bool = True  # production default: jobs survive node failure
+    extra: list = field(default_factory=list)  # raw pass-through directives
+
+    # -- constructors -------------------------------------------------------
+
+    @classmethod
+    def new(cls, *, queue: str = "", threads: int = 1, memory="1GB",
+            time="1h", email: str = "", email_type: str = "NONE",
+            tmpdir: str = "", output_dir: str = "", **kw) -> "Opts":
+        """Human-friendly constructor mirroring ``NBI::Opts->new``."""
+        return cls(
+            queue=queue,
+            threads=int(threads),
+            memory_mb=parse_memory_mb(memory),
+            time_s=parse_time_s(time),
+            email_address=email,
+            email_type=email_type if email_type != "NONE" or not email else "END",
+            tmpdir=tmpdir,
+            output_dir=output_dir,
+            **kw,
+        )
+
+    # -- mutators (human-friendly setters, chainable) -----------------------
+
+    def set_memory(self, value) -> "Opts":
+        self.memory_mb = parse_memory_mb(value)
+        return self
+
+    def set_time(self, value) -> "Opts":
+        self.time_s = parse_time_s(value)
+        return self
+
+    def set_begin(self, iso: str) -> "Opts":
+        self.begin = iso
+        return self
+
+    # -- rendering -----------------------------------------------------------
+
+    @property
+    def slurm_time(self) -> str:
+        return format_slurm_time(self.time_s)
+
+    def sbatch_directives(self, job_name: str = "job") -> list[str]:
+        """Render the ``#SBATCH`` header lines for this option set."""
+        lines = [f"#SBATCH --job-name={job_name}"]
+        if self.queue:
+            lines.append(f"#SBATCH --partition={self.queue}")
+        lines.append(f"#SBATCH --nodes={self.nodes}")
+        lines.append(f"#SBATCH --ntasks={self.ntasks}")
+        lines.append(f"#SBATCH --cpus-per-task={self.threads}")
+        lines.append(f"#SBATCH --mem={self.memory_mb}")
+        lines.append(f"#SBATCH --time={self.slurm_time}")
+        if self.account:
+            lines.append(f"#SBATCH --account={self.account}")
+        if self.gres:
+            lines.append(f"#SBATCH --gres={self.gres}")
+        out_dir = self.output_dir.rstrip("/") if self.output_dir else "."
+        if self.array_size > 0:
+            spec = f"0-{self.array_size - 1}"
+            if self.array_throttle > 0:
+                spec += f"%{self.array_throttle}"
+            lines.append(f"#SBATCH --array={spec}")
+            lines.append(f"#SBATCH --output={out_dir}/{job_name}.%A_%a.out")
+            lines.append(f"#SBATCH --error={out_dir}/{job_name}.%A_%a.err")
+        else:
+            lines.append(f"#SBATCH --output={out_dir}/{job_name}.%j.out")
+            lines.append(f"#SBATCH --error={out_dir}/{job_name}.%j.err")
+        if self.email_address:
+            lines.append(f"#SBATCH --mail-user={self.email_address}")
+            lines.append(f"#SBATCH --mail-type={self.email_type}")
+        if self.begin:
+            lines.append(f"#SBATCH --begin={self.begin}")
+        if self.dependencies:
+            dep = ":".join(str(d) for d in self.dependencies)
+            lines.append(f"#SBATCH --dependency={self.dependency_type}:{dep}")
+        if self.requeue:
+            lines.append("#SBATCH --requeue")
+        for raw in self.extra:
+            raw = raw.strip()
+            lines.append(raw if raw.startswith("#SBATCH") else f"#SBATCH {raw}")
+        return lines
+
+    def view(self) -> str:
+        """Human-readable summary (port of ``NBI::Opts->view``)."""
+        gb = self.memory_mb / 1024
+        return (
+            f"queue={self.queue or '(default)'} threads={self.threads} "
+            f"memory={gb:g}GB time={self.slurm_time}"
+            + (f" begin={self.begin}" if self.begin else "")
+        )

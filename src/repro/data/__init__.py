@@ -1,0 +1,18 @@
+"""Data pipeline: deterministic synthetic LM streams, per-host sharding,
+background prefetch with backup-fetch straggler mitigation."""
+
+from .pipeline import (
+    DataLoader,
+    HostShard,
+    SyntheticLMDataset,
+    host_shard_for,
+    make_train_loader,
+)
+
+__all__ = [
+    "DataLoader",
+    "HostShard",
+    "SyntheticLMDataset",
+    "host_shard_for",
+    "make_train_loader",
+]

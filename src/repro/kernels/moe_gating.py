@@ -1,0 +1,97 @@
+"""Pallas TPU kernel: fused MoE gating (softmax → top-k → capacity slots).
+
+One kernel invocation routes one dispatch group: from router logits (N, E)
+it produces, entirely in VMEM,
+
+    idx  (N, k) int32  — expert chosen per slot (iterated-argmax order,
+                          matching jax.lax.top_k's stable tie-breaking)
+    gate (N, k) f32    — softmax gate weights renormalised over the k picks
+    pos  (N, k) int32  — capacity slot within the expert's buffer, or -1
+                          when the expert is over capacity (token dropped)
+
+The XLA path materialises probs → top_k → k one-hot (N, E) masks → k
+cumsums at HBM-visible boundaries; fused, the (N, E) intermediates stay in
+VMEM (N=1024, E=384 f32 ≈ 1.6 MB/tile). Grid = (G,), fully parallel —
+capacity state is per-group by construction (GShard semantics).
+
+Dispatch/combine stay as the einsum path: per §Perf cell 3 the AR-combined
+one-hot dispatch is wire-optimal at EP=16/top-8, so the *gating decision* is
+the part worth fusing, not the data movement.
+
+Validated in interpret mode against :func:`repro.kernels.ref.moe_gating_ref`
+and cross-checked against :func:`repro.models.moe.top_k_routing` (the
+dispatch/combine tensors rebuilt from (idx, gate, pos) must match exactly).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _gating_kernel(logits_ref, idx_ref, gate_ref, pos_ref,
+                   *, top_k: int, capacity: int, renormalise: bool):
+    x = logits_ref[0].astype(jnp.float32)  # (N, E)
+    N, E = x.shape
+    # softmax over experts
+    m = x.max(axis=-1, keepdims=True)
+    p = jnp.exp(x - m)
+    probs = p / p.sum(axis=-1, keepdims=True)
+
+    counts = jnp.zeros((E,), jnp.int32)
+    remaining = probs
+    gates = []
+    for j in range(top_k):  # static k → unrolled
+        g_j = remaining.max(axis=-1)  # (N,)
+        e_j = jnp.argmax(remaining, axis=-1).astype(jnp.int32)  # first max wins
+        onehot = jax.nn.one_hot(e_j, E, dtype=jnp.int32)  # (N, E)
+        # capacity slot: tokens earlier in the group claim lower slots
+        slot_grid = counts[None, :] + jnp.cumsum(onehot, axis=0) - onehot
+        slot = jnp.sum(slot_grid * onehot, axis=-1)  # (N,)
+        kept = slot < capacity
+        idx_ref[0, :, j] = e_j
+        pos_ref[0, :, j] = jnp.where(kept, slot, -1).astype(jnp.int32)
+        gates.append(g_j)
+        counts = counts + onehot.sum(axis=0)
+        remaining = jnp.where(onehot > 0, -jnp.inf, remaining)
+    gate = jnp.stack(gates, axis=-1)  # (N, k)
+    if renormalise:
+        gate = gate / jnp.maximum(gate.sum(axis=-1, keepdims=True), 1e-9)
+    gate_ref[0] = gate
+
+
+@functools.partial(
+    jax.jit, static_argnames=("top_k", "capacity", "renormalise", "interpret")
+)
+def moe_gating_pallas(logits, *, top_k: int, capacity: int,
+                      renormalise: bool = True, interpret: bool = True):
+    """logits: (G, N, E) → (idx (G,N,k) i32, gate (G,N,k) f32, pos (G,N,k) i32)."""
+    G, N, E = logits.shape
+    kernel = functools.partial(
+        _gating_kernel, top_k=top_k, capacity=capacity, renormalise=renormalise
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(G,),
+        in_specs=[pl.BlockSpec((1, N, E), lambda g: (g, 0, 0))],
+        out_specs=[
+            pl.BlockSpec((1, N, top_k), lambda g: (g, 0, 0)),
+            pl.BlockSpec((1, N, top_k), lambda g: (g, 0, 0)),
+            pl.BlockSpec((1, N, top_k), lambda g: (g, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((G, N, top_k), jnp.int32),
+            jax.ShapeDtypeStruct((G, N, top_k), jnp.float32),
+            jax.ShapeDtypeStruct((G, N, top_k), jnp.int32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",),
+        ),
+        interpret=interpret,
+    )(logits)

@@ -1,0 +1,128 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+Each function is the *semantic definition* the kernel must match; the
+per-kernel test sweeps shapes/dtypes and asserts allclose against these.
+They are deliberately naive (materialise the full score matrix, step the
+recurrence token-by-token) — clarity over speed.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal=True, window: int = 0, logit_cap: float = 0.0):
+    """q: (B,Hq,Sq,d); k,v: (B,Hkv,Skv,d); GQA via Hq = G·Hkv. O(S²) softmax."""
+    B, Hq, Sq, d = q.shape
+    _, Hkv, Skv, _ = k.shape
+    G = Hq // Hkv
+    k = jnp.repeat(k, G, axis=1)
+    v = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * (d**-0.5)
+    if logit_cap > 0:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= q_pos - k_pos < window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def wkv6_ref(r, k, v, w, u, s0):
+    """Token-by-token RWKV6 recurrence (the definition, O(T) sequential).
+
+    r,k,w: (B,H,T,dk); v: (B,H,T,dv); u: (H,dk); s0: (B,H,dk,dv) f32.
+        y_t = r_t · (S_{t-1} + diag(u) k_t v_t^T)
+        S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    """
+    f32 = jnp.float32
+    rT = r.astype(f32).transpose(2, 0, 1, 3)
+    kT = k.astype(f32).transpose(2, 0, 1, 3)
+    vT = v.astype(f32).transpose(2, 0, 1, 3)
+    wT = w.astype(f32).transpose(2, 0, 1, 3)
+    uf = u.astype(f32)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp
+        kv = kt[..., :, None] * vt[..., None, :]
+        y = jnp.einsum("bhi,bhiv->bhv", rt, s + uf[None, :, :, None] * kv)
+        return wt[..., None] * s + kv, y
+
+    s_fin, ys = jax.lax.scan(step, s0.astype(f32), (rT, kT, vT, wT))
+    return ys.transpose(1, 2, 0, 3).astype(r.dtype), s_fin
+
+
+def lru_ref(a, b, h0):
+    """Linear recurrence h_t = a_t ⊙ h_{t-1} + b_t (token-by-token).
+
+    a, b: (B, T, W); h0: (B, W) f32. Returns (h_seq (B,T,W), h_final).
+    """
+    f32 = jnp.float32
+
+    def step(h, inp):
+        at, bt = inp
+        h = at * h + bt
+        return h, h
+
+    aT = a.astype(f32).transpose(1, 0, 2)
+    bT = b.astype(f32).transpose(1, 0, 2)
+    h_fin, hs = jax.lax.scan(step, h0.astype(f32), (aT, bT))
+    return hs.transpose(1, 0, 2).astype(a.dtype), h_fin
+
+
+def moe_gating_ref(logits, *, top_k: int, capacity: int, renormalise=True):
+    """Token-by-token gating oracle: softmax → iterated argmax → capacity.
+
+    logits: (G, N, E) → (idx, gate, pos) each (G, N, k); pos = -1 = dropped.
+    Sequential over tokens so the capacity semantics are unmistakable.
+    """
+    import numpy as np
+
+    logits = np.asarray(logits, np.float32)
+    G, N, E = logits.shape
+    k = top_k
+    idx = np.zeros((G, N, k), np.int32)
+    gate = np.zeros((G, N, k), np.float32)
+    pos = np.full((G, N, k), -1, np.int32)
+    for g in range(G):
+        # picks: iterated argmax per token (stable ties: lowest expert id)
+        avail = np.exp(logits[g] - logits[g].max(-1, keepdims=True))
+        avail = avail / avail.sum(-1, keepdims=True)
+        for n in range(N):
+            row = avail[n].copy()
+            for j in range(k):
+                e = int(np.argmax(row))
+                idx[g, n, j] = e
+                gate[g, n, j] = row[e]
+                row[e] = -np.inf
+        if renormalise:
+            gate[g] = gate[g] / np.maximum(gate[g].sum(-1, keepdims=True), 1e-9)
+        # capacity slots: j-major (GShard — rank-0 picks claim slots before
+        # any rank-1 pick), tokens in group order within each rank
+        counts = np.zeros(E, np.int64)
+        for j in range(k):
+            for n in range(N):
+                e = idx[g, n, j]
+                if counts[e] < capacity:
+                    pos[g, n, j] = counts[e]
+                counts[e] += 1
+    return jnp.asarray(idx), jnp.asarray(gate), jnp.asarray(pos)
+
+
+def rmsnorm_ref(x, weight, eps: float = 1e-6):
+    """Row-wise RMSNorm in f32, cast back to x.dtype."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * weight.astype(jnp.float32)
+    return y.astype(x.dtype)

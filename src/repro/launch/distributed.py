@@ -1,0 +1,104 @@
+"""Multi-host process bootstrap: SLURM env → jax.distributed.
+
+On a real cluster every host runs the same ``python -m repro.launch.train``
+under ``srun``; this module derives the coordinator/process topology from
+SLURM's environment (no extra config system):
+
+    SLURM_JOB_NODELIST   → coordinator host (first entry, expanded)
+    SLURM_NTASKS         → process count
+    SLURM_PROCID         → process index
+    SLURM_JOB_ID         → coordinator port (stable per job, 20000-29999)
+
+``maybe_initialize()`` is a no-op outside SLURM (single-process dev loop) and
+under ``REPRO_DISABLE_DISTRIBUTED=1`` (unit tests). Returns (process_index,
+process_count) either way, so the data pipeline's host sharding can always be
+derived from it.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+
+
+def _expand_first_host(nodelist: str) -> str:
+    """First hostname of a SLURM nodelist (handles "n[001-004,007],m01")."""
+    m = re.match(r"^([^,\[]+)(\[([^\]]+)\])?", nodelist.strip())
+    if not m:
+        return nodelist.strip()
+    prefix, _, ranges = m.groups()
+    if not ranges:
+        return prefix
+    first = ranges.split(",")[0].split("-")[0]
+    return f"{prefix}{first}"
+
+
+def coordinator_address() -> "str | None":
+    nodelist = os.environ.get("SLURM_JOB_NODELIST", "")
+    if not nodelist:
+        return None
+    host = _expand_first_host(nodelist)
+    port = 20000 + int(os.environ.get("SLURM_JOB_ID", "0")) % 10000
+    return f"{host}:{port}"
+
+
+def slurm_topology() -> "tuple[int, int] | None":
+    """(process_index, process_count) from SLURM env, or None."""
+    try:
+        n = int(os.environ["SLURM_NTASKS"])
+        i = int(os.environ["SLURM_PROCID"])
+    except (KeyError, ValueError):
+        return None
+    return (i, n) if n > 1 else None
+
+
+def maybe_initialize() -> "tuple[int, int]":
+    """Initialize jax.distributed when launched as a multi-task SLURM job."""
+    if os.environ.get("REPRO_DISABLE_DISTRIBUTED") == "1":
+        return 0, 1
+    topo = slurm_topology()
+    if topo is None:
+        return 0, 1
+    index, count = topo
+    import jax
+
+    jax.distributed.initialize(
+        coordinator_address=coordinator_address(),
+        num_processes=count,
+        process_id=index,
+    )
+    return index, count
+
+
+def multinode_sbatch(
+    *, job_name: str, hosts: int, tasks_per_host: int = 1,
+    command: str, time: str = "1-00:00:00", partition: str = "",
+    gres: str = "tpu:v5e:4", mem_mb: int = 300_000, logdir: str = "logs",
+) -> str:
+    """A complete multi-host sbatch script: one srun task per host, each
+    running the SAME command; repro.launch.distributed picks up the topology.
+    Used by TrainLauncher when the derived host count exceeds 1."""
+    lines = [
+        "#!/bin/bash",
+        f"#SBATCH --job-name={job_name}",
+        f"#SBATCH --nodes={hosts}",
+        f"#SBATCH --ntasks={hosts * tasks_per_host}",
+        f"#SBATCH --ntasks-per-node={tasks_per_host}",
+        f"#SBATCH --mem={mem_mb}",
+        f"#SBATCH --time={time}",
+        f"#SBATCH --output={logdir}/{job_name}.%j.out",
+        f"#SBATCH --error={logdir}/{job_name}.%j.err",
+        "#SBATCH --requeue",
+    ]
+    if partition:
+        lines.insert(2, f"#SBATCH --partition={partition}")
+    if gres:
+        lines.append(f"#SBATCH --gres={gres}")
+    lines += [
+        "",
+        "set -euo pipefail",
+        f"mkdir -p {logdir}",
+        "# every task runs the same command; topology comes from SLURM env",
+        f"srun --kill-on-bad-exit=1 {command}",
+    ]
+    return "\n".join(lines) + "\n"

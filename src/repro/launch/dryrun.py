@@ -1,0 +1,235 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × shape × mesh)
+cell against ShapeDtypeStruct inputs (no allocation), record
+``memory_analysis()`` / ``cost_analysis()`` and the trip-count-aware HLO
+stats (FLOPs / HBM bytes / collective wire bytes) for the roofline.
+
+Usage:
+  python -m repro.launch.dryrun                        # all cells, both meshes
+  python -m repro.launch.dryrun --arch rwkv6-7b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --out results/dryrun   # JSON per cell
+
+Cells are persisted incrementally; rerunning skips completed cells unless
+--force. Exit code is non-zero if any attempted cell fails.
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.analysis.hlo import analyze_hlo
+from repro.configs import ASSIGNED, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.models.registry import build_model
+from repro.optim import make_optimizer
+from repro.parallel.sharding import resolve_tree, rules_for
+from repro.training.steps import (
+    abstract_train_state,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+    train_state_logical,
+)
+
+# (kind, seq_len, global_batch)
+SHAPES = {
+    "train_4k": ("train", 4_096, 256),
+    "prefill_32k": ("prefill", 32_768, 32),
+    "decode_32k": ("decode", 32_768, 128),
+    "long_500k": ("decode", 524_288, 1),
+}
+
+MESHES = {"single": False, "multi": True}
+
+
+def plan_cells(archs=None, shapes=None):
+    """All (arch, shape) cells incl. assignment-mandated skips."""
+    cells = []
+    for arch in archs or ASSIGNED:
+        cfg = get_config(arch)
+        for shape_name, (kind, seq, batch) in SHAPES.items():
+            if shapes and shape_name not in shapes:
+                continue
+            skip = None
+            if shape_name == "long_500k" and not cfg.sub_quadratic:
+                skip = "full-attention arch: 500k decode excluded by assignment rule"
+            if kind == "decode" and not cfg.has_decoder:
+                skip = "encoder-only arch has no decode step"
+            cells.append(
+                {"arch": arch, "shape": shape_name, "kind": kind,
+                 "seq": seq, "batch": batch, "skip": skip}
+            )
+    return cells
+
+
+def _replicated(mesh):
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    return NamedSharding(mesh, PartitionSpec())
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool) -> dict:
+    kind, seq, batch = SHAPES[shape_name]
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    t0 = time.time()
+
+    rules = rules_for(
+        cfg, mesh,
+        param_defs=model.param_defs,
+        batch_size=batch,
+        extra_dims={"kv_seq": seq, "heads": cfg.n_heads, "seq": seq},
+        fsdp=cfg.fsdp and kind == "train",  # ZeRO-3 is a training-path rule
+    )
+
+    if kind == "train":
+        optimizer = make_optimizer(cfg.optimizer)
+        state = abstract_train_state(model, optimizer)
+        state_sh = resolve_tree(mesh, train_state_logical(model, optimizer), rules)
+        batch_abs = model.train_inputs(batch, seq)
+        batch_sh = resolve_tree(mesh, model.train_input_logical(), rules)
+        step = make_train_step(model, optimizer, rules, mesh)
+        with mesh:
+            lowered = jax.jit(
+                step,
+                in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, None),
+                donate_argnums=(0,),
+            ).lower(state, batch_abs)
+    elif kind == "prefill":
+        params = model.abstract_params()
+        params_sh = resolve_tree(mesh, model.param_logical(), rules)
+        batch_abs = model.prefill_inputs(batch, seq)
+        batch_sh = resolve_tree(mesh, model.prefill_input_logical(), rules)
+        step = make_prefill_step(model, rules, mesh)
+        with mesh:
+            lowered = jax.jit(
+                step, in_shardings=(params_sh, batch_sh)
+            ).lower(params, batch_abs)
+    else:  # decode
+        params = model.abstract_params()
+        params_sh = resolve_tree(mesh, model.param_logical(), rules)
+        cache = model.cache_defs_fn(batch, seq)
+        cache_sh = resolve_tree(mesh, model.cache_logical_fn(), rules)
+        toks = model.decode_inputs(batch)
+        step = make_serve_step(model, rules, mesh)
+        with mesh:
+            lowered = jax.jit(
+                step,
+                in_shardings=(params_sh, cache_sh, None, None),
+                out_shardings=(None, cache_sh),
+                donate_argnums=(1,),
+            ).lower(params, cache, toks["tokens"], toks["pos"])
+
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    mem_rec = {}
+    for attr in (
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "generated_code_size_in_bytes",
+        "alias_size_in_bytes",
+    ):
+        try:
+            mem_rec[attr] = int(getattr(mem, attr))
+        except Exception:
+            pass
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    stats = analyze_hlo(hlo)
+
+    pv = model.cfg.vocab_size  # padded
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "kind": kind,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "seq": seq,
+        "batch": batch,
+        "compile_s": round(compile_s, 1),
+        "rules": {k: (list(v) if isinstance(v, tuple) else v) for k, v in rules.items()},
+        "memory_analysis": mem_rec,
+        "cost_analysis": {
+            k: float(v)
+            for k, v in cost.items()
+            if isinstance(v, (int, float)) and k in ("flops", "bytes accessed", "optimal_seconds")
+        },
+        "hlo_flops_per_device": stats.flops,
+        "hlo_hbm_bytes_per_device": stats.hbm_bytes,
+        "collective_wire_bytes_per_device": stats.collective_wire_bytes,
+        "collective_by_type": stats.collective_by_type,
+        "collective_count": stats.collective_count,
+        "while_trip_counts": stats.while_trip_counts[:32],
+        "analysis_notes": stats.notes[:8],
+        "param_count": cfg.param_count(),
+        "active_param_count": cfg.active_param_count(),
+        "padded_vocab": pv,
+    }
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", action="append", help="arch id (repeatable)")
+    ap.add_argument("--shape", action="append", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args(argv)
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = plan_cells(args.arch, args.shape)
+    failures = 0
+    for cell in cells:
+        for mesh_name in meshes:
+            tag = f"{cell['arch']}__{cell['shape']}__{mesh_name}"
+            path = outdir / f"{tag}.json"
+            if cell["skip"]:
+                path.write_text(json.dumps({**cell, "mesh": mesh_name, "status": "skipped",
+                                            "skip_reason": cell["skip"]}, indent=2))
+                print(f"[skip] {tag}: {cell['skip']}")
+                continue
+            if path.exists() and not args.force:
+                try:
+                    prev = json.loads(path.read_text())
+                    if prev.get("status") == "ok":
+                        print(f"[cached] {tag}")
+                        continue
+                except Exception:
+                    pass
+            print(f"[lower] {tag} ...", flush=True)
+            try:
+                rec = lower_cell(cell["arch"], cell["shape"], MESHES[mesh_name])
+                rec["status"] = "ok"
+                path.write_text(json.dumps(rec, indent=2))
+                print(
+                    f"[ok] {tag} compile={rec['compile_s']}s "
+                    f"flops/dev={rec['hlo_flops_per_device']:.3e} "
+                    f"wire/dev={rec['collective_wire_bytes_per_device']:.3e}",
+                    flush=True,
+                )
+            except Exception as e:  # noqa: BLE001 — report and continue
+                failures += 1
+                path.write_text(json.dumps({**cell, "mesh": mesh_name, "status": "error",
+                                            "error": f"{type(e).__name__}: {e}",
+                                            "traceback": traceback.format_exc()[-4000:]},
+                                           indent=2))
+                print(f"[FAIL] {tag}: {type(e).__name__}: {e}", flush=True)
+    print(f"done; failures={failures}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

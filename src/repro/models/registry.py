@@ -1,0 +1,175 @@
+"""Model registry: one uniform API over every architecture family.
+
+``build_model(cfg)`` returns a :class:`Model` whose members are pure
+functions suitable for ``jax.jit``/``jax.eval_shape``:
+
+  loss_fn(params, batch)              → (scalar loss, metrics)   [train]
+  prefill_fn(params, batch)           → (last logits, cache)     [prefill]
+  decode_fn(params, cache, tok, pos)  → (logits, new cache)      [decode]
+
+plus declarative metadata: ParamDef tree, cache ShapeDtypeStructs, logical
+axis trees for params/batch/cache (resolved to meshes by repro.parallel).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import moe as moe_mod
+from . import rglru as rglru_mod
+from . import rwkv6 as rwkv_mod
+from . import transformer as tx
+from . import whisper as wh
+from .common import ParamDef, abstract_params, init_params
+from .config import ArchConfig
+
+VOCAB_PAD = 512  # pad embeddings so the vocab dim shards cleanly (Megatron idiom)
+
+
+def padded_vocab(cfg: ArchConfig) -> int:
+    v = cfg.vocab_size
+    return ((v + VOCAB_PAD - 1) // VOCAB_PAD) * VOCAB_PAD
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+    param_defs: Any
+    loss_fn: Callable
+    prefill_fn: Callable
+    decode_fn: Callable | None
+    cache_defs_fn: Callable  # (batch, max_seq) -> ShapeDtypeStruct tree
+    cache_logical_fn: Callable  # (cfg) -> logical tree
+
+    def init(self, rng):
+        return init_params(self.param_defs, rng)
+
+    def abstract_params(self):
+        return abstract_params(self.param_defs)
+
+    def param_logical(self):
+        return jax.tree_util.tree_map(
+            lambda d: d.logical, self.param_defs,
+            is_leaf=lambda x: isinstance(x, ParamDef),
+        )
+
+    # ---------------- input specs (ShapeDtypeStructs; no allocation) --------
+
+    def train_inputs(self, batch: int, seq: int) -> dict:
+        cfg = self.cfg
+        i32 = jnp.int32
+        if cfg.family == "encdec":
+            return {
+                "frames": jax.ShapeDtypeStruct(
+                    (batch, cfg.enc_len, cfg.d_model), jnp.dtype(cfg.dtype)
+                ),
+                "tokens": jax.ShapeDtypeStruct((batch, seq), i32),
+                "labels": jax.ShapeDtypeStruct((batch, seq), i32),
+            }
+        if cfg.n_patches:
+            text = seq - cfg.n_patches
+            return {
+                "patches": jax.ShapeDtypeStruct(
+                    (batch, cfg.n_patches, cfg.d_model), jnp.dtype(cfg.dtype)
+                ),
+                "tokens": jax.ShapeDtypeStruct((batch, text), i32),
+                "labels": jax.ShapeDtypeStruct((batch, seq), i32),
+            }
+        return {
+            "tokens": jax.ShapeDtypeStruct((batch, seq), i32),
+            "labels": jax.ShapeDtypeStruct((batch, seq), i32),
+        }
+
+    def train_input_logical(self) -> dict:
+        cfg = self.cfg
+        out = {"tokens": ("batch", None), "labels": ("batch", None)}
+        if cfg.family == "encdec":
+            out["frames"] = ("batch", None, None)
+        if cfg.n_patches:
+            out["patches"] = ("batch", None, None)
+        return out
+
+    def prefill_inputs(self, batch: int, seq: int) -> dict:
+        specs = self.train_inputs(batch, seq)
+        specs.pop("labels")
+        return specs
+
+    def prefill_input_logical(self) -> dict:
+        out = self.train_input_logical()
+        out.pop("labels")
+        return out
+
+    def decode_inputs(self, batch: int) -> dict:
+        return {
+            "tokens": jax.ShapeDtypeStruct((batch, 1), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    # all families embed/unembed against the padded vocab
+    cfg = cfg.replace() if cfg.vocab_size == padded_vocab(cfg) else cfg
+    pcfg = cfg.replace(vocab_size=padded_vocab(cfg))
+
+    if cfg.family == "dense":
+        return Model(
+            cfg=pcfg,
+            param_defs=tx.dense_param_defs(pcfg),
+            loss_fn=lambda p, b: tx.dense_loss(p, pcfg, b),
+            prefill_fn=lambda p, b: tx.dense_prefill(
+                p, pcfg, b["tokens"], patches=b.get("patches")
+            ),
+            decode_fn=lambda p, c, t, pos: tx.dense_decode_step(p, pcfg, c, t, pos),
+            cache_defs_fn=lambda batch, seq: tx.dense_cache_defs(pcfg, batch, seq),
+            cache_logical_fn=lambda: tx.cache_logical(pcfg),
+        )
+    if cfg.family == "moe":
+        return Model(
+            cfg=pcfg,
+            param_defs=moe_mod.moe_param_defs(pcfg),
+            loss_fn=lambda p, b: moe_mod.moe_loss(p, pcfg, b),
+            prefill_fn=lambda p, b: moe_mod.moe_prefill(p, pcfg, b["tokens"]),
+            decode_fn=lambda p, c, t, pos: moe_mod.moe_decode_step(p, pcfg, c, t, pos),
+            cache_defs_fn=lambda batch, seq: moe_mod.moe_cache_defs(pcfg, batch, seq),
+            cache_logical_fn=lambda: moe_mod.moe_cache_logical(pcfg),
+        )
+    if cfg.family == "rwkv6":
+        return Model(
+            cfg=pcfg,
+            param_defs=rwkv_mod.rwkv_param_defs(pcfg),
+            loss_fn=lambda p, b: rwkv_mod.rwkv_loss(p, pcfg, b),
+            prefill_fn=lambda p, b: _rwkv_prefill(p, pcfg, b),
+            decode_fn=lambda p, c, t, pos: rwkv_mod.rwkv_decode_step(p, pcfg, c, t, pos),
+            cache_defs_fn=lambda batch, seq: rwkv_mod.rwkv_cache_defs(pcfg, batch, seq),
+            cache_logical_fn=lambda: rwkv_mod.rwkv_cache_logical(pcfg),
+        )
+    if cfg.family == "rglru":
+        return Model(
+            cfg=pcfg,
+            param_defs=rglru_mod.griffin_param_defs(pcfg),
+            loss_fn=lambda p, b: rglru_mod.griffin_loss(p, pcfg, b),
+            prefill_fn=lambda p, b: rglru_mod.griffin_prefill(p, pcfg, b["tokens"]),
+            decode_fn=lambda p, c, t, pos: rglru_mod.griffin_decode_step(p, pcfg, c, t, pos),
+            cache_defs_fn=lambda batch, seq: rglru_mod.griffin_cache_defs(pcfg, batch, seq),
+            cache_logical_fn=lambda: rglru_mod.griffin_cache_logical(pcfg),
+        )
+    if cfg.family == "encdec":
+        return Model(
+            cfg=pcfg,
+            param_defs=wh.whisper_param_defs(pcfg),
+            loss_fn=lambda p, b: wh.whisper_loss(p, pcfg, b),
+            prefill_fn=lambda p, b: wh.whisper_prefill(p, pcfg, b["frames"], b["tokens"]),
+            decode_fn=lambda p, c, t, pos: wh.whisper_decode_step(p, pcfg, c, t, pos),
+            cache_defs_fn=lambda batch, seq: wh.whisper_cache_defs(pcfg, batch, seq),
+            cache_logical_fn=lambda: wh.whisper_cache_logical(pcfg),
+        )
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+def _rwkv_prefill(params, cfg, batch):
+    logits, caches = rwkv_mod.rwkv_forward(params, cfg, batch["tokens"], collect_cache=True)
+    return logits[:, -1:], caches

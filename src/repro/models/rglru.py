@@ -1,0 +1,432 @@
+"""Griffin / RecurrentGemma — RG-LRU recurrent blocks + local attention (1:2).
+
+Block pattern (arXiv:2402.19427): repeating (recurrent, recurrent, local-attn)
+residual pairs, each pair = temporal block + GeGLU MLP with pre-RMSNorm.
+The RG-LRU recurrence:
+
+    r_t = σ(w_a ⊙ x_t + b_a)            (recurrence gate, per-channel)
+    i_t = σ(w_x ⊙ x_t + b_x)            (input gate)
+    a_t = exp(-c · softplus(Λ) ⊙ r_t)    (c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+Training/prefill uses ``jax.lax.associative_scan`` (log-depth parallel scan —
+the TPU-native replacement for the paper's fused GPU scan kernel; the Pallas
+kernel in repro/kernels/rglru_scan.py does the block-local version). Decode
+keeps O(1) state per recurrent layer and a ring-buffer KV cache of
+``window`` (2048) for local-attention layers — which is why this arch runs
+the 500k-token cell.
+
+Heterogeneous depth under ``lax.scan``: layers are grouped into scanned
+"super-layers" of (rec, rec, attn); the remainder (26 = 3·8 + 2) is a
+scanned tail of rec pairs.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .common import (
+    ParamDef,
+    apply_rope,
+    attention_chunked,
+    attention_single_shot,
+    cross_entropy,
+    geglu,
+    rms_norm,
+    shard,
+)
+from .config import ArchConfig
+from .transformer import _stack, embed_tokens, remat_wrap, unembed
+
+# ---------------------------------------------------------------------------
+# Parameter definitions
+# ---------------------------------------------------------------------------
+
+
+def rec_pair_defs(cfg: ArchConfig, pdt) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    W = cfg.lru_width or cfg.d_model
+    K = cfg.conv_width
+    return {
+        "ln1": ParamDef((D,), (None,), pdt, "ones"),
+        "rec": {
+            "w_gate": ParamDef((D, W), ("embed", "lru"), pdt),
+            "w_in": ParamDef((D, W), ("embed", "lru"), pdt),
+            "conv_w": ParamDef((W, K), ("lru", None), pdt, scale=0.5),
+            "conv_b": ParamDef((W,), ("lru",), pdt, "zeros"),
+            "a_gate_w": ParamDef((W,), ("lru",), pdt, "zeros"),
+            "a_gate_b": ParamDef((W,), ("lru",), pdt, "zeros"),
+            "in_gate_w": ParamDef((W,), ("lru",), pdt, "zeros"),
+            "in_gate_b": ParamDef((W,), ("lru",), pdt, "zeros"),
+            "lam": ParamDef((W,), ("lru",), pdt, "constant", scale=0.7),
+            "w_out": ParamDef((W, D), ("lru", "embed"), pdt),
+        },
+        "ln2": ParamDef((D,), (None,), pdt, "ones"),
+        "mlp": {
+            "wg": ParamDef((D, F), ("embed", "ff"), pdt),
+            "wi": ParamDef((D, F), ("embed", "ff"), pdt),
+            "wo": ParamDef((F, D), ("ff", "embed"), pdt),
+        },
+    }
+
+
+def attn_pair_defs(cfg: ArchConfig, pdt) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    H, K = cfg.n_heads, cfg.n_kv_heads
+    hd = cfg.resolved_head_dim
+    return {
+        "ln1": ParamDef((D,), (None,), pdt, "ones"),
+        "attn": {
+            "wq": ParamDef((D, H, hd), ("embed", "heads", None), pdt),
+            "wk": ParamDef((D, K, hd), ("embed", "kv_heads", None), pdt),
+            "wv": ParamDef((D, K, hd), ("embed", "kv_heads", None), pdt),
+            "wo": ParamDef((H, hd, D), ("heads", None, "embed"), pdt),
+        },
+        "ln2": ParamDef((D,), (None,), pdt, "ones"),
+        "mlp": {
+            "wg": ParamDef((D, F), ("embed", "ff"), pdt),
+            "wi": ParamDef((D, F), ("embed", "ff"), pdt),
+            "wo": ParamDef((F, D), ("ff", "embed"), pdt),
+        },
+    }
+
+
+def griffin_layout(cfg: ArchConfig) -> tuple[int, int]:
+    """(n_super, n_tail_rec) for the (rec, rec, attn) pattern."""
+    n_super = cfg.n_layers // 3
+    tail = cfg.n_layers - 3 * n_super
+    return n_super, tail
+
+
+def griffin_param_defs(cfg: ArchConfig) -> dict:
+    pdt = jnp.dtype(cfg.param_dtype)
+    V, D = cfg.vocab_size, cfg.d_model
+    n_super, tail = griffin_layout(cfg)
+    is_def = lambda x: isinstance(x, ParamDef)
+    stack = lambda n, tree: jax.tree_util.tree_map(
+        lambda d: _stack(n, d), tree, is_leaf=is_def
+    )
+    defs = {
+        "embed": ParamDef((V, D), ("vocab", "embed"), pdt),
+        "super": {
+            "rec1": stack(n_super, rec_pair_defs(cfg, pdt)),
+            "rec2": stack(n_super, rec_pair_defs(cfg, pdt)),
+            "attn": stack(n_super, attn_pair_defs(cfg, pdt)),
+        },
+        "final_ln": ParamDef((D,), (None,), pdt, "ones"),
+    }
+    if tail:
+        defs["tail"] = stack(tail, rec_pair_defs(cfg, pdt))
+    if not cfg.tie_embeddings:
+        defs["unembed"] = ParamDef((D, V), ("embed", "vocab"), pdt)
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU + causal conv
+# ---------------------------------------------------------------------------
+
+_LRU_C = 8.0
+
+
+def rglru_coeffs(p, xb):
+    f32 = jnp.float32
+    x = xb.astype(f32)
+    r = jax.nn.sigmoid(x * p["a_gate_w"].astype(f32) + p["a_gate_b"].astype(f32))
+    i = jax.nn.sigmoid(x * p["in_gate_w"].astype(f32) + p["in_gate_b"].astype(f32))
+    log_a = -_LRU_C * jax.nn.softplus(p["lam"].astype(f32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * x)
+    return a, b
+
+
+def rglru_scan(p, xb, h0=None, use_pallas: bool = False):
+    """xb: (B,S,W) conv output. Returns (h (B,S,W), h_last)."""
+    a, b = rglru_coeffs(p, xb)
+    if use_pallas and xb.shape[1] % 128 == 0:
+        from repro.kernels import ops as kops
+
+        h0f = h0 if h0 is not None else jnp.zeros(a[:, 0].shape, jnp.float32)
+        h, h_last = kops.lru_scan(a, b, h0f, use_pallas=True)
+        return h.astype(xb.dtype), h_last
+    if h0 is not None:
+        # fold the carried state into the first step: b_0 += a_0 * h0
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(a.dtype))
+
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_l * a_r, b_l * a_r + b_r
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(xb.dtype), h[:, -1]
+
+
+def rglru_step(p, xb, h):
+    """xb: (B,W) one token; h: (B,W) f32 state."""
+    a, b = rglru_coeffs(p, xb[:, None])
+    h_new = a[:, 0] * h + b[:, 0]
+    return h_new.astype(xb.dtype), h_new
+
+
+def causal_conv(p, xb, state=None):
+    """Depthwise causal conv, width K. state: (B,K-1,W) trailing inputs."""
+    K = p["conv_w"].shape[1]
+    x = xb if state is None else jnp.concatenate([state.astype(xb.dtype), xb], axis=1)
+    pad = 0 if state is not None else K - 1
+    if pad:
+        x = jnp.pad(x, ((0, 0), (pad, 0), (0, 0)))
+    out = sum(
+        x[:, i : i + xb.shape[1]] * p["conv_w"].astype(xb.dtype)[:, i]
+        for i in range(K)
+    )
+    return out + p["conv_b"].astype(xb.dtype), x[:, -(K - 1) :]
+
+
+def rec_temporal(p, x, cfg: ArchConfig, cache=None):
+    """Griffin recurrent temporal block. Returns (y, new_cache)."""
+    dt = x.dtype
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_gate"].astype(dt)))
+    xb = jnp.einsum("bsd,dw->bsw", x, p["w_in"].astype(dt))
+    xb = shard(xb, "batch", None, "lru")
+    conv_state = cache["conv"] if cache else None
+    h0 = cache["h"] if cache else None
+    xb, conv_tail = causal_conv(p, xb, conv_state)
+    if x.shape[1] == 1 and cache is not None:
+        h_seq, h_last = rglru_step(p, xb[:, 0], h0)
+        h_seq = h_seq[:, None]
+    else:
+        h_seq, h_last = rglru_scan(p, xb, h0, use_pallas=cfg.use_pallas)
+    y = jnp.einsum("bsw,wd->bsd", gate * h_seq, p["w_out"].astype(dt))
+    return y, {"conv": conv_tail, "h": h_last}
+
+
+# ---------------------------------------------------------------------------
+# Local attention with ring-buffer cache
+# ---------------------------------------------------------------------------
+
+
+def local_attention(p, x, cfg: ArchConfig, positions):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bhsk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bhsk", x, p["wv"].astype(dt))
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard(q, "batch", "heads", None, None)
+    out = attention_chunked(
+        q, k, v, causal=True, window=cfg.window,
+        kv_chunk=min(cfg.attn_chunk, cfg.window), logit_cap=cfg.logit_cap,
+    )
+    return jnp.einsum("bhsk,hkd->bsd", out, p["wo"].astype(dt)), k, v
+
+
+def attn_ring_decode(p, cache, x, cfg: ArchConfig, pos):
+    """One-token local attention over a ring buffer of `window` slots."""
+    dt = x.dtype
+    W = cfg.window
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"].astype(dt))
+    k_new = jnp.einsum("bsd,dhk->bhsk", x, p["wk"].astype(dt))
+    v_new = jnp.einsum("bsd,dhk->bhsk", x, p["wv"].astype(dt))
+    positions = jnp.full((1,), pos)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k_new = apply_rope(k_new, positions, cfg.rope_theta)  # roped at write time
+    slot = pos % W
+    onehot = (jnp.arange(W) == slot).astype(dt)[:, None]
+    k = cache["k"] * (1 - onehot) + k_new.astype(dt) * onehot
+    v = cache["v"] * (1 - onehot) + v_new.astype(dt) * onehot
+    pos_buf = jnp.where(jnp.arange(W) == slot, pos, cache["pos"])
+    valid = (pos_buf >= 0) & (pos_buf <= pos) & (pos_buf > pos - W)
+    out = attention_single_shot(
+        q, k, v, mask=valid[None, None, None, None, :], logit_cap=cfg.logit_cap
+    )
+    y = jnp.einsum("bhsk,hkd->bsd", out, p["wo"].astype(dt))
+    return y, {"k": k, "v": v, "pos": pos_buf}
+
+
+# ---------------------------------------------------------------------------
+# Pairs and stacks
+# ---------------------------------------------------------------------------
+
+
+def rec_pair(p, x, cfg: ArchConfig, cache=None):
+    y, new_cache = rec_temporal(p["rec"], rms_norm(x, p["ln1"]), cfg, cache)
+    x = x + y
+    m = p["mlp"]
+    x = x + geglu(rms_norm(x, p["ln2"]), m["wg"], m["wi"], m["wo"], x.dtype)
+    return x, new_cache
+
+
+def attn_pair(p, x, cfg: ArchConfig, positions):
+    y, k, v = local_attention(p["attn"], rms_norm(x, p["ln1"]), cfg, positions)
+    x = x + y
+    m = p["mlp"]
+    x = x + geglu(rms_norm(x, p["ln2"]), m["wg"], m["wi"], m["wo"], x.dtype)
+    return x, (k, v)
+
+
+def attn_pair_decode(p, x, cfg: ArchConfig, cache, pos):
+    y, new_cache = attn_ring_decode(p["attn"], cache, rms_norm(x, p["ln1"]), cfg, pos)
+    x = x + y
+    m = p["mlp"]
+    x = x + geglu(rms_norm(x, p["ln2"]), m["wg"], m["wi"], m["wo"], x.dtype)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Model-level entry points
+# ---------------------------------------------------------------------------
+
+
+def griffin_forward(params, cfg: ArchConfig, tokens):
+    h = embed_tokens(params, cfg, tokens)
+    S = h.shape[1]
+    positions = jnp.arange(S)
+
+    def super_body(h, p):
+        h, _ = rec_pair(p["rec1"], h, cfg)
+        h, _ = rec_pair(p["rec2"], h, cfg)
+        h, _ = attn_pair(p["attn"], h, cfg, positions)
+        return h, None
+
+    h, _ = jax.lax.scan(remat_wrap(super_body, cfg), h, params["super"])
+    if "tail" in params:
+
+        def tail_body(h, p):
+            h, _ = rec_pair(p, h, cfg)
+            return h, None
+
+        h, _ = jax.lax.scan(remat_wrap(tail_body, cfg), h, params["tail"])
+    h = rms_norm(h, params["final_ln"])
+    return unembed(params, cfg, h)
+
+
+def griffin_loss(params, cfg: ArchConfig, batch):
+    logits = griffin_forward(params, cfg, batch["tokens"])
+    loss, metrics = cross_entropy(logits, batch["labels"], z_loss=cfg.z_loss)
+    return loss, metrics
+
+
+def griffin_prefill(params, cfg: ArchConfig, tokens):
+    """Prefill: full forward collecting recurrent states + local-attention
+    ring buffers (last ``window`` keys/values, ring-ordered)."""
+    h = embed_tokens(params, cfg, tokens)
+    S = h.shape[1]
+    positions = jnp.arange(S)
+
+    def super_body(h, p):
+        h, c1 = rec_pair(p["rec1"], h, cfg)
+        h, c2 = rec_pair(p["rec2"], h, cfg)
+        h, kv = attn_pair(p["attn"], h, cfg, positions)
+        return h, (c1, c2, kv)
+
+    h, (c1s, c2s, (ks, vs)) = jax.lax.scan(
+        remat_wrap(super_body, cfg), h, params["super"]
+    )
+    cache = {"rec1": c1s, "rec2": c2s, "attn": _ring_from_full(ks, vs, cfg, S)}
+    if "tail" in params:
+
+        def tail_body(h, p):
+            h, c = rec_pair(p, h, cfg)
+            return h, c
+
+        h, cache["tail"] = jax.lax.scan(remat_wrap(tail_body, cfg), h, params["tail"])
+    h = rms_norm(h[:, -1:], params["final_ln"])
+    return unembed(params, cfg, h), cache
+
+
+def _ring_from_full(ks, vs, cfg: ArchConfig, S: int):
+    """(n_super, B, Hkv, S, hd) full-seq K/V → ring buffers at slot p % W."""
+    W = cfg.window
+    n_super = ks.shape[0]
+    if S >= W:
+        last_pos = np.arange(S - W, S)
+        k_slice, v_slice = ks[..., -W:, :], vs[..., -W:, :]
+        order = np.argsort(last_pos % W)  # static permutation to ring order
+        k_ring = k_slice[..., order, :]
+        v_ring = v_slice[..., order, :]
+        pos_buf = jnp.asarray(last_pos[order], jnp.int32)
+    else:
+        pad = W - S
+        k_ring = jnp.pad(ks, ((0, 0),) * 3 + ((0, pad), (0, 0)))
+        v_ring = jnp.pad(vs, ((0, 0),) * 3 + ((0, pad), (0, 0)))
+        pos_buf = jnp.concatenate(
+            [jnp.arange(S), jnp.full((pad,), -1)], dtype=None
+        ).astype(jnp.int32)
+    return {
+        "k": k_ring,
+        "v": v_ring,
+        "pos": jnp.broadcast_to(pos_buf, (n_super, W)),
+    }
+
+
+def griffin_cache_defs(cfg: ArchConfig, batch: int, max_seq: int) -> dict:
+    """O(window + lru_width) state — sequence-length-independent."""
+    del max_seq  # decode state does not grow with context
+    n_super, tail = griffin_layout(cfg)
+    W = cfg.lru_width or cfg.d_model
+    K = cfg.conv_width
+    hd = cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    rec = lambda n: {
+        "conv": jax.ShapeDtypeStruct((n, batch, K - 1, W), dt),
+        "h": jax.ShapeDtypeStruct((n, batch, W), jnp.float32),
+    }
+    out = {
+        "rec1": rec(n_super),
+        "rec2": rec(n_super),
+        "attn": {
+            "k": jax.ShapeDtypeStruct((n_super, batch, cfg.n_kv_heads, cfg.window, hd), dt),
+            "v": jax.ShapeDtypeStruct((n_super, batch, cfg.n_kv_heads, cfg.window, hd), dt),
+            "pos": jax.ShapeDtypeStruct((n_super, cfg.window), jnp.int32),
+        },
+    }
+    if tail:
+        out["tail"] = rec(tail)
+    return out
+
+
+def griffin_cache_logical(cfg: ArchConfig) -> dict:
+    n_super, tail = griffin_layout(cfg)
+    rec = {"conv": ("layers", "batch", None, "lru"), "h": ("layers", "batch", "lru")}
+    out = {
+        "rec1": dict(rec),
+        "rec2": dict(rec),
+        "attn": {
+            "k": ("layers", "batch", None, "kv_seq", None),
+            "v": ("layers", "batch", None, "kv_seq", None),
+            "pos": ("layers", None),
+        },
+    }
+    if tail:
+        out["tail"] = dict(rec)
+    return out
+
+
+def griffin_decode_step(params, cfg: ArchConfig, cache, tokens, pos):
+    h = embed_tokens(params, cfg, tokens)
+
+    def super_body(h, inp):
+        p, c = inp
+        new_c = {}
+        h, new_c["rec1"] = rec_pair(p["rec1"], h, cfg, c["rec1"])
+        h, new_c["rec2"] = rec_pair(p["rec2"], h, cfg, c["rec2"])
+        h, new_c["attn"] = attn_pair_decode(p["attn"], h, cfg, c["attn"], pos)
+        return h, new_c
+
+    sup_cache = {k: cache[k] for k in ("rec1", "rec2", "attn")}
+    h, new_super = jax.lax.scan(super_body, h, (params["super"], sup_cache))
+    new_cache = dict(new_super)
+    if "tail" in params:
+
+        def tail_body(h, inp):
+            p, c = inp
+            h, nc = rec_pair(p, h, cfg, c)
+            return h, nc
+
+        h, new_cache["tail"] = jax.lax.scan(tail_body, h, (params["tail"], cache["tail"]))
+    h = rms_norm(h, params["final_ln"])
+    return unembed(params, cfg, h), new_cache

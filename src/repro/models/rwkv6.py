@@ -1,0 +1,314 @@
+"""RWKV-6 "Finch" — attention-free RNN with data-dependent decay.
+
+Faithful block structure (time-mix with ddlerp token-shift LoRAs,
+data-dependent per-channel decay ``w_t``, per-head WKV state, group-norm +
+SiLU gate; channel-mix with squared-ReLU), arXiv:2404.05892.
+
+The WKV recurrence is evaluated in **chunked parallel form** (the TPU-native
+adaptation of the paper's CUDA kernel — see DESIGN.md):
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T          (per head, dk×dv state)
+    y_t = r_t · (S_{t-1} + diag(u) k_t v_t^T)
+
+Within a chunk of C tokens all pairwise decay ratios
+``exp(logcumsum(w)_t-1 - logcumsum(w)_s)`` (s<t, always ≤ 1 → numerically
+safe) form a (C,C,dk) tensor contracted with r,k — O(T·C·dk) memory instead
+of O(T²). Cross-chunk state is carried by ``lax.scan``. The same tiling is
+the Pallas kernel's blocking (repro/kernels/rwkv6_scan.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamDef, cross_entropy, layer_norm, shard
+from .config import ArchConfig
+from .transformer import _stack, embed_tokens, remat_wrap, unembed
+
+# ---------------------------------------------------------------------------
+# WKV recurrence — chunked parallel form (pure-JAX reference used on CPU; the
+# Pallas kernel mirrors this blocking for TPU)
+# ---------------------------------------------------------------------------
+
+
+def wkv6_chunked(r, k, v, w, u, s0, chunk: int = 64):
+    """r,k,w: (B,H,T,dk); v: (B,H,T,dv); u: (H,dk); s0: (B,H,dk,dv).
+
+    Returns y: (B,H,T,dv), s_final. All accumulation in f32.
+    """
+    B, H, T, dk = r.shape
+    dv = v.shape[-1]
+    C = min(chunk, T)
+    assert T % C == 0, (T, C)
+    n = T // C
+    f32 = jnp.float32
+    rc = r.astype(f32).reshape(B, H, n, C, dk).transpose(2, 0, 1, 3, 4)
+    kc = k.astype(f32).reshape(B, H, n, C, dk).transpose(2, 0, 1, 3, 4)
+    vc = v.astype(f32).reshape(B, H, n, C, dv).transpose(2, 0, 1, 3, 4)
+    wc = w.astype(f32).reshape(B, H, n, C, dk).transpose(2, 0, 1, 3, 4)
+    uf = u.astype(f32)
+
+    def step(s, inp):
+        rb, kb, vb, wb = inp  # (B,H,C,·)
+        logw = jnp.log(jnp.maximum(wb, 1e-38))  # w ∈ (0,1)
+        lc = jnp.cumsum(logw, axis=2)  # inclusive logcumsum (B,H,C,dk)
+        lc_excl = lc - logw  # exclusive
+        # In-chunk pairwise term: A[t,s] = Σ_i r_t,i k_s,i e^{lc_excl_t - lc_s}, s<t
+        ratio = jnp.exp(
+            lc_excl[:, :, :, None, :] - lc[:, :, None, :, :]
+        )  # (B,H,C,C,dk), ≤1 below diagonal
+        tri = jnp.tril(jnp.ones((C, C), bool), k=-1)[None, None, :, :, None]
+        ratio = jnp.where(tri, ratio, 0.0)
+        A = jnp.einsum("bhti,bhtsi,bhsi->bhts", rb, ratio, kb)
+        # bonus diagonal: y_t += (r_t · u ⊙ k_t) v_t
+        diag = jnp.einsum("bhti,bhti->bht", rb * uf[None, :, None, :], kb)
+        y = jnp.einsum("bhts,bhsv->bhtv", A, vb) + diag[..., None] * vb
+        # cross-chunk: y_t += (r_t ⊙ e^{lc_excl_t}) S
+        y = y + jnp.einsum("bhti,bhiv->bhtv", rb * jnp.exp(lc_excl), s)
+        # state update: S' = e^{lc_C} ⊙ S + Σ_s (e^{lc_C - lc_s} ⊙ k_s) v_s
+        decay_all = jnp.exp(lc[:, :, -1, :])  # (B,H,dk)
+        k_scaled = kb * jnp.exp(lc[:, :, -1:, :] - lc)  # ≤ 1
+        s_new = decay_all[..., None] * s + jnp.einsum("bhsi,bhsv->bhiv", k_scaled, vb)
+        return s_new, y
+
+    # checkpointed: the (C,C,dk) pairwise-decay block is recomputed in the
+    # backward pass rather than saved for every chunk (O(T·C·dk) blowup).
+    s_fin, ys = jax.lax.scan(jax.checkpoint(step), s0.astype(f32), (rc, kc, vc, wc))
+    y = ys.transpose(1, 2, 0, 3, 4).reshape(B, H, T, dv)
+    return y.astype(r.dtype), s_fin
+
+
+def wkv6_step(r, k, v, w, u, s):
+    """Single-token recurrence for decode. r,k,w: (B,H,dk); v: (B,H,dv)."""
+    f32 = jnp.float32
+    r, k, v, w = (x.astype(f32) for x in (r, k, v, w))
+    kv = k[..., :, None] * v[..., None, :]  # (B,H,dk,dv)
+    y = jnp.einsum("bhi,bhiv->bhv", r, s + u.astype(f32)[None, :, :, None] * kv)
+    s_new = w[..., None] * s + kv
+    return y, s_new
+
+
+# ---------------------------------------------------------------------------
+# Parameter definitions
+# ---------------------------------------------------------------------------
+
+
+def rwkv_layer_defs(cfg: ArchConfig, pdt) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    H = cfg.d_model // cfg.rwkv_head_size
+    dk = cfg.rwkv_head_size
+    r, dr = cfg.rwkv_lora_rank, cfg.rwkv_decay_lora
+    return {
+        "ln1_w": ParamDef((D,), (None,), pdt, "ones"),
+        "ln1_b": ParamDef((D,), (None,), pdt, "zeros"),
+        "ln2_w": ParamDef((D,), (None,), pdt, "ones"),
+        "ln2_b": ParamDef((D,), (None,), pdt, "zeros"),
+        "tm": {
+            "mu_x": ParamDef((D,), (None,), pdt, "zeros"),
+            "mu_rkvgw": ParamDef((5, D), (None, None), pdt, "zeros"),
+            "maa_w1": ParamDef((D, 5 * r), ("embed", None), pdt, scale=0.1),
+            "maa_w2": ParamDef((5, r, D), (None, None, "embed"), pdt, scale=0.1),
+            "w0": ParamDef((D,), (None,), pdt, "constant", scale=-6.0),
+            "ww1": ParamDef((D, dr), ("embed", None), pdt, scale=0.1),
+            "ww2": ParamDef((dr, D), (None, "embed"), pdt, scale=0.1),
+            "u": ParamDef((H, dk), ("heads", None), pdt, "zeros"),
+            "wr": ParamDef((D, D), ("embed", "heads"), pdt),
+            "wk": ParamDef((D, D), ("embed", "heads"), pdt),
+            "wv": ParamDef((D, D), ("embed", "heads"), pdt),
+            "wg": ParamDef((D, D), ("embed", "heads"), pdt),
+            "wo": ParamDef((D, D), ("heads", "embed"), pdt),
+            "gn_w": ParamDef((D,), (None,), pdt, "ones"),
+            "gn_b": ParamDef((D,), (None,), pdt, "zeros"),
+        },
+        "cm": {
+            "mu_k": ParamDef((D,), (None,), pdt, "zeros"),
+            "mu_r": ParamDef((D,), (None,), pdt, "zeros"),
+            "wk": ParamDef((D, F), ("embed", "ff"), pdt),
+            "wv": ParamDef((F, D), ("ff", "embed"), pdt),
+            "wr": ParamDef((D, D), ("embed", None), pdt),
+        },
+    }
+
+
+def rwkv_param_defs(cfg: ArchConfig) -> dict:
+    pdt = jnp.dtype(cfg.param_dtype)
+    V, D, L = cfg.vocab_size, cfg.d_model, cfg.n_layers
+    is_def = lambda x: isinstance(x, ParamDef)
+    return {
+        "embed": ParamDef((V, D), ("vocab", "embed"), pdt),
+        "ln0_w": ParamDef((D,), (None,), pdt, "ones"),
+        "ln0_b": ParamDef((D,), (None,), pdt, "zeros"),
+        "blocks": jax.tree_util.tree_map(
+            lambda d: _stack(L, d), rwkv_layer_defs(cfg, pdt), is_leaf=is_def
+        ),
+        "final_ln_w": ParamDef((D,), (None,), pdt, "ones"),
+        "final_ln_b": ParamDef((D,), (None,), pdt, "zeros"),
+        "unembed": ParamDef((D, V), ("embed", "vocab"), pdt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def _ddlerp(p, x, sx):
+    """Data-dependent token-shift interpolation → (xw, xk, xv, xr, xg)."""
+    dt = x.dtype
+    r5 = p["maa_w1"].shape[1] // 5
+    base = x + sx * p["mu_x"].astype(dt)
+    lora = jnp.tanh(jnp.einsum("bsd,dr->bsr", base, p["maa_w1"].astype(dt)))
+    lora = lora.reshape(*lora.shape[:-1], 5, r5)
+    delta = jnp.einsum("bsir,ird->bsid", lora, p["maa_w2"].astype(dt))  # (B,S,5,D)
+    mixes = p["mu_rkvgw"].astype(dt)[None, None] + delta  # (B,S,5,D)
+    return tuple(x + sx * mixes[:, :, i] for i in range(5))
+
+
+def time_mix(p, x, cfg: ArchConfig, shift_state=None, wkv_state=None):
+    """x: (B,S,D). Returns (y, new_shift, new_wkv)."""
+    dt = x.dtype
+    B, S, D = x.shape
+    H = D // cfg.rwkv_head_size
+    dk = cfg.rwkv_head_size
+    if shift_state is None:
+        x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        x_prev = jnp.concatenate([shift_state[:, None], x[:, :-1]], axis=1)
+    sx = x_prev - x
+    xw, xk, xv, xr, xg = _ddlerp(p, x, sx)
+    r = jnp.einsum("bsd,de->bse", xr, p["wr"].astype(dt))
+    k = jnp.einsum("bsd,de->bse", xk, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,de->bse", xv, p["wv"].astype(dt))
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["wg"].astype(dt)))
+    # data-dependent decay w_t ∈ (0,1): exp(-exp(w0 + lora(xw)))
+    dlora = jnp.einsum(
+        "bsr,rd->bsd",
+        jnp.tanh(jnp.einsum("bsd,dr->bsr", xw, p["ww1"].astype(dt))),
+        p["ww2"].astype(dt),
+    )
+    w = jnp.exp(-jnp.exp(p["w0"].astype(jnp.float32) + dlora.astype(jnp.float32)))
+
+    def heads(t):  # (B,S,D) → (B,H,S,dk)
+        return t.reshape(B, S, H, -1).transpose(0, 2, 1, 3)
+
+    r_h, k_h, v_h, w_h = heads(r), heads(k), heads(v), heads(w.astype(dt))
+    r_h = shard(r_h, "batch", "heads", None, None)
+    k_h = shard(k_h, "batch", "heads", None, None)
+    v_h = shard(v_h, "batch", "heads", None, None)
+    if wkv_state is None:
+        wkv_state = jnp.zeros((B, H, dk, dk), jnp.float32)
+    if S == 1:
+        y, s_new = wkv6_step(
+            r_h[:, :, 0], k_h[:, :, 0], v_h[:, :, 0], w_h[:, :, 0], p["u"], wkv_state
+        )
+        y = y[:, :, None]
+    elif cfg.use_pallas and S % 64 == 0:
+        from repro.kernels import ops as kops
+
+        y, s_new = kops.wkv6(r_h, k_h, v_h, w_h, p["u"], wkv_state, use_pallas=True)
+    else:
+        y, s_new = wkv6_chunked(r_h, k_h, v_h, w_h, p["u"], wkv_state)
+    y = y.transpose(0, 2, 1, 3).reshape(B, S, D)
+    # per-head group norm, then SiLU gate
+    yh = y.reshape(B, S, H, dk).astype(jnp.float32)
+    mu = yh.mean(-1, keepdims=True)
+    var = yh.var(-1, keepdims=True)
+    yh = (yh - mu) * jax.lax.rsqrt(var + 64e-5)
+    y = yh.reshape(B, S, D) * p["gn_w"].astype(jnp.float32) + p["gn_b"].astype(jnp.float32)
+    y = (y.astype(dt)) * g
+    out = jnp.einsum("bsd,de->bse", y, p["wo"].astype(dt))
+    return out, x[:, -1], s_new
+
+
+def channel_mix(p, x, shift_state=None):
+    dt = x.dtype
+    if shift_state is None:
+        x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        x_prev = jnp.concatenate([shift_state[:, None], x[:, :-1]], axis=1)
+    sx = x_prev - x
+    xk = x + sx * p["mu_k"].astype(dt)
+    xr = x + sx * p["mu_r"].astype(dt)
+    k = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, p["wk"].astype(dt))))
+    k = shard(k, "batch", None, "ff")
+    kv = jnp.einsum("bsf,fd->bsd", k, p["wv"].astype(dt))
+    return jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wr"].astype(dt))) * kv, x[:, -1]
+
+
+def rwkv_block(p, x, cfg: ArchConfig, cache=None):
+    new_cache = {}
+    tm_shift = cache["tm_shift"] if cache else None
+    wkv = cache["wkv"] if cache else None
+    cm_shift = cache["cm_shift"] if cache else None
+    y, new_cache["tm_shift"], new_cache["wkv"] = time_mix(
+        p["tm"], layer_norm(x, p["ln1_w"], p["ln1_b"]), cfg, tm_shift, wkv
+    )
+    x = x + y
+    y, new_cache["cm_shift"] = channel_mix(
+        p["cm"], layer_norm(x, p["ln2_w"], p["ln2_b"]), cm_shift
+    )
+    return x + y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Model-level entry points
+# ---------------------------------------------------------------------------
+
+
+def rwkv_forward(params, cfg: ArchConfig, tokens, collect_cache: bool = False):
+    h = embed_tokens(params, cfg, tokens)
+    h = layer_norm(h, params["ln0_w"], params["ln0_b"])
+
+    def body(h, layer_params):
+        h, c = rwkv_block(layer_params, h, cfg)
+        return h, (c if collect_cache else None)
+
+    body = remat_wrap(body, cfg)
+    h, caches = jax.lax.scan(body, h, params["blocks"])
+    h = layer_norm(h, params["final_ln_w"], params["final_ln_b"])
+    logits = unembed(params, cfg, h)
+    return (logits, caches) if collect_cache else logits
+
+
+def rwkv_loss(params, cfg: ArchConfig, batch):
+    logits = rwkv_forward(params, cfg, batch["tokens"])
+    loss, metrics = cross_entropy(logits, batch["labels"], z_loss=cfg.z_loss)
+    return loss, metrics
+
+
+def rwkv_cache_defs(cfg: ArchConfig, batch: int, max_seq: int) -> dict:
+    """Recurrent state is O(1) in sequence length — this is why rwkv6 is the
+    long_500k arch."""
+    D, L = cfg.d_model, cfg.n_layers
+    H = D // cfg.rwkv_head_size
+    dk = cfg.rwkv_head_size
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "tm_shift": jax.ShapeDtypeStruct((L, batch, D), dt),
+        "cm_shift": jax.ShapeDtypeStruct((L, batch, D), dt),
+        "wkv": jax.ShapeDtypeStruct((L, batch, H, dk, dk), jnp.float32),
+    }
+
+
+def rwkv_cache_logical(cfg: ArchConfig) -> dict:
+    return {
+        "tm_shift": ("layers", "batch", None),
+        "cm_shift": ("layers", "batch", None),
+        "wkv": ("layers", "batch", "heads", None, None),
+    }
+
+
+def rwkv_decode_step(params, cfg: ArchConfig, cache, tokens, pos):
+    del pos  # recurrent state is position-free
+    h = embed_tokens(params, cfg, tokens)
+    h = layer_norm(h, params["ln0_w"], params["ln0_b"])
+
+    def body(h, inp):
+        layer_params, layer_cache = inp
+        h, new_cache = rwkv_block(layer_params, h, cfg, layer_cache)
+        return h, new_cache
+
+    h, new_cache = jax.lax.scan(body, h, (params["blocks"], cache))
+    h = layer_norm(h, params["final_ln_w"], params["final_ln_b"])
+    return unembed(params, cfg, h), new_cache

@@ -1,0 +1,22 @@
+"""Learning-rate schedules (callables step → lr, jit-safe)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_warmup(peak: float, warmup_steps: int, total_steps: int, floor: float = 0.0):
+    def schedule(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+        warm = peak * jnp.minimum(1.0, step / max(1, warmup_steps))
+        frac = jnp.clip(
+            (step - warmup_steps) / max(1, total_steps - warmup_steps), 0.0, 1.0
+        )
+        cos = floor + (peak - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return schedule

@@ -1,0 +1,22 @@
+from .sharding import (
+    dp_axes,
+    named_sharding,
+    resolve_tree,
+    rules_for,
+    with_rules,
+)
+
+__all__ = ["dp_axes", "named_sharding", "resolve_tree", "rules_for", "with_rules"]
+
+from .compression import (  # noqa: E402
+    dequant_int8,
+    ef_compressed_psum,
+    init_ef_state,
+    quant_int8,
+    wire_bytes_per_param,
+)
+
+__all__ += [
+    "dequant_int8", "ef_compressed_psum", "init_ef_state", "quant_int8",
+    "wire_bytes_per_param",
+]

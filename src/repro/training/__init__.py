@@ -1,0 +1,14 @@
+from .steps import (
+    abstract_train_state,
+    init_train_state,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+    train_state_logical,
+)
+
+__all__ = [
+    "abstract_train_state", "init_train_state",
+    "make_prefill_step", "make_serve_step", "make_train_step",
+    "train_state_logical",
+]

@@ -1,0 +1,127 @@
+"""Train / prefill / decode step builders.
+
+``make_train_step`` assembles: loss → (optionally microbatched, gradient-
+accumulated) grad → gradient clip → optimizer update. Data parallelism,
+tensor parallelism and expert parallelism all come from the logical-axis
+rules installed around tracing (repro.parallel.sharding); the returned
+function is pure and jit-ready.
+
+Gradient accumulation reshapes the global batch (B, ...) into
+(MB, B/MB, ...) and ``lax.scan``s — peak activation memory drops by ~MB×
+while arithmetic is unchanged (the §Perf lever for the 123 B dense model).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import Model
+from repro.optim import Optimizer
+from repro.parallel.sharding import with_rules
+
+
+# ---------------------------------------------------------------------------
+# Train state
+# ---------------------------------------------------------------------------
+
+
+def init_train_state(model: Model, optimizer: Optimizer, rng):
+    params = model.init(rng)
+    return {
+        "params": params,
+        "opt": optimizer.init(params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def abstract_train_state(model: Model, optimizer: Optimizer):
+    """ShapeDtypeStruct train state — dry-run lowers against this."""
+    params = model.abstract_params()
+    opt = jax.eval_shape(optimizer.init, params)
+    return {
+        "params": params,
+        "opt": opt,
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def train_state_logical(model: Model, optimizer: Optimizer):
+    plog = model.param_logical()
+    return {
+        "params": plog,
+        "opt": optimizer.state_logical(plog),
+        "step": (),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(model: Model, optimizer: Optimizer, rules: dict, mesh):
+    cfg = model.cfg
+    mb = max(1, cfg.microbatch)
+
+    def loss_fn(params, batch):
+        return model.loss_fn(params, batch)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if mb == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch
+            )
+            grads = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+        else:
+            micro = jax.tree_util.tree_map(
+                lambda x: x.reshape(mb, x.shape[0] // mb, *x.shape[1:]), batch
+            )
+
+            def acc(carry, mbatch):
+                gsum, lsum = carry
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mbatch)
+                gsum = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g
+                )
+                return (gsum, lsum + l), m
+
+            gzero = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (gsum, lsum), ms = jax.lax.scan(acc, (gzero, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree_util.tree_map(lambda g: g / mb, gsum)
+            loss = lsum / mb
+            metrics = jax.tree_util.tree_map(lambda x: x.mean(), ms)
+
+        new_params, new_opt = optimizer.update(grads, state["opt"], params)
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(jnp.square(g)) for g in jax.tree_util.tree_leaves(grads))
+        )
+        metrics = dict(metrics)
+        metrics.update({"loss": loss, "grad_norm": gnorm})
+        new_state = {
+            "params": new_params,
+            "opt": new_opt,
+            "step": state["step"] + 1,
+        }
+        return new_state, metrics
+
+    return with_rules(train_step, rules, mesh)
+
+
+def make_prefill_step(model: Model, rules: dict, mesh):
+    def prefill_step(params, batch):
+        return model.prefill_fn(params, batch)
+
+    return with_rules(prefill_step, rules, mesh)
+
+
+def make_serve_step(model: Model, rules: dict, mesh):
+    """One decode step: (params, cache, tokens, pos) → (logits, new cache)."""
+
+    def serve_step(params, cache, tokens, pos):
+        return model.decode_fn(params, cache, tokens, pos)
+
+    return with_rules(serve_step, rules, mesh)

@@ -1,0 +1,42 @@
+"""Shared fixtures: isolated config, fresh simulator, tiny-jax knobs.
+
+IMPORTANT: no XLA_FLAGS here — smoke tests and benches must see the 1 real
+CPU device (the 512-device override belongs ONLY to repro.launch.dryrun).
+"""
+
+import os
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+
+@pytest.fixture(autouse=True)
+def _isolated_env(tmp_path, monkeypatch):
+    """Every test gets default config + simulator backend + tmp scriptdir."""
+    monkeypatch.setenv("NBISLURM_CONFIG", str(tmp_path / "nbislurm.config"))
+    monkeypatch.setenv("REPRO_BACKEND", "sim")
+    monkeypatch.setenv("NBI_TMPDIR", str(tmp_path / "scripts"))
+    monkeypatch.setenv("REPRO_DISABLE_DISTRIBUTED", "1")
+    monkeypatch.delenv("KRAKEN2_DB", raising=False)
+    from repro.core import reset_shared_sim
+
+    reset_shared_sim()
+    yield
+    reset_shared_sim()
+
+
+@pytest.fixture
+def sim():
+    from repro.core import SimCluster
+
+    return SimCluster(default_user="testuser")
+
+
+@pytest.fixture
+def exec_sim():
+    from repro.core import SimCluster
+
+    return SimCluster(default_user="testuser", execute=True)

@@ -1,0 +1,79 @@
+"""Optional tests against a REAL Slurm installation (paper: `xt/hpc-*.t`).
+
+The paper ships author-facing tests that exercise the live scheduler:
+"To check the ability to interact with Slurm, there are optional tests that
+can be executed with prove -lv xt/hpc-*.t". This is the pytest analogue —
+the whole module skips unless ``sbatch`` is on PATH, so CI and the
+simulator-backed suite never depend on a cluster.
+
+    pytest tests/hpc/ -v        # on a login node
+"""
+
+import shutil
+import subprocess
+import time
+
+import pytest
+
+pytestmark = pytest.mark.skipif(
+    shutil.which("sbatch") is None, reason="no Slurm installation on PATH"
+)
+
+
+@pytest.fixture
+def slurm_backend(monkeypatch):
+    monkeypatch.setenv("REPRO_BACKEND", "slurm")
+    from repro.core.backend import SlurmBackend
+
+    return SlurmBackend()
+
+
+class TestRealSlurm:
+    def test_submit_query_cancel_roundtrip(self, slurm_backend, tmp_path,
+                                           monkeypatch):
+        from repro.core import Job, Opts, Queue
+
+        monkeypatch.setenv("NBI_TMPDIR", str(tmp_path))
+        job = Job(
+            name="nbi-hpc-roundtrip",
+            command="sleep 60",
+            opts=Opts.new(threads=1, memory="100MB", time="5m"),
+        )
+        jid = job.run(slurm_backend)
+        assert isinstance(jid, int)
+        try:
+            deadline = time.monotonic() + 60
+            seen = False
+            while time.monotonic() < deadline:
+                q = Queue(name="nbi-hpc-roundtrip", backend=slurm_backend)
+                if any(j.jobid_num == jid for j in q):
+                    seen = True
+                    break
+                time.sleep(2)
+            assert seen, "job never appeared in squeue"
+        finally:
+            slurm_backend.cancel([jid])
+
+    def test_sinfo_nodes(self, slurm_backend):
+        nodes = slurm_backend.nodes_info()
+        assert nodes and all("name" in n and n["cpus"] > 0 for n in nodes)
+
+    def test_eco_begin_accepted_by_sbatch(self, slurm_backend, tmp_path,
+                                          monkeypatch):
+        """A --begin directive injected by the eco scheduler must be accepted
+        verbatim by a real sbatch (format compatibility)."""
+        from datetime import datetime, timedelta
+
+        from repro.core import EcoScheduler, Job, Opts
+
+        monkeypatch.setenv("NBI_TMPDIR", str(tmp_path))
+        sched = EcoScheduler(weekday_windows=[(0, 360)], weekend_windows=[],
+                             peak_hours=[], horizon_days=7, min_delay_s=60)
+        d = sched.next_window(600, datetime.now() + timedelta(minutes=2))
+        opts = Opts.new(threads=1, memory="100MB", time="5m")
+        opts.set_begin(d.begin_directive)
+        jid = Job(name="nbi-hpc-eco", command="true", opts=opts).run(slurm_backend)
+        try:
+            assert isinstance(jid, int)
+        finally:
+            slurm_backend.cancel([jid])

@@ -1,0 +1,109 @@
+"""HLO accounting + roofline: trip-count-aware parsing on real lowered HLO."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.hlo import analyze_hlo
+from repro.analysis.roofline import V5E, roofline_report
+
+
+def lowered_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+class TestHloAnalysis:
+    def test_matmul_flops_counted(self):
+        A = jnp.zeros((128, 256), jnp.float32)
+        B = jnp.zeros((256, 64), jnp.float32)
+        hlo = lowered_text(lambda a, b: a @ b, A, B)
+        st = analyze_hlo(hlo)
+        want = 2 * 128 * 256 * 64
+        # CPU XLA may route tiny matmuls to a custom-call we can't see into;
+        # accept exact count or an explicit uncounted note.
+        assert st.flops == want or any("uncounted" in n for n in st.notes)
+
+    def test_scan_trip_count_multiplies(self):
+        """FLOPs of a scanned body must scale with the trip count — the exact
+        failure mode of Compiled.cost_analysis this module exists to fix."""
+        W = jnp.eye(64, dtype=jnp.float32)
+
+        def run(n):
+            def f(x):
+                def body(h, _):
+                    return jnp.tanh(h @ W), None
+
+                h, _ = jax.lax.scan(body, x, None, length=n)
+                return h
+
+            return analyze_hlo(lowered_text(f, jnp.ones((64, 64))))
+
+        s8, s32 = run(8), run(32)
+        assert s8.while_trip_counts and max(s8.while_trip_counts) == 8
+        assert s32.while_trip_counts and max(s32.while_trip_counts) == 32
+        if s8.flops > 0:
+            assert s32.flops == pytest.approx(4 * s8.flops, rel=0.15)
+        else:
+            assert s32.hbm_bytes == pytest.approx(4 * s8.hbm_bytes, rel=0.3)
+
+    def test_bytes_counted_for_elementwise(self):
+        x = jnp.ones((1024, 1024), jnp.float32)
+        st = analyze_hlo(lowered_text(lambda a: a + 1.0, x))
+        assert st.hbm_bytes >= 2 * 1024 * 1024 * 4 * 0.9  # read + write
+
+    def test_no_collectives_on_single_device(self):
+        x = jnp.ones((32, 32))
+        st = analyze_hlo(lowered_text(lambda a: a @ a, x))
+        assert st.collective_wire_bytes == 0
+        assert st.collective_count == 0
+
+    def test_dryrun_artifacts_have_collectives(self):
+        """Every sharded dry-run cell must show nonzero wire bytes — the
+        partitioner's collectives are visible to the parser."""
+        import glob, json
+
+        files = sorted(glob.glob("results/dryrun/*train_4k__single.json"))
+        if not files:
+            pytest.skip("dry-run artifacts not present")
+        for f in files:
+            rec = json.load(open(f))
+            if rec.get("status") != "ok":
+                continue
+            assert rec["collective_wire_bytes_per_device"] > 0, f
+            assert rec["hlo_flops_per_device"] > 0, f
+
+
+class TestRoofline:
+    def test_terms_and_bottleneck(self):
+        rep = roofline_report(
+            per_device_flops=197e12,       # exactly 1 second of compute
+            per_device_hbm_bytes=819e9 / 2,  # 0.5 s of memory
+            per_device_wire_bytes=50e9 / 4,  # 0.25 s of collectives
+            chips=256,
+            model_flops=0.5 * 197e12 * 256,
+            tokens=1e6,
+        )
+        assert rep["compute_s"] == pytest.approx(1.0)
+        assert rep["memory_s"] == pytest.approx(0.5)
+        assert rep["collective_s"] == pytest.approx(0.25)
+        assert rep["bottleneck"] == "compute"
+        assert rep["roofline_fraction_mfu"] == pytest.approx(0.5)
+        assert rep["tokens_per_s_lb"] == pytest.approx(1e6)
+
+    def test_memory_bound_case(self):
+        rep = roofline_report(
+            per_device_flops=1e12,
+            per_device_hbm_bytes=819e9,  # 1 s — dominates
+            per_device_wire_bytes=0,
+            chips=1,
+            model_flops=1e12,
+            tokens=1,
+        )
+        assert rep["bottleneck"] == "memory"
+        assert rep["step_time_lb_s"] == pytest.approx(1.0)
+
+    def test_v5e_constants(self):
+        assert V5E.peak_flops == 197e12
+        assert V5E.hbm_bw == 819e9
+        assert V5E.link_bw == 50e9

@@ -1,0 +1,194 @@
+"""Per-architecture smoke tests (deliverable f): every assigned arch, reduced
+config, one forward + one train step + one decode step on CPU — asserting
+output shapes, finite losses, and decode/prefill consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED, get_config, get_smoke_config
+from repro.models.registry import build_model, padded_vocab
+from repro.optim import make_optimizer
+from repro.parallel.sharding import rules_for
+from repro.training.steps import init_train_state, make_train_step
+
+B, S = 2, 32
+
+
+def batch_for(cfg, batch=B, seq=S):
+    out = {}
+    rng = np.random.default_rng(0)
+    if cfg.family == "encdec":
+        out["frames"] = jnp.asarray(
+            rng.standard_normal((batch, cfg.enc_len, cfg.d_model)), cfg.dtype
+        )
+    if cfg.n_patches:
+        out["patches"] = jnp.asarray(
+            rng.standard_normal((batch, cfg.n_patches, cfg.d_model)), cfg.dtype
+        )
+        out["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (batch, seq - cfg.n_patches)), jnp.int32
+        )
+    else:
+        out["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (batch, seq)), jnp.int32
+        )
+    out["labels"] = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (batch, seq)), jnp.int32
+    )
+    return out
+
+
+@pytest.fixture(scope="module")
+def built():
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            cfg = get_smoke_config(arch)
+            model = build_model(cfg)
+            params = model.init(jax.random.PRNGKey(0))
+            cache[arch] = (cfg, model, params)
+        return cache[arch]
+
+    return get
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+class TestForward:
+    def test_loss_finite_and_shapes(self, arch, built):
+        cfg, model, params = built(arch)
+        loss, metrics = jax.jit(model.loss_fn)(params, batch_for(cfg))
+        assert loss.shape == ()
+        assert np.isfinite(float(loss)), arch
+        assert 0 <= float(metrics["accuracy"]) <= 1
+
+    def test_train_step_updates(self, arch, built):
+        cfg, model, params = built(arch)
+        from repro.launch.mesh import make_host_mesh
+
+        mesh = make_host_mesh()
+        opt = make_optimizer("adamw", lr=1e-3)
+        rules = rules_for(cfg, mesh, param_defs=model.param_defs, batch_size=B)
+        step = jax.jit(make_train_step(model, opt, rules, mesh))
+        state = init_train_state(model, opt, jax.random.PRNGKey(1))
+        before = jax.tree_util.tree_leaves(state["params"])[0].copy()
+        with mesh:
+            state2, metrics = step(state, batch_for(cfg))
+        assert int(state2["step"]) == 1
+        assert np.isfinite(float(metrics["loss"]))
+        assert np.isfinite(float(metrics["grad_norm"]))
+        after = jax.tree_util.tree_leaves(state2["params"])[0]
+        assert not np.allclose(np.asarray(before), np.asarray(after)), arch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+class TestDecode:
+    def test_prefill_then_decode_matches_full_forward(self, arch, built):
+        """Greedy decode-step logits at position S must equal a full forward
+        over the S+1 tokens — the KV-cache/recurrent-state correctness law.
+
+        MoE archs are rebuilt drop-free (capacity_factor=16): with token
+        dropping the law intentionally does not hold exactly, because the
+        drop pattern depends on the dispatch group's size (documented MoE
+        semantics; the drop path itself is covered by test_moe_dispatch)."""
+        cfg, model, params = built(arch)
+        if not cfg.has_decoder:
+            pytest.skip("encoder-only")
+        if cfg.family == "moe":
+            cfg = cfg.replace(capacity_factor=16.0)
+            model = build_model(get_smoke_config(arch).replace(capacity_factor=16.0))
+            params = model.init(jax.random.PRNGKey(0))
+        data = batch_for(cfg, batch=1, seq=16)
+        toks = data["tokens"]
+        pre_in = {k: v for k, v in data.items() if k != "labels"}
+        logits_last, cache = jax.jit(model.prefill_fn)(params, pre_in)
+        assert logits_last.shape[0] == 1 and logits_last.shape[1] == 1
+
+        # feed token S (argmax of prefill) through one decode step
+        from repro.launch.serve import pad_cache_to
+
+        max_seq = toks.shape[1] + 8 + (cfg.n_patches or 0) + (
+            0 if cfg.family != "encdec" else 0
+        )
+        cache = pad_cache_to(cache, model.cache_defs_fn(1, max_seq))
+        nxt = jnp.argmax(logits_last[:, -1], -1)[:, None].astype(jnp.int32)
+        pos = jnp.asarray(toks.shape[1] + (cfg.n_patches or 0), jnp.int32)
+        step_logits, _ = jax.jit(model.decode_fn)(params, cache, nxt, pos)
+
+        # ground truth: full forward over [toks ; nxt]
+        full_in = dict(pre_in)
+        full_in["tokens"] = jnp.concatenate([toks, nxt], axis=1)
+        full_last, _ = jax.jit(model.prefill_fn)(params, full_in)
+        np.testing.assert_allclose(
+            np.asarray(step_logits[:, -1]), np.asarray(full_last[:, -1]),
+            rtol=2e-2, atol=2e-2,
+        )
+
+    def test_decode_cache_shapes_stable(self, arch, built):
+        cfg, model, params = built(arch)
+        if not cfg.has_decoder:
+            pytest.skip("encoder-only")
+        cache_defs = model.cache_defs_fn(1, 24)
+        cache = jax.tree_util.tree_map(
+            lambda sd: jnp.zeros(sd.shape, sd.dtype), cache_defs
+        )
+        tok = jnp.zeros((1, 1), jnp.int32)
+        logits, new_cache = jax.jit(model.decode_fn)(
+            params, cache, tok, jnp.asarray(0, jnp.int32)
+        )
+        assert logits.shape == (1, 1, padded_vocab(get_smoke_config(arch)))
+        for a, b in zip(
+            jax.tree_util.tree_leaves(cache), jax.tree_util.tree_leaves(new_cache)
+        ):
+            assert a.shape == b.shape and a.dtype == b.dtype
+
+
+class TestConfigs:
+    @pytest.mark.parametrize("arch", ASSIGNED)
+    def test_full_config_matches_assignment(self, arch):
+        """The published numbers from the assignment table, verbatim."""
+        cfg = get_config(arch)
+        table = {
+            "deepseek_moe_16b": (28, 2048, 16, 16, 102400),
+            "kimi_k2_1t_a32b": (61, 7168, 64, 8, 163840),
+            "rwkv6_7b": (32, 4096, 0, 0, 65536),
+            "codeqwen15_7b": (32, 4096, 32, 32, 92416),
+            "minicpm3_4b": (62, 2560, 40, 40, 73448),
+            "mistral_large_123b": (88, 12288, 96, 8, 32768),
+            "starcoder2_7b": (32, 4608, 36, 4, 49152),
+            "recurrentgemma_2b": (26, 2560, 10, 1, 256000),
+            "whisper_small": (12, 768, 12, 12, 51865),
+            "llava_next_mistral_7b": (32, 4096, 32, 8, 32000),
+        }
+        L, D, H, KV, V = table[arch]
+        assert cfg.n_layers == L and cfg.d_model == D and cfg.vocab_size == V
+        if H:
+            assert cfg.n_heads == H and cfg.n_kv_heads == KV
+
+    def test_param_counts_plausible(self):
+        """Analytic param counts near the models' nominal sizes."""
+        expect = {
+            "deepseek_moe_16b": (14e9, 18e9),
+            "kimi_k2_1t_a32b": (0.9e12, 1.2e12),
+            "rwkv6_7b": (6e9, 9e9),
+            "codeqwen15_7b": (6e9, 8.5e9),  # assigned d_ff=13440, MHA kv=32
+            "minicpm3_4b": (3.5e9, 5e9),
+            "mistral_large_123b": (115e9, 130e9),
+            # framework uses SwiGLU (3 MLP mats) uniformly; the original's
+            # GELU MLP (2 mats) would be ~7.2B — see DESIGN §Arch notes
+            "starcoder2_7b": (6.5e9, 10.5e9),
+            "recurrentgemma_2b": (2e9, 3.5e9),
+            "whisper_small": (0.15e9, 0.4e9),
+            "llava_next_mistral_7b": (6.5e9, 8e9),
+        }
+        for arch, (lo, hi) in expect.items():
+            n = get_config(arch).param_count()
+            assert lo <= n <= hi, f"{arch}: {n:.3e} outside [{lo:.1e},{hi:.1e}]"
+
+    def test_moe_active_params(self):
+        cfg = get_config("kimi_k2_1t_a32b")
+        active = cfg.active_param_count()
+        assert 25e9 <= active <= 40e9  # "A32B"
+        assert active < cfg.param_count() / 10

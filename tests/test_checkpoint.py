@@ -1,0 +1,167 @@
+"""Checkpointing: atomic roundtrip, async, retention, integrity, elastic."""
+
+import json
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, restore_tree, save_tree
+from repro.checkpoint.manager import MANIFEST
+
+
+def tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "params": {
+            "w": jnp.asarray(rng.standard_normal((8, 16)), jnp.float32),
+            "b": jnp.asarray(rng.standard_normal((16,)), jnp.bfloat16),
+        },
+        "opt": [jnp.zeros((8, 16)), jnp.asarray(3, jnp.int32)],
+        "step": jnp.asarray(7, jnp.int32),
+    }
+
+
+def assert_tree_equal(a, b):
+    for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+class TestRoundtrip:
+    def test_save_restore(self, tmp_path):
+        t = tree()
+        save_tree(tmp_path / "c", t, extra={"cursor": 42})
+        out, extra = restore_tree(tmp_path / "c", t)
+        assert_tree_equal(t, out)
+        assert extra == {"cursor": 42}
+        # dtype preservation incl. bf16
+        assert out["params"]["b"].dtype == jnp.bfloat16
+
+    def test_restore_into_abstract_target(self, tmp_path):
+        t = tree()
+        save_tree(tmp_path / "c", t)
+        target = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t
+        )
+        out, _ = restore_tree(tmp_path / "c", target)
+        assert_tree_equal(t, out)
+
+    def test_structure_mismatch_raises(self, tmp_path):
+        save_tree(tmp_path / "c", tree())
+        with pytest.raises(ValueError, match="leaves"):
+            restore_tree(tmp_path / "c", {"only": jnp.zeros(3)})
+
+    def test_shape_mismatch_raises(self, tmp_path):
+        save_tree(tmp_path / "c", tree())
+        bad = tree()
+        bad["params"]["w"] = jnp.zeros((9, 16))
+        with pytest.raises(ValueError, match="shape"):
+            restore_tree(tmp_path / "c", bad)
+
+    def test_corruption_detected(self, tmp_path):
+        save_tree(tmp_path / "c", tree())
+        rec = json.loads((tmp_path / "c" / MANIFEST).read_text())
+        victim = tmp_path / "c" / rec["leaves"][0]["file"]
+        raw = bytearray(victim.read_bytes())
+        raw[0] ^= 0xFF  # torn page
+        victim.write_bytes(bytes(raw))
+        with pytest.raises(IOError, match="checksum"):
+            restore_tree(tmp_path / "c", tree())
+
+
+class TestManager:
+    def test_latest_and_retention(self, tmp_path):
+        m = CheckpointManager(tmp_path, keep=2)
+        for step in (10, 20, 30):
+            m.save(step, tree(step))
+        assert m.latest_step() == 30
+        assert m.all_steps() == [20, 30]  # 10 was GC'd
+
+    def test_async_save(self, tmp_path):
+        m = CheckpointManager(tmp_path)
+        m.save(5, tree(), extra={"cursor": 5}, blocking=False)
+        m.wait()
+        out, extra, step = m.restore(tree())
+        assert step == 5 and extra["cursor"] == 5
+
+    def test_async_snapshot_isolated_from_donation(self, tmp_path):
+        """The async writer must see the values at call time even if the
+        caller immediately mutates/donates its arrays (training loop)."""
+        m = CheckpointManager(tmp_path)
+        t = {"w": np.ones((4,), np.float32)}
+        m.save(1, t, blocking=False)
+        t["w"][:] = 999.0  # simulate buffer reuse
+        m.wait()
+        out, _, _ = m.restore({"w": np.zeros((4,), np.float32)})
+        np.testing.assert_array_equal(np.asarray(out["w"]), np.ones(4))
+
+    def test_restore_specific_step(self, tmp_path):
+        m = CheckpointManager(tmp_path, keep=5)
+        m.save(1, tree(1))
+        m.save(2, tree(2))
+        out, _, step = m.restore(tree(), step=1)
+        assert step == 1
+        assert_tree_equal(out, tree(1))
+
+    def test_no_checkpoint_raises(self, tmp_path):
+        with pytest.raises(FileNotFoundError):
+            CheckpointManager(tmp_path).restore(tree())
+
+    def test_crashed_save_invisible(self, tmp_path):
+        """A .tmp dir from a crashed writer is never listed as a step."""
+        m = CheckpointManager(tmp_path)
+        m.save(3, tree())
+        (tmp_path / "step_000000099.tmp").mkdir()
+        assert m.all_steps() == [3]
+        m.save(4, tree())  # gc clears orphan tmp dirs
+        assert not (tmp_path / "step_000000099.tmp").exists()
+
+
+class TestElastic:
+    def test_restore_to_different_sharding(self, tmp_path):
+        """Elastic rescale: save replicated, restore with explicit shardings
+        (1-device CPU: single-device shardings — the placement API is what
+        the multi-host path uses)."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        t = tree()
+        save_tree(tmp_path / "c", t)
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        sh = jax.tree_util.tree_map(lambda _: NamedSharding(mesh, P()), t)
+        out, _ = restore_tree(tmp_path / "c", t, shardings=sh)
+        assert_tree_equal(t, out)
+        for leaf in jax.tree_util.tree_leaves(out):
+            assert leaf.sharding == NamedSharding(mesh, P())
+
+    def test_train_resume_after_dp_resize(self, tmp_path):
+        """Full elastic drill: train 4 steps at global_batch=8, 'lose half the
+        cluster', resume the same run at global_batch=4 — state restores and
+        training continues."""
+        from repro.launch.train import build_argparser, train
+        import repro.configs.nbi100m as mod
+
+        orig = mod.config
+        mod.config = lambda: orig().replace(
+            name="nano", n_layers=1, d_model=32, n_heads=2, n_kv_heads=2,
+            head_dim=16, d_ff=64, vocab_size=256,
+        )
+        try:
+            a1 = build_argparser().parse_args([
+                "--arch", "nbi-100m", "--steps", "4", "--global-batch", "8",
+                "--seq", "16", "--ckpt-dir", str(tmp_path), "--ckpt-every", "2",
+                "--log-every", "2",
+            ])
+            r1 = train(a1)
+            assert r1["completed_steps"] == 4
+            a2 = build_argparser().parse_args([
+                "--arch", "nbi-100m", "--steps", "6", "--global-batch", "4",
+                "--seq", "16", "--ckpt-dir", str(tmp_path), "--ckpt-every", "2",
+                "--log-every", "2",
+            ])
+            r2 = train(a2)
+            assert r2["completed_steps"] == 6
+            assert all(np.isfinite(m["loss"]) for m in r2["metrics"])
+        finally:
+            mod.config = orig

@@ -1,0 +1,167 @@
+"""Command-line tools: runjob, lsjobs, whojobs, waitjobs, session, nbilaunch.
+
+Everything runs against the shared simulator (REPRO_BACKEND=sim from
+conftest) — mirroring the paper's "all tests work without Slurm"."""
+
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.cli import lsjobs, nbilaunch, runjob, session, waitjobs, whojobs
+from repro.core import Queue, get_backend
+
+
+class TestRunjob:
+    def test_paper_assembly_dry_run(self, capsys):
+        rc = runjob.main([
+            "-n", "assembly", "-c", "18", "-m", "64", "-t", "12",
+            "-w", "./logs/", "--dry-run", "--no-eco",
+            "flye --nano-raw reads.fastq --out-dir asm",
+        ])
+        out = capsys.readouterr().out
+        assert rc == 0
+        assert "#SBATCH --cpus-per-task=18" in out
+        assert "#SBATCH --mem=65536" in out  # -m 64 → 64 GB
+        assert "#SBATCH --time=0-12:00:00" in out
+        assert "flye --nano-raw" in out
+
+    def test_eco_deferral_default_on(self, capsys):
+        """Paper: eco is ON by default; Wed 10:00 → --begin next night."""
+        rc = runjob.main([
+            "-n", "annotate", "-t", "6", "--dry-run",
+            "--now", "2026-03-18T10:00:00", "prokka genome.fa",
+        ])
+        out = capsys.readouterr().out
+        assert rc == 0
+        assert "#SBATCH --begin=2026-03-19T00:00:00" in out
+
+    def test_no_eco_flag(self, capsys):
+        runjob.main(["-n", "x", "--dry-run", "--no-eco",
+                     "--now", "2026-03-18T10:00:00", "true"])
+        assert "--begin" not in capsys.readouterr().out
+
+    def test_economy_mode_zero_config(self, capsys, tmp_path, monkeypatch):
+        from repro.core import write_config
+
+        cfg = tmp_path / "cfg"
+        write_config({"economy_mode": "0"}, str(cfg))
+        monkeypatch.setenv("NBISLURM_CONFIG", str(cfg))
+        runjob.main(["-n", "x", "--dry-run", "--now", "2026-03-18T10:00:00", "true"])
+        assert "--begin" not in capsys.readouterr().out
+
+    def test_files_array(self, capsys, tmp_path):
+        listing = tmp_path / "samples.txt"
+        listing.write_text("a.fq\nb.fq\n")
+        runjob.main(["-n", "align", "--files", str(listing), "--dry-run",
+                     "--no-eco", "bwa mem ref.fa #FILE# > #FILE#.bam"])
+        out = capsys.readouterr().out
+        assert "#SBATCH --array=0-1" in out
+
+    def test_submit_to_sim(self, capsys):
+        rc = runjob.main(["-n", "real", "--no-eco", "true"])
+        out = capsys.readouterr().out
+        assert rc == 0
+        jid = int(out.strip().splitlines()[-1])
+        q = Queue(backend=get_backend())
+        assert str(jid) in q.ids()
+
+
+class TestLsjobs:
+    def test_table_and_count(self, capsys):
+        runjob.main(["-n", "t1", "--no-eco", "true"])
+        runjob.main(["-n", "t2", "--no-eco", "true"])
+        capsys.readouterr()
+        rc = lsjobs.main(["--all", "--no-color"])
+        out = capsys.readouterr().out
+        assert rc == 0
+        assert "t1" in out and "t2" in out
+        assert "2 job(s)" in out
+
+    def test_cancel_with_yes(self, capsys):
+        runjob.main(["-n", "doomed", "--no-eco", "sleep 100"])
+        capsys.readouterr()
+        lsjobs.main(["--all", "-n", "doomed", "--cancel", "--yes"])
+        out = capsys.readouterr().out
+        assert "cancelled 1 job(s)" in out
+
+    def test_empty_queue(self, capsys):
+        lsjobs.main(["--all"])
+        assert "no jobs" in capsys.readouterr().out
+
+
+class TestWhojobs:
+    def test_utilisation(self, capsys):
+        runjob.main(["-n", "w", "-c", "4", "--no-eco", "true"])
+        capsys.readouterr()
+        whojobs.main(["--no-color"])
+        out = capsys.readouterr().out
+        assert "User" in out and "100%" in out
+
+
+class TestWaitjobs:
+    def test_waits_until_done(self, capsys):
+        runjob.main(["-n", "waitme", "--no-eco", "true"])
+        capsys.readouterr()
+        rc = waitjobs.main(["--all" if False else "-n", "waitme", "--poll", "30"])
+        out = capsys.readouterr().out
+        assert rc == 0
+        assert "all jobs finished" in out
+        assert len(Queue(name="waitme", backend=get_backend())) == 0
+
+    def test_timeout(self):
+        be = get_backend()
+        from repro.core import Job, Opts
+
+        Job(name="forever", command="sleep inf",
+            opts=Opts.new(threads=1, memory="1GB", time="10h"),
+            sim_duration_s=9 * 3600).run(be)
+        # tiny sim-time steps so the real-time timeout fires first
+        ok = waitjobs.wait_for(be, name="forever", poll_s=0.001, timeout_s=0.05)
+        assert not ok
+
+
+class TestSession:
+    def test_print_command(self, capsys):
+        rc = session.main(["-c", "8", "-m", "16", "-t", "4", "--print"])
+        out = capsys.readouterr().out
+        assert rc == 0
+        assert "srun --cpus-per-task=8 --mem=16384 --time=0-04:00:00" in out
+        assert "--pty bash" in out
+
+
+class TestNbilaunch:
+    def test_list(self, capsys):
+        rc = nbilaunch.main(["--list"])
+        out = capsys.readouterr().out
+        assert rc == 0
+        assert "kraken2" in out and "train" in out
+
+    def test_dry_run_train(self, capsys, tmp_path):
+        rc = nbilaunch.main([
+            "train", "arch=nbi-100m", "steps=5", "--outdir", str(tmp_path),
+            "--dry-run", "--no-eco",
+        ])
+        out = capsys.readouterr().out
+        assert rc == 0
+        assert "repro.launch.train --arch nbi-100m" in out
+        assert "--gres=tpu:v5e:" in out
+
+    def test_submit_writes_manifest(self, capsys, tmp_path):
+        rc = nbilaunch.main([
+            "train", "arch=nbi-100m", "--outdir", str(tmp_path), "--no-eco",
+            "--now", "2026-03-18T10:00:00",
+        ])
+        assert rc == 0
+        rec = json.loads((Path(tmp_path) / "train.manifest.json").read_text())
+        assert rec["status"] == "submitted"
+        assert rec["inputs"]["arch"] == "nbi-100m"
+
+    def test_unknown_tool(self, capsys):
+        assert nbilaunch.main(["nope"]) == 1
+
+    def test_missing_input_reported(self, capsys):
+        rc = nbilaunch.main(["kraken2", "--no-eco"])
+        out = capsys.readouterr().out
+        assert rc == 1
+        assert "missing required input" in out

@@ -1,0 +1,85 @@
+"""Multi-host bootstrap: SLURM topology parsing + multinode sbatch."""
+
+import pytest
+
+from repro.launch.distributed import (
+    _expand_first_host, coordinator_address, maybe_initialize,
+    multinode_sbatch, slurm_topology,
+)
+from repro.launch.submit import TrainLauncher
+from repro.core import SimCluster
+
+
+class TestNodelist:
+    @pytest.mark.parametrize(
+        "nodelist,first",
+        [
+            ("n001", "n001"),
+            ("n[001-004]", "n001"),
+            ("n[001-004,007]", "n001"),
+            ("n[17,19]", "n17"),
+            ("gpu-a[01-02],gpu-b01", "gpu-a01"),
+        ],
+    )
+    def test_first_host(self, nodelist, first):
+        assert _expand_first_host(nodelist) == first
+
+    def test_coordinator_address(self, monkeypatch):
+        monkeypatch.setenv("SLURM_JOB_NODELIST", "tpu[004-007]")
+        monkeypatch.setenv("SLURM_JOB_ID", "123456")
+        addr = coordinator_address()
+        assert addr.startswith("tpu004:")
+        port = int(addr.split(":")[1])
+        assert 20000 <= port < 30000
+
+    def test_no_slurm_env(self, monkeypatch):
+        monkeypatch.delenv("SLURM_JOB_NODELIST", raising=False)
+        assert coordinator_address() is None
+
+
+class TestTopology:
+    def test_multi_task(self, monkeypatch):
+        monkeypatch.setenv("SLURM_NTASKS", "8")
+        monkeypatch.setenv("SLURM_PROCID", "3")
+        assert slurm_topology() == (3, 8)
+
+    def test_single_task_is_none(self, monkeypatch):
+        monkeypatch.setenv("SLURM_NTASKS", "1")
+        monkeypatch.setenv("SLURM_PROCID", "0")
+        assert slurm_topology() is None
+
+    def test_maybe_initialize_disabled(self, monkeypatch):
+        monkeypatch.setenv("REPRO_DISABLE_DISTRIBUTED", "1")
+        monkeypatch.setenv("SLURM_NTASKS", "8")
+        monkeypatch.setenv("SLURM_PROCID", "3")
+        assert maybe_initialize() == (0, 1)  # tests never touch jax.distributed
+
+    def test_maybe_initialize_no_slurm(self, monkeypatch):
+        monkeypatch.delenv("SLURM_NTASKS", raising=False)
+        assert maybe_initialize() == (0, 1)
+
+
+class TestSbatch:
+    def test_multinode_script(self):
+        s = multinode_sbatch(
+            job_name="train-x", hosts=64, command="python -m repro.launch.train --arch x",
+            time="2-00:00:00", gres="tpu:v5e:4", mem_mb=300_000,
+        )
+        assert "#SBATCH --nodes=64" in s
+        assert "#SBATCH --ntasks=64" in s
+        assert "#SBATCH --requeue" in s
+        assert "srun --kill-on-bad-exit=1 python -m repro.launch.train" in s
+
+    def test_trainlauncher_multinode(self):
+        tl = TrainLauncher(arch="mistral-large-123b", eco=False,
+                           backend=SimCluster())
+        assert tl.sizing["hosts"] > 1
+        assert tl.make_command().startswith("srun --kill-on-bad-exit=1 ")
+        script = tl.sbatch_script()
+        assert f"--nodes={tl.sizing['hosts']}" in script
+        assert "--gres=tpu:v5e:4" in script
+
+    def test_trainlauncher_single_host_no_srun(self):
+        tl = TrainLauncher(arch="nbi-100m", eco=False, backend=SimCluster())
+        assert tl.sizing["hosts"] == 1
+        assert not tl.make_command().startswith("srun")

@@ -1,0 +1,162 @@
+"""EcoScheduler: the paper's three-tier window selection + carbon scoring."""
+
+from datetime import datetime, timedelta
+
+import pytest
+
+from repro.core import CarbonTrace, EcoScheduler
+from repro.core.config import load_config, write_config
+
+WEEKDAY = [(0, 360)]  # 00:00-06:00
+WEEKEND = [(0, 420), (660, 960)]  # 00:00-07:00, 11:00-16:00
+PEAK = [(1020, 1200)]  # 17:00-20:00
+
+
+def make(**kw):
+    defaults = dict(
+        weekday_windows=WEEKDAY, weekend_windows=WEEKEND, peak_hours=PEAK,
+        horizon_days=14, min_delay_s=0,
+    )
+    defaults.update(kw)
+    return EcoScheduler(**defaults)
+
+
+WED = datetime(2026, 3, 18, 10, 0, 0)  # paper submission day (Wednesday)
+
+
+class TestPaperExample:
+    def test_annotate_six_hours(self):
+        """The paper's runjob --eco -t 6: next night window, exactly fits."""
+        d = make().next_window(6 * 3600, WED)
+        assert d.begin_directive == "2026-03-19T00:00:00"
+        assert d.tier == 1
+        assert d.deferred
+
+    def test_begin_directive_string(self):
+        s = make().begin_directive(6 * 3600, WED)
+        assert s == "2026-03-19T00:00:00"
+
+
+class TestTiers:
+    def test_tier1_fits(self):
+        d = make().next_window(2 * 3600, WED)
+        assert d.tier == 1
+        # completes inside 00:00-06:00
+        assert d.begin + timedelta(hours=2) <= d.window_end
+
+    def test_tier2_overruns_but_no_peak(self):
+        # 10h from 00:00 ends 10:00 — outside the window but before 17:00 peak
+        d = make().next_window(10 * 3600, WED)
+        assert d.tier == 2
+        assert d.begin.hour == 0
+
+    def test_tier3_touches_peak(self):
+        # 30h from any eco start inevitably crosses a 17:00-20:00 peak
+        d = make().next_window(30 * 3600, WED)
+        assert d.tier == 3
+
+    def test_weekend_windows_used(self):
+        sat = datetime(2026, 3, 21, 8, 0, 0)  # Saturday 08:00
+        d = make().next_window(4 * 3600, sat)
+        # next weekend window is Sat 11:00-16:00: 4h fits exactly → tier 1
+        assert d.tier == 1
+        assert d.begin == datetime(2026, 3, 21, 11, 0, 0)
+
+    def test_inside_window_starts_now(self):
+        night = datetime(2026, 3, 18, 1, 0, 0)
+        d = make().next_window(3600, night)
+        assert d.begin == night
+        assert not d.deferred  # already in an eco window → run now
+
+    def test_no_windows_no_deferral(self):
+        sched = make(weekday_windows=[], weekend_windows=[])
+        d = sched.next_window(3600, WED)
+        assert d.tier == 0 and not d.deferred
+
+    def test_min_delay_pushes_start(self):
+        sched = make(min_delay_s=7200)
+        night = datetime(2026, 3, 18, 1, 0, 0)
+        d = sched.next_window(1800, night)
+        assert d.begin >= night + timedelta(seconds=7200)
+
+
+class TestPeakHelpers:
+    def test_in_peak(self):
+        s = make()
+        assert s.in_peak(datetime(2026, 3, 18, 18, 0))
+        assert not s.in_peak(datetime(2026, 3, 18, 12, 0))
+
+    def test_in_eco_window(self):
+        s = make()
+        assert s.in_eco_window(datetime(2026, 3, 18, 3, 0))
+        assert not s.in_eco_window(datetime(2026, 3, 18, 12, 0))
+        assert s.in_eco_window(datetime(2026, 3, 21, 12, 0))  # weekend midday
+
+    def test_next_peak_start(self):
+        s = make()
+        assert s.next_peak_start(WED) == datetime(2026, 3, 18, 17, 0)
+        # inside the peak → boundary is now
+        inside = datetime(2026, 3, 18, 18, 0)
+        assert s.next_peak_start(inside) == inside
+
+
+class TestCarbon:
+    def test_trace_lookup(self):
+        trace = CarbonTrace([float(i) for i in range(168)])
+        assert trace.at(datetime(2026, 3, 16, 0, 0)) == 0  # Monday 00:00
+        assert trace.at(datetime(2026, 3, 17, 5, 0)) == 29  # Tuesday 05:00
+
+    def test_carbon_picks_cleanest_same_tier(self):
+        hourly = [250.0] * 168
+        for d in range(5):
+            for h in range(6):
+                hourly[d * 24 + h] = 180.0
+        for d in (5, 6):  # weekend midday is cleanest
+            for h in range(11, 16):
+                hourly[d * 24 + h] = 70.0
+            for h in range(7):
+                hourly[d * 24 + h] = 90.0
+        sched = make(carbon_trace=CarbonTrace(hourly))
+        d = sched.next_window(4 * 3600, WED)
+        assert d.tier == 1
+        assert d.begin == datetime(2026, 3, 21, 11, 0)  # Sat midday, 70 g
+        assert d.carbon_gco2_kwh == pytest.approx(70.0)
+
+    def test_no_trace_earliest_wins(self):
+        d = make().next_window(4 * 3600, WED)
+        assert d.begin == datetime(2026, 3, 19, 0, 0)
+
+    def test_trace_from_csv(self, tmp_path):
+        p = tmp_path / "trace.csv"
+        p.write_text("hour,gco2\n" + "\n".join(f"{i},{100 + i}" for i in range(168)))
+        trace = CarbonTrace.from_csv(str(p))
+        assert trace.at(datetime(2026, 3, 16, 2, 0)) == 102
+
+
+class TestConfigFile:
+    def test_scheduler_reads_config(self, tmp_path, monkeypatch):
+        path = tmp_path / "cfg"
+        write_config(
+            {
+                "eco_weekday_windows": "01:00-05:00",
+                "eco_weekend_windows": "",
+                "peak_hours": "16:00-21:00",
+                "eco_horizon_days": "7",
+                "eco_min_delay_minutes": "5",
+            },
+            str(path),
+        )
+        monkeypatch.setenv("NBISLURM_CONFIG", str(path))
+        sched = EcoScheduler(load_config())
+        assert sched.weekday_windows == [(60, 300)]
+        assert sched.weekend_windows == []
+        assert sched.peak_hours == [(960, 1260)]
+        assert sched.horizon_days == 7
+        assert sched.min_delay_s == 300
+
+    def test_defaults_match_paper(self):
+        cfg = load_config()  # isolated env → pure defaults
+        assert cfg.get_windows("eco_weekday_windows") == [(0, 360)]
+        assert cfg.get_windows("eco_weekend_windows") == [(0, 420), (660, 960)]
+        assert cfg.get_windows("peak_hours") == [(1020, 1200)]
+        assert cfg.get_bool("economy_mode") is True  # paper: eco ON by default

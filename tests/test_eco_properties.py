@@ -1,0 +1,125 @@
+"""Property-based tests of the EcoScheduler invariants (hypothesis).
+
+The paper defines a strict three-tier preference. These properties pin the
+invariants for arbitrary window configurations, durations and clock times:
+
+  P1. the chosen start is never in the past (≥ now + min_delay);
+  P2. the chosen start always lies inside an eco window (tiers 1-3);
+  P3. tier 1 ⇒ the job finishes inside its window AND never touches peak;
+  P4. tier ≤ 2 ⇒ the job span never overlaps a peak window;
+  P5. optimality: no candidate start strictly earlier than the chosen one
+      achieves a strictly better tier (the scheduler returns the best
+      achievable tier, earliest-first);
+  P6. determinism: same inputs → same decision.
+"""
+
+from datetime import datetime, timedelta
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import EcoScheduler
+
+
+def windows_strategy(max_windows=2):
+    """Sorted, non-overlapping minute-of-day windows."""
+
+    @st.composite
+    def _windows(draw):
+        n = draw(st.integers(0, max_windows))
+        points = draw(
+            st.lists(
+                st.integers(0, 24 * 60), min_size=2 * n, max_size=2 * n, unique=True
+            )
+        )
+        points.sort()
+        return [(points[2 * i], points[2 * i + 1]) for i in range(n)
+                if points[2 * i + 1] > points[2 * i]]
+
+    return _windows()
+
+
+clock = st.datetimes(
+    min_value=datetime(2026, 1, 1), max_value=datetime(2026, 12, 1)
+).map(lambda d: d.replace(microsecond=0))
+duration = st.integers(min_value=60, max_value=3 * 86400)
+
+
+@st.composite
+def scheds(draw):
+    return EcoScheduler(
+        weekday_windows=draw(windows_strategy()),
+        weekend_windows=draw(windows_strategy()),
+        peak_hours=draw(windows_strategy(1)),
+        horizon_days=draw(st.integers(1, 10)),
+        min_delay_s=draw(st.sampled_from([0, 600, 3600])),
+    )
+
+
+def overlaps_peak(sched, start, dur_s):
+    end = start + timedelta(seconds=dur_s)
+    return any(
+        ps < end and start < pe
+        for ps, pe in sched._absolute_peak_windows(start, end)
+    )
+
+
+@settings(max_examples=200, deadline=None)
+@given(sched=scheds(), now=clock, dur=duration)
+def test_invariants(sched, now, dur):
+    d = sched.next_window(dur, now)
+    # P6 determinism
+    d2 = sched.next_window(dur, now)
+    assert d == d2
+
+    if d.tier == 0:
+        assert not d.deferred and d.begin == now
+        return
+
+    # P1: never in the past / before the min delay
+    assert d.begin >= now + timedelta(seconds=sched.min_delay_s)
+
+    # P2: start lies inside its eco window
+    assert d.window_start <= d.begin < d.window_end
+    assert sched.in_eco_window(d.begin)
+
+    end = d.begin + timedelta(seconds=dur)
+    if d.tier == 1:
+        # P3: completes inside the window, avoids peak
+        assert end <= d.window_end
+        assert not overlaps_peak(sched, d.begin, dur)
+    elif d.tier == 2:
+        # P4: avoids peak (but may overrun the window)
+        assert not overlaps_peak(sched, d.begin, dur)
+    else:
+        # tier 3 exists only when it does overlap peak
+        assert overlaps_peak(sched, d.begin, dur)
+
+
+@settings(max_examples=100, deadline=None)
+@given(sched=scheds(), now=clock, dur=duration)
+def test_best_tier_is_achieved(sched, now, dur):
+    """P5: the returned tier equals the minimum tier over all candidates."""
+    d = sched.next_window(dur, now)
+    cands = sched._candidates(dur, now)
+    if not cands:
+        assert d.tier == 0
+        return
+    assert d.tier == min(c.tier for c in cands)
+    # earliest-of-best-tier (no carbon trace configured)
+    best = [c for c in cands if c.tier == d.tier]
+    assert d.begin == best[0].start
+
+
+@settings(max_examples=100, deadline=None)
+@given(now=clock, dur=st.integers(60, 6 * 3600))
+def test_default_config_always_finds_window(now, dur):
+    """With the paper's default windows, any ≤6h job gets tier 1 within 14d."""
+    sched = EcoScheduler(
+        weekday_windows=[(0, 360)],
+        weekend_windows=[(0, 420), (660, 960)],
+        peak_hours=[(1020, 1200)],
+        horizon_days=14,
+        min_delay_s=0,
+    )
+    d = sched.next_window(dur, now)
+    assert d.tier == 1

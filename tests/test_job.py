@@ -1,0 +1,93 @@
+"""NBI::Job — sbatch script generation, arrays, submission (paper §Job)."""
+
+import pytest
+
+from repro.core import FILE_PLACEHOLDER, Job, Opts
+
+
+class TestScript:
+    def test_paper_assembly_script(self):
+        job = Job(
+            name="assembly",
+            command="flye --nano-raw reads.fastq --out-dir asm",
+            opts=Opts.new(threads=18, memory="64GB", time=12, output_dir="./logs/"),
+        )
+        s = job.script()
+        assert s.startswith("#!/bin/bash\n")
+        assert "#SBATCH --cpus-per-task=18" in s
+        assert "#SBATCH --mem=65536" in s
+        assert "#SBATCH --time=0-12:00:00" in s
+        assert "flye --nano-raw reads.fastq --out-dir asm" in s
+        assert "set -euo pipefail" in s
+
+    def test_multiple_commands(self):
+        job = Job(name="multi", command=["echo a", "echo b"])
+        body = job.script().split("set -euo pipefail")[1]
+        assert body.index("echo a") < body.index("echo b")
+
+    def test_no_command_raises(self):
+        with pytest.raises(ValueError):
+            Job(name="x").script()
+
+    def test_add_command_chainable(self):
+        job = Job(name="x", command="echo 1").add_command("echo 2")
+        assert "echo 2" in job.script()
+
+    def test_workdir_cd(self):
+        job = Job(name="x", command="pwd", workdir="/data/run1")
+        assert "cd /data/run1" in job.script()
+
+    def test_name_sanitised(self):
+        assert Job(name="my job!!").name == "my_job"
+        assert Job(name="  ").name == "job"
+
+
+class TestArrays:
+    def test_paper_array_example(self, tmp_path):
+        """runjob --files samples.txt 'bwa mem ref.fa #FILE# > #FILE#.bam'"""
+        listing = tmp_path / "samples.txt"
+        listing.write_text("a.fq\nb.fq\n# comment\n\nc.fq\n")
+        job = Job(
+            name="align",
+            command=f"bwa mem ref.fa {FILE_PLACEHOLDER} > {FILE_PLACEHOLDER}.bam",
+            opts=Opts.new(threads=8, memory="16GB", time="4h"),
+            files=str(listing),
+        )
+        s = job.script()
+        assert job.files == ["a.fq", "b.fq", "c.fq"]
+        assert "#SBATCH --array=0-2" in s
+        assert 'FILE="${NBI_FILES[$SLURM_ARRAY_TASK_ID]}"' in s
+        assert 'bwa mem ref.fa "$FILE" > "$FILE".bam' in s
+
+    def test_files_as_list(self):
+        job = Job(name="x", command="cat #FILE#", files=["f1", "f 2"])
+        s = job.script()
+        assert "NBI_FILES=(f1 'f 2')" in s
+
+    def test_array_sim_execution(self, sim):
+        job = Job(name="arr", command="echo #FILE#", files=["a", "b", "c"],
+                  opts=Opts.new(threads=1, memory="1GB", time="1h"))
+        base = job.run(sim)
+        assert sim.states_of(base) == ["PENDING"] * 3 or all(
+            s in ("PENDING", "RUNNING") for s in sim.states_of(base)
+        )
+        sim.run_until_idle()
+        assert sim.states_of(base) == ["COMPLETED"] * 3
+
+
+class TestSubmission:
+    def test_run_returns_id_and_writes_script(self, sim, tmp_path, monkeypatch):
+        monkeypatch.setenv("NBI_TMPDIR", str(tmp_path / "s"))
+        job = Job(name="j", command="true", opts=Opts.new())
+        jid = job.run(sim)
+        assert isinstance(jid, int)
+        assert job.script_path and job.script_path.endswith(".sh")
+        with open(job.script_path) as fh:
+            assert "true" in fh.read()
+
+    def test_dependencies_render(self, sim):
+        j1 = Job(name="a", command="true")
+        id1 = j1.run(sim)
+        j2 = Job(name="b", command="true")
+        j2.set_dependencies(id1)
+        assert f"afterok:{id1}" in j2.script()

@@ -1,0 +1,162 @@
+"""NBI::Launcher — declarative wrappers: validation, activation, resource
+inflation (Kraken2 1.4×+100GB; TrainLauncher chip sizing), discovery."""
+
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.core import (
+    InputSpec, Kraken2, Launcher, LauncherError, Manifest, SimCluster,
+    discover_launchers,
+)
+from repro.core.resources import Opts
+from repro.launch.submit import ServeLauncher, TrainLauncher, train_memory_model
+
+
+class Echo(Launcher):
+    tool_name = "echo"
+    inputs_spec = [InputSpec("text", required=True, kind="str")]
+    params_spec = [InputSpec("upper", required=False, kind="flag", default=0)]
+
+    def make_command(self) -> str:
+        return f"echo {self.inputs['text']}"
+
+
+class TestBase:
+    def test_missing_required_input(self):
+        with pytest.raises(LauncherError, match="missing required input"):
+            Echo(eco=False)
+
+    def test_unknown_argument(self):
+        with pytest.raises(LauncherError, match="unknown arguments"):
+            Echo(text="hi", bogus=1, eco=False)
+
+    def test_env_default(self, monkeypatch, tmp_path):
+        class EnvTool(Launcher):
+            tool_name = "envtool"
+            inputs_spec = [InputSpec("db", default_env="MY_DB")]
+
+            def make_command(self):
+                return f"tool {self.inputs['db']}"
+
+        monkeypatch.setenv("MY_DB", "/dbs/x")
+        t = EnvTool(eco=False)
+        assert t.inputs["db"] == "/dbs/x"
+
+    def test_submit_writes_manifest_and_defers(self, sim, tmp_path, monkeypatch):
+        monkeypatch.setenv("NBI_TMPDIR", str(tmp_path / "s"))
+        from datetime import datetime
+
+        e = Echo(text="hello", outdir=str(tmp_path), backend=sim)
+        # eco defaults ON (paper): submitted Wed 10:00 → deferred to 00:00
+        jid = e.submit(now=datetime(2026, 3, 18, 10, 0))
+        assert e.opts.begin == "2026-03-19T00:00:00"
+        rec = Manifest.load(str(Path(tmp_path) / "echo.manifest.json"))
+        assert rec["status"] == "submitted"
+        assert rec["jobid"] == jid
+        assert rec["resources"]["begin"] == "2026-03-19T00:00:00"
+
+    def test_no_eco_runs_now(self, sim, tmp_path, monkeypatch):
+        monkeypatch.setenv("NBI_TMPDIR", str(tmp_path / "s"))
+        e = Echo(text="hello", outdir=str(tmp_path), backend=sim, eco=False)
+        e.submit()
+        assert e.opts.begin == ""
+
+    def test_activation_lines(self):
+        class ModTool(Echo):
+            activation = ("module", "bwa/0.7.17")
+
+        assert ModTool(text="x", eco=False).activation_lines() == [
+            "module load bwa/0.7.17"
+        ]
+
+        class SingTool(Echo):
+            activation = ("singularity", "img.sif")
+
+        assert "singularity exec img.sif" in SingTool(
+            text="x", eco=False
+        ).command_with_activation()
+
+
+class TestKraken2Inflation:
+    def test_memory_formula(self, tmp_path):
+        """paper: mem = db_size × 1.4 + 100 GB."""
+        db = tmp_path / "db"
+        db.mkdir()
+        (db / "hash.k2d").write_bytes(b"\0" * 10_000_000_000 if False else b"\0" * 10_000_000)
+        kr = Kraken2(reads1="r.fq", db=str(db), eco=False)
+        expect_gb = (10_000_000 / 1e9) * 1.4 + 100
+        assert kr.opts.memory_mb == pytest.approx(expect_gb * 1024, rel=0.01)
+
+    def test_threads_sync_from_cpus(self, tmp_path):
+        db = tmp_path / "db"
+        db.mkdir()
+        kr = Kraken2(reads1="r.fq", db=str(db), eco=False,
+                     opts=Opts.new(threads=16, memory="1GB", time="1h"))
+        assert kr.params["threads"] == 16
+        assert "--threads 16" in kr.make_command()
+
+    def test_paired_and_single(self, tmp_path):
+        db = tmp_path / "db"
+        db.mkdir()
+        single = Kraken2(reads1="r1.fq", db=str(db), eco=False)
+        assert "--paired" not in single.make_command()
+        paired = Kraken2(reads1="r1.fq", reads2="r2.fq", db=str(db), eco=False)
+        assert "--paired r1.fq r2.fq" in paired.make_command()
+
+    def test_db_from_env(self, tmp_path, monkeypatch):
+        db = tmp_path / "db"
+        db.mkdir()
+        monkeypatch.setenv("KRAKEN2_DB", str(db))
+        kr = Kraken2(reads1="r.fq", eco=False)
+        assert kr.inputs["db"] == str(db)
+
+
+class TestTrainLauncher:
+    def test_chip_sizing_monotonic(self):
+        small = train_memory_model(100e6)
+        large = train_memory_model(123e9)
+        assert small["chips"] == 1
+        assert large["chips"] >= 128
+        assert large["hosts"] == -(-large["chips"] // 4)
+
+    def test_adamw8bit_needs_fewer_chips(self):
+        n = 1.03e12
+        assert train_memory_model(n, "adamw8bit")["chips"] < train_memory_model(n, "adamw")["chips"]
+
+    def test_derived_resources(self):
+        tl = TrainLauncher(arch="mistral-large-123b", eco=False,
+                           backend=SimCluster())
+        assert tl.opts.nodes == tl.sizing["hosts"]
+        assert tl.opts.gres.startswith("tpu:v5e:")
+        assert tl.opts.memory_mb >= 100 * 1024  # paper's fixed overhead
+        assert "repro.launch.train --arch mistral-large-123b" in tl.make_command()
+
+    def test_serve_launcher(self):
+        sl = ServeLauncher(arch="starcoder2-7b", eco=False, backend=SimCluster())
+        assert "repro.launch.serve --arch starcoder2-7b" in sl.make_command()
+        assert sl.opts.nodes >= 1
+
+
+class TestDiscovery:
+    def test_builtins_present(self):
+        found = discover_launchers("/nonexistent")
+        assert {"kraken2", "train", "serve"} <= set(found)
+
+    def test_third_party_discovery(self, tmp_path):
+        (tmp_path / "mytool.py").write_text(
+            "from repro.core import Launcher, InputSpec\n"
+            "class MyTool(Launcher):\n"
+            "    tool_name = 'mytool'\n"
+            "    inputs_spec = [InputSpec('x')]\n"
+            "    def make_command(self): return 'mytool'\n"
+        )
+        found = discover_launchers(str(tmp_path))
+        assert "mytool" in found
+        assert found["mytool"].tool_name == "mytool"
+
+    def test_broken_module_skipped(self, tmp_path):
+        (tmp_path / "broken.py").write_text("raise RuntimeError('nope')\n")
+        found = discover_launchers(str(tmp_path))  # must not raise
+        assert "kraken2" in found

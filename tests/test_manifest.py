@@ -1,0 +1,75 @@
+"""NBI::Manifest — JSON provenance: written at submit, patched in place by
+the job itself on completion/failure, no jq (paper §Wrappers)."""
+
+import json
+from pathlib import Path
+
+from repro.core import Job, Manifest, Opts
+
+
+class TestLifecycle:
+    def test_write_submitted(self, tmp_path):
+        m = Manifest(
+            str(tmp_path / "m.json"),
+            tool="kraken2", version="2.1.3",
+            inputs={"reads1": "r1.fq"}, params={"threads": 8},
+            outputs={"report": "out/report.txt"},
+            resources={"memory_mb": 1024},
+        )
+        path = m.write_submitted(jobid=42)
+        rec = json.loads(Path(path).read_text())
+        assert rec["status"] == "submitted"
+        assert rec["jobid"] == 42
+        assert rec["tool"] == "kraken2"
+        assert rec["inputs"]["reads1"] == "r1.fq"
+        assert rec["submitted_at"] is not None
+        assert rec["finished_at"] is None
+
+    def test_patch_in_place(self, tmp_path):
+        m = Manifest(str(tmp_path / "m.json"), tool="t")
+        m.write_submitted(1)
+        Manifest.patch(str(tmp_path / "m.json"), status="completed", exit_status=0)
+        rec = Manifest.load(str(tmp_path / "m.json"))
+        assert rec["status"] == "completed"
+        assert rec["exit_status"] == 0
+        assert rec["tool"] == "t"  # untouched fields survive
+
+    def test_trailer_uses_no_jq(self):
+        m = Manifest("/data/out/m.json")
+        trailer = "\n".join(m.trailer_lines())
+        assert "jq" not in trailer  # paper: no external tools like jq
+        assert "python3 -c" in trailer
+        assert "trap" in trailer
+
+
+class TestEndToEnd:
+    def _job_with_manifest(self, tmp_path, command):
+        m = Manifest(str(tmp_path / "m.json"), tool="demo")
+        job = Job(name="demo", command=command,
+                  opts=Opts.new(threads=1, memory="1GB", time="1h"),
+                  sim_duration_s=5)
+        job.prelude = m.trailer_lines()
+        return m, job
+
+    def test_job_patches_on_success(self, exec_sim, tmp_path, monkeypatch):
+        monkeypatch.setenv("NBI_TMPDIR", str(tmp_path / "s"))
+        m, job = self._job_with_manifest(tmp_path, "true")
+        jid = job.run(exec_sim)
+        m.write_submitted(jid)
+        assert Manifest.load(m.path)["status"] == "submitted"
+        exec_sim.run_until_idle()
+        rec = Manifest.load(m.path)
+        assert rec["status"] == "completed"
+        assert rec["exit_status"] == 0
+        assert rec["finished_at"] is not None
+
+    def test_job_patches_on_failure(self, exec_sim, tmp_path, monkeypatch):
+        """Failures are recorded too (the trap fires on any exit)."""
+        monkeypatch.setenv("NBI_TMPDIR", str(tmp_path / "s"))
+        m, job = self._job_with_manifest(tmp_path, "exit 7")
+        jid = job.run(exec_sim)
+        m.write_submitted(jid)
+        exec_sim.run_until_idle()
+        rec = Manifest.load(m.path)
+        assert rec["status"] == "failed"
+        assert rec["exit_status"] == 7

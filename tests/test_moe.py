@@ -1,0 +1,137 @@
+"""MoE dispatch invariants: top-k routing, capacity, load-balance loss."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_smoke_config
+from repro.models.config import ArchConfig
+from repro.models.moe import capacity, moe_ffn, top_k_routing
+
+
+def mini_cfg(**kw):
+    base = get_smoke_config("deepseek-moe-16b")
+    return base.replace(**kw) if kw else base
+
+
+class TestRouting:
+    def _route(self, G=1, N=16, E=8, k=2, cf=1.25, seed=0):
+        cfg = mini_cfg(n_experts=E, top_k=k, capacity_factor=cf)
+        cap = capacity(cfg, N)
+        rng = np.random.default_rng(seed)
+        logits = jnp.asarray(rng.standard_normal((G, N, E)), jnp.float32)
+        dispatch, combine, aux = top_k_routing(logits, cfg, cap)
+        return cfg, cap, dispatch, combine, aux
+
+    def test_each_slot_holds_one_token(self):
+        _, cap, dispatch, _, _ = self._route()
+        per_slot = np.asarray(dispatch).sum(axis=1)  # (G,E,C)
+        assert per_slot.max() <= 1
+
+    def test_token_routed_at_most_k_times(self):
+        cfg, _, dispatch, _, _ = self._route()
+        per_token = np.asarray(dispatch).sum(axis=(2, 3))  # (G,N)
+        assert per_token.max() <= cfg.top_k
+
+    def test_combine_weights_normalised(self):
+        """Kept tokens' gate weights sum ≤ 1 (DeepSeek renormalisation)."""
+        _, _, dispatch, combine, _ = self._route(cf=8.0)  # no drops
+        w = np.asarray(combine).sum(axis=(2, 3))
+        np.testing.assert_allclose(w, 1.0, atol=1e-5)
+
+    def test_capacity_drops_excess(self):
+        # adversarial: all tokens want expert 0
+        cfg = mini_cfg(n_experts=4, top_k=1, capacity_factor=1.0)
+        N = 16
+        cap = capacity(cfg, N)
+        logits = jnp.zeros((1, N, 4)).at[:, :, 0].set(10.0)
+        dispatch, _, _ = top_k_routing(logits, cfg, cap)
+        kept = np.asarray(dispatch)[0, :, 0].sum()
+        assert kept == cap  # exactly capacity survive, rest dropped
+
+    def test_aux_loss_uniform_low_skewed_high(self):
+        cfg = mini_cfg(n_experts=8, top_k=2, capacity_factor=8.0)
+        rng = np.random.default_rng(0)
+        uniform = jnp.asarray(rng.standard_normal((1, 256, 8)) * 0.01, jnp.float32)
+        skewed = uniform.at[:, :, 0].add(8.0)
+        cap = capacity(cfg, 256)
+        _, _, aux_u = top_k_routing(uniform, cfg, cap)
+        _, _, aux_s = top_k_routing(skewed, cfg, cap)
+        assert float(aux_s) > float(aux_u)
+        # uniform: f_e ≈ k/E, p_e ≈ 1/E → aux = E·Σ f·p ≈ k
+        assert float(aux_u) == pytest.approx(cfg.top_k, rel=0.1)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        n=st.sampled_from([8, 16, 32]),
+        e=st.sampled_from([4, 8]),
+        k=st.integers(1, 3),
+        seed=st.integers(0, 100),
+    )
+    def test_property_dispatch_within_bounds(self, n, e, k, seed):
+        cfg = mini_cfg(n_experts=e, top_k=k)
+        cap = capacity(cfg, n)
+        rng = np.random.default_rng(seed)
+        logits = jnp.asarray(rng.standard_normal((2, n, e)), jnp.float32)
+        dispatch, combine, aux = top_k_routing(logits, cfg, cap)
+        d = np.asarray(dispatch)
+        assert d.sum(axis=1).max() <= 1  # slot exclusive
+        assert d.sum(axis=(2, 3)).max() <= k
+        assert np.asarray(combine).min() >= 0
+        assert np.isfinite(float(aux))
+
+
+class TestMoEFFN:
+    def test_shared_experts_always_active(self):
+        """With capacity 0ish routing (all dropped), shared experts still
+        contribute — outputs differ from zero."""
+        cfg = mini_cfg(capacity_factor=8.0)
+        from repro.models.moe import moe_param_defs
+        from repro.models.common import init_params
+
+        params = init_params(moe_param_defs(cfg), jax.random.PRNGKey(0))
+        layer = jax.tree_util.tree_map(lambda a: a[0], params["moe_blocks"])
+        x = jnp.asarray(
+            np.random.default_rng(0).standard_normal((1, 32, cfg.d_model)),
+            jnp.float32,
+        )
+        y, aux = moe_ffn(layer["moe"], x, cfg)
+        assert y.shape == x.shape
+        assert float(jnp.abs(y).max()) > 0
+        assert np.isfinite(float(aux))
+
+    def test_dropless_ffn_equals_dense_expert_sum(self):
+        """With cf high enough for zero drops, the dispatch einsum must equal
+        explicitly evaluating each token through its top-k experts."""
+        cfg = mini_cfg(capacity_factor=16.0, n_shared_experts=0)
+        from repro.models.moe import moe_param_defs
+        from repro.models.common import init_params
+
+        params = init_params(moe_param_defs(cfg), jax.random.PRNGKey(1))
+        layer = jax.tree_util.tree_map(lambda a: a[0], params["moe_blocks"])["moe"]
+        rng = np.random.default_rng(2)
+        x = jnp.asarray(rng.standard_normal((1, 16, cfg.d_model)), jnp.float32)
+        y, _ = moe_ffn(layer, x, cfg)
+
+        # naive oracle
+        logits = np.asarray(
+            jnp.einsum("bsd,de->bse", x, layer["router"].astype(jnp.float32))
+        )
+        probs = jax.nn.softmax(jnp.asarray(logits), axis=-1)
+        vals, idx = jax.lax.top_k(probs, cfg.top_k)
+        vals = vals / vals.sum(-1, keepdims=True)
+        want = np.zeros_like(np.asarray(x))
+        for b in range(1):
+            for s in range(16):
+                for j in range(cfg.top_k):
+                    e = int(idx[b, s, j])
+                    xin = np.asarray(x[b, s])
+                    g = np.asarray(layer["wg"])[e].T @ xin
+                    h = np.asarray(layer["wi"])[e].T @ xin
+                    act = (g / (1 + np.exp(-g))) * h
+                    want[b, s] += float(vals[b, s, j]) * (
+                        np.asarray(layer["wo"])[e].T @ act
+                    )
+        np.testing.assert_allclose(np.asarray(y), want, atol=2e-4)

@@ -1,0 +1,106 @@
+"""NBI::Pipeline — automatic afterok wiring over Jobs and Launchers."""
+
+import pytest
+
+from repro.core import (
+    InputSpec, Job, Launcher, Opts, Pipeline, PipelineError, SimCluster,
+)
+
+
+def mkjob(name, duration=30):
+    return Job(name=name, command="true",
+               opts=Opts.new(threads=1, memory="1GB", time="1h"),
+               sim_duration_s=duration)
+
+
+class TestGraph:
+    def test_toposort_order(self, sim):
+        p = Pipeline(backend=sim)
+        p.add("c", mkjob("c"), after=["b"])
+        p.add("b", mkjob("b"), after="a")
+        p.add("a", mkjob("a"))
+        order = [s.name for s in p.toposort()]
+        assert order.index("a") < order.index("b") < order.index("c")
+
+    def test_cycle_detected(self):
+        p = Pipeline()
+        p.add("a", mkjob("a"), after=["b"])
+        p.add("b", mkjob("b"), after=["a"])
+        with pytest.raises(PipelineError, match="cycle"):
+            p.toposort()
+
+    def test_unknown_dependency(self):
+        p = Pipeline()
+        p.add("a", mkjob("a"), after=["ghost"])
+        with pytest.raises(PipelineError, match="unknown"):
+            p.toposort()
+
+    def test_duplicate_step(self):
+        p = Pipeline()
+        p.add("a", mkjob("a"))
+        with pytest.raises(PipelineError, match="duplicate"):
+            p.add("a", mkjob("a2"))
+
+
+class TestRun:
+    def test_ids_threaded_into_dependencies(self, sim):
+        p = Pipeline(backend=sim)
+        p.add("assemble", mkjob("assemble"))
+        p.add("annotate", mkjob("annotate"), after="assemble")
+        p.add("report", mkjob("report"), after=["annotate"])
+        ids = p.run()
+        ann = sim.get(ids["annotate"])
+        rep = sim.get(ids["report"])
+        assert ann.dependencies == [str(ids["assemble"])]
+        assert rep.dependencies == [str(ids["annotate"])]
+
+    def test_dependency_order_execution(self, sim):
+        p = Pipeline(backend=sim)
+        p.add("a", mkjob("a", 60))
+        p.add("b", mkjob("b", 60), after="a")
+        ids = p.run()
+        assert sim.get(ids["b"]).state == "PENDING"
+        sim.run_until_idle()
+        a, b = sim.get(ids["a"]), sim.get(ids["b"])
+        assert a.state == b.state == "COMPLETED"
+        assert b.started_at >= a.finished_at
+
+    def test_fan_out_fan_in(self, sim):
+        p = Pipeline(backend=sim)
+        p.add("prep", mkjob("prep"))
+        for i in range(4):
+            p.add(f"shard{i}", mkjob(f"shard{i}"), after="prep")
+        p.add("merge", mkjob("merge"), after=[f"shard{i}" for i in range(4)])
+        ids = p.run()
+        merge = sim.get(ids["merge"])
+        assert len(merge.dependencies) == 4
+        sim.run_until_idle()
+        assert all(j.state == "COMPLETED" for j in sim.accounting())
+
+    def test_launcher_payload(self, sim, tmp_path, monkeypatch):
+        monkeypatch.setenv("NBI_TMPDIR", str(tmp_path / "s"))
+
+        class T(Launcher):
+            tool_name = "t"
+            inputs_spec = [InputSpec("x", kind="str")]
+
+            def make_command(self):
+                return f"echo {self.inputs['x']}"
+
+        p = Pipeline(backend=sim)
+        p.add("one", mkjob("one"))
+        p.add("two", T(x="hi", outdir=str(tmp_path), eco=False), after="one")
+        ids = p.run()
+        assert sim.get(ids["two"]).dependencies == [str(ids["one"])]
+
+    def test_failed_upstream_blocks_downstream(self, sim):
+        bad = Job(name="bad", command="true",
+                  opts=Opts.new(threads=1, memory="1GB", time="1h"),
+                  sim_duration_s=7200)  # exceeds 1h limit → TIMEOUT
+        p = Pipeline(backend=sim)
+        p.add("bad", bad)
+        p.add("after", mkjob("after"), after="bad")
+        ids = p.run()
+        sim.run_until_idle()
+        assert sim.get(ids["bad"]).state == "TIMEOUT"
+        assert sim.get(ids["after"]).reason == "DependencyNeverSatisfied"

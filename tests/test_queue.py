@@ -1,0 +1,79 @@
+"""NBI::Queue / QueuedJob — querying and filtering (paper §Queue)."""
+
+from repro.core import Job, Opts, Queue, QueuedJob
+
+
+def submit(sim, name="j", user=None, queue="main", duration=60):
+    job = Job(name=name, command="true",
+              opts=Opts.new(queue=queue, threads=2, memory="1GB", time="1h"),
+              sim_duration_s=duration)
+    jid = job.run(sim)
+    if user:
+        sim.get(jid).user = user
+    return jid
+
+
+class TestQueuedJob:
+    def test_from_squeue_line(self):
+        line = "123|alice|main|align|RUNNING|0-00:10:00|0-00:50:00|0-01:00:00|n001||4|4096"
+        j = QueuedJob.from_squeue_line(line)
+        assert j.jobid == "123" and j.user == "alice" and j.state == "RUNNING"
+        assert j.jobid_num == 123
+        assert j.is_active()
+
+    def test_malformed_line(self):
+        assert QueuedJob.from_squeue_line("garbage") is None
+
+    def test_array_task_id(self):
+        j = QueuedJob(jobid="123_4")
+        assert j.jobid_num == 123
+
+
+class TestQueueFiltering:
+    def test_filter_by_user(self, sim):
+        submit(sim, "a", user="alice")
+        submit(sim, "b", user="bob")
+        q = Queue(user="alice", backend=sim)
+        assert len(q) == 1 and q.jobs[0].user == "alice"
+
+    def test_filter_by_state(self, sim):
+        # 2 nodes × 64 cpus; 2-cpu jobs: all run. Make 1 pending via resources
+        for i in range(3):
+            submit(sim, f"j{i}")
+        q_running = Queue(state="RUNNING", backend=sim)
+        assert all(j.state == "RUNNING" for j in q_running)
+
+    def test_filter_by_name_regex(self, sim):
+        submit(sim, "align-1")
+        submit(sim, "align-2")
+        submit(sim, "assembly")
+        q = Queue(name=r"^align-\d$", backend=sim)
+        assert len(q) == 2
+
+    def test_filter_by_partition(self, sim):
+        submit(sim, "a", queue="fast")
+        submit(sim, "b", queue="slow")
+        q = Queue(queue="fast", backend=sim)
+        assert len(q) == 1 and q.jobs[0].queue == "fast"
+
+    def test_terminal_jobs_absent(self, sim):
+        submit(sim, "done", duration=10)
+        sim.run_until_idle()
+        assert len(Queue(backend=sim)) == 0
+
+    def test_ids_and_by_user(self, sim):
+        submit(sim, "a", user="alice")
+        submit(sim, "b", user="bob")
+        q = Queue(backend=sim)
+        assert len(q.ids()) == 2
+        assert set(q.by_user()) == {"alice", "bob"}
+
+    def test_cancel_filtered(self, sim):
+        submit(sim, "a", user="alice")
+        submit(sim, "b", user="bob")
+        q = Queue(user="bob", backend=sim)
+        n = q.cancel()
+        assert n == 1
+        sim_states = {j.name: j.state for j in sim.accounting()}
+        assert sim_states["b"] == "CANCELLED"
+        assert sim_states["a"] != "CANCELLED"

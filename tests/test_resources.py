@@ -1,0 +1,121 @@
+"""NBI::Opts semantics: human-friendly parsing → SLURM units (paper §Opts)."""
+
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import Opts, format_slurm_time, parse_memory_mb, parse_time_s
+
+
+class TestMemoryParsing:
+    @pytest.mark.parametrize(
+        "value,mb",
+        [
+            (64, 64),  # bare numbers are MB (SLURM convention)
+            ("8GB", 8192),
+            ("8gb", 8192),
+            ("8G", 8192),
+            ("500 MB", 500),
+            ("500", 500),
+            ("1.5G", 1536),
+            ("1TB", 1024 * 1024),
+            ("2048k", 2),
+        ],
+    )
+    def test_values(self, value, mb):
+        assert parse_memory_mb(value) == mb
+
+    @pytest.mark.parametrize("bad", ["", "abc", "12XB", "-5", 0, -1, "0"])
+    def test_rejects(self, bad):
+        with pytest.raises(ValueError):
+            parse_memory_mb(bad)
+
+
+class TestTimeParsing:
+    @pytest.mark.parametrize(
+        "value,seconds",
+        [
+            (12, 12 * 3600),  # paper: -t 12 = 12 hours
+            (0.5, 1800),
+            ("2h30m", 9000),
+            ("1d2h", 93600),
+            ("90s", 90),
+            ("45m", 2700),
+            ("0-12:00:00", 12 * 3600),  # SLURM D-HH:MM:SS
+            ("2-00:00:00", 2 * 86400),
+            ("2-12:30", 2 * 86400 + 12 * 3600 + 1800),
+            ("12:30:15", 12 * 3600 + 30 * 60 + 15),
+            ("12:30", 12 * 3600 + 1800),
+            ("6", 6 * 3600),
+        ],
+    )
+    def test_values(self, value, seconds):
+        assert parse_time_s(value) == seconds
+
+    @pytest.mark.parametrize("bad", ["", "abc", "2x30m", 0, -3])
+    def test_rejects(self, bad):
+        with pytest.raises(ValueError):
+            parse_time_s(bad)
+
+    def test_format_roundtrip(self):
+        assert format_slurm_time(12 * 3600) == "0-12:00:00"
+        assert format_slurm_time(2 * 86400 + 3600 + 61) == "2-01:01:01"
+
+    @given(st.integers(min_value=1, max_value=30 * 86400))
+    def test_format_parse_roundtrip(self, seconds):
+        assert parse_time_s(format_slurm_time(seconds)) == seconds
+
+
+class TestOpts:
+    def test_paper_example_directives(self):
+        """runjob -n assembly -c 18 -m 64 -t 12 → exact sbatch lines."""
+        opts = Opts.new(threads=18, memory="64GB", time=12, output_dir="./logs/")
+        lines = opts.sbatch_directives("assembly")
+        assert "#SBATCH --job-name=assembly" in lines
+        assert "#SBATCH --cpus-per-task=18" in lines
+        assert "#SBATCH --mem=65536" in lines
+        assert "#SBATCH --time=0-12:00:00" in lines
+        assert "#SBATCH --output=./logs/assembly.%j.out" in lines
+
+    def test_begin_directive(self):
+        opts = Opts.new(threads=1, memory="1GB", time="1h")
+        opts.set_begin("2026-03-19T00:00:00")
+        assert "#SBATCH --begin=2026-03-19T00:00:00" in opts.sbatch_directives()
+
+    def test_array_directives(self):
+        opts = Opts.new(threads=1)
+        opts.array_size = 200
+        opts.array_throttle = 10
+        lines = opts.sbatch_directives("align")
+        assert "#SBATCH --array=0-199%10" in lines
+        assert any("%A_%a.out" in ln for ln in lines)
+
+    def test_dependencies(self):
+        opts = Opts.new(threads=1)
+        opts.dependencies = [11, 12]
+        assert "#SBATCH --dependency=afterok:11:12" in opts.sbatch_directives()
+
+    def test_email_default_type(self):
+        opts = Opts.new(email="a@b.c")
+        lines = opts.sbatch_directives()
+        assert "#SBATCH --mail-user=a@b.c" in lines
+        assert "#SBATCH --mail-type=END" in lines
+
+    def test_chainable_setters(self):
+        opts = Opts().set_memory("2GB").set_time("2h30m")
+        assert opts.memory_mb == 2048
+        assert opts.time_s == 9000
+
+    def test_view(self):
+        v = Opts.new(queue="fast", threads=4, memory="8GB", time=2).view()
+        assert "queue=fast" in v and "8GB" in v and "0-02:00:00" in v
+
+    @given(
+        mb=st.integers(min_value=1, max_value=10**7),
+        secs=st.integers(min_value=60, max_value=10 * 86400),
+        threads=st.integers(min_value=1, max_value=512),
+    )
+    def test_directives_always_render(self, mb, secs, threads):
+        opts = Opts(threads=threads, memory_mb=mb, time_s=secs)
+        lines = opts.sbatch_directives("x")
+        assert f"#SBATCH --mem={mb}" in lines
+        assert f"#SBATCH --cpus-per-task={threads}" in lines

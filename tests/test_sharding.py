@@ -1,0 +1,121 @@
+"""Sharding rules: logical→mesh derivation, divisibility self-disable,
+spec resolution. Uses tiny meshes over the single CPU device where a real
+Mesh is needed; rule logic itself is pure."""
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.models.common import ParamDef
+from repro.models.registry import build_model
+from repro.parallel.sharding import (
+    dp_axes, mesh_axis_sizes, rules_for, spec_for,
+)
+
+
+class FakeMesh:
+    """Duck-typed mesh: rules_for only reads axis_names and devices.shape."""
+
+    class _Dev:
+        def __init__(self, shape):
+            self.shape = shape
+            self.size = 1
+            for s in shape:
+                self.size *= s
+
+    def __init__(self, shape, axes):
+        self.axis_names = axes
+        self.devices = self._Dev(shape)
+
+
+SINGLE = FakeMesh((16, 16), ("data", "model"))
+MULTI = FakeMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+class TestRules:
+    def test_divisible_dims_shard(self):
+        cfg = get_config("codeqwen1.5-7b")  # 32 heads, kv 32, ff 13440
+        model = build_model(cfg)
+        rules = rules_for(cfg, SINGLE, param_defs=model.param_defs,
+                          batch_size=256)
+        assert rules["heads"] == "model"      # 32 % 16 == 0
+        assert rules["kv_heads"] == "model"
+        assert rules["ff"] == "model"         # 13440 % 16 == 0
+        assert rules["vocab"] == "model"      # padded vocab
+        assert rules["batch"] == "data"
+
+    def test_non_divisible_self_disables(self):
+        cfg = get_config("starcoder2-7b")  # 36 heads, kv 4 on 16-way axis
+        model = build_model(cfg)
+        rules = rules_for(cfg, SINGLE, param_defs=model.param_defs,
+                          batch_size=256)
+        assert rules["heads"] is None      # 36 % 16 != 0
+        assert rules["kv_heads"] is None   # 4 % 16 != 0
+        assert rules["ff"] == "model"      # 18432 % 16 == 0
+
+    def test_batch_needs_divisibility(self):
+        cfg = get_config("codeqwen1.5-7b")
+        rules = rules_for(cfg, SINGLE, batch_size=1)  # long_500k: batch 1
+        assert rules["batch"] is None
+
+    def test_multipod_batch_spans_pod_and_data(self):
+        cfg = get_config("codeqwen1.5-7b")
+        rules = rules_for(cfg, MULTI, batch_size=256)  # 256 % 32 == 0
+        assert rules["batch"] == ("pod", "data")
+
+    def test_kv_seq_rule_from_extra_dims(self):
+        cfg = get_config("mistral-large-123b")
+        r1 = rules_for(cfg, SINGLE, extra_dims={"kv_seq": 32768})
+        assert r1["kv_seq"] == "model"
+        r2 = rules_for(cfg, SINGLE, extra_dims={"kv_seq": 100})
+        assert r2["kv_seq"] is None
+
+    def test_experts_rule(self):
+        cfg = get_config("deepseek-moe-16b")  # 64 experts
+        model = build_model(cfg)
+        rules = rules_for(cfg, SINGLE, param_defs=model.param_defs)
+        assert rules["experts"] == "model"
+
+    def test_spec_for(self):
+        rules = {"batch": ("pod", "data"), "heads": "model", "embed": None}
+        spec = spec_for(("batch", None, "heads"), rules)
+        assert spec == P(("pod", "data"), None, "model")
+
+    def test_helpers(self):
+        assert mesh_axis_sizes(MULTI) == {"pod": 2, "data": 16, "model": 16}
+        assert dp_axes(MULTI) == ("pod", "data")
+        assert dp_axes(SINGLE) == ("data",)
+
+    def test_param_defs_checked_per_dim(self):
+        """A ParamDef with a non-divisible 'ff' disables the whole rule."""
+        cfg = get_config("codeqwen1.5-7b")
+        defs = {"w": ParamDef((10, 17), ("embed", "ff"))}
+        rules = rules_for(cfg, SINGLE, param_defs=defs)
+        assert rules["ff"] is None
+
+
+class TestRealMeshIntegration:
+    def test_host_mesh_lower(self):
+        """rules_for + resolve_tree on a real (1,1) mesh lowers a train step."""
+        from repro.configs import get_smoke_config
+        from repro.launch.mesh import make_host_mesh
+        from repro.optim import make_optimizer
+        from repro.parallel.sharding import resolve_tree
+        from repro.training.steps import (
+            abstract_train_state, make_train_step, train_state_logical,
+        )
+
+        cfg = get_smoke_config("codeqwen1.5-7b")
+        model = build_model(cfg)
+        mesh = make_host_mesh()
+        opt = make_optimizer("adamw")
+        rules = rules_for(cfg, mesh, param_defs=model.param_defs, batch_size=2)
+        state = abstract_train_state(model, opt)
+        state_sh = resolve_tree(mesh, train_state_logical(model, opt), rules)
+        step = make_train_step(model, opt, rules, mesh)
+        with mesh:
+            lowered = jax.jit(
+                step, in_shardings=(state_sh, None), out_shardings=(state_sh, None)
+            ).lower(state, model.train_inputs(2, 32))
+            assert lowered.compile() is not None

@@ -1,0 +1,163 @@
+"""SimCluster — the deterministic SLURM model: scheduling, --begin,
+dependencies, timeouts, node failure + requeue (fault-tolerance drills)."""
+
+from datetime import datetime, timedelta
+
+from repro.core import Job, Opts, SimCluster, SimNode
+
+
+def mkjob(name="j", duration=60, begin="", deps=None, cpus=2, time="1h",
+          requeue=True):
+    opts = Opts.new(threads=cpus, memory="1GB", time=time)
+    if begin:
+        opts.set_begin(begin)
+    if deps:
+        opts.dependencies = deps
+    opts.requeue = requeue
+    return Job(name=name, command="true", opts=opts, sim_duration_s=duration)
+
+
+class TestScheduling:
+    def test_fifo_start_and_finish(self, sim):
+        jid = mkjob(duration=120).run(sim)
+        assert sim.get(jid).state == "RUNNING"
+        sim.advance(119)
+        assert sim.get(jid).state == "RUNNING"
+        sim.advance(2)
+        assert sim.get(jid).state == "COMPLETED"
+
+    def test_resources_block(self):
+        sim = SimCluster(nodes=[SimNode("n0", cpus=4)])
+        a = mkjob("a", cpus=3, duration=100).run(sim)
+        b = mkjob("b", cpus=3, duration=100).run(sim)
+        assert sim.get(a).state == "RUNNING"
+        assert sim.get(b).state == "PENDING"
+        assert sim.get(b).reason == "Resources"
+        sim.advance(101)
+        assert sim.get(b).state == "RUNNING"
+
+    def test_timeout(self, sim):
+        jid = mkjob(duration=7200, time="1h").run(sim)
+        sim.run_until_idle()
+        assert sim.get(jid).state == "TIMEOUT"
+
+
+class TestBegin:
+    def test_begin_defers(self, sim):
+        begin = (sim.now + timedelta(hours=2)).isoformat()
+        jid = mkjob(begin=begin, duration=60).run(sim)
+        assert sim.get(jid).state == "PENDING"
+        assert sim.get(jid).reason == "BeginTime"
+        sim.advance(2 * 3600 - 60)
+        assert sim.get(jid).state == "PENDING"
+        sim.advance(61)
+        assert sim.get(jid).state == "RUNNING"
+
+    def test_eco_begin_integration(self, sim):
+        """A --begin injected by the eco scheduler starts at the window."""
+        from repro.core import EcoScheduler
+
+        sched = EcoScheduler(weekday_windows=[(0, 360)], weekend_windows=[],
+                             peak_hours=[], horizon_days=7, min_delay_s=0)
+        d = sched.next_window(3600, sim.now)
+        jid = mkjob(begin=d.begin_directive, duration=600).run(sim)
+        sim.advance(to=d.begin - timedelta(seconds=1))
+        assert sim.get(jid).state == "PENDING"
+        sim.advance(2)
+        assert sim.get(jid).state == "RUNNING"
+
+
+class TestDependencies:
+    def test_afterok_chain(self, sim):
+        a = mkjob("a", duration=60).run(sim)
+        b = mkjob("b", duration=60, deps=[a]).run(sim)
+        assert sim.get(b).reason == "Dependency"
+        sim.advance(61)
+        assert sim.get(b).state == "RUNNING"
+        sim.run_until_idle()
+        assert sim.get(b).state == "COMPLETED"
+
+    def test_dependency_never_satisfied(self, sim):
+        a = mkjob("a", duration=7200, time="1h").run(sim)  # will TIMEOUT
+        b = mkjob("b", deps=[a]).run(sim)
+        sim.run_until_idle()
+        assert sim.get(a).state == "TIMEOUT"
+        assert sim.get(b).state == "PENDING"
+        assert sim.get(b).reason == "DependencyNeverSatisfied"
+
+
+class TestNodeFailure:
+    def test_requeue_on_node_failure(self, sim):
+        jid = mkjob(duration=600).run(sim)
+        node = sim.get(jid).node
+        sim.advance(60)
+        sim.fail_node(node)
+        j = sim.get(jid)
+        # requeued → rescheduled (possibly instantly on another UP node)
+        assert j.restarts == 1
+        assert j.state in ("PENDING", "RUNNING")
+        assert j.node != node or j.state == "PENDING"
+        sim.run_until_idle()
+        assert sim.get(jid).state == "COMPLETED"
+
+    def test_no_requeue_fails(self, sim):
+        jid = mkjob(duration=600, requeue=False).run(sim)
+        sim.fail_node(sim.get(jid).node)
+        assert sim.get(jid).state == "NODE_FAIL"
+
+    def test_scheduled_failure_and_restore(self):
+        sim = SimCluster(nodes=[SimNode("n0", cpus=4)])
+        jid = mkjob(duration=600, cpus=4).run(sim)
+        sim.fail_node("n0", at=sim.now + timedelta(seconds=60))
+        sim.advance(120)
+        j = sim.get(jid)
+        assert j.state == "PENDING"  # only node is down
+        sim.restore_node("n0")
+        assert sim.get(jid).state == "RUNNING"
+        sim.run_until_idle()
+        assert sim.get(jid).state == "COMPLETED"
+
+    def test_capacity_drain_many_failures(self):
+        """1000-node style drill: kill 30% of nodes mid-run; every requeueable
+        job still completes."""
+        sim = SimCluster(nodes=[SimNode(f"n{i:03d}", cpus=8) for i in range(20)])
+        ids = [mkjob(f"j{i}", duration=600, cpus=4).run(sim) for i in range(30)]
+        sim.advance(60)
+        for i in range(6):
+            sim.fail_node(f"n{i:03d}")
+        sim.run_until_idle()
+        states = {jid: sim.get(jid).state for jid in ids}
+        assert set(states.values()) == {"COMPLETED"}
+
+
+class TestExecution:
+    def test_execute_runs_script(self, exec_sim, tmp_path, monkeypatch):
+        monkeypatch.setenv("NBI_TMPDIR", str(tmp_path))
+        marker = tmp_path / "ran.txt"
+        job = Job(name="x", command=f"echo done > {marker}",
+                  opts=Opts.new(threads=1, memory="1GB", time="1h"),
+                  sim_duration_s=10)
+        job.run(exec_sim)
+        exec_sim.run_until_idle()
+        assert marker.read_text().strip() == "done"
+
+    def test_failed_script_reported(self, exec_sim, tmp_path, monkeypatch):
+        monkeypatch.setenv("NBI_TMPDIR", str(tmp_path))
+        job = Job(name="bad", command="exit 3",
+                  opts=Opts.new(threads=1, memory="1GB", time="1h"),
+                  sim_duration_s=10)
+        jid = job.run(exec_sim)
+        exec_sim.run_until_idle()
+        j = exec_sim.get(jid)
+        assert j.state == "FAILED"
+        assert "3" in j.reason
+
+    def test_array_env_vars(self, exec_sim, tmp_path, monkeypatch):
+        monkeypatch.setenv("NBI_TMPDIR", str(tmp_path))
+        job = Job(name="arr", command=f"echo $SLURM_ARRAY_TASK_ID:#FILE# >> {tmp_path}/out",
+                  opts=Opts.new(threads=1, memory="1GB", time="1h"),
+                  files=["x", "y"], sim_duration_s=10)
+        job.run(exec_sim)
+        exec_sim.run_until_idle()
+        lines = sorted((tmp_path / "out").read_text().split())
+        assert lines == ["0:x", "1:y"]

@@ -1,0 +1,141 @@
+"""End-to-end system tests: the full NBI-Slurm workflow over the simulator,
+including the TPU-era path (submit a training job → sim executes the real
+trainer → checkpoints appear → manifest patched)."""
+
+import json
+import sys
+from pathlib import Path
+
+from repro.cli import nbilaunch, runjob, waitjobs
+from repro.core import Manifest, Pipeline, Queue, SimCluster, get_backend
+from repro.core.job import Job
+from repro.core.resources import Opts
+
+
+class TestBioinformaticsWorkflow:
+    def test_submit_wait_complete(self, capsys):
+        """runjob → queue shows it → waitjobs blocks → queue drains."""
+        rc = runjob.main(["-n", "wf", "--no-eco", "-c", "2", "-m", "1", "true"])
+        assert rc == 0
+        be = get_backend()
+        assert len(Queue(name="wf", backend=be)) == 1
+        assert waitjobs.main(["-n", "wf", "--quiet", "--poll", "60"]) == 0
+        assert len(Queue(name="wf", backend=be)) == 0
+
+    def test_eco_job_runs_at_window(self):
+        """--eco defers; advancing the sim clock to the window starts it."""
+        from datetime import datetime
+
+        be = get_backend()
+        be.now = datetime(2026, 3, 18, 10, 0)
+        rc = runjob.main(["-n", "eco-job", "-t", "2", "--eco",
+                          "--now", "2026-03-18T10:00:00", "sleep 100"])
+        assert rc == 0
+        j = Queue(name="eco-job", backend=be).jobs[0]
+        assert j.state == "PENDING" and j.reason == "BeginTime"
+        be.advance(to=datetime(2026, 3, 19, 0, 0, 1))
+        j = Queue(name="eco-job", backend=be).jobs[0]
+        assert j.state == "RUNNING"
+
+
+class TestTrainingJobEndToEnd:
+    def test_sim_executes_real_training_script(self, tmp_path, monkeypatch):
+        """The flagship integration: nbilaunch-style submission whose script
+        actually runs `python -m repro.launch.train` (tiny config) inside the
+        simulator; afterwards the checkpoint exists on disk and the manifest
+        records success."""
+        monkeypatch.setenv("NBI_TMPDIR", str(tmp_path / "scripts"))
+        sim = SimCluster(execute=True)
+        ckpt = tmp_path / "ckpt"
+        src = Path(__file__).resolve().parent.parent / "src"
+
+        cmd = (
+            f"{sys.executable} -m repro.launch.train --arch nbi-100m --smoke "
+            f"--steps 4 --global-batch 2 --seq 16 --ckpt-dir {ckpt} "
+            f"--ckpt-every 2 --log-every 2"
+        )
+        manifest = Manifest(str(tmp_path / "train.manifest.json"), tool="train")
+        job = Job(name="train-nbi100m", command=cmd,
+                  opts=Opts.new(threads=2, memory="4GB", time="1h"),
+                  sim_duration_s=10)
+        job.prelude = [f"export PYTHONPATH={src}"] + manifest.trailer_lines()
+        jid = job.run(sim)
+        manifest.write_submitted(jid)
+        sim.run_until_idle()
+
+        rec = Manifest.load(manifest.path)
+        assert rec["status"] == "completed", rec
+        from repro.checkpoint import CheckpointManager
+
+        assert CheckpointManager(ckpt).latest_step() == 4
+
+    def test_failure_requeue_then_resume(self, tmp_path, monkeypatch):
+        """Interrupted run → requeued rerun resumes from the checkpoint.
+
+        The simulator executes scripts at completion time, so 'interrupted
+        mid-run' is modelled as a first submission that only reaches step 3
+        before its node dies (requeue drill in test_simcluster), followed by
+        the requeued rerun of the same command reaching step 6. The rerun
+        must RESUME (checkpoint continues 3 → 6, not restart from 0)."""
+        monkeypatch.setenv("NBI_TMPDIR", str(tmp_path / "scripts"))
+        sim = SimCluster(execute=True)
+        ckpt = tmp_path / "ckpt"
+        src = Path(__file__).resolve().parent.parent / "src"
+        log1, log2 = tmp_path / "run1.log", tmp_path / "run2.log"
+
+        def train_cmd(steps, log):
+            return (
+                f"{sys.executable} -m repro.launch.train --arch nbi-100m "
+                f"--smoke --steps {steps} --global-batch 2 --seq 16 "
+                f"--ckpt-dir {ckpt} --ckpt-every 3 --log-every 3 > {log} 2>&1"
+            )
+
+        j1 = Job(name="run1", command=train_cmd(3, log1),
+                 opts=Opts.new(threads=2, memory="4GB", time="2h"),
+                 sim_duration_s=60)
+        j1.prelude = [f"export PYTHONPATH={src}"]
+        id1 = j1.run(sim)
+        sim.run_until_idle()
+        assert sim.get(id1).state == "COMPLETED"
+        from repro.checkpoint import CheckpointManager
+
+        assert CheckpointManager(ckpt).latest_step() == 3
+
+        # "node died; Slurm requeues the job" → same command, full step count
+        j2 = Job(name="run2", command=train_cmd(6, log2),
+                 opts=Opts.new(threads=2, memory="4GB", time="2h"),
+                 sim_duration_s=60)
+        j2.prelude = [f"export PYTHONPATH={src}"]
+        id2 = j2.run(sim)
+        sim.run_until_idle()
+        assert sim.get(id2).state == "COMPLETED"
+        assert "resumed from step 3" in log2.read_text()
+        assert CheckpointManager(ckpt).latest_step() == 6
+
+    def test_train_pipeline_with_eval_step(self, tmp_path, monkeypatch):
+        """Pipeline: train → 'eval' (reads the checkpoint) via afterok."""
+        monkeypatch.setenv("NBI_TMPDIR", str(tmp_path / "scripts"))
+        sim = SimCluster(execute=True)
+        ckpt = tmp_path / "ckpt"
+        src = Path(__file__).resolve().parent.parent / "src"
+
+        train_cmd = (
+            f"{sys.executable} -m repro.launch.train --arch nbi-100m --smoke "
+            f"--steps 2 --global-batch 2 --seq 16 --ckpt-dir {ckpt} "
+            f"--ckpt-every 2 --log-every 2"
+        )
+        eval_cmd = f"test -d {ckpt}/step_000000002 && echo ok > {tmp_path}/eval.txt"
+        p = Pipeline("train-eval", backend=sim)
+        t = Job(name="train", command=train_cmd,
+                opts=Opts.new(threads=2, memory="4GB", time="1h"),
+                sim_duration_s=10)
+        t.prelude = [f"export PYTHONPATH={src}"]
+        p.add("train", t)
+        p.add("eval", Job(name="eval", command=eval_cmd,
+                          opts=Opts.new(threads=1, memory="1GB", time="1h"),
+                          sim_duration_s=5), after="train")
+        p.run()
+        sim.run_until_idle()
+        states = {j.name: j.state for j in sim.accounting()}
+        assert states == {"train": "COMPLETED", "eval": "COMPLETED"}
+        assert (tmp_path / "eval.txt").read_text().strip() == "ok"

@@ -1,0 +1,229 @@
+"""viewjobs TUI — the ViewModel state machine (no tty required).
+
+Covers every interaction in the paper's Figure 1 caption: scrolling (arrow
+and Vim keys), sorting, per-job details, column visibility/width, Space
+selection and bulk cancel."""
+
+from repro.cli.viewjobs import ViewModel
+from repro.core import QueuedJob
+
+
+def make_jobs(n=5):
+    return [
+        QueuedJob(jobid=str(100 + i), user=f"u{i % 2}", queue="main",
+                  name=f"job{i}", state="RUNNING" if i % 2 else "PENDING",
+                  time_left=f"0-0{i}:00:00", time_limit="1-00:00:00",
+                  nodelist=f"n{i:03d}", cpus="4", memory="4096")
+        for i in range(n)
+    ]
+
+
+def make_vm(jobs=None, cancelled=None):
+    jobs = jobs if jobs is not None else make_jobs()
+    state = {"jobs": list(jobs)}
+
+    def source():
+        return list(state["jobs"])
+
+    def cancel(ids):
+        (cancelled if cancelled is not None else []).extend(ids)
+        state["jobs"] = [j for j in state["jobs"] if j.jobid not in set(ids)]
+
+    vm = ViewModel(source, canceller=cancel)
+    vm._test_state = state
+    return vm
+
+
+class TestNavigation:
+    def test_vim_and_arrow_scrolling(self):
+        vm = make_vm()
+        assert vm.state.cursor == 0
+        vm.keys("jjj")
+        assert vm.state.cursor == 3
+        vm.key("k")
+        assert vm.state.cursor == 2
+        vm.key("UP")
+        assert vm.state.cursor == 1
+        vm.key("DOWN")
+        assert vm.state.cursor == 2
+        vm.key("G")
+        assert vm.state.cursor == 4
+        vm.key("g")
+        assert vm.state.cursor == 0
+
+    def test_cursor_clamped(self):
+        vm = make_vm(make_jobs(2))
+        vm.keys("jjjjj")
+        assert vm.state.cursor == 1
+
+    def test_scroll_follows_cursor(self):
+        vm = make_vm(make_jobs(50))
+        vm.state.height = 10
+        vm.key("G")
+        assert vm.state.scroll == 40
+        vm.key("g")
+        assert vm.state.scroll == 0
+
+
+class TestSorting:
+    def test_sort_by_column_and_reverse(self):
+        vm = make_vm()
+        # move column cursor to JobName and sort
+        vm.keys("lll")  # jobid → user → queue → name
+        vm.key("s")
+        assert vm.state.sort_key == "name"
+        names = [j.name for j in vm.state.rows]
+        assert names == sorted(names)
+        vm.key("s")  # same column again → toggle desc
+        assert vm.state.sort_desc
+        assert [j.name for j in vm.state.rows] == sorted(names, reverse=True)
+
+    def test_o_toggles_direction(self):
+        vm = make_vm()
+        ids = [j.jobid for j in vm.state.rows]
+        vm.key("o")
+        assert [j.jobid for j in vm.state.rows] == list(reversed(ids))
+
+
+class TestColumns:
+    def test_toggle_visibility(self):
+        vm = make_vm()
+        assert vm.state.visible["user"]
+        vm.key("l")  # col cursor → user
+        vm.key("v")
+        assert not vm.state.visible["user"]
+        header = vm.render()[0]
+        assert "User" not in header
+        vm.key("V")
+        assert vm.state.visible["user"]
+
+    def test_width_adjust(self):
+        vm = make_vm()
+        w0 = vm.state.widths["jobid"]
+        vm.key(">")
+        assert vm.state.widths["jobid"] == w0 + 2
+        vm.keys("<<")
+        assert vm.state.widths["jobid"] == w0 - 2
+
+    def test_cannot_hide_last_column(self):
+        vm = make_vm()
+        for _ in range(20):
+            vm.key("v")
+        assert sum(vm.state.visible.values()) == 1
+
+
+class TestSelectionAndCancel:
+    def test_space_selects_and_advances(self):
+        vm = make_vm()
+        vm.key(" ")
+        assert vm.state.selected == {"100"}
+        assert vm.state.cursor == 1
+        vm.key(" ")
+        assert vm.state.selected == {"100", "101"}
+
+    def test_space_toggles(self):
+        vm = make_vm()
+        vm.key(" ")
+        vm.key("k")  # back to row 0
+        vm.key(" ")
+        assert vm.state.selected == set()
+
+    def test_bulk_cancel_confirmed(self):
+        cancelled = []
+        vm = make_vm(cancelled=cancelled)
+        vm.keys("  ")  # select rows 0 and 1
+        vm.key("C")
+        assert vm.state.mode == "confirm"
+        vm.key("y")
+        assert sorted(cancelled) == ["100", "101"]
+        assert vm.state.mode == "list"
+        assert len(vm.state.rows) == 3  # refreshed after cancel
+        assert "cancelled 2 job(s)" in vm.render()[-2]
+
+    def test_cancel_aborted(self):
+        cancelled = []
+        vm = make_vm(cancelled=cancelled)
+        vm.key(" ")
+        vm.key("C")
+        vm.key("n")
+        assert cancelled == []
+        assert vm.state.selected == {"100"}  # selection kept on abort
+
+    def test_cancel_cursor_row_when_none_selected(self):
+        cancelled = []
+        vm = make_vm(cancelled=cancelled)
+        vm.key("j")
+        vm.key("C")
+        vm.key("y")
+        assert cancelled == ["101"]
+
+    def test_select_all_and_clear(self):
+        vm = make_vm()
+        vm.key("a")
+        assert len(vm.state.selected) == 5
+        vm.key("u")
+        assert vm.state.selected == set()
+
+
+class TestFilterAndDetails:
+    def test_filter_narrows_rows(self):
+        vm = make_vm()
+        vm.key("f")
+        for ch in "job3":
+            vm.key(ch)
+        vm.key("ENTER")
+        assert [j.name for j in vm.state.rows] == ["job3"]
+        vm.key("F")  # clear filter
+        assert len(vm.state.rows) == 5
+
+    def test_filter_escape_cancels(self):
+        vm = make_vm()
+        vm.key("f")
+        vm.key("x")
+        vm.key("ESC")
+        assert vm.state.filter_text == ""
+        assert len(vm.state.rows) == 5
+
+    def test_filter_backspace(self):
+        vm = make_vm()
+        vm.keys("f")
+        for ch in "ab":
+            vm.key(ch)
+        vm.key("BACKSPACE")
+        assert vm.state.filter_text == "a"
+
+    def test_details_view(self):
+        vm = make_vm()
+        vm.key("ENTER")
+        assert vm.state.mode == "details"
+        lines = "\n".join(vm.render())
+        assert "job 100" in lines and "Partition" in lines
+        vm.key("q")
+        assert vm.state.mode == "list"
+
+    def test_selection_survives_refresh(self):
+        vm = make_vm()
+        vm.key(" ")
+        vm.key("r")
+        assert vm.state.selected == {"100"}
+
+
+class TestRender:
+    def test_render_shows_all_rows_and_footer(self):
+        vm = make_vm()
+        lines = vm.render()
+        assert any("job0" in ln for ln in lines)
+        assert "5 job(s)" in lines[-2]
+        assert "q:quit" in lines[-1]
+
+    def test_render_marks_cursor_and_selection(self):
+        vm = make_vm()
+        vm.key(" ")  # select row0, cursor row1
+        lines = vm.render()
+        assert lines[1].startswith(" *")  # row0 selected
+        assert lines[2].startswith(">")  # row1 cursor
+
+    def test_quit(self):
+        vm = make_vm()
+        vm.key("q")
+        assert vm.state.quit
