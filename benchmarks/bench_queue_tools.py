@@ -13,7 +13,7 @@ from repro.cli.lsjobs import HEADERS, queue_rows
 from repro.cli.render import render_table
 from repro.cli.viewjobs import ViewModel
 from repro.cli.whojobs import utilisation_rows
-from repro.core import Job, Opts, Queue, SimCluster, SimNode
+from repro.core import Job, Opts, Queue, QueueCache, SimCluster, SimNode
 
 
 def big_sim(n_jobs: int = 2000) -> SimCluster:
@@ -25,6 +25,59 @@ def big_sim(n_jobs: int = 2000) -> SimCluster:
         jid = j.run(sim)
         sim.get(jid).user = f"user{i % 23}"
     return sim
+
+
+class _CountingBackend:
+    """Wraps a backend, counting real queue() polls."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.calls = 0
+
+    def queue(self):
+        self.calls += 1
+        return self.inner.queue()
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+
+def poll_dedup(sim: SimCluster, ticks: int = 10) -> dict:
+    """Monitoring tick: lsjobs + whojobs + a viewjobs refresh per tick.
+
+    Uncached, every tool re-polls the backend (3 polls/tick). A shared
+    QueueCache with a TTL longer than the tick collapses each tick to at
+    most one real poll.
+    """
+
+    def one_tick(backend):
+        q = Queue(backend=backend)
+        render_table(HEADERS, queue_rows(q), enabled=False)
+        render_table(["User", "Running", "Pending", "CPUs", "Mem(GB)", "Share"],
+                     utilisation_rows(Queue(backend=backend)), enabled=False)
+        ViewModel(lambda: list(Queue(backend=backend))).render()
+
+    raw = _CountingBackend(sim)
+    t0 = time.perf_counter()
+    for _ in range(ticks):
+        one_tick(raw)
+    t_raw = time.perf_counter() - t0
+
+    counted = _CountingBackend(sim)
+    cached = QueueCache(counted, ttl_s=3600.0)  # snapshot outlives the run
+    t0 = time.perf_counter()
+    for _ in range(ticks):
+        one_tick(cached)
+    t_cached = time.perf_counter() - t0
+
+    return {
+        "ticks": ticks,
+        "polls_uncached": raw.calls,
+        "polls_cached": counted.calls,
+        "poll_reduction": raw.calls / max(1, counted.calls),
+        "uncached_s": t_raw,
+        "cached_s": t_cached,
+    }
 
 
 def run() -> dict:
@@ -54,8 +107,11 @@ def run() -> dict:
                  utilisation_rows(q), enabled=False)
     t_who = time.perf_counter() - t0
 
+    dedup = poll_dedup(sim)
+
     out = {
         "queue_size": n,
+        "dedup": dedup,
         "lsjobs_render_ms": t_ls * 1e3,
         "viewjobs_refresh_ms": t_vm_init * 1e3,
         "viewjobs_interaction_ms": t_interact * 1e3,
@@ -68,4 +124,8 @@ def run() -> dict:
     print(f"  viewjobs interact:  {out['viewjobs_interaction_ms']:7.1f} ms "
           f"(scroll+sort+filter→{out['filtered_rows']} rows)")
     print(f"  whojobs aggregate:  {out['whojobs_ms']:7.1f} ms")
+    print(f"  queue-cache dedup:  {dedup['polls_uncached']} polls → "
+          f"{dedup['polls_cached']} over {dedup['ticks']} monitoring ticks "
+          f"({dedup['poll_reduction']:.0f}× fewer; "
+          f"{dedup['uncached_s'] * 1e3:.0f} ms → {dedup['cached_s'] * 1e3:.0f} ms)")
     return out

@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import time
 
-from repro.core import Job, Opts, SimCluster
+from repro.core import Job, Opts, SimCluster, SubmitEngine
 
 
 def boilerplate_reduction() -> dict:
@@ -57,11 +57,50 @@ def array_submission(n_files: int = 500) -> dict:
     return {"array_tasks": n_files, "submit_ms": dt * 1e3}
 
 
+def _homogeneous_jobs(n: int) -> list[Job]:
+    return [
+        Job(name=f"j{i}", command=f"process sample_{i}.fq",
+            opts=Opts.new(threads=2, memory="2GB", time="1h"),
+            sim_duration_s=60)
+        for i in range(n)
+    ]
+
+
+def engine_vs_loop(n: int = 1000) -> dict:
+    """Batch-vs-loop: SubmitEngine array coalescing against per-job run()."""
+    # baseline: N independent Job.run() calls (script write + submit each)
+    sim_loop = SimCluster()
+    loop_jobs = _homogeneous_jobs(n)
+    t0 = time.perf_counter()
+    for job in loop_jobs:
+        job.run(sim_loop)
+    t_loop = time.perf_counter() - t0
+
+    # engine: the same N jobs coalesced into one job array (one submission)
+    sim_engine = SimCluster()
+    engine_jobs = _homogeneous_jobs(n)
+    t0 = time.perf_counter()
+    result = SubmitEngine(sim_engine).submit_many(engine_jobs)
+    t_engine = time.perf_counter() - t0
+
+    assert result.sbatch_calls == 1 and len(result) == n
+    return {
+        "jobs": n,
+        "loop_s": t_loop,
+        "engine_s": t_engine,
+        "loop_jobs_per_s": n / t_loop,
+        "engine_jobs_per_s": n / t_engine,
+        "speedup": t_loop / t_engine,
+        "sbatch_calls": result.sbatch_calls,
+    }
+
+
 def run() -> dict:
     out = {
         "boilerplate": boilerplate_reduction(),
         "throughput": submission_throughput(),
         "array": array_submission(),
+        "engine": engine_vs_loop(),
     }
     b = out["boilerplate"]
     print(f"  boilerplate: {b['user_chars']} user chars → "
@@ -71,4 +110,10 @@ def run() -> dict:
     print(f"  submission: {out['throughput']['jobs_per_s']:.0f} jobs/s "
           f"({out['throughput']['mean_ms']:.2f} ms each)")
     print(f"  500-task array submit: {out['array']['submit_ms']:.1f} ms")
+    e = out["engine"]
+    print(f"  engine batch ({e['jobs']} homogeneous jobs): "
+          f"loop {e['loop_jobs_per_s']:.0f} jobs/s → "
+          f"engine {e['engine_jobs_per_s']:.0f} jobs/s "
+          f"({e['speedup']:.1f}× via array coalescing, "
+          f"{e['sbatch_calls']} submission)")
     return out

@@ -9,7 +9,7 @@ from __future__ import annotations
 import argparse
 import sys
 
-from repro.core import Queue, get_backend
+from repro.core import Queue, get_queue_cache
 from repro.cli.render import render_table, state_color
 
 HEADERS = ["JobID", "User", "Queue", "JobName", "State",
@@ -37,7 +37,7 @@ def main(argv=None) -> int:
     ap.add_argument("--no-color", action="store_true")
     args = ap.parse_args(argv)
 
-    backend = get_backend()
+    backend = get_queue_cache()  # shared TTL cache over squeue
     user = None if args.all else args.user
     if user is None and not args.all:
         import getpass

@@ -14,18 +14,24 @@ Bare ``-m`` is gigabytes and bare ``-t`` is hours (unit suffixes accepted:
 ``-m 500MB``, ``-t 2h30m``). Eco mode is ON by default (config key
 ``economy_mode``; override per-job with --eco/--no-eco): the EcoScheduler
 injects ``--begin=<next eco window>`` with no change to the command.
+
+Batch mode: ``--from-file cmds.txt`` reads one shell command per line and
+submits the whole batch through the SubmitEngine; adding ``--array`` folds
+the batch into a single SLURM job array (one sbatch call, ids ``base_k``).
 """
 
 from __future__ import annotations
 
 import argparse
 import sys
+from copy import deepcopy
 from datetime import datetime
 
 from repro.core import (
     EcoScheduler,
     Job,
     Opts,
+    SubmitEngine,
     get_backend,
     load_config,
     parse_memory_mb,
@@ -37,7 +43,7 @@ def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser(
         prog="runjob", description="Submit a command as a SLURM job."
     )
-    ap.add_argument("command", nargs="+", help="command to run (quote it)")
+    ap.add_argument("command", nargs="*", help="command to run (quote it)")
     ap.add_argument("-n", "--name", default="job")
     ap.add_argument("-c", "--cpus", type=int, default=1)
     ap.add_argument("-m", "--memory", default="1GB",
@@ -49,6 +55,10 @@ def build_parser() -> argparse.ArgumentParser:
                     help="directory for stdout/err logs")
     ap.add_argument("--files", default=None,
                     help="file list → job array; use #FILE# in the command")
+    ap.add_argument("--from-file", dest="from_file", default=None,
+                    help="read one command per line; submit them as a batch")
+    ap.add_argument("--array", action="store_true",
+                    help="coalesce the --from-file batch into one job array")
     ap.add_argument("--email", default="")
     ap.add_argument("--after", action="append", default=[],
                     help="job id this job depends on (afterok; repeatable)")
@@ -73,8 +83,24 @@ def memory_mb_from_cli(value) -> int:
     return parse_memory_mb(s)
 
 
+def read_command_file(path: str) -> list[str]:
+    """One command per line; blank lines and ``#`` comments skipped
+    (same list-file format as ``Job(files=...)``)."""
+    return Job._load_files(path)
+
+
 def main(argv=None) -> int:
-    args = build_parser().parse_args(argv)
+    ap = build_parser()
+    args = ap.parse_args(argv)
+    if not args.command and not args.from_file:
+        ap.error("a command (or --from-file) is required")
+    if args.command and args.from_file:
+        ap.error("give either a command or --from-file, not both")
+    if args.files and args.from_file:
+        ap.error("--files (one argument per task) and --from-file "
+                 "(one command per task) are mutually exclusive")
+    if args.array and not args.from_file:
+        ap.error("--array requires --from-file")
     cfg = load_config()
 
     opts = Opts(
@@ -106,6 +132,49 @@ def main(argv=None) -> int:
                 f"eco mode: deferred to {decision.begin_directive} "
                 f"(tier {decision.tier})"
             )
+
+    if args.from_file:
+        # --- batch mode: one job per command line, via the SubmitEngine
+        try:
+            commands = read_command_file(args.from_file)
+        except OSError as e:
+            print(f"cannot read {args.from_file}: {e.strerror or e}",
+                  file=sys.stderr)
+            return 1
+        if not commands:
+            print(f"no commands in {args.from_file}", file=sys.stderr)
+            return 1
+        jobs = [
+            Job(name=f"{args.name}-{i}", command=cmd, opts=deepcopy(opts))
+            for i, cmd in enumerate(commands)
+        ]
+        if args.array:
+            # one array job carries the whole batch → share one name
+            for job in jobs:
+                job.name = args.name
+        engine = SubmitEngine(get_backend(), coalesce=args.array)
+        if args.dry_run:
+            if args.array:
+                array_job = Job(name=args.name, opts=deepcopy(opts))
+                array_job.task_commands = commands
+                print(array_job.script(), end="")
+            else:
+                for job in jobs:
+                    print(job.script(), end="")
+            if eco_note:
+                print(f"# {eco_note}", file=sys.stderr)
+            return 0
+        result = engine.submit_many(jobs)
+        if eco_note:
+            print(eco_note)
+        for jid in result.ids:
+            print(jid)
+        if args.array:
+            print(
+                f"# {len(result)} task(s) in {result.sbatch_calls} submission(s)",
+                file=sys.stderr,
+            )
+        return 0
 
     command = " ".join(args.command)
     job = Job(

@@ -17,7 +17,7 @@ import argparse
 import time
 from dataclasses import dataclass, field
 
-from repro.core import Queue, QueuedJob, get_backend
+from repro.core import Queue, QueuedJob, get_queue_cache
 from repro.cli.render import COLORS, RESET, STATE_COLORS
 
 COLUMNS = [  # (key, header, default width, default visible)
@@ -352,7 +352,7 @@ def main(argv=None) -> int:
                     help="render one frame to stdout (no tty needed)")
     args = ap.parse_args(argv)
 
-    backend = get_backend()
+    backend = get_queue_cache()  # shared TTL cache: refresh ticks dedupe
     user = None
     if not args.all:
         user = args.user

@@ -15,7 +15,7 @@ from __future__ import annotations
 import argparse
 import time
 
-from repro.core import Queue, get_backend
+from repro.core import Queue, get_queue_cache
 from repro.core.simcluster import SimCluster
 
 
@@ -53,7 +53,8 @@ def wait_for(
             progress(len(left))
         if timeout_s and time.monotonic() - start > timeout_s:
             return False
-        if isinstance(backend, SimCluster):
+        # a QueueCache wrapper delegates advance() and invalidates on it
+        if isinstance(getattr(backend, "inner", backend), SimCluster):
             backend.advance(poll_s)  # simulated clock: tests run instantly
         else:
             time.sleep(poll_s)
@@ -69,7 +70,7 @@ def main(argv=None) -> int:
     ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args(argv)
 
-    backend = get_backend()
+    backend = get_queue_cache()  # dedupes squeue across the poll loop
     user = args.user
     if user is None and not args.ids and not args.name:
         import getpass

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import argparse
 
-from repro.core import Queue, get_backend
+from repro.core import Queue, get_queue_cache
 from repro.cli.render import render_table
 
 
@@ -51,7 +51,7 @@ def main(argv=None) -> int:
     ap.add_argument("--no-color", action="store_true")
     args = ap.parse_args(argv)
 
-    q = Queue(queue=args.partition, backend=get_backend())
+    q = Queue(queue=args.partition, backend=get_queue_cache())
     if not len(q):
         print("cluster is idle")
         return 0

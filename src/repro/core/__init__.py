@@ -13,9 +13,10 @@ Programmatic use mirrors the paper's Perl API::
     job2.run()
 """
 
-from .backend import SlurmBackend, get_backend, reset_shared_sim
+from .backend import BatchSubmitError, SlurmBackend, get_backend, reset_shared_sim
 from .config import NBIConfig, load_config, write_config
 from .eco import CarbonTrace, EcoDecision, EcoScheduler
+from .engine import BatchResult, QueueCache, SubmitEngine, get_queue_cache, reset_queue_cache
 from .job import FILE_PLACEHOLDER, Job
 from .launcher import InputSpec, Kraken2, Launcher, LauncherError, discover_launchers
 from .manifest import Manifest
@@ -25,6 +26,8 @@ from .resources import Opts, format_slurm_time, parse_memory_mb, parse_time_s
 from .simcluster import SimCluster, SimJob, SimNode
 
 __all__ = [
+    "BatchResult", "QueueCache", "SubmitEngine",
+    "get_queue_cache", "reset_queue_cache",
     "CarbonTrace", "EcoDecision", "EcoScheduler",
     "FILE_PLACEHOLDER", "Job", "Opts",
     "InputSpec", "Kraken2", "Launcher", "LauncherError", "discover_launchers",
@@ -32,6 +35,6 @@ __all__ = [
     "Queue", "QueuedJob",
     "NBIConfig", "load_config", "write_config",
     "SimCluster", "SimJob", "SimNode",
-    "SlurmBackend", "get_backend", "reset_shared_sim",
+    "BatchSubmitError", "SlurmBackend", "get_backend", "reset_shared_sim",
     "format_slurm_time", "parse_memory_mb", "parse_time_s",
 ]

@@ -20,6 +20,24 @@ from typing import Protocol, runtime_checkable
 from .queue import SQUEUE_FIELDS, SQUEUE_FORMAT
 
 
+class BatchSubmitError(RuntimeError):
+    """Some submissions in a batch failed.
+
+    ``ids`` maps input index → job id for the submissions that DID go
+    through (so callers can track or cancel them); ``errors`` maps input
+    index → exception for the ones that did not.
+    """
+
+    def __init__(self, ids: dict, errors: dict):
+        self.ids = ids
+        self.errors = errors
+        first = next(iter(errors.values()))
+        super().__init__(
+            f"{len(errors)} of {len(ids) + len(errors)} submissions failed "
+            f"(first: {first}); {len(ids)} job(s) already submitted"
+        )
+
+
 @runtime_checkable
 class Backend(Protocol):
     def submit(self, job) -> int:  # job: repro.core.job.Job (script written)
@@ -38,6 +56,10 @@ class Backend(Protocol):
 class SlurmBackend:
     """Real SLURM via subprocess. Used on clusters; never in unit tests."""
 
+    #: bounded worker pool for pipelined submissions (sbatch is I/O bound:
+    #: each call is a fork + a controller RPC round-trip)
+    max_workers: int = 8
+
     def submit(self, job) -> int:
         out = subprocess.run(
             ["sbatch", "--parsable", job.script_path],
@@ -46,6 +68,36 @@ class SlurmBackend:
             text=True,
         ).stdout.strip()
         return int(out.split(";")[0])
+
+    def submit_many(self, jobs: list) -> list[int]:
+        """Pipeline N ``sbatch`` calls through a bounded thread pool.
+
+        Returns job ids in input order. Serial below 2 jobs (no pool
+        overhead for the common single-submission path). If any sbatch
+        fails, raises :class:`BatchSubmitError` carrying the ids that DID
+        submit — they are live on the cluster and must not be lost.
+        """
+        jobs = list(jobs)
+        if len(jobs) < 2:
+            return [self.submit(j) for j in jobs]
+        from concurrent.futures import ThreadPoolExecutor
+
+        workers = min(self.max_workers, len(jobs))
+        ids: dict[int, int] = {}
+        errors: dict[int, Exception] = {}
+
+        def one(indexed):
+            i, job = indexed
+            try:
+                ids[i] = self.submit(job)
+            except Exception as e:  # noqa: BLE001 — collected, re-raised below
+                errors[i] = e
+
+        with ThreadPoolExecutor(max_workers=workers) as pool:
+            list(pool.map(one, enumerate(jobs)))
+        if errors:
+            raise BatchSubmitError(ids, errors)
+        return [ids[i] for i in range(len(jobs))]
 
     def queue(self) -> list[dict]:
         out = subprocess.run(
@@ -104,9 +156,12 @@ def get_backend(kind: str | None = None):
 
 
 def reset_shared_sim() -> None:
-    """Forget the shared simulator (test isolation)."""
+    """Forget the shared simulator and its queue cache (test isolation)."""
     global _SHARED_SIM
     _SHARED_SIM = None
+    from .engine import reset_queue_cache
+
+    reset_queue_cache()
 
 
 def _current_user() -> str:

@@ -116,9 +116,43 @@ class EcoScheduler:
         within the horizon (lowest-carbon candidate of that tier when a
         carbon trace is configured).
         """
+        return self._decide(duration_s, now)
+
+    def decide_many(self, durations_s: "list[int]", now: datetime) -> "list[EcoDecision]":
+        """Vectorized :meth:`next_window`: one decision per duration.
+
+        The absolute eco/peak windows over the horizon are computed once and
+        shared across the whole batch, so pricing N jobs costs one window
+        scan instead of N. Decisions are bit-identical to calling
+        ``next_window`` per job.
+        """
+        if not durations_s:
+            return []
+        earliest = now + timedelta(seconds=self.min_delay_s)
+        horizon = now + timedelta(days=self.horizon_days)
+        max_dur = max(max(durations_s), 1)
+        eco_windows = self._absolute_eco_windows(earliest, horizon)
+        peak_windows = self._absolute_peak_windows(
+            earliest, horizon + timedelta(seconds=max_dur)
+        )
+        return [
+            self._decide(d, now, eco_windows=eco_windows, peak_windows=peak_windows)
+            for d in durations_s
+        ]
+
+    def _decide(
+        self,
+        duration_s: int,
+        now: datetime,
+        *,
+        eco_windows=None,
+        peak_windows=None,
+    ) -> EcoDecision:
         if duration_s <= 0:
             raise ValueError("duration must be positive")
-        candidates = self._candidates(duration_s, now)
+        candidates = self._candidates(
+            duration_s, now, eco_windows=eco_windows, peak_windows=peak_windows
+        )
         if not candidates:
             # No eco windows configured / none in horizon → do not defer.
             return EcoDecision(
@@ -202,20 +236,31 @@ class EcoScheduler:
         out.sort()
         return out
 
-    def _candidates(self, duration_s: int, now: datetime) -> list[_Candidate]:
+    def _candidates(
+        self,
+        duration_s: int,
+        now: datetime,
+        *,
+        eco_windows=None,
+        peak_windows=None,
+    ) -> list[_Candidate]:
         earliest = now + timedelta(seconds=self.min_delay_s)
         horizon = now + timedelta(days=self.horizon_days)
         dur = timedelta(seconds=duration_s)
+        if eco_windows is None:
+            eco_windows = self._absolute_eco_windows(earliest, horizon)
         cands: list[_Candidate] = []
-        for ws, we in self._absolute_eco_windows(earliest, horizon):
+        for ws, we in eco_windows:
             start = max(ws, earliest)
             if start >= we:
                 continue  # window already over by the time we may start
             end = start + dur
-            overlaps_peak = any(
-                ps < end and start < pe
-                for ps, pe in self._absolute_peak_windows(start, end)
+            peaks = (
+                peak_windows
+                if peak_windows is not None
+                else self._absolute_peak_windows(start, end)
             )
+            overlaps_peak = any(ps < end and start < pe for ps, pe in peaks)
             fits_window = end <= we
             if fits_window and not overlaps_peak:
                 tier = 1

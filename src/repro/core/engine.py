@@ -1,0 +1,409 @@
+"""``SubmitEngine`` — batch submission with job-array coalescing.
+
+Every ``Job.run()`` is one synchronous ``sbatch`` fork; submitting a
+thousand-job sweep that way costs a thousand subprocess round-trips and a
+thousand scheduler insertions. The engine takes N jobs at once and:
+
+* **coalesces** homogeneous jobs — same resources/partition, differing only
+  in their command — into a single SLURM job array (one ``sbatch`` call,
+  one generated script, per-task command dispatch via
+  ``SLURM_ARRAY_TASK_ID``);
+* **pipelines** whatever cannot be coalesced through the backend's
+  ``submit_many`` (a bounded thread pool on the real ``SlurmBackend``);
+* prices eco deferral for the whole batch with one
+  :meth:`~repro.core.eco.EcoScheduler.decide_many` window scan instead of
+  N independent scans.
+
+:class:`QueueCache` is the companion read-side optimisation: a TTL cache
+over ``backend.queue()`` shared by the queue tools (lsjobs / viewjobs /
+whojobs / waitjobs) and the engine's completion tracking, with explicit
+invalidation on submit/cancel so tools never act on a stale snapshot of
+their own mutations.
+"""
+
+from __future__ import annotations
+
+import time as _time
+from dataclasses import dataclass, field
+from datetime import datetime
+
+from .job import Job
+from .queue import SQUEUE_FIELDS  # noqa: F401  (re-exported schema for callers)
+
+
+# ---------------------------------------------------------------------------
+# QueueCache
+# ---------------------------------------------------------------------------
+
+#: inner-backend methods that mutate simulated/real cluster state; calls are
+#: forwarded and the cached snapshot is dropped afterwards.
+_MUTATORS = ("advance", "run_until_idle", "fail_node", "restore_node")
+
+
+class QueueCache:
+    """TTL cache over a backend's ``queue()`` (Backend-protocol compatible).
+
+    Wraps any backend (``SlurmBackend`` or ``SimCluster``) and serves
+    repeated ``queue()`` calls from a snapshot for ``ttl_s`` seconds.
+    ``submit``/``cancel`` are forwarded and invalidate the snapshot, as do
+    the simulator's clock/state mutators, so a caller can never observe the
+    queue missing its own just-submitted job.
+
+    ``clock`` is injectable for deterministic tests (defaults to
+    ``time.monotonic``).
+    """
+
+    def __init__(self, backend, ttl_s: float = 2.0, clock=_time.monotonic):
+        self.inner = backend
+        self.ttl_s = float(ttl_s)
+        self._clock = clock
+        self._rows: list[dict] | None = None
+        self._fetched_at: float = 0.0
+        # observability (the queue-tools benchmark reports these)
+        self.polls = 0  # real backend.queue() calls
+        self.hits = 0  # calls served from the snapshot
+
+    # -- Backend protocol -----------------------------------------------------
+
+    def queue(self) -> list[dict]:
+        now = self._clock()
+        if self._rows is not None and now - self._fetched_at < self.ttl_s:
+            self.hits += 1
+            return self._rows
+        self._rows = self.inner.queue()
+        self._fetched_at = now
+        self.polls += 1
+        return self._rows
+
+    def submit(self, job) -> int:
+        jobid = self.inner.submit(job)
+        self.invalidate()
+        return jobid
+
+    def submit_many(self, jobs) -> list[int]:
+        inner_many = getattr(self.inner, "submit_many", None)
+        ids = inner_many(jobs) if inner_many else [self.inner.submit(j) for j in jobs]
+        self.invalidate()
+        return ids
+
+    def cancel(self, jobids: list) -> None:
+        self.inner.cancel(jobids)
+        self.invalidate()
+
+    def nodes_info(self) -> list[dict]:
+        return self.inner.nodes_info()
+
+    # -- cache control ---------------------------------------------------------
+
+    def invalidate(self) -> None:
+        """Drop the snapshot; the next ``queue()`` re-polls the backend."""
+        self._rows = None
+
+    def __getattr__(self, name):
+        # Delegate simulator conveniences (get, accounting, jobs, now, ...);
+        # state mutators additionally invalidate the snapshot.
+        attr = getattr(self.inner, name)
+        if name in _MUTATORS:
+            def wrapped(*a, **kw):
+                out = attr(*a, **kw)
+                self.invalidate()
+                return out
+
+            return wrapped
+        return attr
+
+
+_SHARED_CACHE: QueueCache | None = None
+
+
+def get_queue_cache(backend=None, ttl_s: float | None = None) -> QueueCache:
+    """Process-wide shared cache so every tool dedupes against one snapshot.
+
+    A fresh wrapper is built when the resolved backend changes (e.g. a test
+    reset the shared simulator). TTL: ``$REPRO_QUEUE_TTL`` seconds, default 2.
+    """
+    global _SHARED_CACHE
+    import os
+
+    from .backend import get_backend
+
+    inner = backend if backend is not None else get_backend()
+    if isinstance(inner, QueueCache):
+        return inner
+    if ttl_s is None:
+        ttl_s = float(os.environ.get("REPRO_QUEUE_TTL", "2.0"))
+    if _SHARED_CACHE is None or _SHARED_CACHE.inner is not inner:
+        _SHARED_CACHE = QueueCache(inner, ttl_s=ttl_s)
+    else:
+        _SHARED_CACHE.ttl_s = float(ttl_s)
+    return _SHARED_CACHE
+
+
+def reset_queue_cache() -> None:
+    """Forget the shared cache (test isolation)."""
+    global _SHARED_CACHE
+    _SHARED_CACHE = None
+
+
+def _invalidate_shared_for(backend) -> None:
+    """Invalidate the shared snapshot if it fronts this backend — a writer
+    going straight to the backend must not leave stale shared reads."""
+    if _SHARED_CACHE is None:
+        return
+    inner = backend.inner if isinstance(backend, QueueCache) else backend
+    if _SHARED_CACHE.inner is inner:
+        _SHARED_CACHE.invalidate()
+
+
+# ---------------------------------------------------------------------------
+# SubmitEngine
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class BatchResult:
+    """Outcome of one :meth:`SubmitEngine.submit_many` call."""
+
+    ids: list[str] = field(default_factory=list)  # per input job, "123" or "123_7"
+    base_ids: list[int] = field(default_factory=list)  # unique sbatch-level ids
+    sbatch_calls: int = 0  # submissions actually issued
+    coalesced: int = 0  # input jobs folded into arrays
+    eco_deferred: int = 0  # submissions given a --begin directive
+
+    def __len__(self) -> int:
+        return len(self.ids)
+
+
+def _coalesce_key(job: Job):
+    """Grouping key: jobs sharing it differ only in their single command.
+
+    ``None`` marks a job that must be submitted on its own (multi-command
+    bodies, explicit file arrays, pre-set array sizes, per-job preludes).
+    """
+    if len(job.commands) != 1 or job.files or job.opts.array_size:
+        return None
+    if job.prelude or job.trailer or getattr(job, "task_commands", None):
+        return None
+    o = job.opts
+    return (
+        job.workdir,
+        job.sim_duration_s,
+        o.queue, o.threads, o.memory_mb, o.time_s,
+        o.email_address, o.email_type, o.tmpdir, o.output_dir,
+        o.begin, o.array_throttle,
+        tuple(str(d) for d in o.dependencies), o.dependency_type,
+        o.nodes, o.ntasks, o.gres, o.account, o.requeue,
+        tuple(o.extra),
+    )
+
+
+class SubmitEngine:
+    """Submit N jobs at scale: coalesce, batch, defer, track.
+
+    Parameters
+    ----------
+    backend:
+        Any Backend-protocol object; default resolves via ``get_backend()``.
+    coalesce:
+        Fold homogeneous single-command jobs into SLURM job arrays
+        (``min_array_size`` controls the smallest group worth folding).
+    eco:
+        ``True`` → price the whole batch through one
+        ``EcoScheduler.decide_many`` scan and inject ``--begin``.
+        Default ``False``: callers like runjob decide per-job policy
+        themselves before handing jobs over.
+    now:
+        Injectable clock for deterministic eco decisions.
+    """
+
+    def __init__(
+        self,
+        backend=None,
+        *,
+        coalesce: bool = True,
+        min_array_size: int = 2,
+        eco: bool = False,
+        scheduler=None,
+        now: datetime | None = None,
+        cache: QueueCache | None = None,
+    ):
+        if backend is None:
+            from .backend import get_backend
+
+            backend = get_backend()
+        self.backend = backend
+        self.coalesce = coalesce
+        self.min_array_size = max(2, int(min_array_size))
+        self.eco = eco
+        self.scheduler = scheduler
+        self.now = now
+        self.cache = cache
+
+    # -- submission -----------------------------------------------------------
+
+    def submit_many(self, jobs: "list[Job]") -> BatchResult:
+        """Submit every job; returns per-job ids in input order."""
+        jobs = list(jobs)
+        result = BatchResult(ids=[""] * len(jobs))
+
+        # 1. partition into coalescible groups and singletons
+        groups: dict[object, list[int]] = {}
+        singles: list[int] = []
+        if self.coalesce:
+            for i, job in enumerate(jobs):
+                key = _coalesce_key(job)
+                if key is None:
+                    singles.append(i)
+                else:
+                    groups.setdefault(key, []).append(i)
+            for key, members in list(groups.items()):
+                if len(members) < self.min_array_size:
+                    singles.extend(members)
+                    del groups[key]
+            singles.sort()
+        else:
+            singles = list(range(len(jobs)))
+
+        # 2. materialise one array Job per group
+        units: list[tuple[Job, list[int]]] = []  # (submission unit, member idxs)
+        for members in groups.values():
+            first = jobs[members[0]]
+            array_job = Job(
+                # per-job names collapse to one array-level name; tasks stay
+                # addressable by index (base_k), not by their original name
+                name=_array_name([jobs[i].name for i in members]),
+                opts=_clone_opts(first.opts),
+                workdir=first.workdir,
+                sim_duration_s=first.sim_duration_s,
+            )
+            array_job.task_commands = [jobs[i].commands[0] for i in members]
+            units.append((array_job, members))
+            result.coalesced += len(members)
+        for i in singles:
+            units.append((jobs[i], [i]))
+
+        # 3. eco: one window scan prices the whole batch
+        if self.eco:
+            sched = self.scheduler
+            if sched is None:
+                from .eco import EcoScheduler
+
+                sched = EcoScheduler()
+            clock = self.now or datetime.now()
+            pending = [(u, m) for u, m in units if not u.opts.begin]
+            decisions = sched.decide_many([u.opts.time_s for u, _ in pending], clock)
+            for (unit, _), dec in zip(pending, decisions):
+                if dec.deferred:
+                    unit.opts.set_begin(dec.begin_directive)
+                    result.eco_deferred += 1
+
+        # 4. write scripts, then pipeline the actual submissions
+        prepared = [unit.prepare() for unit, _ in units]
+        submit_many = getattr(self.backend, "submit_many", None)
+        if submit_many is not None:
+            base_ids = submit_many(prepared)
+        else:
+            base_ids = [self.backend.submit(u) for u in prepared]
+        if self.cache is not None:
+            self.cache.invalidate()
+        _invalidate_shared_for(self.backend)
+
+        # 5. map ids back onto the input jobs
+        for (unit, members), base in zip(units, base_ids):
+            unit.jobid = base
+            if len(members) > 1 or unit is not jobs[members[0]]:
+                for task, i in enumerate(members):
+                    jobs[i].jobid = base
+                    jobs[i].script_path = unit.script_path
+                    result.ids[i] = f"{base}_{task}"
+            else:
+                result.ids[members[0]] = str(base)
+        result.base_ids = list(base_ids)
+        result.sbatch_calls = len(units)
+        return result
+
+    # -- completion tracking ---------------------------------------------------
+
+    def states(self, result: BatchResult) -> dict[str, str]:
+        """One cached poll → state per submitted id (gone ⇒ ``COMPLETED``)."""
+        be = self.cache if self.cache is not None else self.backend
+        live: dict[str, str] = {}
+        compressed: list[tuple[int, set, str]] = []  # pending "123_[0-9%4]" rows
+        for r in be.queue():
+            jid, state = r["jobid"], r["state"]
+            live[jid] = state
+            parsed = _parse_array_spec(jid)
+            if parsed is not None:
+                compressed.append((*parsed, state))
+        out: dict[str, str] = {}
+        for jid in result.ids:
+            state = live.get(jid) or live.get(jid.split("_")[0])
+            if state is None:
+                state = _compressed_state(jid, compressed) or "COMPLETED"
+            out[jid] = state
+        return out
+
+    def pending(self, result: BatchResult) -> list[str]:
+        """Ids from this batch still visible in the queue."""
+        from .queue import ACTIVE_STATES
+
+        return [j for j, s in self.states(result).items() if s in ACTIVE_STATES]
+
+
+def _clone_opts(opts):
+    from copy import deepcopy
+
+    return deepcopy(opts)
+
+
+def _array_name(names: "list[str]") -> str:
+    """Display name for a coalesced array: the shared name if uniform, else
+    the common stem of the members (``j0..j999`` → ``j``), else ``batch``."""
+    uniq = set(names)
+    if len(uniq) == 1:
+        return names[0]
+    import os.path
+
+    stem = os.path.commonprefix(names).rstrip("0123456789").rstrip("-_.")
+    return stem or "batch"
+
+
+_ARRAY_SPEC_RE = None
+
+
+def _parse_array_spec(jobid: str):
+    """Parse squeue's compressed pending-array id ``123_[0-4,7%2]``.
+
+    Real SLURM reports a pending array as ONE row in this form (tasks only
+    get their own ``123_k`` rows once running); the simulator always emits
+    expanded rows. Returns ``(base, {task, ...})`` or None.
+    """
+    global _ARRAY_SPEC_RE
+    import re
+
+    if _ARRAY_SPEC_RE is None:
+        _ARRAY_SPEC_RE = re.compile(r"^(\d+)_\[([0-9,\-]+)(?:%\d+)?\]$")
+    m = _ARRAY_SPEC_RE.match(jobid)
+    if not m:
+        return None
+    tasks: set[int] = set()
+    for part in m.group(2).split(","):
+        if "-" in part:
+            lo, hi = part.split("-")
+            tasks.update(range(int(lo), int(hi) + 1))
+        elif part:
+            tasks.add(int(part))
+    return int(m.group(1)), tasks
+
+
+def _compressed_state(jid: str, compressed) -> "str | None":
+    if "_" not in jid:
+        return None
+    base_s, _, task_s = jid.partition("_")
+    if not (base_s.isdigit() and task_s.isdigit()):
+        return None
+    base, task = int(base_s), int(task_s)
+    for cbase, tasks, state in compressed:
+        if cbase == base and task in tasks:
+            return state
+    return None

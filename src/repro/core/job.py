@@ -51,6 +51,9 @@ class Job:
         self.script_path: str | None = None
         # Simulator hint: how long this job "runs" in simulated time.
         self.sim_duration_s = sim_duration_s
+        # Coalesced-array mode (set by SubmitEngine): one command per array
+        # task, dispatched on SLURM_ARRAY_TASK_ID.
+        self.task_commands: list[str] | None = None
         # Optional lines injected before the commands (module loads, env).
         self.prelude: list[str] = []
         # Optional lines injected after the commands (manifest patching).
@@ -86,10 +89,12 @@ class Job:
 
     def script(self) -> str:
         """Generate the complete sbatch script for this job."""
-        if not self.commands:
+        if not self.commands and not self.task_commands:
             raise ValueError(f"job {self.name!r} has no command")
         opts = self.opts
-        if self.files:
+        if self.task_commands:
+            opts.array_size = len(self.task_commands)
+        elif self.files:
             opts.array_size = len(self.files)
         lines = ["#!/bin/bash"]
         lines += opts.sbatch_directives(self.name)
@@ -97,7 +102,12 @@ class Job:
         if self.workdir:
             lines.append(f"cd {_shquote(self.workdir)}")
         lines += self.prelude
-        if self.files:
+        if self.task_commands:
+            # Coalesced array: task k runs the k-th command verbatim.
+            listing = " ".join(_shquote(c) for c in self.task_commands)
+            lines.append(f"NBI_TASKS=({listing})")
+            lines.append('eval "${NBI_TASKS[$SLURM_ARRAY_TASK_ID]}"')
+        elif self.files:
             listing = " ".join(_shquote(f) for f in self.files)
             lines.append(f"NBI_FILES=({listing})")
             lines.append('FILE="${NBI_FILES[$SLURM_ARRAY_TASK_ID]}"')
@@ -110,6 +120,12 @@ class Job:
 
     # -- submission ------------------------------------------------------------
 
+    def prepare(self) -> "Job":
+        """Generate and write the sbatch script (idempotent prerequisite of
+        ``submit``; the SubmitEngine calls this before pipelining)."""
+        self.script_path = self._write_script(self.script())
+        return self
+
     def run(self, backend=None) -> int:
         """Submit the job; returns the SLURM job id."""
         be = backend or self.backend
@@ -117,8 +133,7 @@ class Job:
             from .backend import get_backend
 
             be = get_backend()
-        script_text = self.script()
-        self.script_path = self._write_script(script_text)
+        self.prepare()
         self.jobid = be.submit(self)
         return self.jobid
 

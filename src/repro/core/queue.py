@@ -46,6 +46,12 @@ class QueuedJob:
         m = re.match(r"^(\d+)", self.jobid)
         return int(m.group(1)) if m else -1
 
+    @property
+    def array_task(self) -> "int | None":
+        """Array task index (``123_4`` → 4); None for plain jobs."""
+        m = re.match(r"^\d+_(\d+)$", self.jobid)
+        return int(m.group(1)) if m else None
+
     def is_active(self) -> bool:
         return self.state in ACTIVE_STATES
 
@@ -109,6 +115,20 @@ class Queue:
 
     def ids(self) -> list[str]:
         return [j.jobid for j in self.jobs]
+
+    def base_ids(self) -> list[int]:
+        """Unique sbatch-level ids, array tasks collapsed (order preserved)."""
+        seen: dict[int, None] = {}
+        for j in self.jobs:
+            seen.setdefault(j.jobid_num)
+        return list(seen)
+
+    def by_array(self) -> dict[int, list[QueuedJob]]:
+        """Group rows by base id (an N-task array → one entry of N rows)."""
+        out: dict[int, list[QueuedJob]] = {}
+        for j in self.jobs:
+            out.setdefault(j.jobid_num, []).append(j)
+        return out
 
     def by_user(self) -> dict[str, list[QueuedJob]]:
         out: dict[str, list[QueuedJob]] = {}

@@ -88,6 +88,7 @@ class SimCluster:
         self.execute = execute
         self.jobs: dict[str, SimJob] = {}
         self._next_id = 1000001
+        self._defer_schedule = False
         self._failures: list[tuple[datetime, str]] = []  # scheduled node failures
         self.events_log: list[tuple[datetime, str]] = []
 
@@ -127,6 +128,23 @@ class SimCluster:
         self._log(f"submit {base} name={job.name} tasks={n_tasks}")
         self._try_schedule()
         return base
+
+    def submit_many(self, jobs: list) -> list[int]:
+        """Batched submit: insert every job, then one scheduling pass.
+
+        The per-submit scheduling sweep is O(pending × nodes); deferring it
+        turns an N-job batch from O(N²) into O(N) without changing the
+        resulting schedule (FIFO order is preserved).
+        """
+        ids = []
+        self._defer_schedule = True
+        try:
+            for job in jobs:
+                ids.append(self.submit(job))
+        finally:
+            self._defer_schedule = False
+        self._try_schedule()
+        return ids
 
     # ------------------------------------------------------------------ queries
 
@@ -347,6 +365,8 @@ class SimCluster:
         return "ok"
 
     def _try_schedule(self) -> None:
+        if self._defer_schedule:
+            return
         pending = sorted(
             (j for j in self.jobs.values() if j.state == "PENDING"),
             key=lambda j: (j.base_id, j.array_task_id or 0),

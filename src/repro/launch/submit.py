@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import math
 
+from repro.core.engine import BatchResult, SubmitEngine
 from repro.core.launcher import InputSpec, Launcher
 from repro.core.resources import Opts
 
@@ -30,6 +31,34 @@ HEADROOM = 1.4  # the paper's 40%
 FIXED_OVERHEAD_GB = 100  # the paper's fixed overhead, host-side
 
 _OPT_BYTES = {"adamw": 8, "adamw8bit": 4, "lion": 4}
+
+
+def submit_batch(
+    items: list,
+    *,
+    backend=None,
+    coalesce: bool = True,
+    eco: bool = False,
+    now=None,
+) -> BatchResult:
+    """Submit a mixed list of ``Job`` / ``Launcher`` items at scale.
+
+    Launchers are materialised via ``to_job()`` (manifests are written with
+    their real submitted ids afterwards); everything is routed through one
+    :class:`~repro.core.engine.SubmitEngine` call. Plain homogeneous Jobs —
+    e.g. a parameter sweep sharing one resource shape — collapse into a
+    single SLURM job array; launcher jobs carry per-job manifest preludes
+    and instead ride the backend's pipelined ``submit_many``.
+    """
+    jobs = [it.to_job() if isinstance(it, Launcher) else it for it in items]
+    engine = SubmitEngine(backend, coalesce=coalesce, eco=eco, now=now)
+    result = engine.submit_many(jobs)
+    for job, jid in zip(jobs, result.ids):
+        manifest = getattr(job, "_manifest", None)
+        if manifest is not None:
+            manifest.record["resources"]["begin"] = job.opts.begin
+            manifest.write_submitted(jid)
+    return result
 
 
 def train_memory_model(param_count: int, optimizer: str = "adamw") -> dict:

@@ -15,7 +15,10 @@ invariants for arbitrary window configurations, durations and clock times:
 
 from datetime import datetime, timedelta
 
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+given, settings, st = hypothesis.given, hypothesis.settings, hypothesis.strategies
 
 from repro.core import EcoScheduler
 

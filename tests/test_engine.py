@@ -1,0 +1,346 @@
+"""SubmitEngine / QueueCache — batch submission at scale (tentpole PR).
+
+Covers the acceptance surface: array coalescing round-trips through the
+simulator (each task runs *its own* command), QueueCache TTL/invalidation
+semantics, and ``decide_many`` equivalence with per-job EcoScheduler calls.
+"""
+
+from datetime import datetime
+
+import pytest
+
+from repro.core import (
+    CarbonTrace,
+    EcoScheduler,
+    Job,
+    Opts,
+    Queue,
+    QueueCache,
+    SimCluster,
+    SubmitEngine,
+    get_queue_cache,
+)
+from repro.core.config import NBIConfig
+
+
+def homogeneous(n, command="true", **opt_kw):
+    kw = dict(threads=1, memory="1GB", time="1h")
+    kw.update(opt_kw)
+    return [
+        Job(name=f"j{i}", command=command.replace("{i}", str(i)),
+            opts=Opts.new(**kw), sim_duration_s=30)
+        for i in range(n)
+    ]
+
+
+class TestCoalescing:
+    def test_homogeneous_jobs_fold_into_one_array(self, sim):
+        result = SubmitEngine(sim).submit_many(homogeneous(5))
+        assert result.sbatch_calls == 1
+        assert result.coalesced == 5
+        assert result.ids == [f"{result.base_ids[0]}_{k}" for k in range(5)]
+        q = Queue(backend=sim)
+        assert len(q) == 5
+        assert q.base_ids() == result.base_ids
+        assert sorted(j.array_task for j in q) == list(range(5))
+
+    def test_array_tasks_run_their_own_command(self, exec_sim, tmp_path):
+        jobs = homogeneous(4, command=f"echo {{i}} > {tmp_path}/out_{{i}}")
+        result = SubmitEngine(exec_sim).submit_many(jobs)
+        assert result.sbatch_calls == 1
+        exec_sim.run_until_idle()
+        for i in range(4):
+            assert (tmp_path / f"out_{i}").read_text().strip() == str(i)
+        engine = SubmitEngine(exec_sim)
+        assert set(engine.states(result).values()) == {"COMPLETED"}
+
+    def test_heterogeneous_resources_not_coalesced(self, sim):
+        jobs = homogeneous(2) + homogeneous(2, threads=8)
+        result = SubmitEngine(sim).submit_many(jobs)
+        assert result.sbatch_calls == 2
+        assert result.coalesced == 4
+
+    def test_singletons_submitted_individually(self, sim):
+        jobs = homogeneous(1) + homogeneous(1, threads=8)
+        result = SubmitEngine(sim).submit_many(jobs)
+        assert result.sbatch_calls == 2
+        assert result.coalesced == 0
+        assert all("_" not in jid for jid in result.ids)
+
+    def test_multi_command_and_file_array_jobs_excluded(self, sim):
+        multi = Job(name="m", command=["a", "b"], opts=Opts.new())
+        files = Job(name="f", command="x #FILE#", opts=Opts.new(),
+                    files=["1", "2"])
+        result = SubmitEngine(sim).submit_many(homogeneous(3) + [multi, files])
+        assert result.coalesced == 3
+        assert result.sbatch_calls == 3  # 1 array + 2 individual
+
+    def test_coalesce_off_preserves_per_job_submissions(self, sim):
+        result = SubmitEngine(sim, coalesce=False).submit_many(homogeneous(4))
+        assert result.sbatch_calls == 4
+        assert result.coalesced == 0
+
+    def test_ids_map_back_to_input_jobs(self, sim):
+        jobs = homogeneous(3)
+        result = SubmitEngine(sim).submit_many(jobs)
+        base = result.base_ids[0]
+        assert [j.jobid for j in jobs] == [base] * 3
+        assert all(j.script_path for j in jobs)
+
+    def test_eco_batch_prices_once_and_defers(self, sim):
+        now = datetime(2026, 7, 28, 14, 0)  # Tuesday afternoon
+        sched = EcoScheduler(NBIConfig())
+        engine = SubmitEngine(sim, eco=True, scheduler=sched, now=now)
+        result = engine.submit_many(homogeneous(4))
+        assert result.eco_deferred == 1  # one coalesced unit, one directive
+        expected = sched.next_window(3600, now).begin_directive
+        job = sim.get(result.base_ids[0])
+        assert job.begin == datetime.fromisoformat(expected)
+
+
+class TestSubmitMany:
+    def test_backend_submit_many_used_and_order_preserved(self):
+        class FakeBackend:
+            def __init__(self):
+                self.batches = []
+                self._next = 100
+
+            def submit(self, job):  # pragma: no cover - bypassed
+                raise AssertionError("submit_many should be preferred")
+
+            def submit_many(self, jobs):
+                self.batches.append(list(jobs))
+                ids = list(range(self._next, self._next + len(jobs)))
+                self._next += len(jobs)
+                return ids
+
+            def queue(self):
+                return []
+
+        be = FakeBackend()
+        jobs = homogeneous(2, threads=1) + homogeneous(2, threads=4)
+        result = SubmitEngine(be).submit_many(jobs)
+        assert len(be.batches) == 1 and len(be.batches[0]) == 2
+        assert result.base_ids == [100, 101]
+
+    def test_sim_submit_many_matches_sequential_schedule(self):
+        a, b = SimCluster(), SimCluster()
+        for job in homogeneous(6, threads=2):
+            job.prepare()
+            a.submit(job)
+        b.submit_many([j.prepare() for j in homogeneous(6, threads=2)])
+        sa = sorted((j.jobid, j.state, j.node) for j in a.jobs.values())
+        sb = sorted((j.jobid, j.state, j.node) for j in b.jobs.values())
+        assert sa == sb
+
+
+class TestStatesParsing:
+    def test_compressed_pending_array_row(self, sim):
+        # real SLURM reports a PENDING array as one '123_[spec]' row
+        class FakeSlurmQueue:
+            def queue(self):
+                return [
+                    {"jobid": "123_[0-2,5%2]", "state": "PENDING"},
+                    {"jobid": "123_3", "state": "RUNNING"},
+                ]
+
+        from repro.core import BatchResult
+
+        engine = SubmitEngine(FakeSlurmQueue())
+        result = BatchResult(ids=["123_0", "123_2", "123_3", "123_4", "123_5"])
+        states = engine.states(result)
+        assert states["123_0"] == "PENDING"
+        assert states["123_2"] == "PENDING"
+        assert states["123_3"] == "RUNNING"
+        assert states["123_4"] == "COMPLETED"  # not in spec → left the queue
+        assert states["123_5"] == "PENDING"
+
+    def test_array_name_collapses_to_common_stem(self, sim):
+        jobs = homogeneous(4)  # named j0..j3
+        result = SubmitEngine(sim).submit_many(jobs)
+        assert result.sbatch_calls == 1
+        assert {j.name for j in Queue(backend=sim)} == {"j"}
+
+
+class TestBatchSubmitError:
+    def test_partial_failure_reports_submitted_ids(self):
+        from repro.core import BatchSubmitError, SlurmBackend
+
+        class FlakyBackend(SlurmBackend):
+            def __init__(self):
+                self.n = 0
+
+            def submit(self, job):
+                if job.name == "bad":
+                    raise RuntimeError("sbatch: QOSMaxSubmitJobPerUserLimit")
+                self.n += 1
+                return 500 + self.n
+
+        jobs = homogeneous(3)
+        jobs[1].name = "bad"
+        with pytest.raises(BatchSubmitError) as exc:
+            FlakyBackend().submit_many([j.prepare() for j in jobs])
+        assert sorted(exc.value.ids.values()) == [501, 502]
+        assert list(exc.value.errors) == [1]
+
+
+class TestQueueCache:
+    def fake_clock(self):
+        t = [0.0]
+
+        def clock():
+            return t[0]
+
+        return t, clock
+
+    def test_ttl_serves_snapshot_then_expires(self, sim):
+        t, clock = self.fake_clock()
+        cache = QueueCache(sim, ttl_s=2.0, clock=clock)
+        SubmitEngine(sim).submit_many(homogeneous(3))
+        cache.queue(); cache.queue()
+        assert (cache.polls, cache.hits) == (1, 1)
+        t[0] += 1.9
+        cache.queue()
+        assert (cache.polls, cache.hits) == (1, 2)
+        t[0] += 0.2  # past the TTL
+        cache.queue()
+        assert (cache.polls, cache.hits) == (2, 2)
+
+    def test_submit_and_cancel_invalidate(self, sim):
+        cache = QueueCache(sim, ttl_s=3600.0)
+        assert cache.queue() == []
+        jid = Job(name="a", command="true", opts=Opts.new(),
+                  sim_duration_s=30).run(cache)
+        assert len(cache.queue()) == 1  # fresh poll sees the new job
+        cache.cancel([jid])
+        assert cache.queue() == []
+
+    def test_sim_mutators_invalidate_through_wrapper(self, sim):
+        cache = QueueCache(sim, ttl_s=3600.0)
+        Job(name="a", command="true", opts=Opts.new(),
+            sim_duration_s=30).run(cache)
+        assert len(cache.queue()) == 1
+        cache.advance(60)  # job completes in simulated time
+        assert cache.queue() == []
+
+    def test_queue_object_through_cache(self, sim):
+        cache = QueueCache(sim, ttl_s=3600.0)
+        SubmitEngine(sim).submit_many(homogeneous(3))
+        cache.invalidate()
+        q1 = Queue(backend=cache)
+        q2 = Queue(backend=cache)
+        assert q1.ids() == q2.ids()
+        assert cache.polls == 1 and cache.hits == 1
+
+    def test_shared_cache_resolves_and_rewrap_is_identity(self, sim):
+        shared = get_queue_cache(sim)
+        assert shared.inner is sim
+        assert get_queue_cache(shared) is shared
+
+    def test_engine_invalidates_shared_cache_on_submit(self, sim):
+        shared = get_queue_cache(sim, ttl_s=3600.0)
+        assert shared.queue() == []  # snapshot taken
+        SubmitEngine(sim).submit_many(homogeneous(2))
+        # writer went straight to the backend, yet shared readers see it
+        assert len(shared.queue()) == 2
+
+
+class TestDecideMany:
+    NOW = datetime(2026, 7, 28, 14, 0)  # Tuesday afternoon
+    DURATIONS = [60, 600, 3600, 6 * 3600, 26 * 3600, 90000]
+
+    def test_equivalent_to_per_job_decisions(self):
+        sched = EcoScheduler(NBIConfig())
+        batch = sched.decide_many(self.DURATIONS, self.NOW)
+        singles = [sched.next_window(d, self.NOW) for d in self.DURATIONS]
+        assert batch == singles
+
+    def test_equivalent_with_carbon_trace(self):
+        trace = CarbonTrace([100.0 + (h % 24) * 10 for h in range(168)])
+        sched = EcoScheduler(NBIConfig(), carbon_trace=trace)
+        batch = sched.decide_many(self.DURATIONS, self.NOW)
+        singles = [sched.next_window(d, self.NOW) for d in self.DURATIONS]
+        assert batch == singles
+
+    def test_equivalent_with_no_windows_configured(self):
+        sched = EcoScheduler(NBIConfig(), weekday_windows=[],
+                             weekend_windows=[])
+        batch = sched.decide_many([3600, 7200], self.NOW)
+        assert all(d.tier == 0 and not d.deferred for d in batch)
+        assert batch == [sched.next_window(d, self.NOW) for d in (3600, 7200)]
+
+    def test_empty_batch(self):
+        assert EcoScheduler(NBIConfig()).decide_many([], self.NOW) == []
+
+    def test_rejects_nonpositive_duration(self):
+        with pytest.raises(ValueError):
+            EcoScheduler(NBIConfig()).decide_many([3600, 0], self.NOW)
+
+
+class TestRunjobBatchCli:
+    def test_from_file_array(self, tmp_path, capsys):
+        from repro.cli.runjob import main
+
+        cmds = tmp_path / "cmds.txt"
+        cmds.write_text("echo one\n# skip\necho two\necho three\n")
+        rc = main(["--no-eco", "--from-file", str(cmds), "--array",
+                   "-n", "batch"])
+        assert rc == 0
+        ids = capsys.readouterr().out.strip().splitlines()
+        assert len(ids) == 3
+        assert all("_" in jid for jid in ids)
+        assert len({jid.split("_")[0] for jid in ids}) == 1
+
+    def test_from_file_without_array_submits_independently(self, tmp_path, capsys):
+        from repro.cli.runjob import main
+
+        cmds = tmp_path / "cmds.txt"
+        cmds.write_text("echo one\necho two\n")
+        rc = main(["--no-eco", "--from-file", str(cmds)])
+        assert rc == 0
+        ids = capsys.readouterr().out.strip().splitlines()
+        assert len(ids) == 2
+        assert all("_" not in jid for jid in ids)
+
+    def test_array_requires_from_file(self, capsys):
+        from repro.cli.runjob import main
+
+        with pytest.raises(SystemExit):
+            main(["--array", "echo", "x"])
+
+    def test_dry_run_array_prints_coalesced_script(self, tmp_path, capsys):
+        from repro.cli.runjob import main
+
+        cmds = tmp_path / "cmds.txt"
+        cmds.write_text("echo one\necho two\n")
+        rc = main(["--no-eco", "--from-file", str(cmds), "--array",
+                   "-n", "batch", "--dry-run"])
+        assert rc == 0
+        script = capsys.readouterr().out
+        assert "#SBATCH --array=0-1" in script
+        assert 'eval "${NBI_TASKS[$SLURM_ARRAY_TASK_ID]}"' in script
+
+
+class TestWaitjobsThroughCache:
+    def test_wait_for_cached_sim(self, sim):
+        from repro.cli.waitjobs import wait_for
+
+        SubmitEngine(sim).submit_many(homogeneous(4))
+        cache = QueueCache(sim, ttl_s=3600.0)
+        assert wait_for(cache, poll_s=30.0, timeout_s=0.0)
+        assert Queue(backend=sim).ids() == []
+
+
+class TestLaunchSubmitBatch:
+    def test_mixed_jobs_and_launchers(self, sim, tmp_path):
+        from repro.core import Kraken2
+        from repro.launch.submit import submit_batch
+
+        kraken = Kraken2(reads1="r1.fq", db=str(tmp_path), backend=sim,
+                         outdir=str(tmp_path))
+        result = submit_batch(homogeneous(3) + [kraken], backend=sim)
+        assert len(result) == 4
+        assert result.coalesced == 3
+        assert result.sbatch_calls == 2  # 1 array + the kraken job
+        manifest = tmp_path / "kraken2.manifest.json"
+        assert manifest.exists()

@@ -1,7 +1,8 @@
 """NBI::Opts semantics: human-friendly parsing → SLURM units (paper §Opts)."""
 
 import pytest
-from hypothesis import given, strategies as st
+hypothesis = pytest.importorskip("hypothesis")
+given, st = hypothesis.given, hypothesis.strategies
 
 from repro.core import Opts, format_slurm_time, parse_memory_mb, parse_time_s
 
