@@ -1,0 +1,216 @@
+"""Accounting subsystem benchmark — store throughput, report latency, and
+the predictor's effect on eco-mode tier placement.
+
+Four measurements:
+  1. HistoryStore append throughput (single-record and batched) — the
+     store sits on every job-completion path, so appends must be cheap;
+  2. scan + report aggregation latency over a 10k-record archive — the
+     interactive ``ecoreport`` budget;
+  3. predictor benefit: a repeat workload with padded 12 h limits but
+     ~1 h true runtimes, priced by the plain scheduler vs the
+     history-fed one — tier-1 rate and completes-inside-window rate;
+  4. a 1k-job SimCluster round trip (submit → run → collect → report)
+     proving the closed loop reports nonzero energy/carbon/savings.
+"""
+
+from __future__ import annotations
+
+import json
+import tempfile
+import time
+from datetime import datetime, timedelta
+from pathlib import Path
+
+import numpy as np
+
+from repro.accounting import (
+    EnergyModel,
+    HistoryStore,
+    JobRecord,
+    RuntimePredictor,
+    collect,
+    report_dict,
+)
+from repro.core import EcoScheduler, Job, Opts, SimCluster, SubmitEngine
+
+_SCHED = dict(
+    weekday_windows=[(0, 360)], weekend_windows=[(0, 420), (660, 960)],
+    peak_hours=[(1020, 1200)], horizon_days=14, min_delay_s=0,
+)
+
+
+def _tmp_store(name: str) -> HistoryStore:
+    return HistoryStore(Path(tempfile.mkdtemp(prefix="bench-acct-")) / name)
+
+
+def _record(i: int, rng) -> JobRecord:
+    return JobRecord(
+        jobid=str(1000000 + i),
+        name=f"sweep-{i % 37}",
+        user=f"user{i % 11}",
+        state="COMPLETED",
+        cpus=int(rng.integers(1, 16)),
+        time_limit_s=12 * 3600,
+        runtime_s=int(rng.uniform(1800, 7200)),
+        started_at=f"2026-03-{1 + i % 28:02d}T01:00:00",
+        finished_at=f"2026-03-{1 + i % 28:02d}T03:00:00",
+        requested_start=f"2026-03-{1 + i % 28:02d}T10:00:00",
+        eco_deferred=True,
+        eco_tier=1,
+        energy_kwh=0.05,
+        carbon_gco2=12.0,
+        carbon_nodefer_gco2=17.0,
+    )
+
+
+def store_throughput(n: int = 10000) -> dict:
+    rng = np.random.default_rng(0)
+    records = [_record(i, rng) for i in range(n)]
+
+    one = _tmp_store("one.jsonl")
+    t0 = time.perf_counter()
+    for r in records[:1000]:
+        one.append(r)
+    per_record_s = (time.perf_counter() - t0) / 1000
+
+    batched = _tmp_store("batch.jsonl")
+    t0 = time.perf_counter()
+    batched.append_many(records)
+    batch_wall = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    count = sum(1 for _ in batched.scan())
+    scan_wall = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    rep = report_dict(batched.records(), by="user")
+    report_wall = time.perf_counter() - t0
+
+    return {
+        "n": n,
+        "append_rec_s": 1.0 / per_record_s,
+        "append_many_rec_s": n / batch_wall,
+        "scan_rec_s": count / scan_wall,
+        "report_10k_ms": report_wall * 1e3,
+        "report_groups": len(rep["groups"]),
+        "report_saved_gco2": rep["total"]["carbon_saved_gco2"],
+    }
+
+
+def predictor_benefit(n_jobs: int = 300, seed: int = 3) -> dict:
+    """Repeat workload, padded limits: plain vs history-fed scheduling."""
+    rng = np.random.default_rng(seed)
+    store = _tmp_store("hist.jsonl")
+    store.append_many(
+        [
+            JobRecord(jobid=str(i), name="blast", user="bench",
+                      state="COMPLETED", cpus=4, time_limit_s=12 * 3600,
+                      runtime_s=int(rng.uniform(2700, 4500)))
+            for i in range(60)
+        ]
+    )
+    base = EcoScheduler(**_SCHED)
+    pred = EcoScheduler(**_SCHED, predictor=RuntimePredictor(store))
+
+    start = datetime(2026, 1, 5)
+    submissions = [  # identical workload for both arms
+        (
+            start + timedelta(days=int(rng.integers(0, 120)),
+                              hours=int(rng.integers(8, 18)),
+                              minutes=int(rng.integers(0, 60))),
+            int(rng.uniform(2700, 4500)),
+        )
+        for _ in range(n_jobs)
+    ]
+    out = {}
+    for label, sched in (("baseline", base), ("predictor", pred)):
+        tier1 = in_window = 0
+        t0 = time.perf_counter()
+        for t, actual_s in submissions:
+            d = sched.decide(12 * 3600, t, name="blast", user="bench")
+            if d.tier == 1:
+                tier1 += 1
+            if (d.window_end is not None
+                    and d.begin + timedelta(seconds=actual_s) <= d.window_end):
+                in_window += 1
+        out[label] = {
+            "tier1_rate": tier1 / n_jobs,
+            "completes_in_window_rate": in_window / n_jobs,
+            "decide_ms": (time.perf_counter() - t0) / n_jobs * 1e3,
+        }
+    return out
+
+
+def sim_round_trip(n_jobs: int = 1000) -> dict:
+    """submit → run → collect → report over a simulated 1k-job history."""
+    rng = np.random.default_rng(11)
+    sim = SimCluster(
+        nodes=None, now=datetime(2026, 3, 16, 9, 0), default_user="bench",
+    )
+    for node in sim.nodes:
+        node.cpus = 512  # headroom: this measures accounting, not contention
+    engine = SubmitEngine(
+        sim, eco=True, coalesce=False,
+        scheduler=EcoScheduler(**_SCHED), now=sim.now,
+    )
+    jobs = [
+        Job(name=f"etl-{i % 23}", command="true",
+            opts=Opts.new(threads=2, memory="2GB",
+                          time=float(int(rng.integers(1, 13)))),
+            sim_duration_s=int(rng.uniform(900, 5400)))
+        for i in range(n_jobs)
+    ]
+    t0 = time.perf_counter()
+    engine.submit_many(jobs)
+    sim.run_until_idle()
+    sim_wall = time.perf_counter() - t0
+
+    store = _tmp_store("sim.jsonl")
+    t0 = time.perf_counter()
+    n_collected = collect(sim, store, EnergyModel())
+    collect_wall = time.perf_counter() - t0
+    rep = report_dict(store.records(), by="tool")
+    tot = rep["total"]
+    return {
+        "jobs": n_jobs,
+        "collected": n_collected,
+        "sim_wall_s": sim_wall,
+        "collect_wall_s": collect_wall,
+        "energy_kwh": tot["energy_kwh"],
+        "carbon_gco2": tot["carbon_gco2"],
+        "carbon_saved_gco2": tot["carbon_saved_gco2"],
+        "eco_deferred": tot["eco_deferred"],
+        "loop_closes": (
+            tot["energy_kwh"] > 0
+            and tot["carbon_gco2"] > 0
+            and tot["carbon_saved_gco2"] > 0
+        ),
+    }
+
+
+def run() -> dict:
+    out = {
+        "store": store_throughput(),
+        "predictor": predictor_benefit(),
+        "round_trip": sim_round_trip(),
+    }
+    s = out["store"]
+    print(f"  store: append {s['append_rec_s']:.0f} rec/s "
+          f"(batched {s['append_many_rec_s']:.0f}), "
+          f"scan {s['scan_rec_s']:.0f} rec/s, "
+          f"report over 10k in {s['report_10k_ms']:.1f} ms")
+    p = out["predictor"]
+    print(f"  predictor: tier-1 {p['baseline']['tier1_rate']:.0%} → "
+          f"{p['predictor']['tier1_rate']:.0%}, "
+          f"completes-in-window {p['baseline']['completes_in_window_rate']:.0%} → "
+          f"{p['predictor']['completes_in_window_rate']:.0%}")
+    r = out["round_trip"]
+    print(f"  round trip: {r['jobs']} sim jobs → {r['collected']} records, "
+          f"{r['energy_kwh']:.2f} kWh, {r['carbon_gco2']:.0f} g CO2, "
+          f"saved {r['carbon_saved_gco2']:.0f} g "
+          f"({r['eco_deferred']} deferred) | loop_closes={r['loop_closes']}")
+    return out
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(), indent=1))

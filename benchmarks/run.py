@@ -6,6 +6,7 @@
 | section    | paper claim it quantifies                                    |
 |------------|--------------------------------------------------------------|
 | eco        | §EcoScheduler: tiers, deferral, peak compute avoided, latency |
+| accounting | history store throughput, predictor tier lift, carbon loop    |
 | submission | §Statement of Need: boilerplate reduction, submit throughput  |
 | queue      | Figure 1 / lsjobs-viewjobs-whojobs on a 2,000-job cluster     |
 | kernels    | kernels vs oracles + VMEM budgets (TPU-facing)                |
@@ -82,7 +83,8 @@ def bench_roofline() -> dict:
     return {"cells": len(json.loads(path.read_text())) if path.exists() else 0}
 
 
-SECTIONS = ["eco", "submission", "queue", "kernels", "train", "serve", "roofline"]
+SECTIONS = ["eco", "accounting", "submission", "queue", "kernels", "train",
+            "serve", "roofline"]
 
 
 def main(argv=None) -> int:
@@ -102,6 +104,10 @@ def main(argv=None) -> int:
                 from benchmarks import bench_eco
 
                 all_out[name] = bench_eco.run()
+            elif name == "accounting":
+                from benchmarks import bench_accounting
+
+                all_out[name] = bench_accounting.run()
             elif name == "submission":
                 from benchmarks import bench_submission
 

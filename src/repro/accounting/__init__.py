@@ -1,0 +1,46 @@
+"""Accounting & energy telemetry — the submit → run → account → learn loop.
+
+The queue forgets a job the moment it finishes; this package remembers it:
+
+* :class:`HistoryStore` — append-only JSONL archive of completed jobs
+  (runtime, resources requested vs used, exit state, eco decision, energy);
+* :class:`EnergyModel` — per-job energy/carbon, from measured sacct
+  ``ConsumedEnergy`` on real SLURM or the simulator's deterministic
+  cpu × time × TDP model;
+* :func:`collect` — harvest a backend's accounting into the store (idempotent);
+* :class:`RuntimePredictor` — history-driven duration estimates that feed
+  the EcoScheduler so habitually short jobs land in tier-1 windows
+  (hard invariant: no history ⇒ decisions bit-identical to today);
+* :mod:`~repro.accounting.report` — per-user/per-tool energy, carbon and
+  "carbon saved by eco mode" aggregation behind the ``ecoreport`` CLI.
+"""
+
+from .collect import collect, record_from_sacct, record_from_sim
+from .energy import (
+    DEFAULT_WATTS_PER_CPU,
+    EnergyModel,
+    parse_consumed_energy,
+    synthetic_trace,
+)
+from .predict import RuntimePredictor, name_stem, predictor_from_config
+from .report import GroupStats, aggregate, render_report, report_dict, totals
+from .store import (
+    DEFAULT_HISTORY_PATH,
+    HistoryStore,
+    JobRecord,
+    SubmitLog,
+    history_path,
+    log_submission,
+    log_submissions,
+)
+
+__all__ = [
+    "DEFAULT_HISTORY_PATH", "DEFAULT_WATTS_PER_CPU",
+    "EnergyModel", "GroupStats", "HistoryStore", "JobRecord",
+    "RuntimePredictor", "SubmitLog",
+    "aggregate", "collect", "history_path",
+    "log_submission", "log_submissions", "name_stem",
+    "parse_consumed_energy", "predictor_from_config",
+    "record_from_sacct", "record_from_sim",
+    "render_report", "report_dict", "synthetic_trace", "totals",
+]

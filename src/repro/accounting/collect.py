@@ -1,0 +1,188 @@
+"""Harvesters: backend accounting → :class:`JobRecord` → HistoryStore.
+
+One entry point, :func:`collect`, closes the submit → run → account loop
+for both backends:
+
+* ``SimCluster.accounting()`` returns :class:`SimJob` objects carrying
+  the simulator's deterministic ``energy_j`` and the eco metadata stamped
+  at submission;
+* ``SlurmBackend.accounting()`` returns sacct row dicts with measured
+  ``ConsumedEnergy`` where the cluster reports it.
+
+Records are deduplicated against ids already archived, so ``collect`` is
+safe to run repeatedly (cron, post-advance in tests, ``ecoreport
+--collect``).
+"""
+
+from __future__ import annotations
+
+from datetime import datetime
+
+from .energy import EnergyModel, parse_consumed_energy
+from .store import HistoryStore, JobRecord
+
+
+def collect(
+    backend,
+    store: HistoryStore,
+    model: EnergyModel | None = None,
+    *,
+    since: str = "",
+) -> int:
+    """Archive every terminal job the backend knows that the store lacks.
+
+    ``since`` (sacct ``--starttime`` syntax) widens the harvest window on
+    the real backend — without it sacct only reports jobs from midnight
+    today. Backends whose ``accounting()`` takes no arguments (the
+    simulator) ignore it. Returns the number of records appended.
+    """
+    accounting = getattr(backend, "accounting", None)
+    if accounting is None:
+        return 0
+    model = model or EnergyModel()
+    seen = store.ids()
+    # submission-time tool/eco facts: the target archive's sidecar, backed
+    # by the default archive's — the submission paths always journal to
+    # the configured default, which a custom --history must still see
+    journal = _load_journal(store)
+    fresh: list[JobRecord] = []
+    rows = (
+        accounting(since=since)
+        if since and _accepts_since(accounting)
+        else accounting()
+    )
+    for row in rows:
+        rec = (
+            record_from_sacct(row, model, journal=journal)
+            if isinstance(row, dict)
+            else record_from_sim(row, model)
+        )
+        if rec is None or rec.jobid in seen:
+            continue
+        seen.add(rec.jobid)
+        fresh.append(rec)
+    store.append_many(fresh)
+    return len(fresh)
+
+
+def _load_journal(store: HistoryStore) -> dict:
+    journal = store.submit_log().load()
+    default_log = HistoryStore().submit_log()
+    if default_log.path != store.submit_log().path:
+        merged = default_log.load()
+        merged.update(journal)  # the target archive's own entries win
+        journal = merged
+    return journal
+
+
+def _accepts_since(accounting) -> bool:
+    """True when the backend's accounting() has a ``since`` parameter —
+    checked by signature, not try/except, so a genuine TypeError raised
+    *inside* a backend is never masked (or its sacct call re-run)."""
+    import inspect
+
+    try:
+        params = inspect.signature(accounting).parameters
+    except (TypeError, ValueError):
+        return False
+    return "since" in params or any(
+        p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values()
+    )
+
+
+# ---------------------------------------------------------------------------
+# SimCluster
+# ---------------------------------------------------------------------------
+
+
+def record_from_sim(j, model: EnergyModel) -> JobRecord | None:
+    """SimJob → JobRecord (terminal jobs only)."""
+    from repro.core.simcluster import _TERMINAL
+
+    if j.state not in _TERMINAL:
+        return None
+    runtime = 0
+    if j.started_at and j.finished_at:
+        runtime = int((j.finished_at - j.started_at).total_seconds())
+    rec = JobRecord(
+        jobid=j.jobid,
+        name=j.name,
+        user=j.user,
+        partition=j.partition,
+        tool=getattr(j, "tool", "") or "",
+        state=j.state,
+        cpus=j.cpus,
+        memory_mb=j.memory_mb,
+        time_limit_s=j.time_limit_s,
+        runtime_s=runtime,
+        submitted_at=_iso(j.submitted_at),
+        started_at=_iso(j.started_at),
+        finished_at=_iso(j.finished_at),
+        node=j.node or "",
+        restarts=j.restarts,
+        eco_deferred=bool(getattr(j, "eco_deferred", False)),
+        eco_tier=int(getattr(j, "eco_tier", 0) or 0),
+        requested_start=_iso(j.submitted_at),
+        energy_kwh=model.energy_from_joules(getattr(j, "energy_j", 0.0)),
+    )
+    model.annotate(rec)
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# sacct (real SLURM)
+# ---------------------------------------------------------------------------
+
+_SACCT_TERMINAL_PREFIXES = (
+    "COMPLETED", "FAILED", "CANCELLED", "TIMEOUT", "NODE_FAIL", "OUT_OF_ME",
+)
+
+
+def record_from_sacct(
+    row: dict, model: EnergyModel, journal: "dict | None" = None
+) -> JobRecord | None:
+    """One parsed sacct row (see ``SlurmBackend.accounting``) → JobRecord.
+
+    ``journal`` (jobid → :class:`~repro.accounting.store.SubmitLog` entry)
+    restores what sacct cannot know: the originating tool and the eco
+    decision made at submission — without it every real-SLURM record
+    reads as never-deferred and the savings column stays 0.
+    """
+    state = (row.get("state") or "").split()[0] if row.get("state") else ""
+    if not any(state.startswith(p) for p in _SACCT_TERMINAL_PREFIXES):
+        return None
+    if state.startswith("CANCELLED"):
+        state = "CANCELLED"  # sacct reports "CANCELLED by <uid>"
+    elif state.startswith("OUT_OF_ME"):
+        state = "OUT_OF_MEMORY"  # may arrive truncated (OUT_OF_ME+)
+    runtime = int(float(row.get("elapsed_s") or 0))
+    rec = JobRecord(
+        jobid=str(row.get("jobid", "")),
+        name=row.get("name", ""),
+        user=row.get("user", ""),
+        partition=row.get("partition", ""),
+        state=state,
+        cpus=int(float(row.get("cpus") or 1)),
+        memory_mb=int(float(row.get("memory_mb") or 0)),
+        time_limit_s=int(float(row.get("time_limit_s") or 0)),
+        runtime_s=runtime,
+        submitted_at=row.get("submitted_at", ""),
+        started_at=row.get("started_at", ""),
+        finished_at=row.get("finished_at", ""),
+        node=row.get("node", ""),
+        requested_start=row.get("submitted_at", ""),
+        energy_kwh=model.energy_from_joules(
+            parse_consumed_energy(str(row.get("consumed_energy", "")))
+        ),
+    )
+    entry = (journal or {}).get(rec.jobid)
+    if entry:
+        rec.tool = entry.get("tool", "") or rec.tool
+        rec.eco_tier = int(entry.get("eco_tier", 0) or 0)
+        rec.eco_deferred = bool(entry.get("eco_deferred", False))
+    model.annotate(rec)
+    return rec
+
+
+def _iso(t: datetime | None) -> str:
+    return t.isoformat(sep="T", timespec="seconds") if t else ""

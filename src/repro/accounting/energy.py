@@ -1,0 +1,148 @@
+"""``EnergyModel`` — per-job energy and carbon derivation.
+
+Two sources, one output:
+
+* **Measured** — real SLURM reports ``ConsumedEnergy`` via sacct (RAPL /
+  IPMI, in joules, sometimes with K/M/G suffixes). When a row carries a
+  nonzero reading we trust it.
+* **Modelled** — everywhere else (the simulator, clusters without energy
+  plugins) we fall back to a deterministic cpu × time × TDP model:
+  ``(baseline_w + cpus · watts_per_cpu) · runtime``. Deliberately simple:
+  the point is a *consistent, reproducible* figure the eco-mode
+  counterfactual can difference against, not a watt-accurate meter.
+
+Carbon is energy × grid intensity at the time the job ran. With a
+measured :class:`~repro.core.eco.CarbonTrace` configured we use it;
+otherwise :func:`synthetic_trace` supplies a deterministic hour-of-week
+reference curve (night < day < evening peak, weekends lower) so that
+deferral arithmetic — actual vs "had it run at submission" — is nonzero
+and reproducible out of the box.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from datetime import datetime
+
+from repro.core.eco import CarbonTrace
+
+#: default busy-core power draw. ~250 W TDP across 20 cores plus a share
+#: of fans/DRAM lands in the low tens of watts per allocated core.
+DEFAULT_WATTS_PER_CPU = 12.0
+
+#: flat fallback intensity (gCO2/kWh) when even the synthetic curve is off
+DEFAULT_INTENSITY = 300.0
+
+_J_PER_KWH = 3.6e6
+
+_SUFFIX = {"K": 1e3, "M": 1e6, "G": 1e9, "T": 1e12}
+
+
+def parse_consumed_energy(s: str) -> float:
+    """sacct ``ConsumedEnergy`` → joules. Handles '', '0', '1234', '2.43K'."""
+    s = (s or "").strip()
+    if not s:
+        return 0.0
+    mult = 1.0
+    if s[-1].upper() in _SUFFIX:
+        mult = _SUFFIX[s[-1].upper()]
+        s = s[:-1]
+    try:
+        return float(s) * mult
+    except ValueError:
+        return 0.0
+
+
+def synthetic_trace() -> CarbonTrace:
+    """Deterministic 168-hour reference intensity curve (gCO2/kWh).
+
+    Shape, not measurement: overnight base ~210, a working-hours plateau,
+    an evening peak ~430 (17:00-20:00 — the default ``peak_hours``), and
+    ~12% lower weekends. Replace with a real trace (config key
+    ``carbon_trace``) for actual grid figures.
+    """
+    hourly: list[float] = []
+    for dow in range(7):
+        weekend = dow >= 5
+        for hour in range(24):
+            v = 210.0
+            if 7 <= hour < 17:
+                v += 90.0  # daytime demand plateau
+            if 17 <= hour < 20:
+                v += 220.0  # evening peak
+            elif 20 <= hour < 23:
+                v += 60.0  # shoulder
+            if weekend:
+                v *= 0.88
+            hourly.append(round(v, 1))
+    return CarbonTrace(hourly)
+
+
+@dataclass
+class EnergyModel:
+    """Derive (energy_kwh, carbon_gco2) for one job."""
+
+    watts_per_cpu: float = DEFAULT_WATTS_PER_CPU
+    baseline_w: float = 0.0
+    trace: CarbonTrace | None = field(default_factory=synthetic_trace)
+    flat_intensity: float = DEFAULT_INTENSITY
+
+    @classmethod
+    def from_config(cls, cfg=None) -> "EnergyModel":
+        """Build from ``~/.nbislurm.config`` (watts + optional real trace)."""
+        if cfg is None:
+            from repro.core.config import load_config
+
+            cfg = load_config()
+        watts = float(cfg.get("energy_cpu_watts", str(DEFAULT_WATTS_PER_CPU))
+                      or DEFAULT_WATTS_PER_CPU)
+        trace_path = cfg.get("carbon_trace")
+        trace = CarbonTrace.from_csv(trace_path) if trace_path else synthetic_trace()
+        return cls(watts_per_cpu=watts, trace=trace)
+
+    # -- energy --------------------------------------------------------------
+
+    def energy_kwh(self, cpus: int, runtime_s: float) -> float:
+        """Modelled energy: (baseline + cpus × per-core watts) × runtime."""
+        watts = self.baseline_w + max(0, cpus) * self.watts_per_cpu
+        return watts * max(0.0, runtime_s) / _J_PER_KWH
+
+    def energy_from_joules(self, joules: float) -> float:
+        return max(0.0, joules) / _J_PER_KWH
+
+    # -- carbon --------------------------------------------------------------
+
+    def intensity(self, start: datetime | None, runtime_s: float) -> float:
+        """Mean gCO2/kWh over the job span (flat fallback without a clock)."""
+        if start is None or self.trace is None:
+            return self.flat_intensity
+        return self.trace.mean_over(start, max(1, int(runtime_s)))
+
+    def carbon_gco2(
+        self, energy_kwh: float, start: datetime | None, runtime_s: float
+    ) -> float:
+        return energy_kwh * self.intensity(start, runtime_s)
+
+    # -- one-stop record annotation -----------------------------------------
+
+    def annotate(self, record) -> None:
+        """Fill a :class:`~repro.accounting.store.JobRecord`'s energy/carbon
+        fields in place (keeps a measured ``energy_kwh`` if already set).
+
+        The no-eco counterfactual is only differenced for jobs eco mode
+        actually deferred; for everything else it equals the actual carbon,
+        so ordinary queue-wait drift never masquerades as an eco saving
+        (or penalty)."""
+        if record.energy_kwh <= 0.0:
+            record.energy_kwh = self.energy_kwh(record.cpus, record.runtime_s)
+        started = record.started_dt()
+        record.carbon_gco2 = self.carbon_gco2(
+            record.energy_kwh, started, record.runtime_s
+        )
+        if record.eco_deferred:
+            requested = record.requested_dt() or started
+            record.carbon_nodefer_gco2 = self.carbon_gco2(
+                record.energy_kwh, requested, record.runtime_s
+            )
+        else:
+            record.carbon_nodefer_gco2 = record.carbon_gco2

@@ -1,0 +1,146 @@
+"""``RuntimePredictor`` — history-driven duration estimates for eco mode.
+
+The EcoScheduler picks its tier from the job's *requested* time limit, and
+users pad limits defensively — a job asking for 12 h that historically
+finishes in 50 min gets priced as a 12 h job and lands in tier 2 instead
+of completing inside a 6 h night window at tier 1. The predictor closes
+that gap: estimate the duration from the job's own completion history
+(per user + tool/name-stem percentile, with safety margin), never above
+the requested limit, and fall back to the limit whenever the history is
+too thin.
+
+Hard invariant (pinned property-style in ``tests/test_eco_properties.py``):
+**no history ⇒ the prediction IS the request limit**, so every eco
+decision is bit-identical to the predictor-free scheduler. The predictor
+can only ever move a job to an equal-or-better tier, never change
+behaviour for workloads it has not seen.
+"""
+
+from __future__ import annotations
+
+import math
+
+from .store import HistoryStore, name_stem  # noqa: F401  (re-exported key rule)
+
+#: at least this many completed runs before we trust a key's history
+DEFAULT_MIN_SAMPLES = 3
+#: percentile of past runtimes used as the estimate
+DEFAULT_PERCENTILE = 90.0
+#: multiplicative safety margin on top of the percentile
+DEFAULT_MARGIN = 1.25
+#: never predict below this (scheduler granularity)
+MIN_PREDICT_S = 60
+
+
+class RuntimePredictor:
+    """Percentile-of-history duration estimator.
+
+    The index is built lazily on first use from one store scan and keyed
+    twice: ``(user, key)`` then ``key`` alone, where key is the tool name
+    (for Launcher wrappers) or the job-name stem (for plain jobs). Only
+    ``COMPLETED`` runs count — a TIMEOUT runtime is censored at the limit
+    and says nothing about the true duration.
+    """
+
+    def __init__(
+        self,
+        store: HistoryStore,
+        *,
+        percentile: float = DEFAULT_PERCENTILE,
+        min_samples: int = DEFAULT_MIN_SAMPLES,
+        margin: float = DEFAULT_MARGIN,
+    ):
+        self.store = store
+        self.percentile = float(percentile)
+        self.min_samples = max(1, int(min_samples))
+        self.margin = float(margin)
+        self._index: dict | None = None
+
+    # -- public API ----------------------------------------------------------
+
+    def predict(
+        self, default_s: int, *, name: str = "", user: str = "", tool: str = ""
+    ) -> int:
+        """Estimated duration, clamped to ``[MIN_PREDICT_S, default_s]``.
+
+        ``default_s`` is the requested time limit and is returned verbatim
+        whenever there is no usable history for this job's key.
+        """
+        key = tool or (name_stem(name) if name else "")
+        if not key:
+            return default_s
+        runtimes = self._lookup(user, key)
+        if len(runtimes) < self.min_samples:
+            return default_s
+        est = _percentile(runtimes, self.percentile) * self.margin
+        est = int(math.ceil(est / 60.0)) * 60  # round up to whole minutes
+        # the limit clamp is applied LAST: the floor must never push the
+        # estimate above a sub-minute request limit
+        return min(default_s, max(MIN_PREDICT_S, est))
+
+    def sample_count(self, *, name: str = "", user: str = "", tool: str = "") -> int:
+        key = tool or (name_stem(name) if name else "")
+        return len(self._lookup(user, key)) if key else 0
+
+    def refresh(self) -> None:
+        """Drop the cached index; the next predict() rescans the store."""
+        self._index = None
+
+    # -- internals -----------------------------------------------------------
+
+    def _lookup(self, user: str, key: str) -> list:
+        idx = self._build()
+        if user and (user, key) in idx:
+            return idx[(user, key)]
+        return idx.get(key, [])
+
+    def _build(self) -> dict:
+        if self._index is not None:
+            return self._index
+        idx: dict = {}
+        for r in self.store.scan():
+            if not r.completed or r.runtime_s <= 0:
+                continue
+            key = r.tool or name_stem(r.name)
+            if not key:
+                continue
+            idx.setdefault(key, []).append(r.runtime_s)
+            if r.user:
+                idx.setdefault((r.user, key), []).append(r.runtime_s)
+        for v in idx.values():
+            v.sort()
+        self._index = idx
+        return idx
+
+
+def _percentile(sorted_vals: list, p: float) -> float:
+    """Nearest-rank-interpolated percentile of an ascending list."""
+    if not sorted_vals:
+        return 0.0
+    if len(sorted_vals) == 1:
+        return float(sorted_vals[0])
+    rank = (p / 100.0) * (len(sorted_vals) - 1)
+    lo = int(math.floor(rank))
+    hi = min(lo + 1, len(sorted_vals) - 1)
+    frac = rank - lo
+    return sorted_vals[lo] * (1 - frac) + sorted_vals[hi] * frac
+
+
+def predictor_from_config(cfg=None) -> "RuntimePredictor | None":
+    """The predictor the submission paths use, or None.
+
+    None when prediction is disabled (``eco_prediction = 0``) or the
+    history file does not exist yet — both give today's exact behaviour.
+    """
+    if cfg is None:
+        from repro.core.config import load_config
+
+        cfg = load_config()
+    if not cfg.get_bool("eco_prediction"):
+        return None
+    from .store import history_path
+
+    path = history_path(cfg.get("history_file") or None)
+    if not path.is_file():
+        return None
+    return RuntimePredictor(HistoryStore(path))

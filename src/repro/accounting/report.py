@@ -1,0 +1,170 @@
+"""Aggregation of the job archive into eco/energy reports.
+
+Pure functions over a list of :class:`JobRecord`: group by user or tool,
+sum energy, carbon, cpu-hours and the deferred-vs-counterfactual carbon
+saving, and render either an ANSI table (via the shared
+:mod:`repro.cli.render` machinery) or JSON. The ``ecoreport`` CLI is a
+thin argument parser around this module.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from .store import JobRecord
+
+
+@dataclass
+class GroupStats:
+    """Aggregate over one group of records (a user, a tool, or everything)."""
+
+    key: str = ""
+    jobs: int = 0
+    completed: int = 0
+    failed: int = 0
+    cpu_hours: float = 0.0
+    energy_kwh: float = 0.0
+    carbon_gco2: float = 0.0
+    carbon_nodefer_gco2: float = 0.0
+    eco_deferred: int = 0
+    runtime_s_total: int = 0
+    time_limit_s_total: int = 0
+    tiers: dict = field(default_factory=lambda: {0: 0, 1: 0, 2: 0, 3: 0})
+
+    def add(self, r: JobRecord) -> None:
+        self.jobs += 1
+        if r.completed:
+            self.completed += 1
+        elif r.state in ("FAILED", "TIMEOUT", "NODE_FAIL", "OUT_OF_MEMORY"):
+            self.failed += 1
+        self.cpu_hours += r.cpu_hours
+        self.energy_kwh += r.energy_kwh
+        self.carbon_gco2 += r.carbon_gco2
+        self.carbon_nodefer_gco2 += r.carbon_nodefer_gco2
+        if r.eco_deferred:
+            self.eco_deferred += 1
+        self.runtime_s_total += r.runtime_s
+        self.time_limit_s_total += r.time_limit_s
+        self.tiers[r.eco_tier if r.eco_tier in self.tiers else 0] += 1
+
+    @property
+    def carbon_saved_gco2(self) -> float:
+        return self.carbon_nodefer_gco2 - self.carbon_gco2
+
+    @property
+    def mean_runtime_s(self) -> float:
+        return self.runtime_s_total / self.jobs if self.jobs else 0.0
+
+    @property
+    def limit_utilisation(self) -> float:
+        """runtime / requested limit — how padded the requests are."""
+        if not self.time_limit_s_total:
+            return 0.0
+        return self.runtime_s_total / self.time_limit_s_total
+
+    def to_dict(self) -> dict:
+        return {
+            "key": self.key,
+            "jobs": self.jobs,
+            "completed": self.completed,
+            "failed": self.failed,
+            "cpu_hours": round(self.cpu_hours, 3),
+            "energy_kwh": round(self.energy_kwh, 6),
+            "carbon_gco2": round(self.carbon_gco2, 3),
+            "carbon_nodefer_gco2": round(self.carbon_nodefer_gco2, 3),
+            "carbon_saved_gco2": round(self.carbon_saved_gco2, 3),
+            "eco_deferred": self.eco_deferred,
+            "mean_runtime_s": round(self.mean_runtime_s, 1),
+            "limit_utilisation": round(self.limit_utilisation, 4),
+            "tiers": dict(self.tiers),
+        }
+
+
+def group_key(r: JobRecord, by: str) -> str:
+    if by == "user":
+        return r.user or "(unknown)"
+    if by == "tool":
+        from .predict import name_stem
+
+        return r.tool or name_stem(r.name) or "(unnamed)"
+    return "all"
+
+
+def aggregate(records: "list[JobRecord]", by: str = "user") -> "dict[str, GroupStats]":
+    """Group records and accumulate stats; keys sorted by energy, descending."""
+    groups: dict[str, GroupStats] = {}
+    for r in records:
+        k = group_key(r, by)
+        groups.setdefault(k, GroupStats(key=k)).add(r)
+    return dict(
+        sorted(groups.items(), key=lambda kv: (-kv[1].energy_kwh, kv[0]))
+    )
+
+
+def totals(records: "list[JobRecord]") -> GroupStats:
+    t = GroupStats(key="total")
+    for r in records:
+        t.add(r)
+    return t
+
+
+def report_dict(records: "list[JobRecord]", by: str = "user") -> dict:
+    """The full report payload (what ``ecoreport --json`` emits)."""
+    return {
+        "by": by,
+        "groups": [g.to_dict() for g in aggregate(records, by).values()],
+        "total": totals(records).to_dict(),
+    }
+
+
+REPORT_HEADERS = [
+    "Key", "Jobs", "Done", "Defer", "CPUh",
+    "Energy(kWh)", "CO2(g)", "NoEco CO2(g)", "Saved(g)", "Saved(%)",
+]
+
+
+def report_rows(groups: "dict[str, GroupStats]") -> "list[list[str]]":
+    rows = []
+    for g in groups.values():
+        saved_pct = (
+            100.0 * g.carbon_saved_gco2 / g.carbon_nodefer_gco2
+            if g.carbon_nodefer_gco2 > 0
+            else 0.0
+        )
+        rows.append(
+            [
+                g.key,
+                str(g.jobs),
+                str(g.completed),
+                str(g.eco_deferred),
+                f"{g.cpu_hours:.1f}",
+                f"{g.energy_kwh:.3f}",
+                f"{g.carbon_gco2:.1f}",
+                f"{g.carbon_nodefer_gco2:.1f}",
+                f"{g.carbon_saved_gco2:+.1f}",
+                f"{saved_pct:+.1f}",
+            ]
+        )
+    return rows
+
+
+def render_report(records: "list[JobRecord]", by: str = "user",
+                  *, color: "bool | None" = None) -> str:
+    """Human-readable report: per-group table + a totals line."""
+    from repro.cli.render import render_table
+
+    groups = aggregate(records, by)
+    t = totals(records)
+    table = render_table(REPORT_HEADERS, report_rows(groups), enabled=color)
+    saved_pct = (
+        100.0 * t.carbon_saved_gco2 / t.carbon_nodefer_gco2
+        if t.carbon_nodefer_gco2 > 0
+        else 0.0
+    )
+    summary = (
+        f"{t.jobs} job(s), {t.eco_deferred} eco-deferred | "
+        f"{t.energy_kwh:.3f} kWh, {t.carbon_gco2:.1f} gCO2 "
+        f"(no-eco counterfactual {t.carbon_nodefer_gco2:.1f} g → "
+        f"saved {t.carbon_saved_gco2:+.1f} g, {saved_pct:+.1f}%)"
+    )
+    return table + "\n" + summary

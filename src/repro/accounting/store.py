@@ -1,0 +1,306 @@
+"""``HistoryStore`` — append-only on-disk archive of completed jobs.
+
+Jobs vanish from ``squeue`` the moment they leave the queue; the store is
+where they land afterwards, one JSON record per line. The format is
+deliberately boring — JSONL, one :class:`JobRecord` per line — so it is
+
+* **append-only**: writers hold a lock and issue one ``write()`` per
+  record, so concurrent appenders interleave whole lines, never bytes;
+* **crash-tolerant**: a torn final line is skipped on scan, not fatal;
+* **forward-compatible**: unknown keys in old/new records are ignored,
+  missing keys take the dataclass default.
+
+Everything downstream — :mod:`repro.accounting.report` aggregation,
+:class:`repro.accounting.predict.RuntimePredictor`, the ``ecoreport``
+CLI — is a pure function of a scan over this file.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import threading
+from dataclasses import asdict, dataclass, fields
+from datetime import datetime
+from pathlib import Path
+
+#: default archive location; override with $NBI_HISTORY or the
+#: ``history_file`` config key (see repro.core.config).
+DEFAULT_HISTORY_PATH = "~/.nbi/history.jsonl"
+
+_TERMINAL = (
+    "COMPLETED", "FAILED", "CANCELLED", "TIMEOUT", "NODE_FAIL", "OUT_OF_MEMORY",
+)
+
+
+@dataclass
+class JobRecord:
+    """One completed job, as the accounting layer remembers it.
+
+    Times are ISO-8601 strings (empty when unknown). ``runtime_s`` is the
+    *actual* elapsed runtime; ``time_limit_s`` is what was requested — the
+    gap between the two is exactly what the RuntimePredictor learns.
+    ``carbon_nodefer_gco2`` is the counterfactual: the carbon this job
+    would have emitted had it started at ``requested_start`` (submission
+    time) instead of when eco mode actually ran it.
+    """
+
+    jobid: str = ""
+    name: str = ""
+    user: str = ""
+    partition: str = ""
+    tool: str = ""  # wrapper/tool name; "" for plain runjob commands
+    state: str = ""
+    cpus: int = 1
+    memory_mb: int = 0
+    time_limit_s: int = 0
+    runtime_s: int = 0
+    submitted_at: str = ""
+    started_at: str = ""
+    finished_at: str = ""
+    node: str = ""
+    restarts: int = 0
+    # eco decision, as made at submission time
+    eco_deferred: bool = False
+    eco_tier: int = 0
+    requested_start: str = ""  # counterfactual no-eco start (submission time)
+    # energy & carbon, filled in by the EnergyModel at collection time
+    energy_kwh: float = 0.0
+    carbon_gco2: float = 0.0
+    carbon_nodefer_gco2: float = 0.0
+
+    # -- serialisation -------------------------------------------------------
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "JobRecord":
+        known = {f.name for f in fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in known})
+
+    # -- derived -------------------------------------------------------------
+
+    @property
+    def is_terminal(self) -> bool:
+        return self.state in _TERMINAL
+
+    @property
+    def completed(self) -> bool:
+        return self.state == "COMPLETED"
+
+    @property
+    def cpu_hours(self) -> float:
+        return self.cpus * self.runtime_s / 3600.0
+
+    @property
+    def carbon_saved_gco2(self) -> float:
+        """Counterfactual minus actual (positive = eco mode saved carbon)."""
+        return self.carbon_nodefer_gco2 - self.carbon_gco2
+
+    def started_dt(self) -> datetime | None:
+        return _parse_iso(self.started_at)
+
+    def requested_dt(self) -> datetime | None:
+        return _parse_iso(self.requested_start) or _parse_iso(self.submitted_at)
+
+
+_SWEEP_SUFFIX = re.compile(r"[-_.]\d+$")
+
+
+def name_stem(name: str) -> str:
+    """Group ``align-0``/``align-1``/… sweeps under one key.
+
+    Only a *separator + digits* suffix is stripped (repeatedly, to a fixed
+    point), so the function is idempotent and a bare digit-ending name like
+    ``kraken2`` keys as itself — records archived as ``kraken2-0`` and a
+    lookup for ``kraken2`` land on the same key.
+    """
+    while True:
+        stripped = _SWEEP_SUFFIX.sub("", name)
+        if stripped == name or not stripped:
+            return name
+        name = stripped
+
+
+def _parse_iso(s: str) -> datetime | None:
+    if not s:
+        return None
+    try:
+        return datetime.fromisoformat(s)
+    except ValueError:
+        return None
+
+
+def history_path(path: str | None = None) -> Path:
+    """Resolve the archive path: arg > $NBI_HISTORY > config > default."""
+    if path:
+        return Path(path).expanduser()
+    env = os.environ.get("NBI_HISTORY")
+    if env:
+        return Path(env).expanduser()
+    from repro.core.config import load_config
+
+    cfg_path = load_config().get("history_file")
+    return Path(cfg_path or DEFAULT_HISTORY_PATH).expanduser()
+
+
+def log_submission(jobid, *, tool: str = "", eco_meta: "dict | None" = None) -> None:
+    """Journal submission-time facts for the configured archive.
+
+    Called by the submission paths (runjob / Launcher / SubmitEngine) so
+    that ``collect()`` over *real* SLURM accounting can restore the tool
+    and eco decision — the simulator carries them natively. No-op when
+    there is nothing to journal.
+    """
+    log_submissions([(jobid, tool, eco_meta)])
+
+
+def log_submissions(entries) -> None:
+    """Batched :func:`log_submission`: ``entries`` is an iterable of
+    ``(jobid, tool, eco_meta)``. Resolves the archive path and opens the
+    journal once for the whole batch."""
+    entries = [(j, t, m) for j, t, m in entries if t or m]
+    if not entries:
+        return
+    HistoryStore().submit_log().log_many(entries)
+
+
+class HistoryStore:
+    """Append-only JSONL store of :class:`JobRecord` entries."""
+
+    def __init__(self, path: "str | Path | None" = None):
+        self.path = history_path(str(path) if path is not None else None)
+        self._lock = threading.Lock()
+
+    # -- writing -------------------------------------------------------------
+
+    def append(self, record: JobRecord) -> None:
+        self.append_many([record])
+
+    def append_many(self, records: "list[JobRecord]") -> None:
+        if not records:
+            return
+        payload = "".join(
+            json.dumps(r.to_dict(), separators=(",", ":"), sort_keys=True) + "\n"
+            for r in records
+        )
+        with self._lock:
+            self.path.parent.mkdir(parents=True, exist_ok=True)
+            with self.path.open("a", encoding="utf-8") as fh:
+                fh.write(payload)
+
+    # -- reading -------------------------------------------------------------
+
+    def scan(self):
+        """Yield every parseable record in file order (torn lines skipped)."""
+        if not self.path.is_file():
+            return
+        with self.path.open("r", encoding="utf-8") as fh:
+            for line in fh:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    yield JobRecord.from_dict(json.loads(line))
+                except (json.JSONDecodeError, TypeError):
+                    continue  # torn/corrupt line — skip, keep scanning
+
+    def __iter__(self):
+        return self.scan()
+
+    def __len__(self) -> int:
+        return sum(1 for _ in self.scan())
+
+    def ids(self) -> set:
+        """Job ids already archived (collectors dedup against this)."""
+        return {r.jobid for r in self.scan()}
+
+    # -- submission-side companion --------------------------------------------
+
+    def submit_log(self) -> "SubmitLog":
+        """The sidecar recording submission-time facts for this archive."""
+        return SubmitLog(self.path.with_name(self.path.name + ".submits"))
+
+    def records(
+        self,
+        *,
+        user: str | None = None,
+        tool: str | None = None,
+        state: str | None = None,
+        since: datetime | None = None,
+    ) -> "list[JobRecord]":
+        out = []
+        for r in self.scan():
+            if user is not None and r.user != user:
+                continue
+            # same key the report prints for --by tool, so a user can
+            # filter by exactly what the table showed
+            if tool is not None and (r.tool or name_stem(r.name)) != tool:
+                continue
+            if state is not None and r.state != state:
+                continue
+            if since is not None:
+                t = r.started_dt() or r.requested_dt()
+                if t is None or t < since:
+                    continue
+            out.append(r)
+        return out
+
+
+class SubmitLog:
+    """Submission-time facts sacct can never report (tool, eco decision).
+
+    The simulator carries these on the :class:`SimJob` itself, but real
+    SLURM forgets them the moment ``sbatch`` returns — so the submission
+    paths journal ``jobid → {tool, eco_tier, eco_deferred}`` here (same
+    JSONL discipline as the main archive) and ``collect()`` merges the
+    journal into sacct-derived records. Missing/unjournaled jobids simply
+    keep the field defaults.
+    """
+
+    def __init__(self, path: "str | Path"):
+        self.path = Path(path).expanduser()
+        self._lock = threading.Lock()
+
+    def log(self, jobid, *, tool: str = "", eco_meta: "dict | None" = None) -> None:
+        if not tool and not eco_meta:
+            return  # nothing sacct doesn't already know
+        self.log_many([(jobid, tool, eco_meta)])
+
+    def log_many(self, entries) -> None:
+        """One locked write for a whole batch of ``(jobid, tool, eco_meta)``."""
+        lines = []
+        for jobid, tool, eco_meta in entries:
+            entry = {"jobid": str(jobid), "tool": tool or ""}
+            if eco_meta:
+                entry["eco_tier"] = int(eco_meta.get("tier", 0) or 0)
+                entry["eco_deferred"] = bool(eco_meta.get("deferred", False))
+            lines.append(json.dumps(entry, separators=(",", ":"), sort_keys=True))
+        if not lines:
+            return
+        payload = "\n".join(lines) + "\n"
+        with self._lock:
+            self.path.parent.mkdir(parents=True, exist_ok=True)
+            with self.path.open("a", encoding="utf-8") as fh:
+                fh.write(payload)
+
+    def load(self) -> "dict[str, dict]":
+        """jobid → journal entry (later entries win)."""
+        out: dict[str, dict] = {}
+        if not self.path.is_file():
+            return out
+        with self.path.open("r", encoding="utf-8") as fh:
+            for line in fh:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    entry = json.loads(line)
+                except json.JSONDecodeError:
+                    continue
+                jid = str(entry.get("jobid", ""))
+                if jid:
+                    out[jid] = entry
+        return out

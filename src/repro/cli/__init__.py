@@ -9,4 +9,5 @@
 | whojobs   | cluster utilisation grouped by user                 |
 | session   | launch an interactive SLURM session                 |
 | nbilaunch | run a declarative tool wrapper (Launcher)           |
+| ecoreport | energy/carbon accounting + eco-mode savings report  |
 """

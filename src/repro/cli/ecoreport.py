@@ -1,0 +1,103 @@
+"""ecoreport — energy, carbon, and eco-mode savings from the job archive.
+
+Aggregates the :class:`~repro.accounting.store.HistoryStore` into
+per-user (or per-tool) totals: jobs, cpu-hours, energy, carbon, and the
+headline number — **carbon saved by eco mode**, computed as the
+difference between each job's actual emissions and the counterfactual
+emissions had it started at submission time instead of its deferred
+eco window.
+
+    ecoreport                      # per-user table from the archive
+    ecoreport --by tool            # group by tool / job-name stem
+    ecoreport --collect            # harvest backend accounting first
+    ecoreport --json               # machine-readable (shared dialect)
+    ecoreport --user alice --since 2026-01-01
+
+Energy figures prefer measured sacct ``ConsumedEnergy``; jobs without a
+reading (and everything from the simulator) use the deterministic
+cpu × time × TDP model (config key ``energy_cpu_watts``). Carbon uses the
+configured ``carbon_trace`` or, absent one, a synthetic reference curve —
+relative savings are then indicative, not metered.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from datetime import datetime
+
+from repro.accounting import (
+    EnergyModel,
+    HistoryStore,
+    collect,
+    render_report,
+    report_dict,
+)
+from repro.cli.render import emit_json
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="ecoreport",
+        description="Energy, carbon, and eco-mode savings report.",
+    )
+    ap.add_argument("--history", default=None,
+                    help="job archive path (default: $NBI_HISTORY / config)")
+    ap.add_argument("--by", choices=["user", "tool", "none"], default="user",
+                    help="grouping for the table (default: user)")
+    ap.add_argument("-u", "--user", default=None, help="filter to one user")
+    ap.add_argument("--tool", default=None, help="filter to one tool/name stem")
+    ap.add_argument("--state", default=None, help="filter by final state")
+    ap.add_argument("--since", default=None,
+                    help="only jobs started on/after this ISO date(time); "
+                         "with --collect, the same instant also widens the "
+                         "sacct harvest window (--starttime)")
+    ap.add_argument("--collect", action="store_true",
+                    help="harvest the backend's accounting into the archive first")
+    ap.add_argument("--json", dest="as_json", action="store_true",
+                    help="emit the report as JSON")
+    ap.add_argument("--no-color", action="store_true")
+    return ap
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    store = HistoryStore(args.history)
+
+    # validate --since up front: nothing may mutate the archive before a
+    # bad value errors out
+    since = None
+    if args.since:
+        try:
+            since = datetime.fromisoformat(args.since)
+        except ValueError:
+            print(f"cannot parse --since {args.since!r} (want ISO 8601)",
+                  file=sys.stderr)
+            return 2
+
+    if args.collect:
+        from repro.core import get_backend
+
+        n = collect(get_backend(), store, EnergyModel.from_config(),
+                    since=since.isoformat() if since else "")
+        if not args.as_json:
+            print(f"collected {n} new record(s) into {store.path}")
+
+    records = store.records(
+        user=args.user, tool=args.tool, state=args.state, since=since
+    )
+
+    if args.as_json:
+        emit_json(report_dict(records, by=args.by))
+        return 0
+    if not records:
+        print(f"no archived jobs in {store.path} "
+              "(run with --collect, or submit some jobs first)")
+        return 0
+    print(render_report(records, by=args.by,
+                        color=False if args.no_color else None))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -10,7 +10,7 @@ import argparse
 import sys
 
 from repro.core import Queue, get_queue_cache
-from repro.cli.render import render_table, state_color
+from repro.cli.render import emit_json, render_table, state_color
 
 HEADERS = ["JobID", "User", "Queue", "JobName", "State",
            "TimeUsed", "TimeLeft", "TimeLimit", "NodeList", "Reason"]
@@ -34,6 +34,8 @@ def main(argv=None) -> int:
     ap.add_argument("--cancel", action="store_true",
                     help="cancel every job matching the filters")
     ap.add_argument("--yes", action="store_true", help="skip confirmation")
+    ap.add_argument("--json", dest="as_json", action="store_true",
+                    help="emit the (filtered) queue as JSON for scripting")
     ap.add_argument("--no-color", action="store_true")
     args = ap.parse_args(argv)
 
@@ -64,6 +66,9 @@ def main(argv=None) -> int:
         print(f"cancelled {len(ids)} job(s)")
         return 0
 
+    if args.as_json:
+        emit_json([j for j in q])  # QueuedJob dataclasses → shared serializer
+        return 0
     if not len(q):
         print("no jobs in queue")
         return 0

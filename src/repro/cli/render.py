@@ -1,11 +1,16 @@
-"""ANSI table rendering shared by lsjobs / viewjobs / whojobs.
+"""ANSI table + JSON rendering shared by the CLI tools.
 
 No external dependency (the Perl original uses Text::ASCIITable +
 Term::ANSIColor; this is the equivalent, honouring NO_COLOR and non-tty).
+``emit_json`` is the one serializer behind every tool's ``--json`` flag
+(lsjobs, whojobs, ecoreport), so scripted consumers see a single dialect:
+two-space indent, sorted keys, ISO strings for datetimes.
 """
 
 from __future__ import annotations
 
+import dataclasses
+import json
 import os
 import sys
 
@@ -28,6 +33,26 @@ STATE_COLORS = {
     "CANCELLED": "grey",
     "COMPLETED": "blue",
 }
+
+
+def _json_default(obj):
+    if hasattr(obj, "to_dict"):  # curated payloads win over raw asdict
+        return obj.to_dict()
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        return dataclasses.asdict(obj)
+    if hasattr(obj, "isoformat"):  # datetime/date
+        return obj.isoformat()
+    return str(obj)
+
+
+def to_json(payload) -> str:
+    """The CLI suite's canonical JSON dialect (stable for scripting)."""
+    return json.dumps(payload, indent=2, sort_keys=True, default=_json_default)
+
+
+def emit_json(payload, fh=None) -> None:
+    """Serialize ``payload`` and print it — every ``--json`` flag ends here."""
+    print(to_json(payload), file=fh if fh is not None else sys.stdout)
 
 
 def use_color(force: bool | None = None) -> bool:

@@ -123,15 +123,28 @@ def main(argv=None) -> int:
     # --- eco mode (paper: ON by default, --no-eco / economy_mode=0 disable)
     use_eco = cfg.get_bool("economy_mode") if args.eco is None else args.eco
     eco_note = ""
+    eco_meta = None
     if use_eco and not opts.begin:
+        from repro.accounting import predictor_from_config
+
         now = datetime.fromisoformat(args.now) if args.now else datetime.now()
-        decision = EcoScheduler(cfg).next_window(opts.time_s, now)
+        # the tier is priced from this job's historical runtime when the
+        # archive knows it; with no history this is exactly next_window()
+        sched = EcoScheduler(cfg, predictor=predictor_from_config(cfg))
+        predicted_s = sched.effective_duration(opts.time_s, args.name)
+        decision = sched.decide(opts.time_s, now, name=args.name)
+        eco_meta = {"tier": decision.tier, "deferred": decision.deferred}
         if decision.deferred:
             opts.set_begin(decision.begin_directive)
             eco_note = (
                 f"eco mode: deferred to {decision.begin_directive} "
                 f"(tier {decision.tier})"
             )
+            if predicted_s < opts.time_s:
+                eco_note += (
+                    f" [predicted {predicted_s // 60} min from history, "
+                    f"limit {opts.time_s // 60} min]"
+                )
 
     if args.from_file:
         # --- batch mode: one job per command line, via the SubmitEngine
@@ -148,6 +161,8 @@ def main(argv=None) -> int:
             Job(name=f"{args.name}-{i}", command=cmd, opts=deepcopy(opts))
             for i, cmd in enumerate(commands)
         ]
+        for job in jobs:
+            job.eco_meta = eco_meta
         if args.array:
             # one array job carries the whole batch → share one name
             for job in jobs:
@@ -165,6 +180,10 @@ def main(argv=None) -> int:
                 print(f"# {eco_note}", file=sys.stderr)
             return 0
         result = engine.submit_many(jobs)
+        if eco_meta:
+            from repro.accounting import log_submissions
+
+            log_submissions([(jid, "", eco_meta) for jid in result.ids])
         if eco_note:
             print(eco_note)
         for jid in result.ids:
@@ -184,12 +203,21 @@ def main(argv=None) -> int:
         files=args.files,
         workdir="",
     )
+    job.eco_meta = eco_meta
     if args.dry_run:
         print(job.script(), end="")
         if eco_note:
             print(f"# {eco_note}", file=sys.stderr)
         return 0
     jobid = job.run(get_backend())
+    if eco_meta:
+        from repro.accounting import log_submissions
+
+        if job.files:  # sacct reports array tasks as base_0..base_k
+            log_submissions([(f"{jobid}_{t}", "", eco_meta)
+                             for t in range(len(job.files))])
+        else:
+            log_submissions([(str(jobid), "", eco_meta)])
     if eco_note:
         print(eco_note)
     print(jobid)

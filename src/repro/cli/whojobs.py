@@ -9,10 +9,11 @@ from __future__ import annotations
 import argparse
 
 from repro.core import Queue, get_queue_cache
-from repro.cli.render import render_table
+from repro.cli.render import emit_json, render_table
 
 
-def utilisation_rows(q: Queue) -> list[list[str]]:
+def utilisation_records(q: Queue) -> list[dict]:
+    """Per-user utilisation, sorted by CPUs in use (the ``--json`` payload)."""
     per_user: dict[str, dict] = {}
     total_cpus = 0
     for j in q:
@@ -28,18 +29,34 @@ def utilisation_rows(q: Queue) -> list[list[str]]:
             total_cpus += cpus
         elif j.state == "PENDING":
             u["pend"] += 1
-    rows = []
+    out = []
     for user, u in sorted(per_user.items(), key=lambda kv: -kv[1]["cpus"]):
         share = u["cpus"] / total_cpus if total_cpus else 0.0
-        bar = "#" * round(share * 20)
+        out.append(
+            {
+                "user": user,
+                "running": u["run"],
+                "pending": u["pend"],
+                "cpus": u["cpus"],
+                "mem_mb": u["mem_mb"],
+                "share": round(share, 4),
+            }
+        )
+    return out
+
+
+def utilisation_rows(q: Queue) -> list[list[str]]:
+    rows = []
+    for r in utilisation_records(q):
+        bar = "#" * round(r["share"] * 20)
         rows.append(
             [
-                user,
-                str(u["run"]),
-                str(u["pend"]),
-                str(u["cpus"]),
-                f"{u['mem_mb'] / 1024:.0f}",
-                f"{share * 100:4.0f}% {bar}",
+                r["user"],
+                str(r["running"]),
+                str(r["pending"]),
+                str(r["cpus"]),
+                f"{r['mem_mb'] / 1024:.0f}",
+                f"{r['share'] * 100:4.0f}% {bar}",
             ]
         )
     return rows
@@ -48,10 +65,15 @@ def utilisation_rows(q: Queue) -> list[list[str]]:
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="whojobs")
     ap.add_argument("-q", "--queue", dest="partition", default=None)
+    ap.add_argument("--json", dest="as_json", action="store_true",
+                    help="emit per-user utilisation as JSON for scripting")
     ap.add_argument("--no-color", action="store_true")
     args = ap.parse_args(argv)
 
     q = Queue(queue=args.partition, backend=get_queue_cache())
+    if args.as_json:
+        emit_json(utilisation_records(q))
+        return 0
     if not len(q):
         print("cluster is idle")
         return 0

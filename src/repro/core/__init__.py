@@ -13,7 +13,13 @@ Programmatic use mirrors the paper's Perl API::
     job2.run()
 """
 
-from .backend import BatchSubmitError, SlurmBackend, get_backend, reset_shared_sim
+from .backend import (
+    BatchSubmitError,
+    SlurmBackend,
+    get_backend,
+    parse_sacct_output,
+    reset_shared_sim,
+)
 from .config import NBIConfig, load_config, write_config
 from .eco import CarbonTrace, EcoDecision, EcoScheduler
 from .engine import BatchResult, QueueCache, SubmitEngine, get_queue_cache, reset_queue_cache
@@ -36,5 +42,5 @@ __all__ = [
     "NBIConfig", "load_config", "write_config",
     "SimCluster", "SimJob", "SimNode",
     "BatchSubmitError", "SlurmBackend", "get_backend", "reset_shared_sim",
-    "format_slurm_time", "parse_memory_mb", "parse_time_s",
+    "format_slurm_time", "parse_memory_mb", "parse_sacct_output", "parse_time_s",
 ]

@@ -19,6 +19,18 @@ from typing import Protocol, runtime_checkable
 
 from .queue import SQUEUE_FIELDS, SQUEUE_FORMAT
 
+# sacct columns for the accounting layer (parsable2 = pipe-separated, no
+# trailing delimiter). Raw variants give seconds/joules without pretty units.
+SACCT_FIELDS = (
+    "jobid", "name", "user", "partition", "cpus", "memory", "time_limit",
+    "submitted_at", "started_at", "finished_at", "state", "elapsed_s",
+    "consumed_energy", "node",
+)
+SACCT_FORMAT = (
+    "JobID,JobName,User,Partition,AllocCPUS,ReqMem,Timelimit,"
+    "Submit,Start,End,State,ElapsedRaw,ConsumedEnergyRaw,NodeList"
+)
+
 
 class BatchSubmitError(RuntimeError):
     """Some submissions in a batch failed.
@@ -117,6 +129,27 @@ class SlurmBackend:
         if jobids:
             subprocess.run(["scancel", *[str(j) for j in jobids]], check=True)
 
+    def accounting(self, *, since: str = "", user: str = "") -> list[dict]:
+        """Completed-job history via ``sacct`` (normalised row dicts).
+
+        Rows use :data:`SACCT_FIELDS` keys with seconds/MB/joule values
+        normalised by :func:`parse_sacct_output`. ``since`` is passed to
+        ``--starttime`` (sacct syntax, e.g. ``now-7days``); default scope
+        is the calling user unless ``user`` (or ``-a`` via user='*') says
+        otherwise.
+        """
+        cmd = ["sacct", "--noheader", "--parsable2", f"--format={SACCT_FORMAT}"]
+        if since:
+            cmd += ["--starttime", since]
+        if user == "*":
+            cmd.append("--allusers")
+        elif user:
+            cmd += ["--user", user]
+        out = subprocess.run(
+            cmd, check=True, capture_output=True, text=True
+        ).stdout
+        return parse_sacct_output(out)
+
     def nodes_info(self) -> list[dict]:
         out = subprocess.run(
             ["sinfo", "--noheader", "-N", "-o", "%N|%c|%m|%T"],
@@ -137,6 +170,76 @@ class SlurmBackend:
                     }
                 )
         return rows
+
+
+# ---------------------------------------------------------------------------
+# sacct output parsing (pure functions — unit-tested without SLURM)
+# ---------------------------------------------------------------------------
+
+
+def parse_sacct_output(text: str) -> list[dict]:
+    """``sacct --parsable2`` text → normalised row dicts.
+
+    Job *steps* (``123.batch``, ``123.extern``, ``123.0``) are folded away:
+    only whole-job rows survive, but a step's ``ConsumedEnergy`` backfills
+    its parent when the parent reports none (common sacct layout — the
+    energy plugin accounts on the batch step).
+    """
+    rows: list[dict] = []
+    by_base: dict[str, dict] = {}
+    for line in text.splitlines():
+        parts = line.split("|")
+        if len(parts) != len(SACCT_FIELDS):
+            continue
+        raw = dict(zip(SACCT_FIELDS, (p.strip() for p in parts)))
+        base, _, step = raw["jobid"].partition(".")
+        if step:  # a job step: only mined for energy backfill
+            parent = by_base.get(base)
+            if parent is not None and not _energy_j(parent["consumed_energy"]):
+                if _energy_j(raw["consumed_energy"]):
+                    parent["consumed_energy"] = raw["consumed_energy"]
+            continue
+        row = _normalise_sacct_row(raw)
+        rows.append(row)
+        by_base[base] = row
+    return rows
+
+
+def _normalise_sacct_row(raw: dict) -> dict:
+    from .resources import parse_memory_mb, parse_time_s
+
+    row = dict(raw)
+    try:
+        row["cpus"] = int(raw["cpus"] or 1)
+    except ValueError:
+        row["cpus"] = 1
+    try:
+        # old sacct suffixes ReqMem with n (per node) / c (per CPU); the
+        # per-CPU form is a multiplier, not a total
+        mem_raw = raw["memory"]
+        per_cpu = mem_raw.endswith("c")
+        mb = parse_memory_mb(mem_raw.rstrip("nc")) if mem_raw else 0
+        row["memory_mb"] = mb * row["cpus"] if per_cpu else mb
+    except ValueError:
+        row["memory_mb"] = 0
+    try:
+        row["time_limit_s"] = parse_time_s(raw["time_limit"]) if raw["time_limit"] else 0
+    except ValueError:
+        row["time_limit_s"] = 0  # UNLIMITED / Partition_Limit
+    try:
+        row["elapsed_s"] = int(float(raw["elapsed_s"] or 0))
+    except ValueError:
+        row["elapsed_s"] = 0
+    for key in ("submitted_at", "started_at", "finished_at"):
+        if row[key] in ("Unknown", "None", "N/A"):
+            row[key] = ""
+    return row
+
+
+def _energy_j(s: str) -> float:
+    from repro.accounting.energy import parse_consumed_energy
+
+    return parse_consumed_energy(s)
 
 
 _SHARED_SIM = None

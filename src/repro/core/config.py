@@ -17,6 +17,9 @@ Recognised keys (all optional):
 ``eco_horizon_days``        how far ahead the scheduler searches
 ``eco_min_delay_minutes``   do not schedule sooner than now + this
 ``carbon_trace``            optional CSV path for carbon-aware scoring
+``history_file``            job archive path (default ``~/.nbi/history.jsonl``)
+``eco_prediction``          1/0 — estimate durations from the job archive
+``energy_cpu_watts``        per-allocated-core draw for the energy model
 """
 
 from __future__ import annotations
@@ -38,6 +41,9 @@ _DEFAULTS = {
     "eco_horizon_days": "14",
     "eco_min_delay_minutes": "0",
     "carbon_trace": "",
+    "history_file": "",
+    "eco_prediction": "1",
+    "energy_cpu_watts": "12.0",
 }
 
 

@@ -20,6 +20,13 @@ Beyond the paper, the scheduler can *score* candidate starts against a
 carbon-intensity trace (gCO2/kWh per hour-of-week): among candidates of the
 best achievable tier it picks the lowest-carbon start. With no trace the
 behaviour is exactly the paper's (earliest candidate of the best tier).
+
+It can also consult a :class:`~repro.accounting.predict.RuntimePredictor`
+(``predictor=`` / the ``decide``/``decide_many`` entry points): the tier is
+then computed from the *historically observed* duration of this kind of job
+instead of the padded request limit, so habitually short jobs complete
+inside tier-1 windows. With no predictor — or an empty history — decisions
+are bit-identical to the plain scheduler.
 """
 
 from __future__ import annotations
@@ -79,6 +86,7 @@ class EcoScheduler:
         horizon_days: int | None = None,
         min_delay_s: int | None = None,
         carbon_trace: "CarbonTrace | None" = None,
+        predictor=None,
     ):
         cfg = config if config is not None else load_config()
         self.weekday_windows = (
@@ -106,6 +114,9 @@ class EcoScheduler:
             trace_path = cfg.get("carbon_trace")
             carbon_trace = CarbonTrace.from_csv(trace_path) if trace_path else None
         self.carbon_trace = carbon_trace
+        #: optional RuntimePredictor (duck-typed: .predict(default_s, name=,
+        #: user=)); None ⇒ decisions use the requested limit verbatim.
+        self.predictor = predictor
 
     # -- public API ---------------------------------------------------------
 
@@ -118,16 +129,62 @@ class EcoScheduler:
         """
         return self._decide(duration_s, now)
 
-    def decide_many(self, durations_s: "list[int]", now: datetime) -> "list[EcoDecision]":
+    def decide(
+        self,
+        duration_s: int,
+        now: datetime,
+        *,
+        name: str = "",
+        user: str = "",
+        tool: str = "",
+    ) -> EcoDecision:
+        """Predictor-aware :meth:`next_window`.
+
+        When a predictor is attached and the job is identifiable
+        (``tool``, preferred, is matched verbatim against archived tool
+        names; ``name`` is matched by stem), the decision is computed from
+        the predicted duration instead of the requested limit. No
+        predictor, no history for this key, or no identity ⇒ exactly
+        ``next_window(duration_s, now)``.
+        """
+        return self._decide(
+            self.effective_duration(duration_s, name, user, tool), now
+        )
+
+    def effective_duration(
+        self, duration_s: int, name: str = "", user: str = "", tool: str = ""
+    ) -> int:
+        """The duration the tier maths will use (predicted when possible)."""
+        if self.predictor is None or not (name or tool):
+            return duration_s
+        return self.predictor.predict(duration_s, name=name, user=user, tool=tool)
+
+    def decide_many(
+        self,
+        durations_s: "list[int]",
+        now: datetime,
+        keys: "list[tuple[str, str]] | None" = None,
+    ) -> "list[EcoDecision]":
         """Vectorized :meth:`next_window`: one decision per duration.
 
         The absolute eco/peak windows over the horizon are computed once and
         shared across the whole batch, so pricing N jobs costs one window
         scan instead of N. Decisions are bit-identical to calling
         ``next_window`` per job.
+
+        ``keys`` (optional, one ``(name, user)`` or ``(name, user, tool)``
+        tuple per duration) routes each duration through the attached
+        predictor first — the batched equivalent of :meth:`decide`.
         """
         if not durations_s:
             return []
+        if keys is not None:
+            if len(keys) != len(durations_s):
+                raise ValueError("keys must match durations_s 1:1")
+            durations_s = [
+                self.effective_duration(d, *key)
+                for d, key in zip(durations_s, keys)
+            ]
         earliest = now + timedelta(seconds=self.min_delay_s)
         horizon = now + timedelta(days=self.horizon_days)
         max_dur = max(max(durations_s), 1)

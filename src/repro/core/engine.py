@@ -188,6 +188,7 @@ def _coalesce_key(job: Job):
     return (
         job.workdir,
         job.sim_duration_s,
+        getattr(job, "tool", ""),  # accounting key must survive coalescing
         o.queue, o.threads, o.memory_mb, o.time_s,
         o.email_address, o.email_type, o.tmpdir, o.output_dir,
         o.begin, o.array_throttle,
@@ -212,6 +213,11 @@ class SubmitEngine:
         ``EcoScheduler.decide_many`` scan and inject ``--begin``.
         Default ``False``: callers like runjob decide per-job policy
         themselves before handing jobs over.
+    predictor:
+        Optional :class:`~repro.accounting.predict.RuntimePredictor`; eco
+        decisions are then priced from each job's historical runtime
+        instead of its padded request limit. With no predictor (or an
+        empty history) decisions are bit-identical to before.
     now:
         Injectable clock for deterministic eco decisions.
     """
@@ -224,6 +230,7 @@ class SubmitEngine:
         min_array_size: int = 2,
         eco: bool = False,
         scheduler=None,
+        predictor=None,
         now: datetime | None = None,
         cache: QueueCache | None = None,
     ):
@@ -236,6 +243,7 @@ class SubmitEngine:
         self.min_array_size = max(2, int(min_array_size))
         self.eco = eco
         self.scheduler = scheduler
+        self.predictor = predictor
         self.now = now
         self.cache = cache
 
@@ -277,6 +285,8 @@ class SubmitEngine:
                 sim_duration_s=first.sim_duration_s,
             )
             array_job.task_commands = [jobs[i].commands[0] for i in members]
+            array_job.eco_meta = getattr(first, "eco_meta", None)
+            array_job.tool = getattr(first, "tool", "")
             units.append((array_job, members))
             result.coalesced += len(members)
         for i in singles:
@@ -288,11 +298,27 @@ class SubmitEngine:
             if sched is None:
                 from .eco import EcoScheduler
 
-                sched = EcoScheduler()
+                sched = EcoScheduler(predictor=self.predictor)
+            elif self.predictor is not None and getattr(sched, "predictor", None) is None:
+                # a supplied scheduler must not silently drop the engine's
+                # predictor — price through a copy so the caller's object
+                # keeps exactly the behaviour it was configured with
+                import copy
+
+                sched = copy.copy(sched)
+                sched.predictor = self.predictor
             clock = self.now or datetime.now()
             pending = [(u, m) for u, m in units if not u.opts.begin]
-            decisions = sched.decide_many([u.opts.time_s for u, _ in pending], clock)
+            # history-driven durations (identity when no predictor/history);
+            # tool is the verbatim archive key, name falls back by stem
+            keys = None
+            if getattr(sched, "predictor", None) is not None:
+                keys = [(u.name, "", getattr(u, "tool", "")) for u, _ in pending]
+            decisions = sched.decide_many(
+                [u.opts.time_s for u, _ in pending], clock, keys=keys
+            )
             for (unit, _), dec in zip(pending, decisions):
+                unit.eco_meta = {"tier": dec.tier, "deferred": dec.deferred}
                 if dec.deferred:
                     unit.opts.set_begin(dec.begin_directive)
                     result.eco_deferred += 1
@@ -320,6 +346,23 @@ class SubmitEngine:
                 result.ids[members[0]] = str(base)
         result.base_ids = list(base_ids)
         result.sbatch_calls = len(units)
+
+        # 6. journal engine-made eco decisions for the accounting layer
+        # (real SLURM cannot report them back through sacct) — one batched
+        # write, not one file open per task
+        if self.eco:
+            from repro.accounting import log_submissions
+
+            entries = []
+            for (unit, members), base in zip(units, base_ids):
+                if not unit.eco_meta:
+                    continue
+                if len(members) > 1 or unit is not jobs[members[0]]:
+                    entries += [(f"{base}_{t}", unit.tool, unit.eco_meta)
+                                for t in range(len(members))]
+                else:
+                    entries.append((str(base), unit.tool, unit.eco_meta))
+            log_submissions(entries)
         return result
 
     # -- completion tracking ---------------------------------------------------

@@ -58,6 +58,11 @@ class Job:
         self.prelude: list[str] = []
         # Optional lines injected after the commands (manifest patching).
         self.trailer: list[str] = []
+        # Accounting metadata: originating tool/wrapper name (predictor key)
+        # and the eco decision made at submission ({"tier": int, "deferred":
+        # bool}); both flow into the job archive at completion.
+        self.tool: str = ""
+        self.eco_meta: dict | None = None
 
     # -- composition ---------------------------------------------------------
 

@@ -148,6 +148,7 @@ class Launcher:
             opts=self.opts,
             backend=self.backend,
         )
+        job.tool = self.tool_name  # accounting/predictor key
         manifest = Manifest(
             self.manifest_path(),
             tool=self.tool_name,
@@ -185,16 +186,27 @@ class Launcher:
         use_eco = self.eco if self.eco is not None else cfg.get_bool("economy_mode")
         if eco is not None:
             use_eco = eco
+        eco_meta = None
         if use_eco and not self.opts.begin:
             from datetime import datetime
 
+            from repro.accounting import predictor_from_config
+
             clock = now or self._now or datetime.now()
-            sched = EcoScheduler(cfg)
-            directive = sched.begin_directive(self.opts.time_s, clock)
-            if directive:
-                self.opts.set_begin(directive)
+            # history-driven duration: a wrapper whose runs habitually finish
+            # early is priced at its observed runtime, not the padded limit
+            sched = EcoScheduler(cfg, predictor=predictor_from_config(cfg))
+            # tool= matches the archive's tool column verbatim
+            decision = sched.decide(self.opts.time_s, clock, tool=self.tool_name)
+            eco_meta = {"tier": decision.tier, "deferred": decision.deferred}
+            if decision.deferred:
+                self.opts.set_begin(decision.begin_directive)
         job = self.to_job()
+        job.eco_meta = eco_meta
         jobid = job.run(self.backend)
+        from repro.accounting import log_submission
+
+        log_submission(jobid, tool=self.tool_name, eco_meta=eco_meta)
         job._manifest.record["resources"]["begin"] = self.opts.begin
         job._manifest.write_submitted(jobid)
         self.last_job = job

@@ -59,6 +59,17 @@ class QueuedJob:
     def from_record(cls, rec: dict) -> "QueuedJob":
         return cls(**{k: str(rec.get(k, "")) for k in SQUEUE_FIELDS})
 
+    def to_dict(self) -> dict:
+        """JSON payload with numeric fields typed (one dialect across all
+        ``--json`` tools: whojobs emits ints, so must lsjobs)."""
+        out = {k: getattr(self, k) for k in SQUEUE_FIELDS}
+        for key in ("cpus", "memory"):
+            try:
+                out[key] = int(out[key])
+            except ValueError:
+                pass  # squeue oddities ("4000Mc") stay verbatim
+        return out
+
     @classmethod
     def from_squeue_line(cls, line: str) -> "QueuedJob | None":
         parts = line.rstrip("\n").split("|")

@@ -10,6 +10,12 @@ drills are all *integration-tested* — deterministically, on any machine.
 With ``execute=True`` the simulator actually runs each job's script through
 ``bash`` at (simulated) completion time, which lets tests verify end-to-end
 behaviour such as the manifest being patched in place by the job itself.
+
+Energy telemetry: every job that consumed CPU time is charged a
+deterministic ``energy_j = watts_per_cpu × cpus × elapsed_seconds`` when it
+reaches a terminal state — the simulator's analogue of sacct's
+``ConsumedEnergy``, which :func:`repro.accounting.collect` harvests into
+the job archive.
 """
 
 from __future__ import annotations
@@ -64,6 +70,10 @@ class SimJob:
     finished_at: datetime | None = None
     array_task_id: int | None = None
     restarts: int = 0
+    tool: str = ""  # launcher/tool name (predictor key); "" for plain jobs
+    eco_deferred: bool = False  # eco mode injected a --begin on this job
+    eco_tier: int = 0  # tier of the eco decision (0 = none/not eco)
+    energy_j: float = 0.0  # deterministic consumed energy, charged at finish
 
     @property
     def base_id(self) -> int:
@@ -80,12 +90,14 @@ class SimCluster:
         default_user: str = "user",
         default_duration_s: int = 60,
         execute: bool = False,
+        watts_per_cpu: float = 12.0,
     ):
         self.nodes = nodes or [SimNode(f"n{i:03d}") for i in range(4)]
         self.now = now or datetime(2026, 3, 18, 10, 0, 0)
         self.default_user = default_user
         self.default_duration_s = default_duration_s
         self.execute = execute
+        self.watts_per_cpu = watts_per_cpu
         self.jobs: dict[str, SimJob] = {}
         self._next_id = 1000001
         self._defer_schedule = False
@@ -105,6 +117,8 @@ class SimCluster:
         duration = job.sim_duration_s
         if duration is None:
             duration = self.default_duration_s
+        # eco metadata stamped by the submission path (engine/launcher/runjob)
+        eco_meta = getattr(job, "eco_meta", None) or {}
         n_tasks = max(1, opts.array_size)
         for t in range(n_tasks):
             jid = f"{base}_{t}" if opts.array_size > 0 else str(base)
@@ -124,6 +138,9 @@ class SimCluster:
                 requeue=opts.requeue,
                 script_path=job.script_path,
                 array_task_id=t if opts.array_size > 0 else None,
+                tool=getattr(job, "tool", "") or "",
+                eco_deferred=bool(eco_meta.get("deferred", False)),
+                eco_tier=int(eco_meta.get("tier", 0) or 0),
             )
         self._log(f"submit {base} name={job.name} tasks={n_tasks}")
         self._try_schedule()
@@ -212,6 +229,7 @@ class SimCluster:
                 continue
             if j.state == "RUNNING":
                 self._release(j)
+                self._charge(j, (self.now - j.started_at).total_seconds())
             j.state = "CANCELLED"
             j.finished_at = self.now
             self._log(f"cancel {jid}")
@@ -229,6 +247,7 @@ class SimCluster:
         for j in self.jobs.values():
             if j.state == "RUNNING" and j.node == name:
                 self._release(j, node_down=True)
+                self._charge(j, (self.now - j.started_at).total_seconds())
                 if j.requeue:
                     j.state = "PENDING"
                     j.reason = "BeginTime" if j.begin and j.begin > self.now else "Resources"
@@ -317,6 +336,7 @@ class SimCluster:
     def _finish(self, j: SimJob) -> None:
         self._release(j)
         j.finished_at = self.now
+        self._charge(j, min(j.duration_s, j.time_limit_s))
         if j.duration_s > j.time_limit_s:
             j.state = "TIMEOUT"
             self._log(f"timeout {j.jobid}")
@@ -340,6 +360,11 @@ class SimCluster:
         else:
             j.state = "COMPLETED"
         self._log(f"finish {j.jobid} state={j.state}")
+
+    def _charge(self, j: SimJob, seconds: float) -> None:
+        """Accumulate consumed energy for ``seconds`` of occupancy (requeued
+        jobs are charged per attempt — the wasted partial run is real)."""
+        j.energy_j += self.watts_per_cpu * j.cpus * max(0.0, seconds)
 
     def _release(self, j: SimJob, node_down: bool = False) -> None:
         if j.node:

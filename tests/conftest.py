@@ -19,6 +19,7 @@ def _isolated_env(tmp_path, monkeypatch):
     monkeypatch.setenv("NBISLURM_CONFIG", str(tmp_path / "nbislurm.config"))
     monkeypatch.setenv("REPRO_BACKEND", "sim")
     monkeypatch.setenv("NBI_TMPDIR", str(tmp_path / "scripts"))
+    monkeypatch.setenv("NBI_HISTORY", str(tmp_path / "history.jsonl"))
     monkeypatch.setenv("REPRO_DISABLE_DISTRIBUTED", "1")
     monkeypatch.delenv("KRAKEN2_DB", raising=False)
     from repro.core import reset_shared_sim

@@ -1,0 +1,647 @@
+"""Accounting subsystem: HistoryStore, EnergyModel, sacct parsing,
+collectors, RuntimePredictor, report aggregation, and the closed
+submit → run → account → learn loop on the simulator."""
+
+import json
+from datetime import datetime, timedelta
+
+import pytest
+
+from repro.accounting import (
+    EnergyModel,
+    HistoryStore,
+    JobRecord,
+    RuntimePredictor,
+    collect,
+    name_stem,
+    parse_consumed_energy,
+    predictor_from_config,
+    report_dict,
+    render_report,
+    synthetic_trace,
+)
+from repro.core import (
+    EcoScheduler,
+    Job,
+    Opts,
+    SimCluster,
+    SubmitEngine,
+    parse_sacct_output,
+)
+
+NOW = datetime(2026, 3, 18, 10, 0)  # Wednesday morning
+
+SCHED = dict(
+    weekday_windows=[(0, 360)], weekend_windows=[(0, 420), (660, 960)],
+    peak_hours=[(1020, 1200)], horizon_days=14, min_delay_s=0,
+)
+
+
+def make_record(i=0, **kw):
+    defaults = dict(
+        jobid=str(1000 + i), name=f"blast-{i}", user="alice",
+        state="COMPLETED", cpus=4, time_limit_s=12 * 3600, runtime_s=3600,
+        started_at="2026-03-18T00:00:00", finished_at="2026-03-18T01:00:00",
+        requested_start="2026-03-17T10:00:00",
+    )
+    defaults.update(kw)
+    return JobRecord(**defaults)
+
+
+# ---------------------------------------------------------------------------
+# HistoryStore
+# ---------------------------------------------------------------------------
+
+
+class TestHistoryStore:
+    def test_append_scan_roundtrip(self, tmp_path):
+        store = HistoryStore(tmp_path / "h.jsonl")
+        store.append(make_record(0))
+        store.append_many([make_record(1), make_record(2)])
+        recs = list(store.scan())
+        assert [r.jobid for r in recs] == ["1000", "1001", "1002"]
+        assert recs[0] == make_record(0)
+        assert len(store) == 3
+
+    def test_unknown_keys_ignored_missing_defaulted(self, tmp_path):
+        p = tmp_path / "h.jsonl"
+        p.write_text(
+            json.dumps({"jobid": "7", "state": "COMPLETED", "new_field": 1}) + "\n"
+        )
+        (rec,) = HistoryStore(p).scan()
+        assert rec.jobid == "7" and rec.cpus == 1 and rec.energy_kwh == 0.0
+
+    def test_torn_line_skipped(self, tmp_path):
+        p = tmp_path / "h.jsonl"
+        good = json.dumps(make_record(0).to_dict())
+        p.write_text(good + "\n" + good[: len(good) // 2])  # torn final line
+        assert len(HistoryStore(p)) == 1
+
+    def test_missing_file_is_empty(self, tmp_path):
+        store = HistoryStore(tmp_path / "nope.jsonl")
+        assert list(store.scan()) == [] and store.ids() == set()
+
+    def test_filters(self, tmp_path):
+        store = HistoryStore(tmp_path / "h.jsonl")
+        store.append_many([
+            make_record(0, user="alice", state="COMPLETED"),
+            make_record(1, user="bob", state="FAILED"),
+            make_record(2, user="alice", tool="kraken2",
+                        started_at="2026-04-01T00:00:00"),
+        ])
+        assert len(store.records(user="alice")) == 2
+        assert len(store.records(state="FAILED")) == 1
+        assert len(store.records(tool="kraken2")) == 1
+        assert len(store.records(since=datetime(2026, 4, 1))) == 1
+
+    def test_env_override_is_default_path(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("NBI_HISTORY", str(tmp_path / "env.jsonl"))
+        assert HistoryStore().path == tmp_path / "env.jsonl"
+
+
+# ---------------------------------------------------------------------------
+# EnergyModel
+# ---------------------------------------------------------------------------
+
+
+class TestEnergyModel:
+    def test_cpu_time_tdp_model(self):
+        m = EnergyModel(watts_per_cpu=10.0, trace=None)
+        # 4 cpus × 10 W × 3600 s = 144 kJ = 0.04 kWh
+        assert m.energy_kwh(4, 3600) == pytest.approx(0.04)
+
+    def test_consumed_energy_suffixes(self):
+        assert parse_consumed_energy("") == 0.0
+        assert parse_consumed_energy("1234") == 1234.0
+        assert parse_consumed_energy("2.43K") == pytest.approx(2430.0)
+        assert parse_consumed_energy("3M") == pytest.approx(3e6)
+        assert parse_consumed_energy("garbage") == 0.0
+
+    def test_synthetic_trace_shape(self):
+        trace = synthetic_trace()
+        assert len(trace.hourly) == 168
+        # evening peak costs more than the small hours, weekends are cheaper
+        mon_3am = trace.at(datetime(2026, 3, 16, 3))
+        mon_6pm = trace.at(datetime(2026, 3, 16, 18))
+        sat_6pm = trace.at(datetime(2026, 3, 21, 18))
+        assert mon_6pm > mon_3am
+        assert sat_6pm < mon_6pm
+
+    def test_annotate_counterfactual_nonzero_saving(self):
+        m = EnergyModel()
+        # deferred: ran 00:00-01:00, would have run from 10:00 without eco
+        rec = make_record(eco_deferred=True, eco_tier=1)
+        m.annotate(rec)
+        assert rec.energy_kwh > 0
+        assert rec.carbon_gco2 > 0
+        assert rec.carbon_nodefer_gco2 > rec.carbon_gco2  # night < daytime
+        assert rec.carbon_saved_gco2 > 0
+
+    def test_non_deferred_job_has_zero_saving(self):
+        """Queue-wait drift on a job eco never touched must not be
+        (mis)attributed to eco mode."""
+        m = EnergyModel()
+        rec = make_record(eco_deferred=False)  # started later than requested
+        m.annotate(rec)
+        assert rec.carbon_nodefer_gco2 == rec.carbon_gco2
+        assert rec.carbon_saved_gco2 == 0.0
+
+    def test_measured_energy_preserved(self):
+        m = EnergyModel()
+        rec = make_record(energy_kwh=0.5)
+        m.annotate(rec)
+        assert rec.energy_kwh == 0.5
+
+
+# ---------------------------------------------------------------------------
+# sacct parsing
+# ---------------------------------------------------------------------------
+
+SACCT_SAMPLE = """\
+123|align|alice|main|8|16000M|12:00:00|2026-03-18T09:00:00|2026-03-19T00:00:00|2026-03-19T01:00:00|COMPLETED|3600|0|n001
+123.batch|batch|||8||||2026-03-19T00:00:00|2026-03-19T01:00:00|COMPLETED|3600|2.43K|n001
+124|oom|bob|main|4|8G|06:00:00|2026-03-18T10:00:00|2026-03-18T11:00:00|2026-03-18T11:30:00|FAILED|1800|0|n002
+125|still|bob|main|4|8G|06:00:00|2026-03-18T10:00:00|2026-03-18T11:00:00|Unknown|RUNNING|900|0|n003
+"""
+
+
+class TestSacctParsing:
+    def test_rows_normalised_steps_folded(self):
+        rows = parse_sacct_output(SACCT_SAMPLE)
+        assert [r["jobid"] for r in rows] == ["123", "124", "125"]
+        r = rows[0]
+        assert r["cpus"] == 8
+        assert r["memory_mb"] == 16000
+        assert r["time_limit_s"] == 12 * 3600
+        assert r["elapsed_s"] == 3600
+        # batch-step energy backfills the parent
+        assert parse_consumed_energy(r["consumed_energy"]) == pytest.approx(2430.0)
+
+    def test_per_cpu_reqmem_multiplied(self):
+        line = ("200|x|alice|main|8|4Gc|01:00:00|2026-03-18T09:00:00|"
+                "2026-03-18T10:00:00|2026-03-18T11:00:00|COMPLETED|3600|0|n001")
+        (row,) = parse_sacct_output(line + "\n")
+        assert row["memory_mb"] == 8 * 4096  # 4G per CPU × 8 CPUs
+        per_node = parse_sacct_output(line.replace("4Gc", "4Gn") + "\n")
+        assert per_node[0]["memory_mb"] == 4096
+
+    def test_out_of_memory_is_terminal_failure(self, tmp_path):
+        line = ("201|oom|bob|main|4|8G|01:00:00|2026-03-18T09:00:00|"
+                "2026-03-18T10:00:00|2026-03-18T10:30:00|OUT_OF_ME+|1800|0|n001")
+
+        class FakeSlurm:
+            def accounting(self):
+                return parse_sacct_output(line + "\n")
+
+        store = HistoryStore(tmp_path / "h.jsonl")
+        assert collect(FakeSlurm(), store) == 1
+        (rec,) = store.scan()
+        assert rec.state == "OUT_OF_MEMORY" and rec.is_terminal
+        rep = report_dict([rec], by="user")
+        assert rep["total"]["failed"] == 1
+
+    def test_collect_forwards_since_when_supported(self, tmp_path):
+        calls = {}
+
+        class FakeSlurm:
+            def accounting(self, *, since=""):
+                calls["since"] = since
+                return []
+
+        collect(FakeSlurm(), HistoryStore(tmp_path / "h.jsonl"),
+                since="2026-01-01")
+        assert calls["since"] == "2026-01-01"
+        # simulator-style accounting() without the parameter still works
+        sim_calls = []
+
+        class NoSince:
+            def accounting(self):
+                sim_calls.append(True)
+                return []
+
+        collect(NoSince(), HistoryStore(tmp_path / "h2.jsonl"),
+                since="2026-01-01")
+        assert sim_calls == [True]
+
+    def test_collect_from_sacct_rows(self, tmp_path):
+        class FakeSlurm:
+            def accounting(self):
+                return parse_sacct_output(SACCT_SAMPLE)
+
+        store = HistoryStore(tmp_path / "h.jsonl")
+        n = collect(FakeSlurm(), store, EnergyModel())
+        assert n == 2  # RUNNING row not archived
+        recs = {r.jobid: r for r in store.scan()}
+        assert recs["123"].state == "COMPLETED"
+        assert recs["123"].energy_kwh == pytest.approx(2430.0 / 3.6e6)
+        assert recs["124"].state == "FAILED"
+        # modelled energy fills the gap where sacct reported none
+        assert recs["124"].energy_kwh > 0
+
+
+# ---------------------------------------------------------------------------
+# RuntimePredictor
+# ---------------------------------------------------------------------------
+
+
+class TestRuntimePredictor:
+    def test_empty_store_returns_request_limit(self, tmp_path):
+        p = RuntimePredictor(HistoryStore(tmp_path / "h.jsonl"))
+        assert p.predict(12 * 3600, name="blast-1", user="alice") == 12 * 3600
+
+    def test_below_min_samples_returns_limit(self, tmp_path):
+        store = HistoryStore(tmp_path / "h.jsonl")
+        store.append_many([make_record(i) for i in range(2)])
+        p = RuntimePredictor(store, min_samples=3)
+        assert p.predict(12 * 3600, name="blast-9") == 12 * 3600
+
+    def test_learns_percentile_with_margin(self, tmp_path):
+        store = HistoryStore(tmp_path / "h.jsonl")
+        store.append_many([make_record(i, runtime_s=3600) for i in range(5)])
+        p = RuntimePredictor(store)
+        est = p.predict(12 * 3600, name="blast-77", user="alice")
+        assert est == 4500  # 3600 × 1.25, already whole minutes
+
+    def test_never_exceeds_request_limit(self, tmp_path):
+        store = HistoryStore(tmp_path / "h.jsonl")
+        store.append_many([make_record(i, runtime_s=10 * 3600) for i in range(5)])
+        p = RuntimePredictor(store)
+        assert p.predict(3600, name="blast-1") == 3600
+
+    def test_only_completed_runs_count(self, tmp_path):
+        store = HistoryStore(tmp_path / "h.jsonl")
+        store.append_many(
+            [make_record(i, state="TIMEOUT", runtime_s=12 * 3600) for i in range(5)]
+        )
+        p = RuntimePredictor(store)
+        assert p.predict(12 * 3600, name="blast-1") == 12 * 3600
+
+    def test_name_stem_groups_sweeps(self):
+        assert name_stem("align-17") == "align"
+        assert name_stem("align_3") == "align"
+        assert name_stem("job") == "job"
+        assert name_stem("42") == "42"  # all-digit names fall back to themselves
+        # digit-ending base names key as themselves (no separator stripped)
+        assert name_stem("kraken2") == "kraken2"
+        assert name_stem("kraken2-0") == "kraken2"
+        # idempotent: indexing key == lookup key, always
+        for n in ("align-17", "kraken2", "kraken2-0", "x-1-2", "job"):
+            assert name_stem(name_stem(n)) == name_stem(n)
+
+    def test_digit_ending_batch_names_learn(self, tmp_path):
+        """runjob --from-file names tasks kraken2-0..N; a later submission
+        of plain 'kraken2' must hit that history."""
+        store = HistoryStore(tmp_path / "h.jsonl")
+        store.append_many([make_record(i, name=f"kraken2-{i}", runtime_s=1800)
+                           for i in range(5)])
+        p = RuntimePredictor(store)
+        assert p.predict(12 * 3600, name="kraken2") < 12 * 3600
+
+    def test_user_scoped_history_preferred(self, tmp_path):
+        store = HistoryStore(tmp_path / "h.jsonl")
+        store.append_many(
+            [make_record(i, user="alice", runtime_s=3600) for i in range(3)]
+            + [make_record(10 + i, user="bob", runtime_s=7200) for i in range(3)]
+        )
+        p = RuntimePredictor(store)
+        assert p.predict(12 * 3600, name="blast-1", user="alice") < p.predict(
+            12 * 3600, name="blast-1", user="bob"
+        )
+
+    def test_predictor_from_config_none_without_history(self):
+        # conftest points NBI_HISTORY at a nonexistent tmp file
+        assert predictor_from_config() is None
+
+
+# ---------------------------------------------------------------------------
+# EcoScheduler + predictor
+# ---------------------------------------------------------------------------
+
+
+class TestEcoPredictorIntegration:
+    def test_no_predictor_decide_equals_next_window(self):
+        s = EcoScheduler(**SCHED)
+        assert s.decide(6 * 3600, NOW, name="x", user="y") == s.next_window(
+            6 * 3600, NOW
+        )
+
+    def test_empty_history_bit_identical(self, tmp_path):
+        plain = EcoScheduler(**SCHED)
+        pred = EcoScheduler(
+            **SCHED, predictor=RuntimePredictor(HistoryStore(tmp_path / "h.jsonl"))
+        )
+        for dur in (1800, 6 * 3600, 12 * 3600, 3 * 86400):
+            assert pred.decide(dur, NOW, name="blast-1", user="a") == \
+                plain.next_window(dur, NOW)
+        assert pred.decide_many(
+            [1800, 6 * 3600, 12 * 3600], NOW,
+            keys=[("a-1", "u"), ("b-2", "u"), ("c-3", "u")],
+        ) == plain.decide_many([1800, 6 * 3600, 12 * 3600], NOW)
+
+    def test_history_lifts_padded_job_to_tier1(self, tmp_path):
+        store = HistoryStore(tmp_path / "h.jsonl")
+        store.append_many([make_record(i, runtime_s=3000) for i in range(5)])
+        plain = EcoScheduler(**SCHED)
+        pred = EcoScheduler(**SCHED, predictor=RuntimePredictor(store))
+        before = plain.next_window(12 * 3600, NOW)
+        after = pred.decide(12 * 3600, NOW, name="blast-9", user="alice")
+        assert before.tier == 2  # 12 h cannot complete in a 6 h window
+        assert after.tier == 1  # predicted ~63 min completes easily
+
+    def test_decide_many_keys_mismatch_raises(self):
+        s = EcoScheduler(**SCHED)
+        with pytest.raises(ValueError):
+            s.decide_many([3600], NOW, keys=[("a", "u"), ("b", "u")])
+
+
+# ---------------------------------------------------------------------------
+# SimCluster energy emission + collect
+# ---------------------------------------------------------------------------
+
+
+class TestSimEnergy:
+    def submit_one(self, sim, duration_s=3600, **optkw):
+        opts = Opts.new(threads=4, memory="4GB", time="2h", **optkw)
+        job = Job(name="e", command="true", opts=opts, sim_duration_s=duration_s)
+        job.prepare()
+        return sim.submit(job)
+
+    def test_energy_charged_at_completion(self, sim):
+        self.submit_one(sim, duration_s=3600)
+        sim.run_until_idle()
+        (j,) = [j for j in sim.accounting() if j.state == "COMPLETED"]
+        assert j.energy_j == pytest.approx(sim.watts_per_cpu * 4 * 3600)
+
+    def test_energy_on_cancel_is_elapsed_only(self, sim):
+        base = self.submit_one(sim, duration_s=7200)
+        sim.advance(1800)
+        sim.cancel([base])
+        j = sim.get(base)
+        assert j.state == "CANCELLED"
+        assert j.energy_j == pytest.approx(sim.watts_per_cpu * 4 * 1800)
+
+    def test_requeued_job_charged_per_attempt(self, sim):
+        base = self.submit_one(sim, duration_s=3600)
+        sim.advance(600)
+        j = sim.get(base)
+        sim.fail_node(j.node)
+        sim.restore_node([n.name for n in sim.nodes][0])
+        sim.run_until_idle()
+        j = sim.get(base)
+        assert j.state == "COMPLETED"
+        # 600 s wasted partial run + 3600 s successful rerun
+        assert j.energy_j == pytest.approx(sim.watts_per_cpu * 4 * 4200)
+
+    def test_eco_meta_flows_to_simjob(self, sim):
+        opts = Opts.new(threads=1, memory="1GB", time="1h")
+        job = Job(name="m", command="true", opts=opts)
+        job.eco_meta = {"tier": 1, "deferred": True}
+        job.tool = "kraken2"
+        job.prepare()
+        base = sim.submit(job)
+        j = sim.get(base)
+        assert j.eco_tier == 1 and j.eco_deferred and j.tool == "kraken2"
+
+    def test_collect_dedup_and_annotation(self, sim, tmp_path):
+        self.submit_one(sim)
+        sim.run_until_idle()
+        store = HistoryStore(tmp_path / "h.jsonl")
+        assert collect(sim, store) == 1
+        assert collect(sim, store) == 0
+        (rec,) = store.scan()
+        assert rec.energy_kwh > 0 and rec.carbon_gco2 > 0
+        assert rec.runtime_s == 3600
+        assert rec.user == "testuser"
+
+
+# ---------------------------------------------------------------------------
+# Reports + the closed loop
+# ---------------------------------------------------------------------------
+
+
+class TestReport:
+    def test_aggregate_by_user_and_tool(self):
+        recs = [
+            make_record(0, user="alice", energy_kwh=1.0, carbon_gco2=10.0,
+                        carbon_nodefer_gco2=15.0, eco_deferred=True),
+            make_record(1, user="bob", name="qc-1", energy_kwh=2.0,
+                        carbon_gco2=30.0, carbon_nodefer_gco2=30.0),
+        ]
+        rep = report_dict(recs, by="user")
+        assert {g["key"] for g in rep["groups"]} == {"alice", "bob"}
+        assert rep["total"]["energy_kwh"] == pytest.approx(3.0)
+        assert rep["total"]["carbon_saved_gco2"] == pytest.approx(5.0)
+        assert rep["total"]["eco_deferred"] == 1
+        by_tool = report_dict(recs, by="tool")
+        assert {g["key"] for g in by_tool["groups"]} == {"blast", "qc"}
+
+    def test_render_report_table(self):
+        out = render_report([make_record(0)], by="user", color=False)
+        assert "alice" in out and "Saved(g)" in out and "1 job(s)" in out
+
+    def test_thousand_job_sim_history_reports_nonzero_savings(self, tmp_path):
+        """Acceptance: simulated 1k-job history → nonzero energy, carbon,
+        and eco-mode savings in the report payload."""
+        sim = SimCluster(now=datetime(2026, 3, 16, 9, 0), default_user="alice")
+        for node in sim.nodes:
+            node.cpus = 2048
+        engine = SubmitEngine(
+            sim, eco=True, coalesce=False,
+            scheduler=EcoScheduler(**SCHED), now=sim.now,
+        )
+        jobs = [
+            Job(name=f"etl-{i % 7}", command="true",
+                opts=Opts.new(threads=2, memory="2GB", time="4h"),
+                sim_duration_s=1800 + (i % 5) * 600)
+            for i in range(1000)
+        ]
+        result = engine.submit_many(jobs)
+        assert result.eco_deferred == 1000
+        sim.run_until_idle(max_days=40)
+        store = HistoryStore(tmp_path / "h.jsonl")
+        assert collect(sim, store) == 1000
+        rep = report_dict(store.records(), by="tool")
+        tot = rep["total"]
+        assert tot["jobs"] == 1000
+        assert tot["energy_kwh"] > 0
+        assert tot["carbon_gco2"] > 0
+        assert tot["carbon_saved_gco2"] > 0
+        assert tot["eco_deferred"] == 1000
+
+    def test_engine_predictor_changes_batch_decisions(self, tmp_path):
+        store = HistoryStore(tmp_path / "h.jsonl")
+        store.append_many([make_record(i, name="etl-1", runtime_s=1800)
+                           for i in range(5)])
+        sim = SimCluster(now=NOW, default_user="alice")
+        # predictor= must take effect even beside a supplied scheduler
+        engine = SubmitEngine(
+            sim, eco=True, coalesce=False,
+            scheduler=EcoScheduler(**SCHED),
+            predictor=RuntimePredictor(store),
+            now=NOW,
+        )
+        jobs = [Job(name=f"etl-{i}", command="true",
+                    opts=Opts.new(threads=1, memory="1GB", time="12h"))
+                for i in range(3)]
+        engine.submit_many(jobs)
+        tiers = {sim.get(j.jobid).eco_tier for j in jobs}
+        assert tiers == {1}  # predicted 30 min → completes in night window
+
+
+class TestSubmitLogJournal:
+    """Real SLURM cannot report the eco decision back through sacct — the
+    SubmitLog journal written at submission time restores it at collect."""
+
+    SACCT_LINE = (
+        "300|annotate|alice|main|4|8G|12:00:00|2026-03-18T10:00:00|"
+        "2026-03-19T00:00:00|2026-03-19T01:00:00|COMPLETED|3600|0|n001"
+    )
+
+    def test_journal_restores_eco_meta_and_savings(self, tmp_path):
+        store = HistoryStore(tmp_path / "h.jsonl")
+        store.submit_log().log("300", tool="prokka",
+                               eco_meta={"tier": 1, "deferred": True})
+
+        class FakeSlurm:
+            def accounting(inner):
+                return parse_sacct_output(self.SACCT_LINE + "\n")
+
+        assert collect(FakeSlurm(), store, EnergyModel()) == 1
+        (rec,) = store.scan()
+        assert rec.tool == "prokka"
+        assert rec.eco_deferred and rec.eco_tier == 1
+        # deferred 10:00 → 00:00: the counterfactual now differs
+        assert rec.carbon_saved_gco2 > 0
+
+    def test_unjournaled_job_keeps_defaults(self, tmp_path):
+        store = HistoryStore(tmp_path / "h.jsonl")
+
+        class FakeSlurm:
+            def accounting(inner):
+                return parse_sacct_output(self.SACCT_LINE + "\n")
+
+        collect(FakeSlurm(), store, EnergyModel())
+        (rec,) = store.scan()
+        assert not rec.eco_deferred and rec.carbon_saved_gco2 == 0.0
+
+    def test_runjob_journals_eco_submissions(self, monkeypatch, tmp_path,
+                                             capsys):
+        from repro.cli import runjob
+
+        monkeypatch.setenv("NBI_HISTORY", str(tmp_path / "h.jsonl"))
+        runjob.main(["-n", "night", "-t", "2",
+                     "--now", "2026-03-18T10:00:00", "true"])
+        jid = capsys.readouterr().out.strip().splitlines()[-1]
+        journal = HistoryStore(tmp_path / "h.jsonl").submit_log().load()
+        assert journal[jid]["eco_deferred"] is True
+
+    def test_launcher_journals_tool_name(self, monkeypatch, tmp_path):
+        from repro.core.launcher import Kraken2
+
+        monkeypatch.setenv("NBI_HISTORY", str(tmp_path / "h.jsonl"))
+        monkeypatch.setenv("KRAKEN2_DB", str(tmp_path))
+        lk = Kraken2(reads1="r1.fq", outdir=str(tmp_path), now=NOW)
+        jid = lk.submit()
+        journal = HistoryStore(tmp_path / "h.jsonl").submit_log().load()
+        assert journal[str(jid)]["tool"] == "kraken2"
+
+
+class TestToolNameMatching:
+    def test_digit_suffixed_tool_matches_its_history(self, tmp_path):
+        """tool= matches the archive's tool column verbatim."""
+        store = HistoryStore(tmp_path / "h.jsonl")
+        store.append_many([
+            make_record(i, name="kraken2", tool="kraken2", runtime_s=1800)
+            for i in range(5)
+        ])
+        sched = EcoScheduler(**SCHED, predictor=RuntimePredictor(store))
+        assert sched.effective_duration(12 * 3600, tool="kraken2") < 12 * 3600
+        d = sched.decide(12 * 3600, NOW, tool="kraken2")
+        assert d.tier == 1
+
+    def test_records_tool_filter_matches_report_key(self, tmp_path):
+        """--tool must accept exactly the key --by tool displayed."""
+        store = HistoryStore(tmp_path / "h.jsonl")
+        store.append_many([make_record(i, name=f"align-{i}") for i in range(3)])
+        rep = report_dict(store.records(), by="tool")
+        key = rep["groups"][0]["key"]
+        assert key == "align"
+        assert len(store.records(tool=key)) == 3
+
+    def test_engine_batch_keys_include_tool(self, tmp_path):
+        """The batched eco path must hit tool-keyed history, same as the
+        single-job Launcher path."""
+        store = HistoryStore(tmp_path / "h.jsonl")
+        store.append_many([
+            make_record(i, name="wrapped", tool="kraken2", runtime_s=1800)
+            for i in range(5)
+        ])
+        sim = SimCluster(now=NOW, default_user="alice")
+        engine = SubmitEngine(sim, eco=True, coalesce=False,
+                              scheduler=EcoScheduler(**SCHED),
+                              predictor=RuntimePredictor(store), now=NOW)
+        job = Job(name="some-other-name", command="true",
+                  opts=Opts.new(threads=1, memory="1GB", time="12h"))
+        job.tool = "kraken2"
+        engine.submit_many([job])
+        assert sim.get(job.jobid).eco_tier == 1  # priced at ~30 min history
+
+
+class TestSchedulerNotMutated:
+    def test_engine_prices_through_a_copy(self, tmp_path):
+        store = HistoryStore(tmp_path / "h.jsonl")
+        store.append_many([make_record(i, name="etl-1", runtime_s=1800)
+                           for i in range(5)])
+        caller_sched = EcoScheduler(**SCHED)
+        sim = SimCluster(now=NOW, default_user="alice")
+        engine = SubmitEngine(sim, eco=True, coalesce=False,
+                              scheduler=caller_sched,
+                              predictor=RuntimePredictor(store), now=NOW)
+        engine.submit_many([Job(name="etl-0", command="true",
+                                opts=Opts.new(threads=1, memory="1GB",
+                                              time="12h"))])
+        assert caller_sched.predictor is None  # caller's object untouched
+
+
+class TestFinalReviewFixes:
+    def test_predict_never_exceeds_subminute_limit(self, tmp_path):
+        store = HistoryStore(tmp_path / "h.jsonl")
+        store.append_many([make_record(i, name="quick-1", runtime_s=10)
+                           for i in range(5)])
+        p = RuntimePredictor(store)
+        assert p.predict(30, name="quick-9") == 30  # limit wins over floor
+
+    def test_files_array_journaled_per_task(self, monkeypatch, tmp_path,
+                                            capsys):
+        from repro.cli import runjob
+
+        monkeypatch.setenv("NBI_HISTORY", str(tmp_path / "h.jsonl"))
+        listing = tmp_path / "samples.txt"
+        listing.write_text("a.fq\nb.fq\nc.fq\n")
+        runjob.main(["-n", "arr", "-t", "2", "--files", str(listing),
+                     "--now", "2026-03-18T10:00:00", "cmd #FILE#"])
+        base = capsys.readouterr().out.strip().splitlines()[-1]
+        journal = HistoryStore(tmp_path / "h.jsonl").submit_log().load()
+        assert set(journal) == {f"{base}_{t}" for t in range(3)}
+        assert all(e["eco_deferred"] for e in journal.values())
+
+    def test_collect_reads_default_sidecar_for_custom_history(
+            self, monkeypatch, tmp_path):
+        """ecoreport --history X --collect must still see eco decisions
+        journaled to the configured default archive."""
+        monkeypatch.setenv("NBI_HISTORY", str(tmp_path / "default.jsonl"))
+        from repro.accounting import log_submission
+
+        log_submission("300", tool="prokka",
+                       eco_meta={"tier": 1, "deferred": True})
+        line = ("300|annotate|alice|main|4|8G|12:00:00|2026-03-18T10:00:00|"
+                "2026-03-19T00:00:00|2026-03-19T01:00:00|COMPLETED|3600|0|n1")
+
+        class FakeSlurm:
+            def accounting(self):
+                return parse_sacct_output(line + "\n")
+
+        custom = HistoryStore(tmp_path / "custom.jsonl")
+        assert collect(FakeSlurm(), custom) == 1
+        (rec,) = custom.scan()
+        assert rec.eco_deferred and rec.tool == "prokka"

@@ -165,3 +165,156 @@ class TestNbilaunch:
         out = capsys.readouterr().out
         assert rc == 1
         assert "missing required input" in out
+
+
+class TestJsonOutput:
+    """Satellite: one shared serializer (cli.render.emit_json) behind every
+    --json flag, so scripted consumers see a single dialect."""
+
+    def test_lsjobs_json(self, capsys):
+        runjob.main(["-n", "jsonjob", "-c", "2", "--no-eco", "sleep 60"])
+        capsys.readouterr()
+        rc = lsjobs.main(["--all", "--json"])
+        out = capsys.readouterr().out
+        assert rc == 0
+        rows = json.loads(out)
+        assert isinstance(rows, list) and rows
+        (row,) = [r for r in rows if r["name"] == "jsonjob"]
+        assert row["state"] in ("RUNNING", "PENDING")
+        assert row["cpus"] == 2  # numeric fields typed, same as whojobs
+        assert list(row) == sorted(row)  # shared dialect: sorted keys
+
+    def test_lsjobs_json_respects_filters(self, capsys):
+        runjob.main(["-n", "keepme", "--no-eco", "true"])
+        runjob.main(["-n", "dropme", "--no-eco", "true"])
+        capsys.readouterr()
+        lsjobs.main(["--all", "-n", "keepme", "--json"])
+        rows = json.loads(capsys.readouterr().out)
+        assert {r["name"] for r in rows} == {"keepme"}
+
+    def test_lsjobs_json_empty_queue_is_valid_json(self, capsys):
+        lsjobs.main(["--all", "--json"])
+        assert json.loads(capsys.readouterr().out) == []
+
+    def test_whojobs_json(self, capsys):
+        runjob.main(["-n", "w1", "-c", "4", "--no-eco", "sleep 60"])
+        capsys.readouterr()
+        rc = whojobs.main(["--json"])
+        out = capsys.readouterr().out
+        assert rc == 0
+        (rec,) = json.loads(out)
+        assert rec["cpus"] == 4 and rec["running"] == 1
+        assert rec["share"] == 1.0
+
+    def test_whojobs_json_idle_cluster(self, capsys):
+        whojobs.main(["--json"])
+        assert json.loads(capsys.readouterr().out) == []
+
+
+class TestRunjobDryRunBegin:
+    """Satellite: --dry-run renders the script that WOULD be submitted,
+    including the eco-injected --begin, without touching the backend."""
+
+    def test_dry_run_shows_injected_begin_and_submits_nothing(self, capsys):
+        rc = runjob.main([
+            "-n", "night", "-t", "2", "--dry-run",
+            "--now", "2026-03-18T10:00:00", "do_science",
+        ])
+        captured = capsys.readouterr()
+        assert rc == 0
+        assert "#SBATCH --begin=2026-03-19T00:00:00" in captured.out
+        assert "eco mode: deferred" in captured.err
+        assert len(Queue(backend=get_backend())) == 0
+
+    def test_dry_run_batch_array_includes_begin(self, capsys, tmp_path):
+        cmds = tmp_path / "cmds.txt"
+        cmds.write_text("task one\ntask two\n")
+        rc = runjob.main([
+            "-n", "batch", "-t", "2", "--from-file", str(cmds), "--array",
+            "--dry-run", "--now", "2026-03-18T10:00:00",
+        ])
+        out = capsys.readouterr().out
+        assert rc == 0
+        assert "#SBATCH --array=0-1" in out
+        assert "#SBATCH --begin=2026-03-19T00:00:00" in out
+        assert len(Queue(backend=get_backend())) == 0
+
+
+class TestEcoreport:
+    def _run_some_history(self, tmp_path):
+        from datetime import datetime
+
+        from repro.accounting import EnergyModel, HistoryStore, collect
+        from repro.core import EcoScheduler, Job, Opts, SimCluster, SubmitEngine
+
+        sim = SimCluster(now=datetime(2026, 3, 18, 10, 0), default_user="alice")
+        engine = SubmitEngine(
+            sim, eco=True, coalesce=False, now=sim.now,
+            scheduler=EcoScheduler(
+                weekday_windows=[(0, 360)],
+                weekend_windows=[(0, 420), (660, 960)],
+                peak_hours=[(1020, 1200)], horizon_days=14, min_delay_s=0,
+            ),
+        )
+        jobs = [Job(name=f"etl-{i}", command="true",
+                    opts=Opts.new(threads=2, memory="1GB", time="2h"),
+                    sim_duration_s=1800)
+                for i in range(8)]
+        engine.submit_many(jobs)
+        sim.run_until_idle()
+        path = tmp_path / "hist.jsonl"
+        collect(sim, HistoryStore(path), EnergyModel())
+        return path
+
+    def test_table_report(self, capsys, tmp_path):
+        from repro.cli import ecoreport
+
+        path = self._run_some_history(tmp_path)
+        rc = ecoreport.main(["--history", str(path), "--no-color"])
+        out = capsys.readouterr().out
+        assert rc == 0
+        assert "alice" in out and "Saved(g)" in out
+        assert "8 job(s), 8 eco-deferred" in out
+
+    def test_json_report_nonzero_savings(self, capsys, tmp_path):
+        from repro.cli import ecoreport
+
+        path = self._run_some_history(tmp_path)
+        rc = ecoreport.main(["--history", str(path), "--by", "tool", "--json"])
+        payload = json.loads(capsys.readouterr().out)
+        assert rc == 0
+        tot = payload["total"]
+        assert tot["jobs"] == 8
+        assert tot["energy_kwh"] > 0
+        assert tot["carbon_gco2"] > 0
+        assert tot["carbon_saved_gco2"] > 0
+        assert payload["groups"][0]["key"] == "etl"
+
+    def test_empty_archive_message(self, capsys, tmp_path):
+        from repro.cli import ecoreport
+
+        rc = ecoreport.main(["--history", str(tmp_path / "none.jsonl")])
+        assert rc == 0
+        assert "no archived jobs" in capsys.readouterr().out
+
+    def test_collect_flag_harvests_shared_sim(self, capsys, tmp_path):
+        from repro.cli import ecoreport
+
+        runjob.main(["-n", "harvest", "--no-eco", "true"])
+        get_backend().run_until_idle()
+        capsys.readouterr()
+        path = tmp_path / "hist.jsonl"
+        rc = ecoreport.main(["--history", str(path), "--collect"])
+        out = capsys.readouterr().out
+        assert rc == 0
+        assert "collected 1 new record(s)" in out
+        rc = ecoreport.main(["--history", str(path), "--collect", "--json"])
+        payload = json.loads(capsys.readouterr().out)
+        assert payload["total"]["jobs"] == 1
+
+    def test_bad_since_errors(self, capsys, tmp_path):
+        from repro.cli import ecoreport
+
+        rc = ecoreport.main(["--history", str(tmp_path / "h.jsonl"),
+                             "--since", "not-a-date"])
+        assert rc == 2

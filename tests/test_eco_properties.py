@@ -126,3 +126,31 @@ def test_default_config_always_finds_window(now, dur):
     )
     d = sched.next_window(dur, now)
     assert d.tier == 1
+
+
+@settings(max_examples=150, deadline=None)
+@given(sched=scheds(), now=clock, dur=duration,
+       name=st.sampled_from(["blast-1", "align_7", "kraken2", "x"]),
+       user=st.sampled_from(["", "alice", "bob"]))
+def test_empty_history_predictor_is_bit_identical(tmp_path_factory, sched,
+                                                  now, dur, name, user):
+    """P7 (accounting): with an EMPTY HistoryStore attached, the
+    predictor-aware entry points — decide() and decide_many(keys=...) —
+    return decisions bit-identical to the plain scheduler for arbitrary
+    window configs, clocks, durations and job identities."""
+    from repro.accounting import HistoryStore, RuntimePredictor
+
+    store = HistoryStore(tmp_path_factory.mktemp("acct") / "empty.jsonl")
+    pred_sched = EcoScheduler(
+        weekday_windows=sched.weekday_windows,
+        weekend_windows=sched.weekend_windows,
+        peak_hours=sched.peak_hours,
+        horizon_days=sched.horizon_days,
+        min_delay_s=sched.min_delay_s,
+        predictor=RuntimePredictor(store),
+    )
+    assert pred_sched.decide(dur, now, name=name, user=user) == \
+        sched.next_window(dur, now)
+    assert pred_sched.decide_many([dur, dur * 2], now,
+                                  keys=[(name, user), (name, user)]) == \
+        sched.decide_many([dur, dur * 2], now)

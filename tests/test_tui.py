@@ -227,3 +227,77 @@ class TestRender:
         vm = make_vm()
         vm.key("q")
         assert vm.state.quit
+
+
+class TestBulkCancelEndToEnd:
+    """Satellite: the select → cancel → queue-refresh path driven against a
+    real SimCluster through the same Queue/cancel plumbing ``viewjobs.main``
+    wires up — not a stubbed source."""
+
+    def make_cluster_vm(self, n=6):
+        from datetime import datetime
+
+        from repro.core import Job, Opts, Queue, SimCluster
+
+        sim = SimCluster(now=datetime(2026, 3, 18, 10, 0),
+                         default_user="testuser")
+        for i in range(n):
+            job = Job(name=f"work-{i}", command="sleep 600",
+                      opts=Opts.new(threads=1, memory="1GB", time="1h"),
+                      sim_duration_s=600)
+            job.prepare()
+            sim.submit(job)
+
+        def source():
+            return list(Queue(backend=sim))
+
+        return sim, ViewModel(source, canceller=sim.cancel)
+
+    def test_select_cancel_refresh(self):
+        sim, vm = self.make_cluster_vm()
+        assert len(vm.state.rows) == 6
+        vm.keys("  ")  # select rows 0 and 1 (Space advances the cursor)
+        vm.key("j")
+        vm.key(" ")  # and row 3
+        targets = set(vm.state.selected)
+        assert len(targets) == 3
+        vm.key("C")
+        assert vm.state.mode == "confirm"
+        assert set(vm.state.pending_cancel) == targets
+        vm.key("y")
+        # the simulator really cancelled them ...
+        for jid in targets:
+            assert sim.get(jid).state == "CANCELLED"
+        # ... and the post-cancel refresh dropped them from the view
+        assert vm.state.mode == "list"
+        assert len(vm.state.rows) == 3
+        assert targets.isdisjoint({j.jobid for j in vm.state.rows})
+        assert vm.state.selected == set()
+        assert "cancelled 3 job(s)" in vm.state.status
+
+    def test_abort_leaves_cluster_untouched(self):
+        sim, vm = self.make_cluster_vm(3)
+        vm.key("a")  # select all
+        vm.key("C")
+        vm.key("n")  # abort at the confirm prompt
+        assert all(j.state in ("RUNNING", "PENDING")
+                   for j in sim.accounting())
+        assert len(vm.state.rows) == 3
+
+    def test_cancelled_jobs_are_archived_with_energy(self, tmp_path):
+        """The cancel path feeds the accounting loop: partial runtime is
+        charged and collected."""
+        from repro.accounting import HistoryStore, collect
+
+        sim, vm = self.make_cluster_vm(2)
+        sim.advance(120)  # two minutes of real burn
+        vm.refresh()
+        vm.key("a")
+        vm.key("C")
+        vm.key("y")
+        store = HistoryStore(tmp_path / "h.jsonl")
+        assert collect(sim, store) == 2
+        for rec in store.scan():
+            assert rec.state == "CANCELLED"
+            assert rec.runtime_s == 120
+            assert rec.energy_kwh > 0
