@@ -1,0 +1,221 @@
+"""Event-dispatch benchmark: the event-driven core vs poll-everywhere.
+
+Three measurements on a 1,000-job simulated day:
+
+1. **waitjobs economics** — queue snapshots taken to see the whole batch
+   finish: the old polling loop (one squeue per poll tick) vs blocking on
+   terminal JobEvents (one snapshot to resolve the watch set). The
+   acceptance bar is ≥10× fewer snapshots.
+2. **bus dispatch throughput** — JobEvents delivered per second through an
+   EventBus with realistic subscriber fan-out, vs the cost of ONE
+   1,000-row snapshot diff: how many events one poll is worth.
+3. **eco hold-and-release** — tier-deferred jobs submitted HELD and
+   released reactively: every release at or before the static ``--begin``
+   deadline (hard invariant), with the early-release share and mean lead
+   time reported.
+"""
+
+from __future__ import annotations
+
+import time
+from datetime import datetime, timedelta
+
+from repro.core import (
+    EcoController,
+    EcoScheduler,
+    EventBus,
+    Job,
+    JobEvent,
+    Opts,
+    Queue,
+    SimCluster,
+    SimNode,
+    diff_snapshots,
+)
+from repro.core.events import TERMINAL_EVENTS
+
+T0 = datetime(2026, 3, 18, 8, 0, 0)  # a Wednesday morning
+
+
+class CountingBackend:
+    """Counts real queue() snapshots taken through it."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.calls = 0
+
+    def queue(self):
+        self.calls += 1
+        return self.inner.queue()
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+
+def day_sim(n_jobs: int = 1000) -> SimCluster:
+    sim = SimCluster(nodes=[SimNode(f"n{i:03d}", cpus=128) for i in range(32)],
+                     now=T0)
+    opts = Opts.new(threads=2, memory="2GB", time="10h")
+    jobs = [
+        Job(name=f"day-{i}", command="true", opts=opts,
+            sim_duration_s=600 + (i % 96) * 300)  # 10 min … 8 h spread
+        for i in range(n_jobs)
+    ]
+    sim.submit_many(jobs)
+    return sim
+
+
+def bench_waitjobs_snapshots(n_jobs: int = 1000, poll_s: float = 300.0) -> dict:
+    """Polling loop vs terminal-event wait over the same simulated day."""
+    # -- polling path: one snapshot per tick until the queue drains
+    polling = CountingBackend(day_sim(n_jobs))
+    t0 = time.perf_counter()
+    while True:
+        q = Queue(backend=polling)
+        if not any(j.is_active() for j in q):
+            break
+        polling.inner.advance(poll_s)
+    poll_wall = time.perf_counter() - t0
+    poll_snapshots = polling.calls
+
+    # -- event path: one snapshot to resolve the watch set, then events
+    from repro.cli.waitjobs import wait_for_events
+
+    eventful = CountingBackend(day_sim(n_jobs))
+    t0 = time.perf_counter()
+    result = wait_for_events(eventful, poll_s=poll_s)
+    event_wall = time.perf_counter() - t0
+    assert result.ok and len(result.states) == n_jobs
+    ratio = poll_snapshots / max(1, eventful.calls)
+    print(f"  waitjobs over {n_jobs} jobs: polling {poll_snapshots} snapshots "
+          f"({poll_wall:.2f}s) vs events {eventful.calls} ({event_wall:.2f}s) "
+          f"→ {ratio:.0f}x fewer")
+    return {
+        "jobs": n_jobs,
+        "poll_snapshots": poll_snapshots,
+        "event_snapshots": eventful.calls,
+        "snapshot_ratio": ratio,
+        "poll_wall_s": poll_wall,
+        "event_wall_s": event_wall,
+    }
+
+
+def bench_dispatch(n_events: int = 20000, n_subscribers: int = 4) -> dict:
+    """Raw bus throughput vs the cost of diffing one 1,000-row snapshot."""
+    bus = EventBus()
+    sink = [0]
+
+    def sub(e):
+        sink[0] += 1
+
+    for i in range(n_subscribers):
+        bus.subscribe(sub, types=TERMINAL_EVENTS if i % 2 else None)
+    events = [
+        JobEvent(type="COMPLETED" if i % 3 else "STARTED", jobid=str(i), at=T0)
+        for i in range(n_events)
+    ]
+    t0 = time.perf_counter()
+    for e in events:
+        bus.emit(e)
+    emit_wall = time.perf_counter() - t0
+    rate = n_events / max(emit_wall, 1e-9)
+
+    # one poll of a 1,000-job queue, as the adapter would pay it
+    rows = {
+        str(i): {"jobid": str(i), "name": f"j{i}", "user": "u",
+                 "state": "RUNNING", "reason": "", "nodelist": "n0"}
+        for i in range(1000)
+    }
+    moved = dict(rows)
+    for i in range(0, 1000, 2):  # half the queue churns between polls
+        moved[str(i)] = dict(rows[str(i)], state="PENDING")
+    t0 = time.perf_counter()
+    n_diffs = 20
+    for _ in range(n_diffs):
+        diff_snapshots(rows, moved, T0)
+    diff_wall = (time.perf_counter() - t0) / n_diffs
+    print(f"  bus: {rate:,.0f} events/s through {n_subscribers} subscribers; "
+          f"one 1k-row snapshot diff {diff_wall * 1e3:.1f} ms "
+          f"(≈{rate * diff_wall:,.0f} events)")
+    return {
+        "events_per_s": rate,
+        "subscribers": n_subscribers,
+        "snapshot_diff_ms": diff_wall * 1e3,
+        "events_per_diff": rate * diff_wall,
+    }
+
+
+def bench_eco_hold_release(n_eco: int = 200) -> dict:
+    """Held eco jobs across a simulated day: never later than the static
+    begin; early when observed load allows."""
+    sched = EcoScheduler(
+        weekday_windows=[(0, 360), (720, 780)],
+        weekend_windows=[(0, 420), (660, 960)],
+        peak_hours=[(1020, 1200)],
+        horizon_days=14,
+        min_delay_s=0,
+    )
+    sim = SimCluster(nodes=[SimNode(f"n{i:03d}", cpus=64) for i in range(16)],
+                     now=T0)
+    controller = EcoController(sim, sched)
+    # a morning of base load that drains by mid-day → room for early release
+    base = [
+        Job(name=f"base-{i}", command="true",
+            opts=Opts.new(threads=8, memory="2GB", time="8h"),
+            sim_duration_s=3600 + (i % 16) * 900)
+        for i in range(120)
+    ]
+    sim.submit_many(base)
+    statics: dict[str, datetime] = {}
+    deferred = 0
+    for i in range(n_eco):
+        hours = 1 + (i % 6)
+        job = Job(name=f"eco-{i}", command="true",
+                  opts=Opts.new(threads=2, memory="1GB", time=f"{hours}h"),
+                  sim_duration_s=900 + (i % 8) * 450)
+        dec = sched.next_window(hours * 3600, T0)
+        jid = controller.submit(job, now=T0)
+        if dec.deferred:
+            deferred += 1
+            statics[str(jid)] = dec.begin
+    sim.advance(to=T0 + timedelta(days=2))
+    late = 0
+    for jid, begin in statics.items():
+        j = sim.get(jid)
+        assert j is not None and j.started_at is not None, jid
+        if j.started_at > begin:
+            late += 1
+    early = [r for r in controller.released if r.early]
+    mean_lead_h = (
+        sum(r.lead_s for r in early) / len(early) / 3600 if early else 0.0
+    )
+    print(f"  eco v2: {deferred}/{n_eco} deferred→held, "
+          f"{len(early)} released early (mean lead {mean_lead_h:.1f} h), "
+          f"{late} late vs static begin (must be 0)")
+    return {
+        "eco_jobs": n_eco,
+        "deferred": deferred,
+        "released_early": len(early),
+        "mean_early_lead_h": mean_lead_h,
+        "late_vs_static": late,
+    }
+
+
+def run() -> dict:
+    out = {
+        "waitjobs": bench_waitjobs_snapshots(),
+        "dispatch": bench_dispatch(),
+        "eco_hold_release": bench_eco_hold_release(),
+    }
+    assert out["waitjobs"]["snapshot_ratio"] >= 10, "acceptance: ≥10x fewer"
+    assert out["eco_hold_release"]["late_vs_static"] == 0
+    return out
+
+
+if __name__ == "__main__":
+    import json
+    import sys
+    from pathlib import Path
+
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+    print(json.dumps(run(), indent=1))

@@ -6,6 +6,7 @@
 | section    | paper claim it quantifies                                    |
 |------------|--------------------------------------------------------------|
 | eco        | §EcoScheduler: tiers, deferral, peak compute avoided, latency |
+| events     | event bus vs polling: waitjobs snapshots, dispatch, eco v2    |
 | accounting | history store throughput, predictor tier lift, carbon loop    |
 | submission | §Statement of Need: boilerplate reduction, submit throughput  |
 | queue      | Figure 1 / lsjobs-viewjobs-whojobs on a 2,000-job cluster     |
@@ -83,8 +84,8 @@ def bench_roofline() -> dict:
     return {"cells": len(json.loads(path.read_text())) if path.exists() else 0}
 
 
-SECTIONS = ["eco", "accounting", "submission", "queue", "kernels", "train",
-            "serve", "roofline"]
+SECTIONS = ["eco", "events", "accounting", "submission", "queue", "kernels",
+            "train", "serve", "roofline"]
 
 
 def main(argv=None) -> int:
@@ -104,6 +105,10 @@ def main(argv=None) -> int:
                 from benchmarks import bench_eco
 
                 all_out[name] = bench_eco.run()
+            elif name == "events":
+                from benchmarks import bench_events
+
+                all_out[name] = bench_events.run()
             elif name == "accounting":
                 from benchmarks import bench_accounting
 

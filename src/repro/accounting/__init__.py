@@ -15,7 +15,7 @@ The queue forgets a job the moment it finishes; this package remembers it:
   "carbon saved by eco mode" aggregation behind the ``ecoreport`` CLI.
 """
 
-from .collect import collect, record_from_sacct, record_from_sim
+from .collect import EventCollector, collect, record_from_sacct, record_from_sim
 from .energy import (
     DEFAULT_WATTS_PER_CPU,
     EnergyModel,
@@ -36,7 +36,7 @@ from .store import (
 
 __all__ = [
     "DEFAULT_HISTORY_PATH", "DEFAULT_WATTS_PER_CPU",
-    "EnergyModel", "GroupStats", "HistoryStore", "JobRecord",
+    "EnergyModel", "EventCollector", "GroupStats", "HistoryStore", "JobRecord",
     "RuntimePredictor", "SubmitLog",
     "aggregate", "collect", "history_path",
     "log_submission", "log_submissions", "name_stem",

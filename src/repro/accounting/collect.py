@@ -12,11 +12,19 @@ for both backends:
 Records are deduplicated against ids already archived, so ``collect`` is
 safe to run repeatedly (cron, post-advance in tests, ``ecoreport
 --collect``).
+
+:class:`EventCollector` is the event-driven alternative: subscribed to a
+backend's :class:`~repro.core.events.EventBus`, it archives each job *at
+its terminal event* — the archive is scanned once at attach time and never
+again, where repeated ``collect()`` calls re-read the whole accounting
+table and the whole archive every time.
 """
 
 from __future__ import annotations
 
 from datetime import datetime
+
+from repro.core.events import TERMINAL_EVENTS
 
 from .energy import EnergyModel, parse_consumed_energy
 from .store import HistoryStore, JobRecord
@@ -63,6 +71,76 @@ def collect(
         fresh.append(rec)
     store.append_many(fresh)
     return len(fresh)
+
+
+class EventCollector:
+    """Archive jobs as their terminal :class:`JobEvent` s arrive.
+
+    Where :func:`collect` is a batch rescan — every call re-reads the
+    backend's full accounting table *and* the full archive to dedupe —
+    the event collector pays the archive scan once (``store.ids()`` at
+    construction) and then appends exactly one record per terminal event,
+    buffered in batches of ``flush_every`` appends.
+
+    Usage::
+
+        coll = EventCollector(sim, store).attach(sim.bus)
+        sim.advance(...)          # records accumulate as jobs finish
+        coll.flush()              # drain the buffer (also on detach())
+
+    The backend must resolve ``get(jobid)`` to a SimJob-shaped object
+    (the simulator, possibly behind a QueueCache). Real SLURM keeps using
+    :func:`collect` — sacct only learns a job's energy after the fact, so
+    there is nothing to harvest at event time.
+    """
+
+    def __init__(self, backend, store: HistoryStore,
+                 model: EnergyModel | None = None, *, flush_every: int = 32):
+        self.backend = backend
+        self.store = store
+        self.model = model or EnergyModel()
+        self.flush_every = max(1, int(flush_every))
+        self._seen = store.ids()  # the one and only archive scan
+        self._buffer: list[JobRecord] = []
+        self._bus_token: "tuple | None" = None
+        self.collected = 0
+
+    def attach(self, bus) -> "EventCollector":
+        """Subscribe to ``bus`` (terminal events only); returns self."""
+        self.detach()
+        self._bus_token = (bus, bus.subscribe(self.on_event, types=TERMINAL_EVENTS))
+        return self
+
+    def detach(self) -> None:
+        """Unsubscribe and drain the buffer."""
+        if self._bus_token is not None:
+            bus, token = self._bus_token
+            bus.unsubscribe(token)
+            self._bus_token = None
+        self.flush()
+
+    def on_event(self, event) -> None:
+        if event.jobid in self._seen:
+            return
+        job = self.backend.get(event.jobid)
+        if job is None:
+            return
+        rec = record_from_sim(job, self.model)
+        if rec is None:
+            return
+        self._seen.add(rec.jobid)
+        self._buffer.append(rec)
+        self.collected += 1
+        if len(self._buffer) >= self.flush_every:
+            self.flush()
+
+    def flush(self) -> int:
+        """Write buffered records; returns how many were written."""
+        n = len(self._buffer)
+        if n:
+            self.store.append_many(self._buffer)
+            self._buffer = []
+        return n
 
 
 def _load_journal(store: HistoryStore) -> dict:

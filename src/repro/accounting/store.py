@@ -277,6 +277,12 @@ class SubmitLog:
             if eco_meta:
                 entry["eco_tier"] = int(eco_meta.get("tier", 0) or 0)
                 entry["eco_deferred"] = bool(eco_meta.get("deferred", False))
+                if eco_meta.get("hold"):
+                    # hold-and-release: the deadline lets another process
+                    # (EcoController.adopt) take over releasing this job
+                    entry["eco_hold"] = True
+                    entry["eco_deadline"] = str(eco_meta.get("deadline", ""))
+                    entry["eco_duration_s"] = int(eco_meta.get("duration_s", 0) or 0)
             lines.append(json.dumps(entry, separators=(",", ":"), sort_keys=True))
         if not lines:
             return

@@ -66,6 +66,10 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--eco", dest="eco", action="store_true", default=None,
                     help="defer to the next eco window (default: config)")
     ap.add_argument("--no-eco", dest="eco", action="store_false")
+    ap.add_argument("--eco-hold", action="store_true",
+                    help="eco v2: submit deferred jobs HELD (no --begin) and "
+                         "release reactively when load drops — never later "
+                         "than the static begin (see waitjobs --eco-release)")
     ap.add_argument("--gres", default="")
     ap.add_argument("--sbatch", action="append", default=[],
                     help="raw #SBATCH pass-through (repeatable)")
@@ -87,6 +91,26 @@ def read_command_file(path: str) -> list[str]:
     """One command per line; blank lines and ``#`` comments skipped
     (same list-file format as ``Job(files=...)``)."""
     return Job._load_files(path)
+
+
+def _hold_controller(sched, now):
+    """The release agent for jobs this invocation just submitted held.
+
+    Against the shared simulator its tick hook keeps releasing after
+    main() returns (the sim owns the reference); real SLURM has no
+    in-cluster agent, so warn that an adopter must run.
+    """
+    from repro.core import EcoController, get_backend
+
+    controller = EcoController(get_backend(), sched, now=now)
+    if not controller.self_driving:
+        print(
+            "note: --eco-hold needs a release agent — keep "
+            "`waitjobs --eco-release` (or a cron adoption loop) "
+            "running, or the job stays held",
+            file=sys.stderr,
+        )
+    return controller
 
 
 def main(argv=None) -> int:
@@ -124,6 +148,9 @@ def main(argv=None) -> int:
     use_eco = cfg.get_bool("economy_mode") if args.eco is None else args.eco
     eco_note = ""
     eco_meta = None
+    eco_decision = None
+    sched = None
+    predicted_s = 0
     if use_eco and not opts.begin:
         from repro.accounting import predictor_from_config
 
@@ -133,13 +160,29 @@ def main(argv=None) -> int:
         sched = EcoScheduler(cfg, predictor=predictor_from_config(cfg))
         predicted_s = sched.effective_duration(opts.time_s, args.name)
         decision = sched.decide(opts.time_s, now, name=args.name)
+        eco_decision = decision
         eco_meta = {"tier": decision.tier, "deferred": decision.deferred}
         if decision.deferred:
-            opts.set_begin(decision.begin_directive)
-            eco_note = (
-                f"eco mode: deferred to {decision.begin_directive} "
-                f"(tier {decision.tier})"
-            )
+            if args.eco_hold:
+                # same decision, reactive execution: hold now, release when
+                # load drops — the decision begin becomes the deadline.
+                # The controller itself is built lazily at registration
+                # time so dry runs leak no tick hook on the shared sim.
+                from repro.core import EcoController
+
+                opts.hold = True
+                eco_meta = EcoController.hold_meta(decision, predicted_s)
+                eco_note = (
+                    f"eco mode: held for favourable load "
+                    f"(release deadline {decision.begin_directive}, "
+                    f"tier {decision.tier})"
+                )
+            else:
+                opts.set_begin(decision.begin_directive)
+                eco_note = (
+                    f"eco mode: deferred to {decision.begin_directive} "
+                    f"(tier {decision.tier})"
+                )
             if predicted_s < opts.time_s:
                 eco_note += (
                     f" [predicted {predicted_s // 60} min from history, "
@@ -180,6 +223,11 @@ def main(argv=None) -> int:
                 print(f"# {eco_note}", file=sys.stderr)
             return 0
         result = engine.submit_many(jobs)
+        if eco_meta and eco_meta.get("hold"):
+            controller = _hold_controller(sched, now)
+            for base in result.base_ids:
+                controller.register(base, eco_decision, now=now,
+                                    duration_s=predicted_s)
         if eco_meta:
             from repro.accounting import log_submissions
 
@@ -210,6 +258,9 @@ def main(argv=None) -> int:
             print(f"# {eco_note}", file=sys.stderr)
         return 0
     jobid = job.run(get_backend())
+    if eco_meta and eco_meta.get("hold"):
+        _hold_controller(sched, now).register(
+            jobid, eco_decision, now=now, duration_s=predicted_s)
     if eco_meta:
         from repro.accounting import log_submissions
 

@@ -9,12 +9,20 @@ Architecture: all interaction logic lives in :class:`ViewModel`, a pure
 state machine ``(state, key) → state`` that renders to a list of strings —
 fully unit-testable without a terminal. The curses driver at the bottom is a
 thin I/O shell around it (and the only part that needs a tty).
+
+Live mode (``--live``): instead of blindly re-reading the queue every
+refresh tick, the ViewModel subscribes to :class:`~repro.core.events.
+JobEvent` s — the simulator's native bus, or a
+:class:`~repro.core.events.PollingEventAdapter` diffing snapshots on real
+SLURM — and refreshes only when something actually changed, showing the
+latest transition in an event ticker on the status line.
 """
 
 from __future__ import annotations
 
 import argparse
 import time
+from collections import deque
 from dataclasses import dataclass, field
 
 from repro.core import Queue, QueuedJob, get_queue_cache
@@ -65,12 +73,41 @@ class ViewModel:
         """``queue_source()`` → list[QueuedJob]; ``canceller(ids)`` cancels."""
         self._source = queue_source
         self._cancel = canceller or (lambda ids: None)
+        # live mode: recent events for the ticker + a dirty flag so the
+        # driver refreshes only when the cluster actually changed
+        self.live = False
+        self.events: deque = deque(maxlen=50)
+        self._dirty = False
+        self._bus_token: "tuple | None" = None
         s = ViewState()
         for key, _, width, vis in COLUMNS:
             s.visible[key] = vis
             s.widths[key] = width
         self.state = s
         self.refresh()
+
+    # -- live mode (event bus) -------------------------------------------------
+
+    def bind_bus(self, bus) -> None:
+        """Subscribe to a :class:`~repro.core.events.EventBus`; every event
+        marks the view dirty and feeds the status-line ticker."""
+        if self._bus_token is not None:
+            old_bus, token = self._bus_token
+            old_bus.unsubscribe(token)
+        self._bus_token = (bus, bus.subscribe(self.note_event))
+        self.live = True
+
+    def note_event(self, event) -> None:
+        self.events.append(event)
+        self._dirty = True
+
+    def maybe_refresh(self) -> bool:
+        """Refresh iff an event arrived since the last render; True if so."""
+        if not self._dirty:
+            return False
+        self._dirty = False
+        self.refresh()
+        return True
 
     # -- data ------------------------------------------------------------------
 
@@ -285,9 +322,18 @@ class ViewModel:
                 parts.append(f"filter={s.filter_text!r}")
             if s.status:
                 parts.append(s.status)
+            if self.live:
+                parts.append(self._ticker_text())
             out.append(" | ".join(parts))
         out.append(HELP_LINE)
         return out
+
+    def _ticker_text(self) -> str:
+        if not self.events:
+            return "live: no events yet"
+        e = self.events[-1]
+        when = e.at.strftime("%H:%M:%S") if hasattr(e.at, "strftime") else e.at
+        return f"live: {when} {e.type} {e.jobid} ({len(self.events)} ev)"
 
     def _render_details(self) -> list[str]:
         s = self.state
@@ -318,7 +364,7 @@ def _fit(text: str, w: int) -> str:
 # ---------------------------------------------------------------------------
 
 
-def _curses_main(stdscr, vm: ViewModel, refresh_s: float):
+def _curses_main(stdscr, vm: ViewModel, refresh_s: float, adapter=None):
     import curses
 
     curses.curs_set(0)
@@ -337,8 +383,13 @@ def _curses_main(stdscr, vm: ViewModel, refresh_s: float):
             stdscr.addnstr(y, 0, line, w - 1)
         stdscr.refresh()
         c = stdscr.getch()
-        if c == -1:  # timeout → periodic refresh
-            vm.refresh()
+        if c == -1:  # timeout tick
+            if vm.live:
+                if adapter is not None:
+                    adapter.poll()  # one snapshot → events → dirty flag
+                vm.maybe_refresh()  # redraw only when something changed
+            else:
+                vm.refresh()
             continue
         vm.key(keymap.get(c, chr(c) if 0 < c < 256 else ""))
 
@@ -348,6 +399,9 @@ def main(argv=None) -> int:
     ap.add_argument("-u", "--user", default=None)
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--refresh", type=float, default=2.0, help="seconds")
+    ap.add_argument("--live", action="store_true",
+                    help="event-driven refresh: redraw on job transitions "
+                         "instead of every tick; shows an event ticker")
     ap.add_argument("--once", action="store_true",
                     help="render one frame to stdout (no tty needed)")
     args = ap.parse_args(argv)
@@ -368,12 +422,22 @@ def main(argv=None) -> int:
         return list(Queue(user=user, backend=backend))
 
     vm = ViewModel(source, canceller=backend.cancel)
+    adapter = None
+    if args.live:
+        bus = getattr(getattr(backend, "inner", backend), "bus", None)
+        if bus is None:  # real SLURM: synthesise events from snapshot diffs
+            from repro.core import PollingEventAdapter
+
+            adapter = PollingEventAdapter(backend)
+            bus = adapter.bus
+            adapter.poll()  # baseline
+        vm.bind_bus(bus)
     if args.once:
         print("\n".join(vm.render()))
         return 0
     import curses
 
-    curses.wrapper(_curses_main, vm, args.refresh)
+    curses.wrapper(_curses_main, vm, args.refresh, adapter)
     return 0
 
 

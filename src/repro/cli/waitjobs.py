@@ -4,19 +4,68 @@
     waitjobs -n 'align.*'        # wait for jobs whose name matches
     waitjobs 123456 123457       # wait for specific ids
     waitjobs --timeout 3600      # give up after an hour (exit 2)
+    waitjobs --json              # machine-readable per-job final states
+    waitjobs --eco-release       # also release held eco jobs while waiting
 
-Exit status: 0 when every watched job left the queue, 2 on timeout.
-Against the simulator backend the poll loop advances simulated time, so
-integration tests run instantly.
+Exit status: 0 when every watched job COMPLETED, 1 when any ended
+FAILED / TIMEOUT / NODE_FAIL (or otherwise short of COMPLETED, e.g.
+CANCELLED), 2 on timeout.
+
+Event-driven: instead of re-polling squeue until the watch set drains
+(one snapshot per poll tick), waitjobs takes ONE snapshot to resolve the
+watch set and then blocks on terminal :class:`~repro.core.events.JobEvent`s
+— delivered natively by the simulator's bus, or synthesised by a
+:class:`~repro.core.events.PollingEventAdapter` for real SLURM (where each
+adapter poll is still one snapshot, but terminal *states* now arrive with
+the event instead of being inferred from absence). Against the simulator
+the wait loop advances simulated time, so integration tests run instantly.
 """
 
 from __future__ import annotations
 
 import argparse
 import time
+from dataclasses import dataclass, field
 
 from repro.core import Queue, get_queue_cache
+from repro.core.events import TERMINAL_EVENTS, PollingEventAdapter
 from repro.core.simcluster import SimCluster
+
+#: terminal states the exit code treats as hard failures
+BAD_STATES = ("FAILED", "TIMEOUT", "NODE_FAIL", "OUT_OF_MEMORY")
+
+
+@dataclass
+class WaitResult:
+    """Outcome of one wait: per-job final states + bookkeeping."""
+
+    ok: bool  # the watch set drained before the timeout
+    states: dict = field(default_factory=dict)  # jobid → final state
+    snapshots: int = 0  # queue() snapshots taken end to end
+
+    @property
+    def failed_ids(self) -> list:
+        return [j for j, s in self.states.items() if s in BAD_STATES]
+
+    @property
+    def all_completed(self) -> bool:
+        return all(s == "COMPLETED" for s in self.states.values())
+
+    @property
+    def exit_code(self) -> int:
+        if not self.ok:
+            return 2
+        return 0 if self.all_completed else 1
+
+    def to_dict(self) -> dict:
+        return {
+            "ok": self.ok,
+            "timed_out": not self.ok,
+            "exit_code": self.exit_code,
+            "jobs": dict(sorted(self.states.items())),
+            "failed": sorted(self.failed_ids),
+            "snapshots": self.snapshots,
+        }
 
 
 def matching_ids(backend, *, user=None, name=None, ids=None) -> list[str]:
@@ -25,6 +74,139 @@ def matching_ids(backend, *, user=None, name=None, ids=None) -> list[str]:
         want = {str(i) for i in ids}
         return [j.jobid for j in q if j.jobid in want or str(j.jobid_num) in want]
     return q.ids()
+
+
+def wait_for_events(
+    backend,
+    *,
+    user=None,
+    name=None,
+    ids=None,
+    poll_s: float = 15.0,
+    timeout_s: float = 0.0,
+    progress=None,
+    controller=None,
+) -> WaitResult:
+    """Block on terminal events until the watch set drains.
+
+    ``controller`` (an :class:`~repro.core.ecocontroller.EcoController`)
+    is ticked on every poll against real backends; against the simulator
+    its tick hook already rides ``advance()``.
+    """
+    inner = getattr(backend, "inner", backend)
+    watched = set(matching_ids(backend, user=user, name=name, ids=ids))
+    result = WaitResult(ok=True, snapshots=1)
+    if ids:
+        # explicit ids with no active queue row already left the queue:
+        # resolve their terminal state NOW — they must appear in the
+        # result (and drive the exit code) even while other ids still run
+        gone = [
+            req for req in {str(i) for i in ids}
+            if not any(w == req or w.split("_")[0] == req for w in watched)
+        ]
+        result.states.update(_final_states(inner, gone))
+    if not watched:
+        return result
+    remaining = set(watched)
+    start = time.monotonic()
+
+    def on_event(event):
+        if event.jobid not in remaining:
+            return
+        result.states[event.jobid] = _norm_state(event.state) or event.type
+        remaining.discard(event.jobid)
+
+    bus = getattr(inner, "bus", None)
+    if isinstance(inner, SimCluster) and bus is not None:
+        # native events: zero snapshots while waiting — each advance()
+        # delivers every transition in order at its simulated instant
+        token = bus.subscribe(on_event, types=TERMINAL_EVENTS)
+        try:
+            while remaining:
+                if progress:
+                    progress(len(remaining))
+                if timeout_s and time.monotonic() - start > timeout_s:
+                    result.ok = False
+                    return result
+                backend.advance(poll_s)
+        finally:
+            bus.unsubscribe(token)
+    else:
+        adapter = PollingEventAdapter(backend)
+        adapter.bus.subscribe(on_event, types=TERMINAL_EVENTS)
+        adapter.poll()  # baseline snapshot (no events by definition)
+        baseline = set(adapter._prev or {})
+        result.snapshots += 1
+        # a watched job can finish between the matching_ids snapshot and
+        # the baseline poll; it will never produce a vanish event, so
+        # resolve it here instead of blocking on it forever
+        raced = [jid for jid in remaining if jid not in baseline]
+        result.states.update(_final_states(inner, raced))
+        remaining -= set(raced)
+        while remaining:
+            if progress:
+                progress(len(remaining))
+            if timeout_s and time.monotonic() - start > timeout_s:
+                result.ok = False
+                return result
+            time.sleep(poll_s)
+            if controller is not None:
+                from datetime import datetime
+
+                controller.tick(datetime.now())
+            adapter.poll()
+            result.snapshots += 1
+    result.states.update(_final_states(inner, watched - set(result.states)))
+    return result
+
+
+def _norm_state(state: str) -> str:
+    """Normalise a raw queue/sacct state for exit-code matching
+    (``CANCELLED by 123`` → ``CANCELLED``, ``OUT_OF_ME+`` → OOM)."""
+    state = (state or "").split(" ")[0]
+    if state.startswith("OUT_OF_ME"):
+        return "OUT_OF_MEMORY"
+    if state.startswith("CANCELLED"):
+        return "CANCELLED"
+    return state
+
+
+def _final_states(inner, jids) -> dict:
+    """Best-effort terminal states for jobs that left the queue unseen.
+
+    Simulator-shaped backends answer exactly via ``get()``; on real SLURM
+    one ``sacct`` call resolves the whole batch (a FAILED job that left
+    the queue before we looked must still drive exit code 1). Jobs with
+    no record keep the classic convention: gone means COMPLETED.
+    """
+    jids = [str(j) for j in jids]
+    out: dict = {}
+    unresolved = []
+    get = getattr(inner, "get", None)
+    for jid in jids:
+        state = ""
+        if get is not None:
+            job = get(jid)
+            state = getattr(job, "state", "") if job is not None else ""
+        if state:
+            out[jid] = _norm_state(state)
+        else:
+            unresolved.append(jid)
+    if unresolved:
+        rows: dict = {}
+        accounting = getattr(inner, "accounting", None)
+        if accounting is not None and get is None:  # sacct-shaped backend
+            try:
+                rows = {
+                    str(r.get("jobid", "")): str(r.get("state", ""))
+                    for r in accounting()
+                    if isinstance(r, dict)
+                }
+            except Exception:  # noqa: BLE001 — sacct may be unavailable
+                rows = {}
+        for jid in unresolved:
+            out[jid] = _norm_state(rows.get(jid, "")) or "COMPLETED"
+    return out
 
 
 def wait_for(
@@ -37,27 +219,11 @@ def wait_for(
     timeout_s: float = 0.0,
     progress=None,
 ) -> bool:
-    """Poll until no watched job is active. Returns True on success."""
-    watched = set(matching_ids(backend, user=user, name=name, ids=ids))
-    if ids and not watched:
-        # ids given but already gone from the queue → done
-        return True
-    start = time.monotonic()
-    while True:
-        q = Queue(user=user, backend=backend)
-        active = {j.jobid for j in q if j.is_active()}
-        left = watched & active if watched else active
-        if not left:
-            return True
-        if progress:
-            progress(len(left))
-        if timeout_s and time.monotonic() - start > timeout_s:
-            return False
-        # a QueueCache wrapper delegates advance() and invalidates on it
-        if isinstance(getattr(backend, "inner", backend), SimCluster):
-            backend.advance(poll_s)  # simulated clock: tests run instantly
-        else:
-            time.sleep(poll_s)
+    """Back-compat wrapper: True when the watch set drained in time."""
+    return wait_for_events(
+        backend, user=user, name=name, ids=ids,
+        poll_s=poll_s, timeout_s=timeout_s, progress=progress,
+    ).ok
 
 
 def main(argv=None) -> int:
@@ -67,6 +233,11 @@ def main(argv=None) -> int:
     ap.add_argument("-n", "--name", default=None, help="job-name regex")
     ap.add_argument("--poll", type=float, default=15.0, help="seconds between polls")
     ap.add_argument("--timeout", type=float, default=0.0, help="0 = forever")
+    ap.add_argument("--json", action="store_true",
+                    help="emit per-job final states as JSON")
+    ap.add_argument("--eco-release", action="store_true",
+                    help="adopt held eco jobs (runjob --eco-hold) and "
+                         "release them reactively while waiting")
     ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args(argv)
 
@@ -80,11 +251,19 @@ def main(argv=None) -> int:
         except Exception:
             user = None
 
+    controller = None
+    if args.eco_release:
+        from repro.core import EcoController
+
+        controller = EcoController.adopt(backend)
+        if not args.quiet and controller.held:
+            print(f"eco: managing {len(controller.held)} held job(s)")
+
     def progress(n):
-        if not args.quiet:
+        if not args.quiet and not args.json:
             print(f"waiting on {n} job(s)...", flush=True)
 
-    ok = wait_for(
+    result = wait_for_events(
         backend,
         user=user,
         name=args.name,
@@ -92,13 +271,21 @@ def main(argv=None) -> int:
         poll_s=args.poll,
         timeout_s=args.timeout,
         progress=progress,
+        controller=controller,
     )
-    if not ok:
+    if args.json:
+        from repro.cli.render import emit_json
+
+        emit_json(result.to_dict())
+        return result.exit_code
+    if not result.ok:
         print("timeout")
-        return 2
-    if not args.quiet:
+    elif result.failed_ids:
+        print(f"{len(result.failed_ids)} job(s) failed: "
+              + " ".join(sorted(result.failed_ids)))
+    elif not args.quiet:
         print("all jobs finished")
-    return 0
+    return result.exit_code
 
 
 if __name__ == "__main__":

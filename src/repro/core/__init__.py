@@ -22,7 +22,17 @@ from .backend import (
 )
 from .config import NBIConfig, load_config, write_config
 from .eco import CarbonTrace, EcoDecision, EcoScheduler
+from .ecocontroller import EcoController, HeldJob, ReleaseRecord
 from .engine import BatchResult, QueueCache, SubmitEngine, get_queue_cache, reset_queue_cache
+from .events import (
+    EVENT_TYPES,
+    TERMINAL_EVENTS,
+    EventBus,
+    JobEvent,
+    PollingEventAdapter,
+    diff_snapshots,
+    terminal_event_for_state,
+)
 from .job import FILE_PLACEHOLDER, Job
 from .launcher import InputSpec, Kraken2, Launcher, LauncherError, discover_launchers
 from .manifest import Manifest
@@ -35,6 +45,9 @@ __all__ = [
     "BatchResult", "QueueCache", "SubmitEngine",
     "get_queue_cache", "reset_queue_cache",
     "CarbonTrace", "EcoDecision", "EcoScheduler",
+    "EcoController", "HeldJob", "ReleaseRecord",
+    "EVENT_TYPES", "TERMINAL_EVENTS", "EventBus", "JobEvent",
+    "PollingEventAdapter", "diff_snapshots", "terminal_event_for_state",
     "FILE_PLACEHOLDER", "Job", "Opts",
     "InputSpec", "Kraken2", "Launcher", "LauncherError", "discover_launchers",
     "Manifest", "Pipeline", "PipelineError",

@@ -129,6 +129,13 @@ class SlurmBackend:
         if jobids:
             subprocess.run(["scancel", *[str(j) for j in jobids]], check=True)
 
+    def release(self, jobids: list) -> None:
+        """Release jobs submitted with ``--hold`` (eco hold-and-release)."""
+        if jobids:
+            subprocess.run(
+                ["scontrol", "release", *[str(j) for j in jobids]], check=True
+            )
+
     def accounting(self, *, since: str = "", user: str = "") -> list[dict]:
         """Completed-job history via ``sacct`` (normalised row dicts).
 

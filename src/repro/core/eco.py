@@ -250,6 +250,19 @@ class EcoScheduler:
                 return True
         return False
 
+    def span_overlaps_peak(self, start: datetime, duration_s: int) -> bool:
+        """Would a job running ``[start, start+duration_s)`` touch peak hours?
+
+        The tier-≤2 condition, as a reusable predicate — the
+        :class:`~repro.core.ecocontroller.EcoController` uses it to check
+        that an *early* release keeps the tier promise made at submission.
+        """
+        end = start + timedelta(seconds=duration_s)
+        return any(
+            ps < end and start < pe
+            for ps, pe in self._absolute_peak_windows(start, end)
+        )
+
     def next_peak_start(self, now: datetime) -> datetime | None:
         """Start of the next peak period at or after ``now`` (for
         eco-preemption: a training run checkpoints itself at this boundary)."""

@@ -1,0 +1,331 @@
+"""``EcoController`` — reactive eco hold-and-release (eco v2).
+
+The static eco path freezes the deferral decision into a ``--begin``
+directive at submit time: the job starts at the predicted window whether or
+not the cluster is actually busy. The controller keeps the *same* decision
+— the same :class:`~repro.core.eco.EcoScheduler` tier maths, pinned
+bit-identical by ``tests/test_eco_properties.py`` — but turns it into a
+**deadline** instead of a directive:
+
+* tier-deferred jobs are submitted **HELD** (``sbatch --hold`` /
+  ``SimJob.held``) with no ``--begin``;
+* the controller observes the cluster through
+  :class:`~repro.core.events.JobEvent` s (simulator bus, or a
+  :class:`~repro.core.events.PollingEventAdapter` on real SLURM) and
+  **releases early** when conditions are actually favourable — observed
+  load at or below ``load_threshold``, inside an eco window, and the job's
+  span still off-peak (the tier promise holds);
+* at the decision's original ``begin`` — the deadline — the job is
+  released unconditionally, so a held job starts **no later** than it
+  would have under the static path.
+
+With no controller attached nothing changes: the static ``--begin`` path
+is untouched and decisions are bit-identical to before.
+
+Deadlines survive process boundaries through the accounting
+:class:`~repro.accounting.store.SubmitLog` journal; a long-running process
+(``waitjobs --eco-release``, a cron loop) re-adopts held jobs with
+:meth:`EcoController.adopt`.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from datetime import datetime
+
+from . import events as ev
+from .eco import EcoDecision, EcoScheduler
+
+
+@dataclass
+class HeldJob:
+    """One job the controller is holding back."""
+
+    jobid: str  # base id, as the backend reports it
+    deadline: datetime  # the static path's --begin: latest allowed start
+    duration_s: int  # effective (predicted) duration used by the tier maths
+    tier: int
+    registered_at: datetime
+
+
+@dataclass
+class ReleaseRecord:
+    jobid: str
+    at: datetime
+    deadline: datetime
+    early: bool  # released before the deadline (favourable conditions)
+
+    @property
+    def lead_s(self) -> float:
+        """Seconds gained over the static path (0 for deadline releases)."""
+        return max(0.0, (self.deadline - self.at).total_seconds())
+
+
+class EcoController:
+    """Hold tier-deferred jobs; release reactively, never past the deadline.
+
+    Parameters
+    ----------
+    backend:
+        Backend-protocol object with ``release()`` (``SlurmBackend`` or
+        ``SimCluster``, optionally behind a ``QueueCache``). Default
+        resolves via ``get_backend()``.
+    scheduler:
+        The :class:`EcoScheduler` whose decisions become deadlines.
+        Defaults to one built from config (+ ``predictor``), exactly like
+        the static path — that is what keeps detached behaviour
+        bit-identical.
+    load_threshold:
+        Cluster CPU-occupancy fraction at or below which held jobs may be
+        released early (default 0.25).
+
+    Attaching: against a simulator the controller registers a tick hook
+    (it runs at every ``advance()`` stop, including its own ``wake_at``
+    deadlines). Against any other backend it subscribes to the event bus
+    you wire in (``bind_bus``) and/or gets ``tick(now)`` called from a
+    poll loop (``waitjobs --eco-release`` does both).
+    """
+
+    def __init__(
+        self,
+        backend=None,
+        scheduler: EcoScheduler | None = None,
+        *,
+        predictor=None,
+        load_threshold: float = 0.25,
+        now: datetime | None = None,
+    ):
+        if backend is None:
+            from .backend import get_backend
+
+            backend = get_backend()
+        self.backend = backend
+        if scheduler is None:
+            scheduler = EcoScheduler(predictor=predictor)
+        self.scheduler = scheduler
+        self.load_threshold = float(load_threshold)
+        self._now = now  # injectable clock for deterministic tests
+        self.held: dict[str, HeldJob] = {}
+        self.released: list[ReleaseRecord] = []
+        inner = getattr(backend, "inner", backend)
+        self._hooked = None
+        add_hook = getattr(inner, "add_tick_hook", None)
+        if add_hook is not None:  # simulator: ride the event loop
+            add_hook(self._tick_hook)
+            self._hooked = inner
+        self._bus_token: "tuple | None" = None
+
+    @property
+    def self_driving(self) -> bool:
+        """True when releases happen without outside help — the controller
+        rides an in-process event loop (simulator tick hooks). On real
+        SLURM something must call ``tick()``/``adopt`` periodically."""
+        return self._hooked is not None
+
+    def detach(self) -> None:
+        """Stop reacting: remove the tick hook / bus subscription. A
+        detached controller keeps its held table but no longer releases —
+        call before discarding a controller another one will replace."""
+        if self._hooked is not None:
+            self._hooked.remove_tick_hook(self._tick_hook)
+            self._hooked = None
+        if self._bus_token is not None:
+            bus, token = self._bus_token
+            bus.unsubscribe(token)
+            self._bus_token = None
+
+    # -- decision seam (property-pinned) ---------------------------------------
+
+    def plan(
+        self, duration_s: int, now: datetime, *, name: str = "", user: str = "",
+        tool: str = "",
+    ) -> EcoDecision:
+        """The decision whose ``begin`` becomes the release deadline.
+
+        Exactly ``scheduler.decide(...)`` — the property suite pins this
+        equal to the static path's ``next_window`` for arbitrary windows,
+        clocks and durations, which is what makes hold-and-release a pure
+        *mechanism* swap: same decision, reactive execution.
+        """
+        return self.scheduler.decide(duration_s, now, name=name, user=user, tool=tool)
+
+    # -- submission ------------------------------------------------------------
+
+    @staticmethod
+    def hold_meta(decision: EcoDecision, duration_s: int) -> dict:
+        """The one journal/eco_meta shape for a held submission — every
+        hold path (here, SubmitEngine, runjob) builds it through this so
+        :meth:`adopt` always finds the fields it needs."""
+        return {
+            "tier": decision.tier,
+            "deferred": decision.deferred,
+            "hold": True,
+            "deadline": decision.begin_directive,
+            "duration_s": int(duration_s),
+        }
+
+    def submit(self, job, now: datetime | None = None) -> int:
+        """Submit ``job``; deferred decisions go in held, others run now."""
+        now = now or self._now or datetime.now()
+        tool = getattr(job, "tool", "")
+        decision = self.plan(job.opts.time_s, now, name=job.name, tool=tool)
+        duration_s = self.scheduler.effective_duration(
+            job.opts.time_s, job.name, "", tool
+        )
+        if decision.deferred:
+            job.opts.hold = True
+            eco_meta = self.hold_meta(decision, duration_s)
+        else:
+            eco_meta = {"tier": decision.tier, "deferred": decision.deferred}
+        job.eco_meta = eco_meta
+        jobid = job.run(self.backend)
+        if decision.deferred:
+            self.register(jobid, decision, now=now, duration_s=duration_s)
+        from repro.accounting import log_submission
+
+        log_submission(jobid, tool=tool, eco_meta=eco_meta)
+        return jobid
+
+    def register(
+        self,
+        jobid,
+        decision: EcoDecision,
+        *,
+        now: datetime | None = None,
+        duration_s: int | None = None,
+    ) -> None:
+        """Track an already-submitted held job (engine/CLI integration)."""
+        if not decision.deferred:
+            return
+        jid = str(jobid)
+        self.held[jid] = HeldJob(
+            jobid=jid,
+            deadline=decision.begin,
+            duration_s=int(duration_s or 0) or 1,
+            tier=decision.tier,
+            registered_at=now or self._now or datetime.now(),
+        )
+        self._wake(decision.begin)
+
+    # -- reaction --------------------------------------------------------------
+
+    def tick(self, now: datetime) -> "list[str]":
+        """Release whatever is due or favourable at ``now``; returns the ids.
+
+        * deadline reached → release unconditionally (the no-later-than-
+          static guarantee);
+        * otherwise, with observed load ≤ threshold AND ``now`` inside an
+          eco window AND the job's span off-peak → release early.
+        """
+        if not self.held:
+            return []
+        due = [h for h in self.held.values() if now >= h.deadline]
+        early: list[HeldJob] = []
+        rest = [h for h in self.held.values() if now < h.deadline]
+        if rest and self.scheduler.in_eco_window(now):
+            if self.load_fraction() <= self.load_threshold:
+                early = [
+                    h for h in rest
+                    if not self.scheduler.span_overlaps_peak(now, h.duration_s)
+                ]
+        targets = due + early
+        if not targets:
+            return []
+        ids = [h.jobid for h in targets]
+        for h in targets:  # drop before release(): its events re-enter tick
+            del self.held[h.jobid]
+            self.released.append(ReleaseRecord(
+                jobid=h.jobid, at=now, deadline=h.deadline,
+                early=now < h.deadline,
+            ))
+        self.backend.release(ids)
+        return ids
+
+    def load_fraction(self) -> float:
+        """Observed CPU occupancy across UP nodes (0.0 idle … 1.0 full)."""
+        total = used = 0
+        for n in self.backend.nodes_info():
+            state = str(n.get("state", "")).lower().rstrip("*")
+            if state not in ("up", "idle", "mixed", "allocated", "alloc", ""):
+                continue  # DOWN/DRAINED nodes contribute no capacity
+            cpus = int(n.get("cpus", 0) or 0)
+            total += cpus
+            if "used_cpus" in n:  # simulator: exact
+                used += int(n["used_cpus"])
+            elif state in ("allocated", "alloc"):  # sinfo: approximate
+                used += cpus
+            elif state == "mixed":
+                used += cpus // 2
+        return used / total if total else 0.0
+
+    # -- cross-process adoption --------------------------------------------------
+
+    @classmethod
+    def adopt(cls, backend=None, scheduler: EcoScheduler | None = None, **kw
+              ) -> "EcoController":
+        """Build a controller that re-adopts held jobs from the journal.
+
+        Another process (``runjob --eco-hold``) submitted held jobs and
+        journalled their deadlines in the accounting
+        :class:`~repro.accounting.store.SubmitLog`; this picks up every
+        job still sitting held in the queue and manages it to the same
+        deadline. Held jobs with no journalled deadline are left alone —
+        the user may have held them on purpose.
+        """
+        c = cls(backend, scheduler, **kw)
+        c.adopt_held()
+        return c
+
+    def adopt_held(self) -> int:
+        """Scan queue + journal for orphaned held jobs; returns how many."""
+        from repro.accounting import HistoryStore
+
+        journal = HistoryStore().submit_log().load()
+        adopted = 0
+        for row in self.backend.queue():
+            if row.get("reason") != ev.HELD_REASON:
+                continue
+            jid = str(row.get("jobid", ""))
+            if jid in self.held:
+                continue
+            entry = journal.get(jid) or journal.get(jid.split("_")[0])
+            deadline = _parse_iso((entry or {}).get("eco_deadline", ""))
+            if deadline is None:
+                continue
+            self.held[jid] = HeldJob(
+                jobid=jid,
+                deadline=deadline,
+                duration_s=int((entry or {}).get("eco_duration_s", 0) or 0) or 1,
+                tier=int((entry or {}).get("eco_tier", 0) or 0),
+                registered_at=self._now or datetime.now(),
+            )
+            self._wake(deadline)
+            adopted += 1
+        return adopted
+
+    # -- internals ---------------------------------------------------------------
+
+    def _tick_hook(self, sim, now: datetime) -> None:
+        self.tick(now)
+
+    def _wake(self, t: datetime) -> None:
+        inner = getattr(self.backend, "inner", self.backend)
+        wake = getattr(inner, "wake_at", None)
+        if wake is not None:
+            wake(t)
+
+    def bind_bus(self, bus) -> None:
+        """React to a :class:`PollingEventAdapter`'s synthetic events."""
+        if self._bus_token is not None:
+            old_bus, token = self._bus_token
+            old_bus.unsubscribe(token)
+        self._bus_token = (bus, bus.subscribe(lambda e: self.tick(e.at)))
+
+
+def _parse_iso(s: str) -> datetime | None:
+    if not s:
+        return None
+    try:
+        return datetime.fromisoformat(s)
+    except ValueError:
+        return None

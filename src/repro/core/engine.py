@@ -41,13 +41,22 @@ _MUTATORS = ("advance", "run_until_idle", "fail_node", "restore_node")
 
 
 class QueueCache:
-    """TTL cache over a backend's ``queue()`` (Backend-protocol compatible).
+    """TTL + event cache over a backend's ``queue()`` (Backend-protocol
+    compatible).
 
     Wraps any backend (``SlurmBackend`` or ``SimCluster``) and serves
     repeated ``queue()`` calls from a snapshot for ``ttl_s`` seconds.
-    ``submit``/``cancel`` are forwarded and invalidate the snapshot, as do
-    the simulator's clock/state mutators, so a caller can never observe the
-    queue missing its own just-submitted job.
+    ``submit``/``cancel``/``release`` are forwarded and invalidate the
+    snapshot, as do the simulator's clock/state mutators, so a caller can
+    never observe the queue missing its own just-submitted job.
+
+    When the wrapped backend announces transitions on an
+    :class:`~repro.core.events.EventBus` (the simulator does natively),
+    the cache also subscribes and drops its snapshot on every event — the
+    snapshot then goes stale the *instant* the cluster changes rather
+    than only when the TTL runs out, and stays valid indefinitely while
+    nothing happens. Construction binds automatically; ``bind_bus()``
+    attaches an external bus (e.g. a ``PollingEventAdapter``'s).
 
     ``clock`` is injectable for deterministic tests (defaults to
     ``time.monotonic``).
@@ -59,9 +68,14 @@ class QueueCache:
         self._clock = clock
         self._rows: list[dict] | None = None
         self._fetched_at: float = 0.0
+        self._bus_token: "tuple | None" = None  # (bus, token)
         # observability (the queue-tools benchmark reports these)
         self.polls = 0  # real backend.queue() calls
         self.hits = 0  # calls served from the snapshot
+        self.event_invalidations = 0
+        bus = getattr(backend, "bus", None)
+        if bus is not None:
+            self.bind_bus(bus)
 
     # -- Backend protocol -----------------------------------------------------
 
@@ -90,6 +104,10 @@ class QueueCache:
         self.inner.cancel(jobids)
         self.invalidate()
 
+    def release(self, jobids: list) -> None:
+        self.inner.release(jobids)
+        self.invalidate()
+
     def nodes_info(self) -> list[dict]:
         return self.inner.nodes_info()
 
@@ -98,6 +116,28 @@ class QueueCache:
     def invalidate(self) -> None:
         """Drop the snapshot; the next ``queue()`` re-polls the backend."""
         self._rows = None
+
+    def bind_bus(self, bus) -> None:
+        """Invalidate on every :class:`~repro.core.events.JobEvent` on ``bus``."""
+        if self._bus_token is not None:
+            old_bus, token = self._bus_token
+            if old_bus is bus:
+                return
+            old_bus.unsubscribe(token)
+        self._bus_token = (bus, bus.subscribe(self._on_event))
+
+    def unbind_bus(self) -> None:
+        """Detach from the bus — a discarded cache must stop receiving
+        events (the bus otherwise keeps it alive and busy forever)."""
+        if self._bus_token is not None:
+            bus, token = self._bus_token
+            bus.unsubscribe(token)
+            self._bus_token = None
+
+    def _on_event(self, event) -> None:
+        if self._rows is not None:
+            self.event_invalidations += 1
+        self.invalidate()
 
     def __getattr__(self, name):
         # Delegate simulator conveniences (get, accounting, jobs, now, ...);
@@ -133,6 +173,8 @@ def get_queue_cache(backend=None, ttl_s: float | None = None) -> QueueCache:
     if ttl_s is None:
         ttl_s = float(os.environ.get("REPRO_QUEUE_TTL", "2.0"))
     if _SHARED_CACHE is None or _SHARED_CACHE.inner is not inner:
+        if _SHARED_CACHE is not None:
+            _SHARED_CACHE.unbind_bus()  # don't leak the stale cache
         _SHARED_CACHE = QueueCache(inner, ttl_s=ttl_s)
     else:
         _SHARED_CACHE.ttl_s = float(ttl_s)
@@ -142,6 +184,8 @@ def get_queue_cache(backend=None, ttl_s: float | None = None) -> QueueCache:
 def reset_queue_cache() -> None:
     """Forget the shared cache (test isolation)."""
     global _SHARED_CACHE
+    if _SHARED_CACHE is not None:
+        _SHARED_CACHE.unbind_bus()
     _SHARED_CACHE = None
 
 
@@ -218,6 +262,12 @@ class SubmitEngine:
         decisions are then priced from each job's historical runtime
         instead of its padded request limit. With no predictor (or an
         empty history) decisions are bit-identical to before.
+    controller:
+        Optional :class:`~repro.core.ecocontroller.EcoController` (implies
+        eco pricing). Deferred units are then submitted HELD — no
+        ``--begin`` — and registered with the controller, which releases
+        them reactively no later than the static deadline. ``None``
+        (default) keeps the static ``--begin`` path bit-identical.
     now:
         Injectable clock for deterministic eco decisions.
     """
@@ -231,6 +281,7 @@ class SubmitEngine:
         eco: bool = False,
         scheduler=None,
         predictor=None,
+        controller=None,
         now: datetime | None = None,
         cache: QueueCache | None = None,
     ):
@@ -241,8 +292,11 @@ class SubmitEngine:
         self.backend = backend
         self.coalesce = coalesce
         self.min_array_size = max(2, int(min_array_size))
-        self.eco = eco
-        self.scheduler = scheduler
+        self.controller = controller
+        self.eco = eco or controller is not None
+        self.scheduler = scheduler if scheduler is not None else (
+            controller.scheduler if controller is not None else None
+        )
         self.predictor = predictor
         self.now = now
         self.cache = cache
@@ -317,10 +371,24 @@ class SubmitEngine:
             decisions = sched.decide_many(
                 [u.opts.time_s for u, _ in pending], clock, keys=keys
             )
+            deferred_units: list[tuple[Job, object]] = []  # (unit, decision)
             for (unit, _), dec in zip(pending, decisions):
                 unit.eco_meta = {"tier": dec.tier, "deferred": dec.deferred}
                 if dec.deferred:
-                    unit.opts.set_begin(dec.begin_directive)
+                    if self.controller is not None:
+                        # eco v2: hold now, release reactively (deadline =
+                        # the exact begin the static path would have set)
+                        unit.opts.hold = True
+                        unit.eco_meta = self.controller.hold_meta(
+                            dec,
+                            sched.effective_duration(
+                                unit.opts.time_s, unit.name, "",
+                                getattr(unit, "tool", ""),
+                            ),
+                        )
+                        deferred_units.append((unit, dec))
+                    else:
+                        unit.opts.set_begin(dec.begin_directive)
                     result.eco_deferred += 1
 
         # 4. write scripts, then pipeline the actual submissions
@@ -333,6 +401,14 @@ class SubmitEngine:
         if self.cache is not None:
             self.cache.invalidate()
         _invalidate_shared_for(self.backend)
+        if self.eco and self.controller is not None:
+            clock = self.now or datetime.now()
+            unit_to_base = {id(u): b for (u, _), b in zip(units, base_ids)}
+            for unit, dec in deferred_units:
+                self.controller.register(
+                    unit_to_base[id(unit)], dec, now=clock,
+                    duration_s=unit.eco_meta.get("duration_s"),
+                )
 
         # 5. map ids back onto the input jobs
         for (unit, members), base in zip(units, base_ids):

@@ -1,0 +1,271 @@
+"""``EventBus`` / ``JobEvent`` — the event-driven core.
+
+Every job state transition in the stack is announced as a typed
+:class:`JobEvent` on an :class:`EventBus`, replacing the poll-everywhere
+pattern where each consumer (waitjobs, the viewjobs TUI, accounting)
+rediscovered state changes by diffing ``squeue`` snapshots on its own
+schedule:
+
+* :class:`~repro.core.simcluster.SimCluster` emits natively — one event at
+  the exact simulated instant of every transition inside ``advance()`` /
+  ``cancel()`` / ``fail_node()`` / ``release()``;
+* real SLURM cannot push, so :class:`PollingEventAdapter` diffs consecutive
+  squeue/sacct snapshots into the *same* synthetic events — subscribers are
+  backend-agnostic.
+
+Consumers: ``waitjobs`` blocks on terminal events (one snapshot per clock
+advance instead of one poll per tick), ``QueueCache`` invalidates on events
+instead of pure TTL expiry, accounting's :class:`~repro.accounting.collect.
+EventCollector` archives each job at its terminal event without full-archive
+rescans, and the :class:`~repro.core.ecocontroller.EcoController` releases
+held eco jobs when observed load drops (see ``docs/architecture.md``).
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from datetime import datetime
+
+# ---------------------------------------------------------------------------
+# Event vocabulary
+# ---------------------------------------------------------------------------
+
+SUBMITTED = "SUBMITTED"
+STARTED = "STARTED"
+RELEASED = "RELEASED"  # a held job was released (eco hold-and-release)
+COMPLETED = "COMPLETED"
+FAILED = "FAILED"
+TIMEOUT = "TIMEOUT"
+CANCELLED = "CANCELLED"
+NODE_FAIL = "NODE_FAIL"
+REQUEUED = "REQUEUED"
+
+#: every event type, in rough lifecycle order
+EVENT_TYPES = (
+    SUBMITTED, STARTED, RELEASED,
+    COMPLETED, FAILED, TIMEOUT, CANCELLED, NODE_FAIL, REQUEUED,
+)
+
+#: events after which the job is gone from the queue for good
+TERMINAL_EVENTS = frozenset({COMPLETED, FAILED, TIMEOUT, CANCELLED, NODE_FAIL})
+
+#: queue/sacct state → the terminal event announcing it
+_STATE_TO_TERMINAL = {
+    "COMPLETED": COMPLETED,
+    "FAILED": FAILED,
+    "TIMEOUT": TIMEOUT,
+    "CANCELLED": CANCELLED,
+    "NODE_FAIL": NODE_FAIL,
+    "OUT_OF_MEMORY": FAILED,
+}
+
+
+def terminal_event_for_state(state: str) -> str:
+    """Map a (possibly decorated) terminal queue state to its event type.
+
+    Unknown states — including a job that simply vanished between two
+    snapshots with no accounting trail — read as ``COMPLETED``, mirroring
+    the long-standing waitjobs convention that *gone from the queue* means
+    *done*.
+    """
+    state = (state or "").split(" ")[0]
+    if state in _STATE_TO_TERMINAL:
+        return _STATE_TO_TERMINAL[state]
+    # sacct may truncate/decorate (OUT_OF_ME+, CANCELLED by 123)
+    if state.startswith("OUT_OF_ME"):
+        return FAILED
+    if state.startswith("CANCELLED"):
+        return CANCELLED
+    return COMPLETED
+
+
+@dataclass(frozen=True)
+class JobEvent:
+    """One job state transition, as observed by the emitting backend."""
+
+    type: str  # one of EVENT_TYPES
+    jobid: str
+    at: datetime
+    name: str = ""
+    user: str = ""
+    state: str = ""  # queue state after the transition ("" when implied)
+    node: str = ""
+    reason: str = ""
+
+    @property
+    def is_terminal(self) -> bool:
+        return self.type in TERMINAL_EVENTS
+
+
+class EventBus:
+    """Synchronous pub/sub for :class:`JobEvent` (in-process, ordered).
+
+    Subscribers are plain callables ``fn(event)``; ``types`` narrows the
+    subscription. Delivery is in subscription order at the emitting call
+    site, so a simulator test observes events at the exact simulated
+    instant they happen. A misbehaving subscriber must not corrupt the
+    emitter mid-transition: its exception is recorded on ``bus.errors``
+    (bounded) and delivery continues.
+
+    ``history`` keeps the most recent events for late joiners (the TUI's
+    live ticker, test assertions); it is a debugging aid, not a replay log.
+    """
+
+    def __init__(self, history: int = 256):
+        self._subs: dict[int, tuple] = {}  # token → (fn, frozenset|None)
+        self._next_token = 1
+        self.history: deque[JobEvent] = deque(maxlen=history)
+        self.emitted = 0  # events emitted
+        self.delivered = 0  # subscriber callbacks invoked
+        self.errors: deque = deque(maxlen=16)  # (event, exception)
+
+    def subscribe(self, fn, types=None) -> int:
+        """Register ``fn(event)``; returns a token for :meth:`unsubscribe`.
+
+        ``types``: iterable of event types to receive (default: all).
+        """
+        token = self._next_token
+        self._next_token += 1
+        self._subs[token] = (fn, frozenset(types) if types is not None else None)
+        return token
+
+    def unsubscribe(self, token: int) -> None:
+        self._subs.pop(token, None)
+
+    def emit(self, event: JobEvent) -> None:
+        self.emitted += 1
+        self.history.append(event)
+        # snapshot: a subscriber may (un)subscribe during delivery
+        for fn, types in list(self._subs.values()):
+            if types is not None and event.type not in types:
+                continue
+            try:
+                fn(event)
+                self.delivered += 1
+            except Exception as e:  # noqa: BLE001 — isolate subscribers
+                self.errors.append((event, e))
+
+    def __len__(self) -> int:
+        return len(self._subs)
+
+
+# ---------------------------------------------------------------------------
+# Polling adapter: snapshot diffs → synthetic events (real-SLURM side)
+# ---------------------------------------------------------------------------
+
+#: squeue reason marking a user/controller hold (real SLURM and SimCluster)
+HELD_REASON = "JobHeldUser"
+
+
+def diff_snapshots(prev, cur, now: datetime) -> "list[JobEvent]":
+    """Diff two ``{jobid: row}`` queue snapshots into synthetic events.
+
+    ``prev is None`` marks the first observation: it establishes the
+    baseline and yields no events (pre-existing jobs did not *transition*).
+    Vanished jobs yield a terminal event with ``state=""`` — the caller
+    (:class:`PollingEventAdapter`) refines it through accounting when it
+    can. Pure function, unit-testable without a backend.
+    """
+    if prev is None:
+        return []
+    events: list[JobEvent] = []
+
+    def ev(type_, row, state="", reason=""):
+        events.append(JobEvent(
+            type=type_, jobid=row["jobid"], at=now,
+            name=row.get("name", ""), user=row.get("user", ""),
+            state=state or row.get("state", ""),
+            node=row.get("nodelist", ""), reason=reason or row.get("reason", ""),
+        ))
+
+    for jid, row in cur.items():
+        old = prev.get(jid)
+        state = row.get("state", "")
+        if old is None:
+            ev(SUBMITTED, row)
+            if state == "RUNNING":  # appeared already running
+                ev(STARTED, row)
+            continue
+        old_state = old.get("state", "")
+        if old_state != "RUNNING" and state == "RUNNING":
+            ev(STARTED, row)
+        elif old_state == "RUNNING" and state == "PENDING":
+            ev(REQUEUED, row)
+        elif (
+            old.get("reason", "") == HELD_REASON
+            and row.get("reason", "") != HELD_REASON
+            and state == "PENDING"
+        ):
+            ev(RELEASED, row)
+    for jid, row in prev.items():
+        if jid not in cur:
+            # vanished: terminal, but the last-seen state is stale — leave
+            # state empty so the adapter resolves it through accounting
+            events.append(JobEvent(
+                type=terminal_event_for_state(""), jobid=jid, at=now,
+                name=row.get("name", ""), user=row.get("user", ""),
+                state="", node=row.get("nodelist", ""),
+            ))
+    return events
+
+
+class PollingEventAdapter:
+    """Synthesises :class:`JobEvent` s for backends that cannot push.
+
+    Each :meth:`poll` takes ONE queue snapshot, diffs it against the
+    previous one, resolves the terminal state of vanished jobs (via the
+    backend's ``get``/``accounting`` when available, defaulting to
+    ``COMPLETED``) and emits the events on :attr:`bus`. Subscribers see
+    exactly the vocabulary the simulator emits natively — they cannot
+    tell which backend they are watching.
+    """
+
+    def __init__(self, backend, bus: EventBus | None = None, *, clock=None):
+        self.backend = backend
+        self.bus = bus if bus is not None else EventBus()
+        self._clock = clock or datetime.now
+        self._prev: "dict[str, dict] | None" = None
+        self._acct: "dict | None" = None  # per-poll accounting lookup
+        self.polls = 0  # snapshots taken
+
+    def poll(self, now: datetime | None = None) -> "list[JobEvent]":
+        """One snapshot → the events since the previous poll (also emitted)."""
+        now = now or self._clock()
+        self._acct = None  # at most one accounting call per poll
+        rows = {r["jobid"]: dict(r) for r in self.backend.queue()}
+        self.polls += 1
+        events = diff_snapshots(self._prev, rows, now)
+        self._prev = rows
+        events = [self._resolve_terminal(e) if e.is_terminal and not e.state
+                  else e for e in events]
+        for e in events:
+            self.bus.emit(e)
+        return events
+
+    # -- internals -------------------------------------------------------------
+
+    def _resolve_terminal(self, event: JobEvent) -> JobEvent:
+        """Refine a vanished job's event via the backend's accounting."""
+        state = self._final_state(event.jobid)
+        if not state:
+            return event
+        from dataclasses import replace
+
+        return replace(event, type=terminal_event_for_state(state), state=state)
+
+    def _final_state(self, jobid: str) -> str:
+        get = getattr(self.backend, "get", None)
+        if get is not None:  # simulator-shaped backend: exact answer
+            job = get(jobid)
+            return getattr(job, "state", "") if job is not None else ""
+        accounting = getattr(self.backend, "accounting", None)
+        if accounting is None:
+            return ""
+        if self._acct is None:  # one sacct call per poll, not per job
+            try:
+                self._acct = {str(r.get("jobid", "")): r for r in accounting()}
+            except Exception:  # noqa: BLE001 — sacct may be unavailable
+                self._acct = {}
+        row = self._acct.get(str(jobid))
+        return str(row.get("state", "")) if row else ""

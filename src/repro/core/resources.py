@@ -123,6 +123,7 @@ class Opts:
     tmpdir: str = ""
     output_dir: str = ""  # -w in runjob: where stdout/err logs go
     begin: str = ""  # ISO8601 --begin directive (eco mode injects this)
+    hold: bool = False  # submit held (--hold); EcoController releases later
     array_size: int = 0  # >0 → job array 0..array_size-1
     array_throttle: int = 0  # simultaneous array tasks (0 = unlimited)
     dependencies: list = field(default_factory=list)  # job ids (afterok)
@@ -203,6 +204,8 @@ class Opts:
             lines.append(f"#SBATCH --mail-type={self.email_type}")
         if self.begin:
             lines.append(f"#SBATCH --begin={self.begin}")
+        if self.hold:
+            lines.append("#SBATCH --hold")
         if self.dependencies:
             dep = ":".join(str(d) for d in self.dependencies)
             lines.append(f"#SBATCH --dependency={self.dependency_type}:{dep}")

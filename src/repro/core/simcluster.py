@@ -16,6 +16,13 @@ deterministic ``energy_j = watts_per_cpu × cpus × elapsed_seconds`` when it
 reaches a terminal state — the simulator's analogue of sacct's
 ``ConsumedEnergy``, which :func:`repro.accounting.collect` harvests into
 the job archive.
+
+Events: every state transition is announced on :attr:`SimCluster.bus` as a
+typed :class:`~repro.core.events.JobEvent` at the exact simulated instant
+it happens — callers subscribe instead of diffing ``queue()`` snapshots.
+``tick_hooks`` and ``wake_at()`` let reactive controllers (the eco
+hold-and-release daemon) run at every event boundary and at their own
+deadlines inside ``advance()``.
 """
 
 from __future__ import annotations
@@ -25,6 +32,8 @@ import subprocess
 from dataclasses import dataclass, field
 from datetime import datetime, timedelta
 
+from . import events as ev
+from .events import EventBus, JobEvent
 from .resources import format_slurm_time
 
 _TERMINAL = ("COMPLETED", "FAILED", "CANCELLED", "TIMEOUT", "NODE_FAIL")
@@ -69,6 +78,7 @@ class SimJob:
     started_at: datetime | None = None
     finished_at: datetime | None = None
     array_task_id: int | None = None
+    held: bool = False  # submitted --hold; stays PENDING until release()
     restarts: int = 0
     tool: str = ""  # launcher/tool name (predictor key); "" for plain jobs
     eco_deferred: bool = False  # eco mode injected a --begin on this job
@@ -91,6 +101,7 @@ class SimCluster:
         default_duration_s: int = 60,
         execute: bool = False,
         watts_per_cpu: float = 12.0,
+        bus: EventBus | None = None,
     ):
         self.nodes = nodes or [SimNode(f"n{i:03d}") for i in range(4)]
         self.now = now or datetime(2026, 3, 18, 10, 0, 0)
@@ -103,6 +114,11 @@ class SimCluster:
         self._defer_schedule = False
         self._failures: list[tuple[datetime, str]] = []  # scheduled node failures
         self.events_log: list[tuple[datetime, str]] = []
+        #: typed event stream; one JobEvent per state transition
+        self.bus = bus if bus is not None else EventBus()
+        #: reactive controllers: fn(sim, now) at every event boundary
+        self.tick_hooks: list = []
+        self._wakeups: list[datetime] = []  # extra advance() stops (sorted)
 
     # ------------------------------------------------------------------ submit
 
@@ -119,10 +135,11 @@ class SimCluster:
             duration = self.default_duration_s
         # eco metadata stamped by the submission path (engine/launcher/runjob)
         eco_meta = getattr(job, "eco_meta", None) or {}
+        held = bool(getattr(opts, "hold", False))
         n_tasks = max(1, opts.array_size)
         for t in range(n_tasks):
             jid = f"{base}_{t}" if opts.array_size > 0 else str(base)
-            self.jobs[jid] = SimJob(
+            j = SimJob(
                 jobid=jid,
                 name=job.name,
                 user=self.default_user,
@@ -138,10 +155,15 @@ class SimCluster:
                 requeue=opts.requeue,
                 script_path=job.script_path,
                 array_task_id=t if opts.array_size > 0 else None,
+                held=held,
                 tool=getattr(job, "tool", "") or "",
                 eco_deferred=bool(eco_meta.get("deferred", False)),
                 eco_tier=int(eco_meta.get("tier", 0) or 0),
             )
+            if held:
+                j.reason = ev.HELD_REASON
+            self.jobs[jid] = j
+            self._emit(ev.SUBMITTED, j)
         self._log(f"submit {base} name={job.name} tasks={n_tasks}")
         self._try_schedule()
         return base
@@ -233,7 +255,31 @@ class SimCluster:
             j.state = "CANCELLED"
             j.finished_at = self.now
             self._log(f"cancel {jid}")
+            self._emit(ev.CANCELLED, j)
         self._try_schedule()
+
+    def release(self, jobids: list) -> None:
+        """Release jobs submitted with ``--hold`` (scontrol-release analogue).
+
+        Accepts task ids or base ids, like :meth:`cancel`. Non-held or
+        terminal jobs are left untouched, so releasing is idempotent.
+        """
+        released = False
+        for jid in jobids:
+            jid = str(jid)
+            for j in self.jobs.values():
+                if j.jobid != jid and str(j.base_id) != jid:
+                    continue
+                if not j.held or j.state in _TERMINAL:
+                    continue
+                j.held = False
+                if j.reason == ev.HELD_REASON:
+                    j.reason = ""
+                released = True
+                self._log(f"release {j.jobid}")
+                self._emit(ev.RELEASED, j)
+        if released:
+            self._try_schedule()
 
     def fail_node(self, name: str, at: datetime | None = None) -> None:
         """Fail a node now, or schedule a failure at a future (sim) time."""
@@ -255,9 +301,11 @@ class SimCluster:
                     j.started_at = None
                     j.restarts += 1
                     self._log(f"requeue {j.jobid}")
+                    self._emit(ev.REQUEUED, j)
                 else:
                     j.state = "NODE_FAIL"
                     j.finished_at = self.now
+                    self._emit(ev.NODE_FAIL, j)
         self._try_schedule()
 
     def restore_node(self, name: str) -> None:
@@ -268,19 +316,50 @@ class SimCluster:
     # ------------------------------------------------------------------ clock
 
     def advance(self, seconds: float = 0, *, to: datetime | None = None) -> "SimCluster":
-        """Advance simulated time, processing every event in order."""
+        """Advance simulated time, processing every event in order.
+
+        Registered ``tick_hooks`` run at every stop (scheduled event, wakeup,
+        final target) — the reactive analogue of a controller daemon's loop.
+        """
         target = to if to is not None else self.now + timedelta(seconds=seconds)
         while True:
-            ev = self._next_event_time(target)
-            if ev is None:
+            t = self._next_event_time(target)
+            if t is None:
                 break
-            self.now = ev
+            self.now = t
             self._process_due_events()
             self._try_schedule()
+            self._tick()
         self.now = max(self.now, target)
         self._process_due_events()
         self._try_schedule()
+        self._tick()
         return self
+
+    def wake_at(self, t: datetime) -> None:
+        """Ask ``advance()`` to stop (and tick hooks to run) at ``t``.
+
+        Controllers use this for deadlines the job table knows nothing
+        about — e.g. an eco hold-and-release deadline on a held job, which
+        carries no ``--begin`` of its own. Past times are ignored.
+        """
+        if t > self.now and t not in self._wakeups:
+            self._wakeups.append(t)
+            self._wakeups.sort()
+
+    def add_tick_hook(self, fn) -> None:
+        """Register ``fn(sim, now)`` to run at every ``advance()`` stop."""
+        if fn not in self.tick_hooks:
+            self.tick_hooks.append(fn)
+
+    def remove_tick_hook(self, fn) -> None:
+        if fn in self.tick_hooks:
+            self.tick_hooks.remove(fn)
+
+    def _tick(self) -> None:
+        self._wakeups = [t for t in self._wakeups if t > self.now]
+        for fn in list(self.tick_hooks):
+            fn(self, self.now)
 
     def run_until_idle(self, max_days: int = 30) -> "SimCluster":
         """Advance until no active jobs remain (bounded)."""
@@ -290,10 +369,10 @@ class SimCluster:
                       and j.reason != "DependencyNeverSatisfied"]
             if not active:
                 break
-            ev = self._next_event_time(deadline)
-            if ev is None:
+            t = self._next_event_time(deadline)
+            if t is None:
                 break
-            self.advance(to=ev)
+            self.advance(to=t)
         return self
 
     # ------------------------------------------------------------------ internals
@@ -315,6 +394,7 @@ class SimCluster:
             elif j.state == "PENDING" and j.begin and j.begin > self.now:
                 times.append(j.begin)
         times += [t for t, _ in self._failures]
+        times += self._wakeups  # controller deadlines (wake_at)
         future = [t for t in times if self.now < t <= target]
         return min(future) if future else None
 
@@ -340,6 +420,7 @@ class SimCluster:
         if j.duration_s > j.time_limit_s:
             j.state = "TIMEOUT"
             self._log(f"timeout {j.jobid}")
+            self._emit(ev.TIMEOUT, j)
             return
         if self.execute and j.script_path and os.path.exists(j.script_path):
             env = dict(os.environ)
@@ -360,6 +441,7 @@ class SimCluster:
         else:
             j.state = "COMPLETED"
         self._log(f"finish {j.jobid} state={j.state}")
+        self._emit(ev.COMPLETED if j.state == "COMPLETED" else ev.FAILED, j)
 
     def _charge(self, j: SimJob, seconds: float) -> None:
         """Accumulate consumed energy for ``seconds`` of occupancy (requeued
@@ -397,6 +479,11 @@ class SimCluster:
             key=lambda j: (j.base_id, j.array_task_id or 0),
         )
         for j in pending:
+            if j.state != "PENDING":
+                continue  # an event subscriber already transitioned it
+            if j.held:
+                j.reason = ev.HELD_REASON
+                continue
             if j.begin and self.now < j.begin:
                 j.reason = "BeginTime"
                 continue
@@ -418,9 +505,16 @@ class SimCluster:
                     j.started_at = self.now
                     placed = True
                     self._log(f"start {j.jobid} on {node.name}")
+                    self._emit(ev.STARTED, j)
                     break
             if not placed:
                 j.reason = "Resources"
 
     def _log(self, msg: str) -> None:
         self.events_log.append((self.now, msg))
+
+    def _emit(self, type_: str, j: SimJob) -> None:
+        self.bus.emit(JobEvent(
+            type=type_, jobid=j.jobid, at=self.now, name=j.name,
+            user=j.user, state=j.state, node=j.node or "", reason=j.reason,
+        ))

@@ -5,12 +5,46 @@ CPU device (the 512-device override belongs ONLY to repro.launch.dryrun).
 """
 
 import os
+import signal
 import sys
+import threading
 from pathlib import Path
 
 import pytest
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+# Per-test wall-clock timeout (seconds). An event-wait bug — a waitjobs
+# loop whose terminal event never fires, an advance() that stops making
+# progress — must fail the one test promptly instead of hanging the whole
+# CI job. pytest-timeout is not in the platform image, so this is a plain
+# SIGALRM watchdog (POSIX main thread only; a no-op elsewhere).
+TEST_TIMEOUT_S = int(os.environ.get("NBI_TEST_TIMEOUT_S", "300"))
+
+
+@pytest.fixture(autouse=True)
+def _per_test_timeout(request):
+    if (
+        TEST_TIMEOUT_S <= 0
+        or not hasattr(signal, "SIGALRM")
+        or threading.current_thread() is not threading.main_thread()
+    ):
+        yield
+        return
+
+    def _timed_out(signum, frame):
+        pytest.fail(
+            f"test exceeded NBI_TEST_TIMEOUT_S={TEST_TIMEOUT_S}s "
+            f"({request.node.nodeid})", pytrace=False,
+        )
+
+    old = signal.signal(signal.SIGALRM, _timed_out)
+    signal.setitimer(signal.ITIMER_REAL, TEST_TIMEOUT_S)
+    try:
+        yield
+    finally:
+        signal.setitimer(signal.ITIMER_REAL, 0)
+        signal.signal(signal.SIGALRM, old)
 
 
 @pytest.fixture(autouse=True)

@@ -154,3 +154,27 @@ def test_empty_history_predictor_is_bit_identical(tmp_path_factory, sched,
     assert pred_sched.decide_many([dur, dur * 2], now,
                                   keys=[(name, user), (name, user)]) == \
         sched.decide_many([dur, dur * 2], now)
+
+
+@settings(max_examples=150, deadline=None)
+@given(sched=scheds(), now=clock, dur=duration,
+       name=st.sampled_from(["blast-1", "align_7", "kraken2", "x"]))
+def test_controller_plan_is_bit_identical_to_static_path(sched, now, dur, name):
+    """P8 (eco v2): hold-and-release is a pure *mechanism* swap. For
+    arbitrary window configs, clocks, durations and job identities the
+    EcoController's plan — whose ``begin`` becomes the release deadline —
+    equals the static path's ``next_window`` decision exactly. So with no
+    controller attached nothing changes, and with one attached a held job's
+    worst-case start (the deadline) is the static ``--begin`` verbatim."""
+    from repro.core import EcoController, SimCluster
+
+    controller = EcoController(SimCluster(now=now), sched)
+    static = sched.next_window(dur, now)
+    planned = controller.plan(dur, now, name=name)
+    assert planned == static
+    # registering uses the plan's begin as the deadline, unchanged
+    controller.register("999", planned, now=now, duration_s=dur)
+    if static.deferred:
+        assert controller.held["999"].deadline == static.begin
+    else:
+        assert "999" not in controller.held

@@ -1,0 +1,304 @@
+"""EcoController — reactive hold-and-release (eco v2).
+
+The contract under test, end to end against the simulator:
+
+* the decision is the SAME EcoScheduler decision as the static path — its
+  ``begin`` just becomes a release deadline instead of a ``--begin``;
+* held jobs are released **no later** than that deadline (the static path
+  is the worst case), and **earlier** when observed load is low inside an
+  eco window with the span still off-peak;
+* with no controller attached, nothing in the static path changes.
+"""
+
+from datetime import datetime, timedelta
+
+from repro.core import (
+    EcoController,
+    EcoScheduler,
+    Job,
+    Opts,
+    SimCluster,
+    SimNode,
+    SubmitEngine,
+)
+
+WED_10 = datetime(2026, 3, 18, 10, 0, 0)  # a Wednesday
+
+
+def sched_nightly(**kw):
+    """Night window 00:00-06:00, peak 17:00-20:00 (paper defaults, pinned)."""
+    args = dict(
+        weekday_windows=[(0, 360)],
+        weekend_windows=[(0, 420), (660, 960)],
+        peak_hours=[(1020, 1200)],
+        horizon_days=14,
+        min_delay_s=0,
+    )
+    args.update(kw)
+    return EcoScheduler(**args)
+
+
+def sched_with_midday():
+    """Adds a 12:00-13:00 weekday window: tier-2 territory for long jobs —
+    the early-release opportunity the night deadline would otherwise skip."""
+    return sched_nightly(weekday_windows=[(0, 360), (720, 780)])
+
+
+def eco_job(name="eco", *, hours=4, duration=600, cpus=1):
+    return Job(name=name, command="true",
+               opts=Opts.new(threads=cpus, memory="1GB", time=f"{hours}h"),
+               sim_duration_s=duration)
+
+
+def fresh_sim(**kw):
+    return SimCluster(now=WED_10, default_user="testuser", **kw)
+
+
+class TestPlanEqualsStaticDecision:
+    def test_plan_is_next_window(self):
+        sched = sched_nightly()
+        c = EcoController(fresh_sim(), sched)
+        for hours in (1, 4, 12):
+            assert c.plan(hours * 3600, WED_10) == sched.next_window(
+                hours * 3600, WED_10
+            )
+
+    def test_detached_static_path_sets_begin_not_hold(self):
+        sim = fresh_sim()
+        engine = SubmitEngine(sim, eco=True, scheduler=sched_nightly(),
+                              now=WED_10, coalesce=False)
+        job = eco_job()
+        engine.submit_many([job])
+        assert job.opts.begin and not job.opts.hold
+        assert sim.get(job.jobid).held is False
+
+
+class TestDeadlineRelease:
+    def test_held_then_released_at_deadline(self):
+        sim = fresh_sim()
+        sched = sched_nightly()
+        c = EcoController(sim, sched)
+        job = eco_job(hours=4)
+        jid = c.submit(job, now=WED_10)
+        j = sim.get(jid)
+        static = sched.next_window(4 * 3600, WED_10)
+        assert j.held and j.state == "PENDING" and not job.opts.begin
+        assert c.held[str(jid)].deadline == static.begin
+
+        sim.advance(to=static.begin - timedelta(hours=1))
+        assert j.state == "PENDING"  # nothing favourable yet: still held
+        sim.advance(to=static.begin + timedelta(minutes=1))
+        assert j.state in ("RUNNING", "COMPLETED")
+        assert j.started_at == static.begin  # wake_at stops exactly there
+        (rec,) = c.released
+        assert rec.early is False and rec.at == rec.deadline
+
+    def test_detach_stops_releases(self):
+        sim = fresh_sim()
+        sched = sched_nightly()
+        c = EcoController(sim, sched)
+        assert c.self_driving
+        jid = c.submit(eco_job(hours=4), now=WED_10)
+        c.detach()
+        assert not c.self_driving and not sim.tick_hooks
+        sim.advance(to=WED_10 + timedelta(days=1))
+        assert sim.get(jid).state == "PENDING"  # nobody releasing any more
+
+    def test_non_deferred_decision_runs_immediately(self):
+        sim = SimCluster(now=datetime(2026, 3, 18, 1, 0, 0))  # inside window
+        c = EcoController(sim, sched_nightly())
+        jid = c.submit(eco_job(hours=2), now=sim.now)
+        assert sim.get(jid).state == "RUNNING"
+        assert not c.held
+
+
+class TestEarlyRelease:
+    def test_released_early_when_idle_in_window(self):
+        sim = fresh_sim()
+        sched = sched_with_midday()
+        c = EcoController(sim, sched)
+        jid = c.submit(eco_job(hours=4), now=WED_10)
+        static = sched.next_window(4 * 3600, WED_10)
+        assert static.begin.hour == 0  # tier 1 rules: deferred to the night
+        # 12:30 same day: idle cluster, inside the midday eco window, and
+        # a 4 h span from here stays clear of the 17:00 peak
+        sim.advance(to=WED_10.replace(hour=12, minute=30))
+        j = sim.get(jid)
+        assert j.state in ("RUNNING", "COMPLETED")
+        (rec,) = c.released
+        assert rec.early and rec.at < rec.deadline
+        assert rec.lead_s > 0
+
+    def test_not_released_early_when_span_would_hit_peak(self):
+        sim = fresh_sim()
+        sched = sched_with_midday()
+        c = EcoController(sim, sched)
+        # 6 h from 12:xx ends past 17:00 — releasing early would break the
+        # tier promise, so the controller waits for the night deadline
+        jid = c.submit(eco_job(hours=6), now=WED_10)
+        sim.advance(to=WED_10.replace(hour=12, minute=30))
+        assert sim.get(jid).state == "PENDING"
+        sim.advance(to=WED_10 + timedelta(days=1))
+        assert sim.get(jid).state in ("RUNNING", "COMPLETED")
+
+    def test_not_released_early_under_load(self):
+        sim = fresh_sim(nodes=[SimNode("n000", cpus=4)])
+        sched = sched_with_midday()
+        c = EcoController(sim, sched, load_threshold=0.25)
+        # 3 of 4 cpus busy all day: load 0.75 > threshold
+        Job(name="hog", command="true",
+            opts=Opts.new(threads=3, memory="1GB", time="24h"),
+            sim_duration_s=23 * 3600).run(sim)
+        jid = c.submit(eco_job(hours=4), now=WED_10)
+        sim.advance(to=WED_10.replace(hour=12, minute=30))
+        assert sim.get(jid).state == "PENDING"  # busy: keep holding
+        deadline = c.held[str(jid)].deadline
+        sim.advance(to=deadline)
+        assert sim.get(jid).started_at is not None
+        assert sim.get(jid).started_at <= deadline  # worst case preserved
+
+    def test_event_triggers_release_when_load_drops(self):
+        """The reactive part: a COMPLETED event inside a window frees the
+        cluster and the very same tick releases the held job."""
+        sim = fresh_sim(nodes=[SimNode("n000", cpus=4)])
+        sched = sched_with_midday()
+        c = EcoController(sim, sched, load_threshold=0.25)
+        # hog fills the whole node until 12:10, inside the midday window
+        Job(name="hog", command="true",
+            opts=Opts.new(threads=4, memory="1GB", time="4h"),
+            sim_duration_s=int(2 * 3600 + 10 * 60)).run(sim)
+        # 4 h job: tier 1 puts its deadline at the NIGHT window, but a 4 h
+        # span from ~12:10 stays off-peak, so low load may pull it forward
+        jid = c.submit(eco_job(hours=4, duration=300), now=WED_10)
+        assert c.held[str(jid)].deadline.hour == 0
+        sim.advance(to=WED_10.replace(hour=12, minute=45))
+        j = sim.get(jid)
+        # released at the hog's completion instant (12:10) — an event
+        # boundary, not a poll boundary or the deadline
+        assert j.started_at == WED_10.replace(hour=12, minute=10)
+        (rec,) = c.released
+        assert rec.early
+
+
+class TestLoadFraction:
+    def test_counts_up_nodes_only(self):
+        sim = fresh_sim(nodes=[SimNode("a", cpus=10), SimNode("b", cpus=10)])
+        c = EcoController(sim, sched_nightly())
+        assert c.load_fraction() == 0.0
+        Job(name="l", command="true",
+            opts=Opts.new(threads=5, memory="1GB", time="10h"),
+            sim_duration_s=9999).run(sim)
+        assert c.load_fraction() == 0.25
+        sim.nodes[1].state = "DOWN"
+        assert c.load_fraction() == 0.5  # 5 of the 10 surviving cpus
+
+
+class TestEngineIntegration:
+    def test_deferred_units_held_and_registered(self):
+        sim = fresh_sim()
+        sched = sched_nightly()
+        c = EcoController(sim, sched)
+        engine = SubmitEngine(sim, controller=c, now=WED_10, coalesce=False)
+        jobs = [eco_job(name=f"e{i}", hours=4) for i in range(3)]
+        result = engine.submit_many(jobs)
+        assert result.eco_deferred == 3
+        assert len(c.held) == 3
+        for base in result.base_ids:
+            j = sim.get(base)
+            assert j.held and not j.begin
+        static = sched.next_window(4 * 3600, WED_10)
+        sim.advance(to=static.begin)
+        for base in result.base_ids:
+            assert sim.get(base).started_at <= static.begin
+
+    def test_engine_decisions_match_static_engine(self):
+        """Same batch, controller on vs off: identical tiers/deadlines."""
+        sched = sched_nightly()
+        sim_a, sim_b = fresh_sim(), fresh_sim()
+        jobs_a = [eco_job(name=f"a{i}", hours=h) for i, h in enumerate((1, 4, 12))]
+        jobs_b = [eco_job(name=f"a{i}", hours=h) for i, h in enumerate((1, 4, 12))]
+        SubmitEngine(sim_a, eco=True, scheduler=sched, now=WED_10,
+                     coalesce=False).submit_many(jobs_a)
+        c = EcoController(sim_b, sched)
+        SubmitEngine(sim_b, controller=c, now=WED_10,
+                     coalesce=False).submit_many(jobs_b)
+        for ja, jb in zip(jobs_a, jobs_b):
+            assert ja.eco_meta["tier"] == jb.eco_meta["tier"]
+            assert ja.eco_meta["deferred"] == jb.eco_meta["deferred"]
+            if ja.opts.begin:
+                assert jb.eco_meta["deadline"] == ja.opts.begin
+
+
+class TestCliAndAdoption:
+    def test_runjob_eco_hold_journal_and_adopt(self, capsys):
+        from repro.cli import runjob
+        from repro.core import get_backend
+
+        rc = runjob.main(["-n", "heldcli", "-t", "2", "--eco", "--eco-hold",
+                          "--now", "2026-03-18T10:00:00", "sleep 1"])
+        out = capsys.readouterr().out
+        assert rc == 0 and "held for favourable load" in out
+        sim = get_backend()
+        jid = max(j.base_id for j in sim.jobs.values())
+        assert sim.get(jid).held
+        # a different process (fresh controller) adopts from the journal
+        c2 = EcoController.adopt(sim)
+        assert str(jid) in c2.held
+        assert c2.held[str(jid)].deadline.hour == 0  # the static begin
+        sim.advance(to=datetime(2026, 3, 19, 0, 30))
+        assert sim.get(jid).state in ("RUNNING", "COMPLETED")
+
+    def test_dry_run_attaches_no_controller(self, capsys):
+        from repro.cli import runjob
+        from repro.core import get_backend
+
+        rc = runjob.main(["-n", "dryheld", "-t", "2", "--eco", "--eco-hold",
+                          "--now", "2026-03-18T10:00:00", "--dry-run",
+                          "sleep 1"])
+        out = capsys.readouterr().out
+        assert rc == 0 and "#SBATCH --hold" in out
+        sim = get_backend()
+        assert not sim.jobs and not sim.tick_hooks  # nothing leaked
+
+    def test_adopt_skips_manually_held_jobs(self):
+        sim = fresh_sim()
+        job = eco_job(name="manual")
+        job.opts.hold = True  # user hold, no eco journal entry
+        job.run(sim)
+        c = EcoController.adopt(sim, sched_nightly())
+        assert not c.held  # left alone: not ours to release
+
+    def test_waitjobs_eco_release_flag(self, capsys):
+        from repro.cli import runjob, waitjobs
+
+        runjob.main(["-n", "wjheld", "-t", "1", "--eco", "--eco-hold",
+                     "--now", "2026-03-18T10:00:00", "true"])
+        capsys.readouterr()
+        rc = waitjobs.main(["-n", "wjheld", "--poll", "3600",
+                            "--eco-release", "--quiet"])
+        assert rc == 0
+
+
+class TestNoLaterThanStaticAcceptance:
+    def test_simulated_day_releases_never_late(self):
+        """Acceptance: across a day of held eco jobs, every release happens
+        at or before the job's old static ``--begin``."""
+        sim = fresh_sim(nodes=[SimNode(f"n{i}", cpus=64) for i in range(8)])
+        sched = sched_with_midday()
+        c = EcoController(sim, sched)
+        statics = {}
+        for i in range(40):
+            hours = 1 + (i % 6)
+            job = eco_job(name=f"day{i}", hours=hours, duration=300 + i * 30)
+            dec = sched.next_window(hours * 3600, WED_10)
+            jid = c.submit(job, now=WED_10)
+            if dec.deferred:
+                statics[str(jid)] = dec.begin
+        assert statics, "scenario must actually defer jobs"
+        sim.advance(to=WED_10 + timedelta(days=2))
+        for jid, static_begin in statics.items():
+            j = sim.get(jid)
+            assert j.started_at is not None, jid
+            assert j.started_at <= static_begin, jid
+        for rec in c.released:
+            assert rec.at <= rec.deadline

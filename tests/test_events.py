@@ -1,0 +1,511 @@
+"""Event-driven core: EventBus, SimCluster emission, PollingEventAdapter,
+event-invalidated QueueCache, EventCollector, event-driven waitjobs.
+
+The tentpole invariant throughout: subscribers are backend-agnostic — the
+simulator's native events and the adapter's synthetic ones carry the same
+vocabulary, so every consumer (waitjobs, TUI, accounting) works unchanged
+against either backend.
+"""
+
+import json
+from datetime import datetime, timedelta
+
+from repro.core import (
+    EventBus,
+    Job,
+    JobEvent,
+    Opts,
+    PollingEventAdapter,
+    Queue,
+    QueueCache,
+    SimCluster,
+    diff_snapshots,
+    terminal_event_for_state,
+)
+from repro.core import events as ev
+
+T0 = datetime(2026, 3, 18, 10, 0, 0)
+
+
+def make_job(name="j", *, cpus=1, time="1h", duration=60, hold=False, **kw):
+    opts = Opts.new(threads=cpus, memory="1GB", time=time)
+    opts.hold = hold
+    return Job(name=name, command="true", opts=opts, sim_duration_s=duration, **kw)
+
+
+class TestEventBus:
+    def test_subscribe_emit_unsubscribe(self):
+        bus = EventBus()
+        seen = []
+        token = bus.subscribe(seen.append)
+        e = JobEvent(type=ev.SUBMITTED, jobid="1", at=T0)
+        bus.emit(e)
+        assert seen == [e]
+        bus.unsubscribe(token)
+        bus.emit(e)
+        assert len(seen) == 1
+        assert bus.emitted == 2 and bus.delivered == 1
+
+    def test_type_filter(self):
+        bus = EventBus()
+        terminal = []
+        bus.subscribe(terminal.append, types=ev.TERMINAL_EVENTS)
+        bus.emit(JobEvent(type=ev.STARTED, jobid="1", at=T0))
+        bus.emit(JobEvent(type=ev.COMPLETED, jobid="1", at=T0))
+        assert [e.type for e in terminal] == [ev.COMPLETED]
+
+    def test_subscriber_error_is_isolated(self):
+        bus = EventBus()
+        seen = []
+
+        def boom(e):
+            raise RuntimeError("bad subscriber")
+
+        bus.subscribe(boom)
+        bus.subscribe(seen.append)
+        bus.emit(JobEvent(type=ev.STARTED, jobid="1", at=T0))
+        assert len(seen) == 1  # delivery continued past the failure
+        assert len(bus.errors) == 1
+
+    def test_history_ring(self):
+        bus = EventBus(history=4)
+        for i in range(10):
+            bus.emit(JobEvent(type=ev.STARTED, jobid=str(i), at=T0))
+        assert [e.jobid for e in bus.history] == ["6", "7", "8", "9"]
+
+
+class TestTerminalStateMapping:
+    def test_exact_states(self):
+        assert terminal_event_for_state("COMPLETED") == ev.COMPLETED
+        assert terminal_event_for_state("FAILED") == ev.FAILED
+        assert terminal_event_for_state("TIMEOUT") == ev.TIMEOUT
+        assert terminal_event_for_state("NODE_FAIL") == ev.NODE_FAIL
+
+    def test_sacct_decorations(self):
+        assert terminal_event_for_state("CANCELLED by 1234") == ev.CANCELLED
+        assert terminal_event_for_state("OUT_OF_ME+") == ev.FAILED
+        assert terminal_event_for_state("OUT_OF_MEMORY") == ev.FAILED
+
+    def test_unknown_means_completed(self):
+        assert terminal_event_for_state("") == ev.COMPLETED
+        assert terminal_event_for_state("MYSTERY") == ev.COMPLETED
+
+
+class TestSimClusterEmission:
+    def test_lifecycle_events_in_order(self, sim):
+        seen = []
+        sim.bus.subscribe(lambda e: seen.append((e.type, e.jobid)))
+        jid = make_job(duration=120).run(sim)
+        sim.advance(300)
+        assert seen == [
+            (ev.SUBMITTED, str(jid)),
+            (ev.STARTED, str(jid)),
+            (ev.COMPLETED, str(jid)),
+        ]
+
+    def test_event_carries_job_facts(self, sim):
+        seen = []
+        sim.bus.subscribe(seen.append, types=[ev.STARTED])
+        make_job(name="facts").run(sim)
+        e = seen[0]
+        assert e.name == "facts" and e.user == "testuser"
+        assert e.state == "RUNNING" and e.node and e.at == sim.now
+
+    def test_timeout_and_failure_events(self, sim):
+        seen = []
+        sim.bus.subscribe(lambda e: seen.append(e.type))
+        make_job(time="1m", duration=3600).run(sim)
+        sim.advance(7200)
+        assert ev.TIMEOUT in seen
+
+    def test_cancel_event(self, sim):
+        seen = []
+        sim.bus.subscribe(lambda e: seen.append(e.type), types=[ev.CANCELLED])
+        jid = make_job(duration=9999).run(sim)
+        sim.cancel([jid])
+        assert seen == [ev.CANCELLED]
+
+    def test_node_fail_and_requeue_events(self, sim):
+        seen = []
+        sim.bus.subscribe(lambda e: seen.append((e.type, e.jobid)))
+        j1 = make_job(name="survivor", duration=9999)
+        j2 = make_job(name="fragile", duration=9999)
+        j2.opts.requeue = False
+        id1, id2 = j1.run(sim), j2.run(sim)
+        node1 = sim.get(id1).node
+        node2 = sim.get(id2).node
+        sim.fail_node(node1)
+        if node2 != node1:
+            sim.fail_node(node2)
+        types = [t for t, _ in seen]
+        assert ev.REQUEUED in types and ev.NODE_FAIL in types
+
+    def test_array_tasks_emit_individually(self, sim):
+        seen = []
+        sim.bus.subscribe(lambda e: seen.append(e.jobid), types=[ev.SUBMITTED])
+        job = Job(name="arr", command="echo #FILE#",
+                  opts=Opts.new(threads=1, memory="1GB", time="1h"),
+                  files=["a", "b", "c"], sim_duration_s=30)
+        base = job.run(sim)
+        assert seen == [f"{base}_0", f"{base}_1", f"{base}_2"]
+
+
+class TestHoldRelease:
+    def test_held_job_stays_pending(self, sim):
+        jid = make_job(hold=True).run(sim)
+        j = sim.get(jid)
+        assert j.state == "PENDING" and j.reason == ev.HELD_REASON
+        sim.advance(3600)
+        assert j.state == "PENDING"
+
+    def test_release_starts_and_emits(self, sim):
+        seen = []
+        sim.bus.subscribe(lambda e: seen.append(e.type))
+        jid = make_job(hold=True, duration=60).run(sim)
+        sim.release([jid])
+        j = sim.get(jid)
+        assert j.state == "RUNNING"
+        assert seen == [ev.SUBMITTED, ev.RELEASED, ev.STARTED]
+
+    def test_release_is_idempotent_and_targeted(self, sim):
+        jid = make_job(hold=True).run(sim)
+        other = make_job(name="free", duration=9999).run(sim)
+        sim.release([jid])
+        sim.release([jid])  # second release: no-op, no error
+        released = [e for e in sim.bus.history if e.type == ev.RELEASED]
+        assert len(released) == 1
+        assert sim.get(other).state == "RUNNING"  # untouched
+
+    def test_hold_renders_sbatch_directive(self):
+        job = make_job(hold=True)
+        assert "#SBATCH --hold" in job.script()
+
+    def test_queue_row_shows_held_reason(self, sim):
+        make_job(hold=True).run(sim)
+        rows = sim.queue()
+        assert rows[0]["state"] == "PENDING"
+        assert rows[0]["reason"] == ev.HELD_REASON
+
+
+class TestDiffSnapshots:
+    def row(self, jid, state="PENDING", reason=""):
+        return {"jobid": jid, "name": "n", "user": "u", "state": state,
+                "reason": reason, "nodelist": ""}
+
+    def test_first_poll_is_baseline(self):
+        assert diff_snapshots(None, {"1": self.row("1")}, T0) == []
+
+    def test_new_job_submitted(self):
+        out = diff_snapshots({}, {"1": self.row("1")}, T0)
+        assert [e.type for e in out] == [ev.SUBMITTED]
+
+    def test_new_running_job_also_started(self):
+        out = diff_snapshots({}, {"1": self.row("1", "RUNNING")}, T0)
+        assert [e.type for e in out] == [ev.SUBMITTED, ev.STARTED]
+
+    def test_pending_to_running_is_started(self):
+        out = diff_snapshots({"1": self.row("1")},
+                             {"1": self.row("1", "RUNNING")}, T0)
+        assert [e.type for e in out] == [ev.STARTED]
+
+    def test_running_to_pending_is_requeued(self):
+        out = diff_snapshots({"1": self.row("1", "RUNNING")},
+                             {"1": self.row("1", "PENDING")}, T0)
+        assert [e.type for e in out] == [ev.REQUEUED]
+
+    def test_hold_cleared_is_released(self):
+        out = diff_snapshots(
+            {"1": self.row("1", "PENDING", ev.HELD_REASON)},
+            {"1": self.row("1", "PENDING", "Resources")}, T0)
+        assert [e.type for e in out] == [ev.RELEASED]
+
+    def test_vanished_job_terminal_with_unresolved_state(self):
+        out = diff_snapshots({"1": self.row("1", "RUNNING")}, {}, T0)
+        assert len(out) == 1 and out[0].is_terminal and out[0].state == ""
+
+    def test_no_change_no_events(self):
+        snap = {"1": self.row("1", "RUNNING")}
+        assert diff_snapshots(snap, dict(snap), T0) == []
+
+
+class TestPollingEventAdapter:
+    def test_synthesises_same_vocabulary_as_sim(self, sim):
+        """A subscriber cannot tell adapter events from native ones."""
+        adapter = PollingEventAdapter(sim, clock=lambda: sim.now)
+        adapter.poll()
+        native, synthetic = [], []
+        sim.bus.subscribe(lambda e: native.append(e.type))
+        adapter.bus.subscribe(lambda e: synthetic.append(e.type))
+        make_job(duration=60).run(sim)
+        adapter.poll()
+        sim.advance(120)
+        adapter.poll()
+        assert synthetic == native == [ev.SUBMITTED, ev.STARTED, ev.COMPLETED]
+
+    def test_terminal_state_resolved_through_backend(self, sim):
+        adapter = PollingEventAdapter(sim, clock=lambda: sim.now)
+        adapter.poll()
+        make_job(time="1m", duration=7200).run(sim)
+        adapter.poll()
+        sim.advance(7200)
+        (e,) = adapter.poll()
+        assert e.type == ev.TIMEOUT and e.state == "TIMEOUT"
+
+    def test_repeat_polls_emit_nothing_new(self, sim):
+        adapter = PollingEventAdapter(sim, clock=lambda: sim.now)
+        adapter.poll()
+        make_job().run(sim)
+        adapter.poll()
+        assert adapter.poll() == [] and adapter.poll() == []
+        assert adapter.polls == 4
+
+
+class TestQueueCacheEventInvalidation:
+    def test_snapshot_dropped_on_direct_backend_mutation(self, sim):
+        """A writer going straight to the simulator — not through the cache
+        — must still invalidate the snapshot, via the event bus."""
+        cache = QueueCache(sim, ttl_s=3600.0)
+        assert cache.queue() == []
+        make_job(duration=9999).run(sim)  # direct submit, cache bypassed
+        assert len(cache.queue()) == 1  # event invalidated the snapshot
+        assert cache.event_invalidations >= 1
+
+    def test_quiet_cluster_serves_from_snapshot(self, sim):
+        cache = QueueCache(sim, ttl_s=3600.0)
+        make_job(duration=9999).run(sim)
+        cache.queue()
+        polls = cache.polls
+        for _ in range(5):
+            cache.queue()
+        assert cache.polls == polls and cache.hits >= 5
+
+    def test_shared_cache_binds_sim_bus(self, sim):
+        from repro.core import get_queue_cache
+
+        cache = get_queue_cache(sim)
+        assert cache.queue() == []
+        make_job(duration=9999).run(sim)
+        assert len(cache.queue()) == 1
+
+    def test_unbind_and_reset_do_not_leak_subscriptions(self, sim):
+        from repro.core import get_queue_cache, reset_queue_cache
+
+        cache = get_queue_cache(sim)
+        subs_before = len(sim.bus)
+        reset_queue_cache()
+        assert len(sim.bus) == subs_before - 1  # unsubscribed, not leaked
+        cache.unbind_bus()  # idempotent
+        assert len(sim.bus) == subs_before - 1
+
+
+class TestEventCollector:
+    def test_archives_each_terminal_job_once(self, sim, tmp_path):
+        from repro.accounting import EventCollector, HistoryStore
+
+        store = HistoryStore(tmp_path / "h.jsonl")
+        coll = EventCollector(sim, store).attach(sim.bus)
+        for i in range(5):
+            make_job(name=f"c{i}", duration=60).run(sim)
+        sim.advance(600)
+        coll.flush()
+        assert coll.collected == 5
+        assert len(store.ids()) == 5
+        # replaying the same terminal set adds nothing (dedup in memory)
+        coll.flush()
+        assert len(store.ids()) == 5
+
+    def test_no_archive_rescans_after_attach(self, sim, tmp_path):
+        """collect() scans the archive every call; the collector only once."""
+        from repro.accounting import EventCollector, HistoryStore
+
+        store = HistoryStore(tmp_path / "h.jsonl")
+        scans = {"n": 0}
+        orig = store.ids
+
+        def counting_ids():
+            scans["n"] += 1
+            return orig()
+
+        store.ids = counting_ids
+        coll = EventCollector(sim, store).attach(sim.bus)
+        for i in range(3):
+            make_job(duration=30).run(sim)
+            sim.advance(60)
+        coll.detach()
+        assert scans["n"] == 1  # construction only
+        assert len(store.ids()) == 3
+
+    def test_records_match_batch_collect(self, sim, tmp_path):
+        from repro.accounting import EventCollector, HistoryStore, collect
+
+        ev_store = HistoryStore(tmp_path / "ev.jsonl")
+        batch_store = HistoryStore(tmp_path / "batch.jsonl")
+        coll = EventCollector(sim, ev_store).attach(sim.bus)
+        make_job(name="same", cpus=4, duration=120).run(sim)
+        sim.advance(600)
+        coll.flush()
+        collect(sim, batch_store)
+        (a,), (b,) = list(ev_store.scan()), list(batch_store.scan())
+        assert a == b
+
+
+class TestEventDrivenWaitjobs:
+    def test_sim_wait_uses_one_snapshot(self, sim):
+        """The acceptance ratio: terminal events replace per-tick polls."""
+        from repro.cli.waitjobs import wait_for_events
+
+        class Counting:
+            def __init__(self, inner):
+                self.inner = inner
+                self.calls = 0
+
+            def queue(self):
+                self.calls += 1
+                return self.inner.queue()
+
+            def __getattr__(self, name):
+                return getattr(self.inner, name)
+
+        for i in range(20):
+            make_job(name=f"w{i}", duration=300 + 60 * i).run(sim)
+        counting = Counting(sim)
+        result = wait_for_events(counting, poll_s=60.0)
+        assert result.ok and len(result.states) == 20
+        assert all(s == "COMPLETED" for s in result.states.values())
+        # one snapshot to resolve the watch set; events do the rest. The
+        # polling path needed one snapshot per 60 s tick (~35 here).
+        assert counting.calls == 1
+        assert result.snapshots == 1
+
+    def test_wait_reports_bad_states(self, sim):
+        from repro.cli.waitjobs import wait_for_events
+
+        make_job(name="bad", time="1m", duration=7200).run(sim)
+        result = wait_for_events(sim, poll_s=600.0)
+        assert result.ok
+        assert list(result.states.values()) == ["TIMEOUT"]
+        assert result.exit_code == 1
+
+    def test_timeout_still_exits_2(self, sim):
+        from repro.cli.waitjobs import wait_for_events
+
+        make_job(name="forever", time="10h", duration=9 * 3600).run(sim)
+        result = wait_for_events(sim, poll_s=0.001, timeout_s=0.05)
+        assert not result.ok and result.exit_code == 2
+
+    def test_explicit_id_already_gone_still_reported(self, sim):
+        """An id that ended badly BEFORE the wait started must still drive
+        the exit code, even while other watched ids are active."""
+        from repro.cli.waitjobs import wait_for_events
+
+        doomed = make_job(name="gonebad", time="1m", duration=7200).run(sim)
+        sim.advance(7200)  # doomed TIMEOUTs and leaves the queue
+        alive = make_job(name="alive", duration=60).run(sim)
+        result = wait_for_events(sim, ids=[doomed, alive], poll_s=60.0)
+        assert result.states[str(doomed)] == "TIMEOUT"
+        assert result.states[str(alive)] == "COMPLETED"
+        assert result.exit_code == 1
+
+    def test_polling_path_baseline_race_resolves(self, sim):
+        """A job that finishes between the watch snapshot and the adapter
+        baseline must resolve instead of hanging the polling loop (the
+        adapter's first poll yields no vanish events by definition)."""
+        from repro.cli import waitjobs as wj
+
+        jid = make_job(name="racer", duration=60).run(sim)
+
+        class NonSim:  # hide the sim so the polling branch runs
+            def __init__(self, inner):
+                self._inner = inner
+                self.first = True
+
+            def queue(self):
+                rows = self._inner.queue()
+                if self.first:
+                    self.first = False
+                    return rows  # watch snapshot sees the job...
+                self._inner.advance(120)  # ...then it finishes
+                return self._inner.queue()
+
+            def __getattr__(self, name):
+                return getattr(self._inner, name)
+
+        result = wj.wait_for_events(NonSim(sim), ids=[jid],
+                                    poll_s=0.001, timeout_s=5.0)
+        assert result.ok
+        assert result.states[str(jid)] == "COMPLETED"
+
+
+class TestWaitjobsCli:
+    def test_json_output_and_exit_zero(self, capsys):
+        from repro.cli import runjob, waitjobs
+
+        runjob.main(["-n", "ok1", "--no-eco", "true"])
+        capsys.readouterr()
+        rc = waitjobs.main(["--json", "-n", "ok1"])
+        payload = json.loads(capsys.readouterr().out)
+        assert rc == 0
+        assert payload["ok"] and not payload["timed_out"]
+        assert list(payload["jobs"].values()) == ["COMPLETED"]
+        assert payload["failed"] == []
+
+    def test_exit_one_on_failure(self, capsys):
+        from repro.cli import waitjobs
+        from repro.core import get_backend
+
+        be = get_backend()
+        make_job(name="doomed", time="1m", duration=7200).run(be)
+        rc = waitjobs.main(["--json", "-n", "doomed", "--poll", "600"])
+        payload = json.loads(capsys.readouterr().out)
+        assert rc == 1
+        assert payload["failed"] and payload["exit_code"] == 1
+
+    def test_plain_output_names_failures(self, capsys):
+        from repro.cli import waitjobs
+        from repro.core import get_backend
+
+        be = get_backend()
+        make_job(name="doomed2", time="1m", duration=7200).run(be)
+        rc = waitjobs.main(["-n", "doomed2", "--poll", "600"])
+        out = capsys.readouterr().out
+        assert rc == 1 and "failed" in out
+
+
+class TestLiveViewModel:
+    def test_refreshes_only_on_events(self, sim):
+        from repro.cli.viewjobs import ViewModel
+
+        calls = {"n": 0}
+
+        def source():
+            calls["n"] += 1
+            return [q for q in Queue(backend=sim)]
+
+        vm = ViewModel(source)
+        vm.bind_bus(sim.bus)
+        base = calls["n"]
+        assert vm.maybe_refresh() is False  # quiet cluster: no re-read
+        assert calls["n"] == base
+        make_job(duration=9999).run(sim)
+        assert vm.maybe_refresh() is True
+        assert calls["n"] == base + 1
+        assert len(vm.state.rows) == 1
+
+    def test_ticker_shows_last_event(self, sim):
+        from repro.cli.viewjobs import ViewModel
+
+        vm = ViewModel(lambda: list(Queue(backend=sim)))
+        vm.bind_bus(sim.bus)
+        jid = make_job(name="tick", duration=9999).run(sim)
+        vm.maybe_refresh()
+        footer = "\n".join(vm.render())
+        assert "live:" in footer and str(jid) in footer
+
+    def test_live_once_cli(self, capsys):
+        from repro.cli import runjob, viewjobs
+
+        runjob.main(["-n", "livejob", "--no-eco", "sleep 60"])
+        capsys.readouterr()
+        rc = viewjobs.main(["--once", "--live", "--all"])
+        out = capsys.readouterr().out
+        assert rc == 0 and "live:" in out

@@ -160,3 +160,109 @@ class TestDiscovery:
         (tmp_path / "broken.py").write_text("raise RuntimeError('nope')\n")
         found = discover_launchers(str(tmp_path))  # must not raise
         assert "kraken2" in found
+
+    def test_default_home_dir_scanned(self, tmp_path, monkeypatch):
+        """With no explicit dir, ``~/.nbi/launchers/*.py`` is the search
+        path — the contract the docs promise third-party wrapper authors."""
+        home = tmp_path / "home"
+        launcher_dir = home / ".nbi" / "launchers"
+        launcher_dir.mkdir(parents=True)
+        (launcher_dir / "hometool.py").write_text(
+            "from repro.core import Launcher, InputSpec\n"
+            "class HomeTool(Launcher):\n"
+            "    tool_name = 'hometool'\n"
+            "    inputs_spec = [InputSpec('x', required=False, default='1')]\n"
+            "    def make_command(self): return 'hometool'\n"
+        )
+        monkeypatch.setenv("HOME", str(home))
+        found = discover_launchers()
+        assert "hometool" in found
+
+    def test_non_launcher_symbols_ignored(self, tmp_path):
+        (tmp_path / "mixed.py").write_text(
+            "from repro.core import Launcher, InputSpec\n"
+            "class NotALauncher:\n"
+            "    tool_name = 'imposter'\n"
+            "helper = 42\n"
+            "class Real(Launcher):\n"
+            "    tool_name = 'real'\n"
+            "    def make_command(self): return 'real'\n"
+        )
+        found = discover_launchers(str(tmp_path))
+        assert "real" in found and "imposter" not in found
+
+    def test_third_party_overrides_builtin_name(self, tmp_path):
+        (tmp_path / "k2.py").write_text(
+            "from repro.core import Launcher\n"
+            "class MyKraken(Launcher):\n"
+            "    tool_name = 'kraken2'\n"
+            "    def make_command(self): return 'my-kraken2'\n"
+        )
+        found = discover_launchers(str(tmp_path))
+        assert found["kraken2"].__name__ == "MyKraken"
+
+
+class TestNbilaunchDiscoveryCli:
+    WRAPPER = (
+        "from repro.core import Launcher, InputSpec\n"
+        "class Greet(Launcher):\n"
+        "    '''Say hello from a third-party wrapper.'''\n"
+        "    tool_name = 'greet'\n"
+        "    inputs_spec = [InputSpec('who', required=True, kind='str')]\n"
+        "    def make_command(self):\n"
+        "        return f\"echo hello {self.inputs['who']}\"\n"
+    )
+
+    def test_list_includes_third_party_with_docstring(self, tmp_path, capsys):
+        from repro.cli import nbilaunch
+
+        (tmp_path / "greet.py").write_text(self.WRAPPER)
+        rc = nbilaunch.main(["--list", "--launcher-dir", str(tmp_path)])
+        out = capsys.readouterr().out
+        assert rc == 0
+        assert "greet" in out and "Say hello from a third-party wrapper." in out
+        assert "kraken2" in out  # built-ins still listed
+
+    def test_no_tool_behaves_as_list(self, capsys):
+        from repro.cli import nbilaunch
+
+        rc = nbilaunch.main([])
+        out = capsys.readouterr().out
+        assert rc == 0 and "kraken2" in out
+
+    def test_third_party_dry_run(self, tmp_path, capsys):
+        from repro.cli import nbilaunch
+
+        (tmp_path / "greet.py").write_text(self.WRAPPER)
+        rc = nbilaunch.main([
+            "greet", "who=world", "--launcher-dir", str(tmp_path),
+            "--outdir", str(tmp_path / "out"), "--dry-run", "--no-eco",
+        ])
+        out = capsys.readouterr().out
+        assert rc == 0
+        assert "echo hello world" in out and "#SBATCH" in out
+
+    def test_third_party_submit_to_sim(self, tmp_path, capsys):
+        from repro.cli import nbilaunch
+        from repro.core import get_backend
+
+        (tmp_path / "greet.py").write_text(self.WRAPPER)
+        rc = nbilaunch.main([
+            "greet", "who=sim", "--launcher-dir", str(tmp_path),
+            "--outdir", str(tmp_path / "out"), "--no-eco",
+        ])
+        out = capsys.readouterr().out
+        assert rc == 0
+        jid = int(out.strip().splitlines()[-1])
+        job = get_backend().get(jid)
+        assert job is not None and job.name == "greet"
+        assert job.tool == "greet"  # accounting/predictor key survives
+
+    def test_missing_wrapper_arg_reported(self, tmp_path, capsys):
+        from repro.cli import nbilaunch
+
+        (tmp_path / "greet.py").write_text(self.WRAPPER)
+        rc = nbilaunch.main(
+            ["greet", "--launcher-dir", str(tmp_path), "--no-eco"])
+        out = capsys.readouterr().out
+        assert rc == 1 and "missing required input 'who'" in out
