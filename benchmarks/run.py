@@ -8,6 +8,7 @@
 | eco        | §EcoScheduler: tiers, deferral, peak compute avoided, latency |
 | events     | event bus vs polling: waitjobs snapshots, dispatch, eco v2    |
 | accounting | history store throughput, predictor tier lift, carbon loop    |
+| federation | multi-cluster placement throughput, carbon saved by routing   |
 | submission | §Statement of Need: boilerplate reduction, submit throughput  |
 | queue      | Figure 1 / lsjobs-viewjobs-whojobs on a 2,000-job cluster     |
 | kernels    | kernels vs oracles + VMEM budgets (TPU-facing)                |
@@ -84,8 +85,8 @@ def bench_roofline() -> dict:
     return {"cells": len(json.loads(path.read_text())) if path.exists() else 0}
 
 
-SECTIONS = ["eco", "events", "accounting", "submission", "queue", "kernels",
-            "train", "serve", "roofline"]
+SECTIONS = ["eco", "events", "accounting", "federation", "submission",
+            "queue", "kernels", "train", "serve", "roofline"]
 
 
 def main(argv=None) -> int:
@@ -113,6 +114,10 @@ def main(argv=None) -> int:
                 from benchmarks import bench_accounting
 
                 all_out[name] = bench_accounting.run()
+            elif name == "federation":
+                from benchmarks import bench_federation
+
+                all_out[name] = bench_federation.run()
             elif name == "submission":
                 from benchmarks import bench_submission
 

@@ -1,0 +1,131 @@
+"""Multi-cluster federation end to end: eco jobs migrate to the green grid.
+
+    PYTHONPATH=src python examples/federation_demo.py
+
+Walks through:
+  1. a two-member federation built from ``[cluster.<name>]`` stanzas —
+     ``coal`` (dirty grid, the default member) and ``hydro`` (green grid,
+     overnight eco windows), both deterministic in-process simulators;
+  2. a mixed workload routed through the ``SubmitEngine`` placement
+     stage: eco-tier jobs migrate to the green member, an urgent batch
+     stays wherever the queue is shortest;
+  3. the federated queue view (namespaced ids, per-cluster rows) and a
+     cross-cluster wait on the aggregated event bus;
+  4. the accounting close-out: per-cluster ``ecoreport`` totals with the
+     placement counterfactual — carbon saved by routing away from the
+     default member.
+
+Everything runs in simulated time; the whole demo takes well under a
+second of wall clock.
+"""
+
+import sys
+import tempfile
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.accounting import EnergyModel, HistoryStore, collect, render_report
+from repro.core import (
+    ClusterRegistry,
+    FederatedBackend,
+    Job,
+    Opts,
+    SubmitEngine,
+    load_config,
+    write_config,
+)
+
+workdir = Path(tempfile.mkdtemp(prefix="federation-demo-"))
+
+# ---------------------------------------------------------------------------
+# 1. two sim clusters on divergent grids, declared exactly as a user would
+# ---------------------------------------------------------------------------
+
+dirty_csv = workdir / "coal.csv"
+green_csv = workdir / "hydro.csv"
+dirty_csv.write_text("\n".join(f"{h},620" for h in range(168)))  # gCO2/kWh
+green_csv.write_text("\n".join(f"{h},35" for h in range(168)))
+
+cfg_path = workdir / "nbislurm.config"
+cfg_path.write_text(f"""\
+economy_mode = 1
+
+[cluster.coal]
+kind = sim
+nodes = 4
+cpus_per_node = 32
+carbon_trace = {dirty_csv}
+
+[cluster.hydro]
+kind = sim
+nodes = 2
+cpus_per_node = 32
+watts_per_cpu = 9.0
+carbon_trace = {green_csv}
+eco_weekday_windows = 22:00-06:00
+""")
+cfg = load_config(str(cfg_path))
+registry = ClusterRegistry.from_config(cfg)
+fed = FederatedBackend(registry)
+print(f"federation: {', '.join(registry.names())} "
+      f"(default: {registry.default_name})")
+
+# ---------------------------------------------------------------------------
+# 2. route a mixed workload: eco sweep + an urgent batch
+# ---------------------------------------------------------------------------
+
+now = fed.now  # the lockstep simulated clock (a Wednesday morning)
+engine = SubmitEngine(fed, eco=True, coalesce=False, now=now)
+sweep = [
+    Job(name=f"sweep-{i}", command=f"echo {i}",
+        opts=Opts(threads=4, memory_mb=4096, time_s=3600),
+        sim_duration_s=1800)
+    for i in range(12)
+]
+result = engine.submit_many(sweep)
+print(f"\neco sweep: {len(result.ids)} jobs, {result.eco_deferred} deferred, "
+      f"placed on {sorted(result.placements)}")
+print("  ids:", " ".join(result.ids[:4]), "...")
+
+urgent_engine = SubmitEngine(fed, eco=False, coalesce=False, now=now)
+urgent = urgent_engine.submit_many([
+    Job(name=f"urgent-{i}", command="echo now",
+        opts=Opts(threads=8, memory_mb=2048, time_s=900),
+        sim_duration_s=300)
+    for i in range(6)
+])
+spread: dict = {}
+for jid in urgent.ids:
+    spread[jid.split(":")[0]] = spread.get(jid.split(":")[0], 0) + 1
+print(f"urgent batch: spread by queue wait → {spread}")
+
+# ---------------------------------------------------------------------------
+# 3. one federated queue, one cross-cluster wait
+# ---------------------------------------------------------------------------
+
+rows = fed.queue()
+per_cluster: dict = {}
+for r in rows:
+    per_cluster.setdefault(r["cluster"], []).append(r["jobid"])
+print(f"\nfederated queue: {len(rows)} rows")
+for name, ids in sorted(per_cluster.items()):
+    print(f"  {name:6s} {len(ids)} job(s)   e.g. {ids[0]}")
+
+done = []
+fed.bus.subscribe(lambda e: done.append(e.jobid) if e.is_terminal else None)
+fed.run_until_idle()
+print(f"after run_until_idle: {len(done)} terminal events "
+      f"across both members, queue empty: {not fed.queue()}")
+
+# ---------------------------------------------------------------------------
+# 4. accounting close-out: the placement counterfactual
+# ---------------------------------------------------------------------------
+
+store = HistoryStore(workdir / "history.jsonl")
+model = EnergyModel.from_config(cfg)
+n = collect(fed, store, model)
+print(f"\narchived {n} records; per-cluster report:\n")
+print(render_report(store.records(), by="cluster", color=False))
+print("\n(the eco sweep ran on hydro's grid — the placement line above is"
+      "\n the carbon it would have cost on the default coal member)")

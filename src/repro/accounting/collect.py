@@ -187,6 +187,7 @@ def record_from_sim(j, model: EnergyModel) -> JobRecord | None:
         name=j.name,
         user=j.user,
         partition=j.partition,
+        cluster=getattr(j, "cluster", "") or "",
         tool=getattr(j, "tool", "") or "",
         state=j.state,
         cpus=j.cpus,
@@ -239,6 +240,7 @@ def record_from_sacct(
         name=row.get("name", ""),
         user=row.get("user", ""),
         partition=row.get("partition", ""),
+        cluster=str(row.get("cluster", "")),
         state=state,
         cpus=int(float(row.get("cpus") or 1)),
         memory_mb=int(float(row.get("memory_mb") or 0)),

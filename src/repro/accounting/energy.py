@@ -80,16 +80,26 @@ def synthetic_trace() -> CarbonTrace:
 
 @dataclass
 class EnergyModel:
-    """Derive (energy_kwh, carbon_gco2) for one job."""
+    """Derive (energy_kwh, carbon_gco2) for one job.
+
+    On a federation each member can sit on a different grid:
+    ``cluster_traces`` maps member name → its :class:`CarbonTrace`, and
+    ``default_cluster`` names the member whose grid anchors the placement
+    counterfactual ("what if this job had run on the default cluster").
+    Both default empty, which reproduces single-cluster behaviour exactly.
+    """
 
     watts_per_cpu: float = DEFAULT_WATTS_PER_CPU
     baseline_w: float = 0.0
     trace: CarbonTrace | None = field(default_factory=synthetic_trace)
     flat_intensity: float = DEFAULT_INTENSITY
+    cluster_traces: dict = field(default_factory=dict)
+    default_cluster: str = ""
 
     @classmethod
     def from_config(cls, cfg=None) -> "EnergyModel":
-        """Build from ``~/.nbislurm.config`` (watts + optional real trace)."""
+        """Build from ``~/.nbislurm.config`` (watts + optional real trace,
+        plus per-cluster traces from any ``[cluster.<name>]`` stanzas)."""
         if cfg is None:
             from repro.core.config import load_config
 
@@ -98,7 +108,17 @@ class EnergyModel:
                       or DEFAULT_WATTS_PER_CPU)
         trace_path = cfg.get("carbon_trace")
         trace = CarbonTrace.from_csv(trace_path) if trace_path else synthetic_trace()
-        return cls(watts_per_cpu=watts, trace=trace)
+        cluster_traces: dict = {}
+        default_cluster = ""
+        names = cfg.cluster_names()
+        if names:
+            for name in names:
+                path = cfg.cluster_section(name).get("carbon_trace", "").strip()
+                if path:
+                    cluster_traces[name] = CarbonTrace.from_csv(path)
+            default_cluster = cfg.get("default_cluster", "").strip() or names[0]
+        return cls(watts_per_cpu=watts, trace=trace,
+                   cluster_traces=cluster_traces, default_cluster=default_cluster)
 
     # -- energy --------------------------------------------------------------
 
@@ -112,16 +132,24 @@ class EnergyModel:
 
     # -- carbon --------------------------------------------------------------
 
-    def intensity(self, start: datetime | None, runtime_s: float) -> float:
-        """Mean gCO2/kWh over the job span (flat fallback without a clock)."""
-        if start is None or self.trace is None:
+    def intensity(
+        self, start: datetime | None, runtime_s: float, *, cluster: str = ""
+    ) -> float:
+        """Mean gCO2/kWh over the job span (flat fallback without a clock).
+
+        ``cluster`` selects that member's grid trace when one is
+        configured; unknown/empty names fall back to the global trace.
+        """
+        trace = self.cluster_traces.get(cluster, self.trace) if cluster else self.trace
+        if start is None or trace is None:
             return self.flat_intensity
-        return self.trace.mean_over(start, max(1, int(runtime_s)))
+        return trace.mean_over(start, max(1, int(runtime_s)))
 
     def carbon_gco2(
-        self, energy_kwh: float, start: datetime | None, runtime_s: float
+        self, energy_kwh: float, start: datetime | None, runtime_s: float,
+        *, cluster: str = "",
     ) -> float:
-        return energy_kwh * self.intensity(start, runtime_s)
+        return energy_kwh * self.intensity(start, runtime_s, cluster=cluster)
 
     # -- one-stop record annotation -----------------------------------------
 
@@ -132,17 +160,31 @@ class EnergyModel:
         The no-eco counterfactual is only differenced for jobs eco mode
         actually deferred; for everything else it equals the actual carbon,
         so ordinary queue-wait drift never masquerades as an eco saving
-        (or penalty)."""
+        (or penalty). The placement counterfactual is likewise only
+        differenced for jobs that actually ran OFF the default cluster."""
         if record.energy_kwh <= 0.0:
             record.energy_kwh = self.energy_kwh(record.cpus, record.runtime_s)
         started = record.started_dt()
         record.carbon_gco2 = self.carbon_gco2(
-            record.energy_kwh, started, record.runtime_s
+            record.energy_kwh, started, record.runtime_s,
+            cluster=record.cluster,
         )
         if record.eco_deferred:
             requested = record.requested_dt() or started
             record.carbon_nodefer_gco2 = self.carbon_gco2(
-                record.energy_kwh, requested, record.runtime_s
+                record.energy_kwh, requested, record.runtime_s,
+                cluster=record.cluster,
             )
         else:
             record.carbon_nodefer_gco2 = record.carbon_gco2
+        if (
+            record.cluster
+            and self.default_cluster
+            and record.cluster != self.default_cluster
+        ):
+            record.carbon_default_cluster_gco2 = self.carbon_gco2(
+                record.energy_kwh, started, record.runtime_s,
+                cluster=self.default_cluster,
+            )
+        else:
+            record.carbon_default_cluster_gco2 = record.carbon_gco2

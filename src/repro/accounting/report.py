@@ -26,6 +26,7 @@ class GroupStats:
     energy_kwh: float = 0.0
     carbon_gco2: float = 0.0
     carbon_nodefer_gco2: float = 0.0
+    carbon_default_cluster_gco2: float = 0.0
     eco_deferred: int = 0
     runtime_s_total: int = 0
     time_limit_s_total: int = 0
@@ -41,6 +42,12 @@ class GroupStats:
         self.energy_kwh += r.energy_kwh
         self.carbon_gco2 += r.carbon_gco2
         self.carbon_nodefer_gco2 += r.carbon_nodefer_gco2
+        # pre-federation records lack the placement counterfactual (0.0):
+        # count them at actual carbon so they read as no saving, never a
+        # penalty
+        self.carbon_default_cluster_gco2 += (
+            r.carbon_default_cluster_gco2 or r.carbon_gco2
+        )
         if r.eco_deferred:
             self.eco_deferred += 1
         self.runtime_s_total += r.runtime_s
@@ -50,6 +57,11 @@ class GroupStats:
     @property
     def carbon_saved_gco2(self) -> float:
         return self.carbon_nodefer_gco2 - self.carbon_gco2
+
+    @property
+    def placement_saved_gco2(self) -> float:
+        """Carbon saved by routing jobs off the default cluster (federation)."""
+        return self.carbon_default_cluster_gco2 - self.carbon_gco2
 
     @property
     def mean_runtime_s(self) -> float:
@@ -73,6 +85,8 @@ class GroupStats:
             "carbon_gco2": round(self.carbon_gco2, 3),
             "carbon_nodefer_gco2": round(self.carbon_nodefer_gco2, 3),
             "carbon_saved_gco2": round(self.carbon_saved_gco2, 3),
+            "carbon_default_cluster_gco2": round(self.carbon_default_cluster_gco2, 3),
+            "placement_saved_gco2": round(self.placement_saved_gco2, 3),
             "eco_deferred": self.eco_deferred,
             "mean_runtime_s": round(self.mean_runtime_s, 1),
             "limit_utilisation": round(self.limit_utilisation, 4),
@@ -87,6 +101,8 @@ def group_key(r: JobRecord, by: str) -> str:
         from .predict import name_stem
 
         return r.tool or name_stem(r.name) or "(unnamed)"
+    if by == "cluster":
+        return r.cluster or "(default)"
     return "all"
 
 
@@ -167,4 +183,10 @@ def render_report(records: "list[JobRecord]", by: str = "user",
         f"(no-eco counterfactual {t.carbon_nodefer_gco2:.1f} g → "
         f"saved {t.carbon_saved_gco2:+.1f} g, {saved_pct:+.1f}%)"
     )
+    if abs(t.placement_saved_gco2) > 1e-9:  # federation-routed records only
+        summary += (
+            f"\nplacement: default-cluster counterfactual "
+            f"{t.carbon_default_cluster_gco2:.1f} g → routing saved "
+            f"{t.placement_saved_gco2:+.1f} g"
+        )
     return table + "\n" + summary

@@ -50,6 +50,7 @@ class JobRecord:
     name: str = ""
     user: str = ""
     partition: str = ""
+    cluster: str = ""  # federation member; "" on a single-cluster stack
     tool: str = ""  # wrapper/tool name; "" for plain runjob commands
     state: str = ""
     cpus: int = 1
@@ -69,6 +70,10 @@ class JobRecord:
     energy_kwh: float = 0.0
     carbon_gco2: float = 0.0
     carbon_nodefer_gco2: float = 0.0
+    #: placement counterfactual (federation): the carbon this job would
+    #: have emitted had it run on the DEFAULT cluster's grid instead of
+    #: where the placer routed it; equals carbon_gco2 off-federation
+    carbon_default_cluster_gco2: float = 0.0
 
     # -- serialisation -------------------------------------------------------
 
@@ -98,6 +103,16 @@ class JobRecord:
     def carbon_saved_gco2(self) -> float:
         """Counterfactual minus actual (positive = eco mode saved carbon)."""
         return self.carbon_nodefer_gco2 - self.carbon_gco2
+
+    @property
+    def placement_saved_gco2(self) -> float:
+        """Default-cluster counterfactual minus actual (positive = routing
+        this job away from the default cluster saved carbon). Records
+        archived before federation lack the counterfactual (0.0) and read
+        as no saving, not a penalty."""
+        if self.carbon_default_cluster_gco2 <= 0.0:
+            return 0.0
+        return self.carbon_default_cluster_gco2 - self.carbon_gco2
 
     def started_dt(self) -> datetime | None:
         return _parse_iso(self.started_at)
@@ -230,10 +245,13 @@ class HistoryStore:
         tool: str | None = None,
         state: str | None = None,
         since: datetime | None = None,
+        cluster: str | None = None,
     ) -> "list[JobRecord]":
         out = []
         for r in self.scan():
             if user is not None and r.user != user:
+                continue
+            if cluster is not None and r.cluster != cluster:
                 continue
             # same key the report prints for --by tool, so a user can
             # filter by exactly what the table showed

@@ -9,6 +9,8 @@ eco window.
 
     ecoreport                      # per-user table from the archive
     ecoreport --by tool            # group by tool / job-name stem
+    ecoreport --by-cluster         # federation: per-member totals and
+                                   # carbon saved by placement routing
     ecoreport --collect            # harvest backend accounting first
     ecoreport --json               # machine-readable (shared dialect)
     ecoreport --user alice --since 2026-01-01
@@ -43,10 +45,17 @@ def build_parser() -> argparse.ArgumentParser:
     )
     ap.add_argument("--history", default=None,
                     help="job archive path (default: $NBI_HISTORY / config)")
-    ap.add_argument("--by", choices=["user", "tool", "none"], default="user",
+    ap.add_argument("--by", choices=["user", "tool", "cluster", "none"],
+                    default="user",
                     help="grouping for the table (default: user)")
+    ap.add_argument("--by-cluster", dest="by", action="store_const",
+                    const="cluster",
+                    help="shorthand for --by cluster (federation: per-member "
+                         "totals incl. placement savings)")
     ap.add_argument("-u", "--user", default=None, help="filter to one user")
     ap.add_argument("--tool", default=None, help="filter to one tool/name stem")
+    ap.add_argument("--cluster", default=None,
+                    help="filter to one federation member cluster")
     ap.add_argument("--state", default=None, help="filter by final state")
     ap.add_argument("--since", default=None,
                     help="only jobs started on/after this ISO date(time); "
@@ -84,7 +93,8 @@ def main(argv=None) -> int:
             print(f"collected {n} new record(s) into {store.path}")
 
     records = store.records(
-        user=args.user, tool=args.tool, state=args.state, since=since
+        user=args.user, tool=args.tool, state=args.state, since=since,
+        cluster=args.cluster,
     )
 
     if args.as_json:

@@ -16,10 +16,11 @@ HEADERS = ["JobID", "User", "Queue", "JobName", "State",
            "TimeUsed", "TimeLeft", "TimeLimit", "NodeList", "Reason"]
 
 
-def queue_rows(q: Queue) -> list[list[str]]:
+def queue_rows(q: Queue, *, with_cluster: bool = False) -> list[list[str]]:
     return [
-        [j.jobid, j.user, j.queue, j.name, j.state,
-         j.time_used, j.time_left, j.time_limit, j.nodelist, j.reason]
+        ([j.cluster] if with_cluster else [])
+        + [j.jobid, j.user, j.queue, j.name, j.state,
+           j.time_used, j.time_left, j.time_limit, j.nodelist, j.reason]
         for j in q
     ]
 
@@ -31,6 +32,8 @@ def main(argv=None) -> int:
     ap.add_argument("-s", "--state", default=None, help="PENDING/RUNNING/...")
     ap.add_argument("-n", "--name", default=None, help="job-name regex")
     ap.add_argument("-q", "--queue", dest="partition", default=None)
+    ap.add_argument("--cluster", default=None,
+                    help="filter to one federation member cluster")
     ap.add_argument("--cancel", action="store_true",
                     help="cancel every job matching the filters")
     ap.add_argument("--yes", action="store_true", help="skip confirmation")
@@ -50,6 +53,8 @@ def main(argv=None) -> int:
             user = None
     q = Queue(user=user, state=args.state, name=args.name,
               queue=args.partition, backend=backend)
+    if args.cluster is not None:
+        q.jobs = [j for j in q.jobs if j.cluster == args.cluster]
 
     if args.cancel:
         ids = q.ids()
@@ -72,11 +77,16 @@ def main(argv=None) -> int:
     if not len(q):
         print("no jobs in queue")
         return 0
+    # federation: lead with a Cluster column (absent on a plain backend,
+    # so single-cluster output is unchanged)
+    federated = any(j.cluster for j in q)
+    headers = (["Cluster"] + HEADERS) if federated else HEADERS
+    state_col = 5 if federated else 4
     print(
         render_table(
-            HEADERS,
-            queue_rows(q),
-            color_for_row=lambda r: state_color(r[4]),
+            headers,
+            queue_rows(q, with_cluster=federated),
+            color_for_row=lambda r: state_color(r[state_col]),
             enabled=False if args.no_color else None,
         )
     )

@@ -70,6 +70,13 @@ def build_parser() -> argparse.ArgumentParser:
                     help="eco v2: submit deferred jobs HELD (no --begin) and "
                          "release reactively when load drops — never later "
                          "than the static begin (see waitjobs --eco-release)")
+    ap.add_argument("--cluster", default=None,
+                    help="federation: pin the job to this member cluster "
+                         "(default: the default cluster)")
+    ap.add_argument("--anywhere", action="store_true",
+                    help="federation: let the placement router pick the "
+                         "cluster — greenest feasible for eco jobs, "
+                         "fastest for urgent ones")
     ap.add_argument("--gres", default="")
     ap.add_argument("--sbatch", action="append", default=[],
                     help="raw #SBATCH pass-through (repeatable)")
@@ -125,7 +132,35 @@ def main(argv=None) -> int:
                  "(one command per task) are mutually exclusive")
     if args.array and not args.from_file:
         ap.error("--array requires --from-file")
+    if args.cluster and args.anywhere:
+        ap.error("--cluster pins a member; --anywhere routes freely — "
+                 "pick one")
     cfg = load_config()
+
+    # --- federation routing: resolve which member cluster this goes to
+    backend = get_backend()
+    registry = getattr(backend, "registry", None)
+    route_cluster = None  # None = not federated; "" = placer decides
+    if registry is not None:
+        if args.cluster:
+            if args.cluster not in registry:
+                print(
+                    f"unknown cluster {args.cluster!r} "
+                    f"(configured: {', '.join(registry.names())})",
+                    file=sys.stderr,
+                )
+                return 2
+            route_cluster = args.cluster
+        elif args.anywhere:
+            route_cluster = ""  # decided by the Placer (at eco time below)
+        else:
+            # zero-surprise default: the default cluster, exactly where a
+            # single-cluster setup would have run it
+            route_cluster = registry.default_name
+    elif args.cluster or args.anywhere:
+        ap.error("--cluster/--anywhere need a federated backend — add "
+                 "[cluster.<name>] stanzas to the config "
+                 "(see docs/federation.md)")
 
     opts = Opts(
         queue=args.queue if args.queue is not None else cfg.get("queue"),
@@ -155,9 +190,28 @@ def main(argv=None) -> int:
         from repro.accounting import predictor_from_config
 
         now = datetime.fromisoformat(args.now) if args.now else datetime.now()
-        # the tier is priced from this job's historical runtime when the
-        # archive knows it; with no history this is exactly next_window()
-        sched = EcoScheduler(cfg, predictor=predictor_from_config(cfg))
+        predictor = predictor_from_config(cfg)
+        if route_cluster == "":
+            # --anywhere: route BEFORE pricing — eco jobs score
+            # green-first, and the tier maths below must use the chosen
+            # member's own windows and carbon trace
+            route_cluster = backend.placer.place_spec(
+                cpus=opts.threads, memory_mb=opts.memory_mb,
+                time_s=opts.time_s, now=now, name=args.name, eco=True,
+                charge=not args.dry_run,  # a dry run must not skew routing
+            ).cluster
+        if route_cluster:
+            # price through the routed member's per-cluster scheduler (a
+            # copy, so the registry's object keeps its configuration)
+            from copy import copy as _copy
+
+            sched = _copy(registry.get(route_cluster).scheduler)
+            sched.predictor = predictor
+        else:
+            # the tier is priced from this job's historical runtime when
+            # the archive knows it; with no history this is exactly
+            # next_window()
+            sched = EcoScheduler(cfg, predictor=predictor)
         predicted_s = sched.effective_duration(opts.time_s, args.name)
         decision = sched.decide(opts.time_s, now, name=args.name)
         eco_decision = decision
@@ -188,6 +242,9 @@ def main(argv=None) -> int:
                     f" [predicted {predicted_s // 60} min from history, "
                     f"limit {opts.time_s // 60} min]"
                 )
+        if route_cluster:
+            eco_note = (eco_note + " " if eco_note else "eco mode: run now ") \
+                + f"[cluster {route_cluster}]"
 
     if args.from_file:
         # --- batch mode: one job per command line, via the SubmitEngine
@@ -206,11 +263,13 @@ def main(argv=None) -> int:
         ]
         for job in jobs:
             job.eco_meta = eco_meta
+            if route_cluster:
+                job.cluster = route_cluster
         if args.array:
             # one array job carries the whole batch → share one name
             for job in jobs:
                 job.name = args.name
-        engine = SubmitEngine(get_backend(), coalesce=args.array)
+        engine = SubmitEngine(backend, coalesce=args.array)
         if args.dry_run:
             if args.array:
                 array_job = Job(name=args.name, opts=deepcopy(opts))
@@ -252,12 +311,14 @@ def main(argv=None) -> int:
         workdir="",
     )
     job.eco_meta = eco_meta
+    if route_cluster:
+        job.cluster = route_cluster
     if args.dry_run:
         print(job.script(), end="")
         if eco_note:
             print(f"# {eco_note}", file=sys.stderr)
         return 0
-    jobid = job.run(get_backend())
+    jobid = job.run(backend)
     if eco_meta and eco_meta.get("hold"):
         _hold_controller(sched, now).register(
             jobid, eco_decision, now=now, duration_s=predicted_s)

@@ -30,6 +30,8 @@ from repro.cli.render import COLORS, RESET, STATE_COLORS
 
 COLUMNS = [  # (key, header, default width, default visible)
     ("jobid", "JobID", 10, True),
+    # hidden on a plain backend; auto-shown once federated rows appear
+    ("cluster", "Cluster", 9, False),
     ("user", "User", 9, True),
     ("queue", "Queue", 13, True),
     ("name", "JobName", 16, True),
@@ -123,6 +125,7 @@ class ViewModel:
                 or needle in j.user.lower()
                 or needle in j.state.lower()
                 or needle in j.queue.lower()
+                or needle in j.cluster.lower()
                 or needle in j.jobid
             ]
         key = s.sort_key
@@ -134,6 +137,8 @@ class ViewModel:
 
         jobs.sort(key=sort_val, reverse=s.sort_desc)
         s.rows = jobs
+        if not s.visible["cluster"] and any(j.cluster for j in jobs):
+            s.visible["cluster"] = True  # federation detected: show the column
         live = {j.jobid for j in jobs}
         s.selected &= live
         s.cursor = min(s.cursor, max(0, len(jobs) - 1))
@@ -339,7 +344,9 @@ class ViewModel:
         s = self.state
         j = s.rows[s.cursor]
         fields = [
-            ("JobID", j.jobid), ("User", j.user), ("Partition", j.queue),
+            ("JobID", j.jobid),
+            *([("Cluster", j.cluster)] if j.cluster else []),
+            ("User", j.user), ("Partition", j.queue),
             ("Name", j.name), ("State", j.state), ("TimeUsed", j.time_used),
             ("TimeLeft", j.time_left), ("TimeLimit", j.time_limit),
             ("Nodes", j.nodelist), ("Reason", j.reason),

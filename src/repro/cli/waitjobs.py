@@ -72,7 +72,8 @@ def matching_ids(backend, *, user=None, name=None, ids=None) -> list[str]:
     q = Queue(user=user, name=name, backend=backend)
     if ids:
         want = {str(i) for i in ids}
-        return [j.jobid for j in q if j.jobid in want or str(j.jobid_num) in want]
+        return [j.jobid for j in q
+                if any(_id_matches(j.jobid, req) for req in want)]
     return q.ids()
 
 
@@ -102,7 +103,7 @@ def wait_for_events(
         # result (and drive the exit code) even while other ids still run
         gone = [
             req for req in {str(i) for i in ids}
-            if not any(w == req or w.split("_")[0] == req for w in watched)
+            if not any(_id_matches(w, req) for w in watched)
         ]
         result.states.update(_final_states(inner, gone))
     if not watched:
@@ -117,7 +118,13 @@ def wait_for_events(
         remaining.discard(event.jobid)
 
     bus = getattr(inner, "bus", None)
-    if isinstance(inner, SimCluster) and bus is not None:
+    native = isinstance(inner, SimCluster) or (
+        # a federation of simulators pushes member events (cluster-tagged,
+        # ids namespaced) through its aggregated bus — same zero-snapshot
+        # wait loop, now spanning every member cluster at once
+        getattr(inner, "all_sim", False) and hasattr(backend, "advance")
+    )
+    if native and bus is not None:
         # native events: zero snapshots while waiting — each advance()
         # delivers every transition in order at its simulated instant
         token = bus.subscribe(on_event, types=TERMINAL_EVENTS)
@@ -158,6 +165,22 @@ def wait_for_events(
             result.snapshots += 1
     result.states.update(_final_states(inner, watched - set(result.states)))
     return result
+
+
+def _id_matches(watched_id: str, requested: str) -> bool:
+    """Does a queue row id cover a requested id?
+
+    A request may name the row exactly, its array base (with or without
+    the federation cluster prefix), or the bare id without the prefix —
+    ``1000001``, ``green:1000001`` and ``green:1000001_3`` all match the
+    row ``green:1000001_3``. Cluster names may themselves contain ``_``.
+    """
+    from repro.core.federation import array_base_id, split_cluster_id
+
+    bare = split_cluster_id(watched_id)[1]
+    return requested in (
+        watched_id, array_base_id(watched_id), bare, bare.partition("_")[0],
+    )
 
 
 def _norm_state(state: str) -> str:

@@ -13,12 +13,18 @@ from repro.cli.render import emit_json, render_table
 
 
 def utilisation_records(q: Queue) -> list[dict]:
-    """Per-user utilisation, sorted by CPUs in use (the ``--json`` payload)."""
+    """Per-user utilisation, sorted by CPUs in use (the ``--json`` payload).
+
+    On a federation each record additionally carries ``clusters``, the
+    user's running CPUs broken down per member; single-cluster payloads
+    are unchanged.
+    """
     per_user: dict[str, dict] = {}
     total_cpus = 0
+    federated = any(j.cluster for j in q)
     for j in q:
         u = per_user.setdefault(
-            j.user, {"run": 0, "pend": 0, "cpus": 0, "mem_mb": 0}
+            j.user, {"run": 0, "pend": 0, "cpus": 0, "mem_mb": 0, "clusters": {}}
         )
         cpus = int(j.cpus or 0)
         mem = int(j.memory or 0)
@@ -27,38 +33,46 @@ def utilisation_records(q: Queue) -> list[dict]:
             u["cpus"] += cpus
             u["mem_mb"] += mem
             total_cpus += cpus
+            if j.cluster:
+                u["clusters"][j.cluster] = u["clusters"].get(j.cluster, 0) + cpus
         elif j.state == "PENDING":
             u["pend"] += 1
     out = []
     for user, u in sorted(per_user.items(), key=lambda kv: -kv[1]["cpus"]):
         share = u["cpus"] / total_cpus if total_cpus else 0.0
-        out.append(
-            {
-                "user": user,
-                "running": u["run"],
-                "pending": u["pend"],
-                "cpus": u["cpus"],
-                "mem_mb": u["mem_mb"],
-                "share": round(share, 4),
-            }
-        )
+        rec = {
+            "user": user,
+            "running": u["run"],
+            "pending": u["pend"],
+            "cpus": u["cpus"],
+            "mem_mb": u["mem_mb"],
+            "share": round(share, 4),
+        }
+        if federated:
+            rec["clusters"] = dict(sorted(u["clusters"].items()))
+        out.append(rec)
     return out
 
 
 def utilisation_rows(q: Queue) -> list[list[str]]:
     rows = []
-    for r in utilisation_records(q):
+    records = utilisation_records(q)
+    federated = any("clusters" in r for r in records)
+    for r in records:
         bar = "#" * round(r["share"] * 20)
-        rows.append(
-            [
-                r["user"],
-                str(r["running"]),
-                str(r["pending"]),
-                str(r["cpus"]),
-                f"{r['mem_mb'] / 1024:.0f}",
-                f"{r['share'] * 100:4.0f}% {bar}",
-            ]
-        )
+        row = [
+            r["user"],
+            str(r["running"]),
+            str(r["pending"]),
+            str(r["cpus"]),
+            f"{r['mem_mb'] / 1024:.0f}",
+            f"{r['share'] * 100:4.0f}% {bar}",
+        ]
+        if federated:
+            row.append(" ".join(
+                f"{name}:{cpus}" for name, cpus in r.get("clusters", {}).items()
+            ))
+        rows.append(row)
     return rows
 
 
@@ -77,9 +91,12 @@ def main(argv=None) -> int:
     if not len(q):
         print("cluster is idle")
         return 0
+    headers = ["User", "Running", "Pending", "CPUs", "Mem(GB)", "Share"]
+    if any(j.cluster for j in q):
+        headers.append("Clusters")
     print(
         render_table(
-            ["User", "Running", "Pending", "CPUs", "Mem(GB)", "Share"],
+            headers,
             utilisation_rows(q),
             enabled=False if args.no_color else None,
         )

@@ -24,6 +24,16 @@ from .config import NBIConfig, load_config, write_config
 from .eco import CarbonTrace, EcoDecision, EcoScheduler
 from .ecocontroller import EcoController, HeldJob, ReleaseRecord
 from .engine import BatchResult, QueueCache, SubmitEngine, get_queue_cache, reset_queue_cache
+from .federation import (
+    ClusterHandle,
+    ClusterRegistry,
+    FederatedBackend,
+    Placement,
+    Placer,
+    array_base_id,
+    join_cluster_id,
+    split_cluster_id,
+)
 from .events import (
     EVENT_TYPES,
     TERMINAL_EVENTS,
@@ -46,6 +56,9 @@ __all__ = [
     "get_queue_cache", "reset_queue_cache",
     "CarbonTrace", "EcoDecision", "EcoScheduler",
     "EcoController", "HeldJob", "ReleaseRecord",
+    "ClusterHandle", "ClusterRegistry", "FederatedBackend",
+    "Placement", "Placer", "array_base_id",
+    "join_cluster_id", "split_cluster_id",
     "EVENT_TYPES", "TERMINAL_EVENTS", "EventBus", "JobEvent",
     "PollingEventAdapter", "diff_snapshots", "terminal_event_for_state",
     "FILE_PLACEHOLDER", "Job", "Opts",

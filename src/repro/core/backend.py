@@ -190,10 +190,15 @@ def parse_sacct_output(text: str) -> list[dict]:
     Job *steps* (``123.batch``, ``123.extern``, ``123.0``) are folded away:
     only whole-job rows survive, but a step's ``ConsumedEnergy`` backfills
     its parent when the parent reports none (common sacct layout — the
-    energy plugin accounts on the batch step).
+    energy plugin accounts on the batch step). Step order is not assumed:
+    a step seen *before* its parent row is buffered and backfilled once
+    the parent arrives, and an orphan step whose parent row never appears
+    (filtered out by ``--user``/``--starttime``) is dropped without ever
+    fabricating a job row.
     """
     rows: list[dict] = []
     by_base: dict[str, dict] = {}
+    step_energy: dict[str, str] = {}  # steps seen before their parent row
     for line in text.splitlines():
         parts = line.split("|")
         if len(parts) != len(SACCT_FIELDS):
@@ -201,12 +206,17 @@ def parse_sacct_output(text: str) -> list[dict]:
         raw = dict(zip(SACCT_FIELDS, (p.strip() for p in parts)))
         base, _, step = raw["jobid"].partition(".")
         if step:  # a job step: only mined for energy backfill
+            if not _energy_j(raw["consumed_energy"]):
+                continue
             parent = by_base.get(base)
-            if parent is not None and not _energy_j(parent["consumed_energy"]):
-                if _energy_j(raw["consumed_energy"]):
-                    parent["consumed_energy"] = raw["consumed_energy"]
+            if parent is None:
+                step_energy.setdefault(base, raw["consumed_energy"])
+            elif not _energy_j(parent["consumed_energy"]):
+                parent["consumed_energy"] = raw["consumed_energy"]
             continue
         row = _normalise_sacct_row(raw)
+        if base in step_energy and not _energy_j(row["consumed_energy"]):
+            row["consumed_energy"] = step_energy.pop(base)
         rows.append(row)
         by_base[base] = row
     return rows
@@ -240,6 +250,9 @@ def _normalise_sacct_row(raw: dict) -> dict:
     for key in ("submitted_at", "started_at", "finished_at"):
         if row[key] in ("Unknown", "None", "N/A"):
             row[key] = ""
+    # sacct prints "None assigned" in NodeList for jobs that never started
+    if row["node"] in ("None assigned", "None", "N/A"):
+        row["node"] = ""
     return row
 
 
@@ -250,14 +263,42 @@ def _energy_j(s: str) -> float:
 
 
 _SHARED_SIM = None
+_SHARED_FED = None
+
+#: backend kinds ``$REPRO_BACKEND`` / ``get_backend(kind=)`` accept
+VALID_BACKEND_KINDS = ("slurm", "sim", "federated")
 
 
 def get_backend(kind: str | None = None):
-    """Resolve the active backend (env-driven, simulator fallback)."""
+    """Resolve the active backend.
+
+    ``kind`` (or ``$REPRO_BACKEND``) picks explicitly: ``slurm`` shells out
+    to sbatch/squeue, ``sim`` is the shared in-process simulator,
+    ``federated`` builds a :class:`~repro.core.federation.FederatedBackend`
+    from the config's ``[cluster.<name>]`` stanzas. Anything else raises a
+    :class:`ValueError` naming the valid kinds.
+
+    Unset, the default resolution order is: configured cluster stanzas →
+    federation; ``sbatch`` on PATH → real SLURM; otherwise the simulator.
+    """
     global _SHARED_SIM
-    kind = kind or os.environ.get("REPRO_BACKEND", "")
-    if kind == "slurm" or (not kind and shutil.which("sbatch")):
+    kind = (kind or os.environ.get("REPRO_BACKEND", "")).strip().lower()
+    if kind and kind not in VALID_BACKEND_KINDS:
+        raise ValueError(
+            f"unknown backend kind {kind!r} (from $REPRO_BACKEND or the "
+            f"kind= argument): valid kinds are "
+            + ", ".join(repr(k) for k in VALID_BACKEND_KINDS)
+        )
+    if kind == "slurm":
         return SlurmBackend()
+    if kind == "federated":
+        return _shared_federation(required=True)
+    if not kind:
+        fed = _shared_federation(required=False)
+        if fed is not None:
+            return fed
+        if shutil.which("sbatch"):
+            return SlurmBackend()
     from .simcluster import SimCluster
 
     if _SHARED_SIM is None:
@@ -265,10 +306,48 @@ def get_backend(kind: str | None = None):
     return _SHARED_SIM
 
 
+def _shared_federation(*, required: bool):
+    """The process-wide FederatedBackend for the current config stanzas.
+
+    Rebuilt whenever the config contents change (tests point
+    ``$NBISLURM_CONFIG`` at per-test files); ``None`` — or ValueError when
+    ``required`` — with no stanzas configured.
+    """
+    global _SHARED_FED
+    from .config import load_config
+
+    cfg = load_config()
+    if not cfg.cluster_names():
+        if required:
+            raise ValueError(
+                "REPRO_BACKEND=federated but there are no [cluster.<name>] "
+                f"stanzas in {cfg.path or 'the config file'}"
+            )
+        return None
+    key = (cfg.path, tuple(sorted(cfg.values.items())))
+    if _SHARED_FED is None or _SHARED_FED._config_key != key:
+        from repro.accounting.predict import predictor_from_config
+
+        from .federation import ClusterRegistry, FederatedBackend
+
+        if _SHARED_FED is not None:
+            _SHARED_FED.close()
+        _SHARED_FED = FederatedBackend(
+            ClusterRegistry.from_config(cfg),
+            predictor=predictor_from_config(cfg),
+        )
+        _SHARED_FED._config_key = key
+    return _SHARED_FED
+
+
 def reset_shared_sim() -> None:
-    """Forget the shared simulator and its queue cache (test isolation)."""
-    global _SHARED_SIM
+    """Forget the shared simulator/federation and the queue cache
+    (test isolation)."""
+    global _SHARED_SIM, _SHARED_FED
     _SHARED_SIM = None
+    if _SHARED_FED is not None:
+        _SHARED_FED.close()
+    _SHARED_FED = None
     from .engine import reset_queue_cache
 
     reset_queue_cache()

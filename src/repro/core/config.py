@@ -20,6 +20,21 @@ Recognised keys (all optional):
 ``history_file``            job archive path (default ``~/.nbi/history.jsonl``)
 ``eco_prediction``          1/0 — estimate durations from the job archive
 ``energy_cpu_watts``        per-allocated-core draw for the energy model
+``default_cluster``         federation: member that anchors counterfactuals
+
+Multi-cluster federation adds INI-style ``[cluster.<name>]`` stanzas; keys
+inside a stanza are stored flat as ``cluster.<name>.<key>`` and read back
+through :meth:`NBIConfig.cluster_names` / :meth:`NBIConfig.cluster_section`
+(see :mod:`repro.core.federation` for the recognised per-cluster keys)::
+
+    [cluster.green]
+    kind = sim
+    carbon_trace = ~/traces/hydro.csv
+    nodes = 8
+    cpus_per_node = 64
+
+A file with no stanzas parses exactly as before — single-cluster users see
+zero change.
 """
 
 from __future__ import annotations
@@ -70,7 +85,15 @@ class NBIConfig:
         return int(self.get(key).strip())
 
     def get_windows(self, key: str) -> list[tuple[int, int]]:
-        """Parse ``HH:MM-HH:MM[,HH:MM-HH:MM...]`` into minute-of-day pairs."""
+        """Parse ``HH:MM-HH:MM[,HH:MM-HH:MM...]`` into minute-of-day pairs.
+
+        An overnight window whose end precedes its start (``22:00-06:00``)
+        is split at midnight into ``(22:00, 24:00)`` plus ``(00:00, 06:00)``
+        — both halves apply on every day the key covers, so the early-
+        morning half of a weekday window lands on weekday mornings.
+        Malformed stanzas raise :class:`ValueError` naming the key and the
+        offending fragment.
+        """
         out: list[tuple[int, int]] = []
         raw = self.get(key).strip()
         if not raw:
@@ -79,15 +102,56 @@ class NBIConfig:
             part = part.strip()
             if not part:
                 continue
-            lo, hi = part.split("-")
-            out.append((_parse_hhmm(lo), _parse_hhmm(hi)))
+            lo_s, sep, hi_s = part.partition("-")
+            if not sep or not lo_s.strip() or not hi_s.strip():
+                raise ValueError(
+                    f"malformed window {part!r} in {key}: expected HH:MM-HH:MM"
+                )
+            try:
+                lo, hi = _parse_hhmm(lo_s), _parse_hhmm(hi_s)
+            except ValueError as e:
+                raise ValueError(
+                    f"malformed window {part!r} in {key}: {e}"
+                ) from None
+            if hi >= lo:
+                out.append((lo, hi))
+            else:  # spans midnight: split into the two same-day halves
+                out.append((lo, 24 * 60))
+                if hi > 0:
+                    out.append((0, hi))
         return out
+
+    # -- federation stanzas ---------------------------------------------------
+
+    def cluster_names(self) -> list[str]:
+        """Names of the ``[cluster.<name>]`` stanzas, in declaration order."""
+        seen: dict[str, None] = {}
+        for key in self.values:
+            parts = key.split(".")
+            if len(parts) >= 3 and parts[0] == "cluster" and parts[1]:
+                seen.setdefault(parts[1])
+        return list(seen)
+
+    def cluster_section(self, name: str) -> dict:
+        """The flat key→value dict of one ``[cluster.<name>]`` stanza."""
+        prefix = f"cluster.{name}."
+        return {
+            key[len(prefix):]: val
+            for key, val in self.values.items()
+            if key.startswith(prefix)
+        }
 
 
 def _parse_hhmm(s: str) -> int:
     """``HH:MM`` → minute of day. ``24:00`` is accepted as end-of-day."""
-    h, m = s.strip().split(":")
-    minute = int(h) * 60 + int(m)
+    s = s.strip()
+    if ":" not in s:
+        raise ValueError(f"malformed time of day {s!r}: expected HH:MM")
+    h, _, m = s.partition(":")
+    try:
+        minute = int(h) * 60 + int(m)
+    except ValueError:
+        raise ValueError(f"malformed time of day {s!r}: expected HH:MM") from None
     if not (0 <= minute <= 24 * 60):
         raise ValueError(f"time of day out of range: {s!r}")
     return minute
@@ -102,15 +166,24 @@ def load_config(path: str | None = None) -> NBIConfig:
         path = os.environ.get("NBISLURM_CONFIG", DEFAULT_CONFIG_PATH)
     p = Path(path).expanduser()
     values: dict[str, str] = {}
+    section = ""
     if p.is_file():
         for line in p.read_text().splitlines():
             line = line.strip()
             if not line or line.startswith("#"):
                 continue
+            if line.startswith("[") and line.endswith("]"):
+                # INI-style stanza ([cluster.green]); keys inside are
+                # stored flat as "<section>.<key>"
+                section = line[1:-1].strip()
+                continue
             if "=" not in line:
                 continue
             key, _, val = line.partition("=")
-            values[key.strip()] = val.strip()
+            key = key.strip()
+            if section:
+                key = f"{section}.{key}"
+            values[key] = val.strip()
     return NBIConfig(values=values, path=str(p))
 
 

@@ -46,6 +46,7 @@ class HeldJob:
     duration_s: int  # effective (predicted) duration used by the tier maths
     tier: int
     registered_at: datetime
+    cluster: str = ""  # federation member ("" on a plain backend)
 
 
 @dataclass
@@ -94,12 +95,19 @@ class EcoController:
         predictor=None,
         load_threshold: float = 0.25,
         now: datetime | None = None,
+        registry=None,
     ):
         if backend is None:
             from .backend import get_backend
 
             backend = get_backend()
         self.backend = backend
+        #: federation registry (auto-detected from the backend): held jobs
+        #: are then window- and load-checked against their OWN cluster
+        self.registry = (
+            registry if registry is not None
+            else getattr(backend, "registry", None)
+        )
         if scheduler is None:
             scheduler = EcoScheduler(predictor=predictor)
         self.scheduler = scheduler
@@ -204,6 +212,7 @@ class EcoController:
             duration_s=int(duration_s or 0) or 1,
             tier=decision.tier,
             registered_at=now or self._now or datetime.now(),
+            cluster=_cluster_of(jid),
         )
         self._wake(decision.begin)
 
@@ -216,18 +225,27 @@ class EcoController:
           static guarantee);
         * otherwise, with observed load ≤ threshold AND ``now`` inside an
           eco window AND the job's span off-peak → release early.
+
+        On a federation, windows and load are those of the held job's OWN
+        cluster — a quiet green member releases its jobs while a busy one
+        keeps holding, each against its per-cluster eco windows.
         """
         if not self.held:
             return []
         due = [h for h in self.held.values() if now >= h.deadline]
         early: list[HeldJob] = []
         rest = [h for h in self.held.values() if now < h.deadline]
-        if rest and self.scheduler.in_eco_window(now):
-            if self.load_fraction() <= self.load_threshold:
-                early = [
-                    h for h in rest
-                    if not self.scheduler.span_overlaps_peak(now, h.duration_s)
-                ]
+        loads: dict[str, float] = {}  # per-cluster load, computed once
+        for h in rest:
+            sched = self._sched_for(h.cluster)
+            if not sched.in_eco_window(now):
+                continue
+            if h.cluster not in loads:
+                loads[h.cluster] = self.load_fraction(cluster=h.cluster or None)
+            if loads[h.cluster] > self.load_threshold:
+                continue
+            if not sched.span_overlaps_peak(now, h.duration_s):
+                early.append(h)
         targets = due + early
         if not targets:
             return []
@@ -241,10 +259,24 @@ class EcoController:
         self.backend.release(ids)
         return ids
 
-    def load_fraction(self) -> float:
-        """Observed CPU occupancy across UP nodes (0.0 idle … 1.0 full)."""
+    def _sched_for(self, cluster: str) -> EcoScheduler:
+        """The scheduler whose windows govern one held job's early release."""
+        if cluster and self.registry is not None and cluster in self.registry:
+            sched = self.registry.get(cluster).scheduler
+            if sched is not None:
+                return sched
+        return self.scheduler
+
+    def load_fraction(self, *, cluster: str | None = None) -> float:
+        """Observed CPU occupancy across UP nodes (0.0 idle … 1.0 full).
+
+        ``cluster`` narrows the reading to one federation member (node
+        records then carry a ``cluster`` field); None reads everything.
+        """
         total = used = 0
         for n in self.backend.nodes_info():
+            if cluster is not None and n.get("cluster", "") != cluster:
+                continue
             state = str(n.get("state", "")).lower().rstrip("*")
             if state not in ("up", "idle", "mixed", "allocated", "alloc", ""):
                 continue  # DOWN/DRAINED nodes contribute no capacity
@@ -288,7 +320,9 @@ class EcoController:
             jid = str(row.get("jobid", ""))
             if jid in self.held:
                 continue
-            entry = journal.get(jid) or journal.get(jid.split("_")[0])
+            from .federation import array_base_id
+
+            entry = journal.get(jid) or journal.get(array_base_id(jid))
             deadline = _parse_iso((entry or {}).get("eco_deadline", ""))
             if deadline is None:
                 continue
@@ -298,6 +332,7 @@ class EcoController:
                 duration_s=int((entry or {}).get("eco_duration_s", 0) or 0) or 1,
                 tier=int((entry or {}).get("eco_tier", 0) or 0),
                 registered_at=self._now or datetime.now(),
+                cluster=_cluster_of(jid),
             )
             self._wake(deadline)
             adopted += 1
@@ -320,6 +355,12 @@ class EcoController:
             old_bus, token = self._bus_token
             old_bus.unsubscribe(token)
         self._bus_token = (bus, bus.subscribe(lambda e: self.tick(e.at)))
+
+
+def _cluster_of(jobid: str) -> str:
+    from .federation import split_cluster_id
+
+    return split_cluster_id(jobid)[0]
 
 
 def _parse_iso(s: str) -> datetime | None:

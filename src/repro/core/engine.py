@@ -209,10 +209,11 @@ class BatchResult:
     """Outcome of one :meth:`SubmitEngine.submit_many` call."""
 
     ids: list[str] = field(default_factory=list)  # per input job, "123" or "123_7"
-    base_ids: list[int] = field(default_factory=list)  # unique sbatch-level ids
+    base_ids: list = field(default_factory=list)  # unique sbatch-level ids
     sbatch_calls: int = 0  # submissions actually issued
     coalesced: int = 0  # input jobs folded into arrays
     eco_deferred: int = 0  # submissions given a --begin directive
+    placements: set = field(default_factory=set)  # clusters used (federation)
 
     def __len__(self) -> int:
         return len(self.ids)
@@ -233,6 +234,7 @@ def _coalesce_key(job: Job):
         job.workdir,
         job.sim_duration_s,
         getattr(job, "tool", ""),  # accounting key must survive coalescing
+        getattr(job, "cluster", ""),  # pinned members never coalesce across
         o.queue, o.threads, o.memory_mb, o.time_s,
         o.email_address, o.email_type, o.tmpdir, o.output_dir,
         o.begin, o.array_throttle,
@@ -294,9 +296,13 @@ class SubmitEngine:
         self.min_array_size = max(2, int(min_array_size))
         self.controller = controller
         self.eco = eco or controller is not None
-        self.scheduler = scheduler if scheduler is not None else (
-            controller.scheduler if controller is not None else None
-        )
+        self.scheduler = scheduler
+        if scheduler is None and controller is not None and (
+            getattr(controller, "registry", None) is None
+        ):
+            # a federation-aware controller leaves the engine free to price
+            # each placed group through its member's own scheduler
+            self.scheduler = controller.scheduler
         self.predictor = predictor
         self.now = now
         self.cache = cache
@@ -341,55 +347,73 @@ class SubmitEngine:
             array_job.task_commands = [jobs[i].commands[0] for i in members]
             array_job.eco_meta = getattr(first, "eco_meta", None)
             array_job.tool = getattr(first, "tool", "")
+            if getattr(first, "cluster", ""):  # the pin survives coalescing
+                array_job.cluster = first.cluster
             units.append((array_job, members))
             result.coalesced += len(members)
         for i in singles:
             units.append((jobs[i], [i]))
 
-        # 3. eco: one window scan prices the whole batch
+        # 2b. federation: route every submission unit to a member cluster
+        # (a coalesced array lands whole — arrays cannot span clusters).
+        # Pre-placed/pinned units (job.cluster already set) are respected.
+        placer = getattr(self.backend, "placer", None)
+        registry = getattr(self.backend, "registry", None)
+        if placer is not None:
+            clock = self.now or datetime.now()
+            for unit, _ in units:
+                if not getattr(unit, "cluster", ""):
+                    eco_unit = self.eco or bool(
+                        (getattr(unit, "eco_meta", None) or {}).get("deferred")
+                    )
+                    unit.cluster = placer.place(unit, clock, eco=eco_unit).cluster
+            result.placements = {
+                getattr(u, "cluster", "") for u, _ in units
+            }
+
+        # 3. eco: one window scan prices the whole batch — per placed
+        # cluster when federated, so each member prices through its own
+        # windows and carbon trace
         if self.eco:
-            sched = self.scheduler
-            if sched is None:
-                from .eco import EcoScheduler
-
-                sched = EcoScheduler(predictor=self.predictor)
-            elif self.predictor is not None and getattr(sched, "predictor", None) is None:
-                # a supplied scheduler must not silently drop the engine's
-                # predictor — price through a copy so the caller's object
-                # keeps exactly the behaviour it was configured with
-                import copy
-
-                sched = copy.copy(sched)
-                sched.predictor = self.predictor
             clock = self.now or datetime.now()
             pending = [(u, m) for u, m in units if not u.opts.begin]
-            # history-driven durations (identity when no predictor/history);
-            # tool is the verbatim archive key, name falls back by stem
-            keys = None
-            if getattr(sched, "predictor", None) is not None:
-                keys = [(u.name, "", getattr(u, "tool", "")) for u, _ in pending]
-            decisions = sched.decide_many(
-                [u.opts.time_s for u, _ in pending], clock, keys=keys
-            )
+            if registry is not None and self.scheduler is None:
+                by_cluster: dict[str, list] = {}
+                for u, m in pending:
+                    by_cluster.setdefault(getattr(u, "cluster", ""), []).append((u, m))
+                eco_groups = sorted(by_cluster.items())
+            else:
+                eco_groups = [("", pending)]
             deferred_units: list[tuple[Job, object]] = []  # (unit, decision)
-            for (unit, _), dec in zip(pending, decisions):
-                unit.eco_meta = {"tier": dec.tier, "deferred": dec.deferred}
-                if dec.deferred:
-                    if self.controller is not None:
-                        # eco v2: hold now, release reactively (deadline =
-                        # the exact begin the static path would have set)
-                        unit.opts.hold = True
-                        unit.eco_meta = self.controller.hold_meta(
-                            dec,
-                            sched.effective_duration(
-                                unit.opts.time_s, unit.name, "",
-                                getattr(unit, "tool", ""),
-                            ),
-                        )
-                        deferred_units.append((unit, dec))
-                    else:
-                        unit.opts.set_begin(dec.begin_directive)
-                    result.eco_deferred += 1
+            for cname, group in eco_groups:
+                sched = self._batch_scheduler(cname, registry)
+                # history-driven durations (identity when no predictor /
+                # history); tool is the verbatim archive key, name falls
+                # back by stem
+                keys = None
+                if getattr(sched, "predictor", None) is not None:
+                    keys = [(u.name, "", getattr(u, "tool", "")) for u, _ in group]
+                decisions = sched.decide_many(
+                    [u.opts.time_s for u, _ in group], clock, keys=keys
+                )
+                for (unit, _), dec in zip(group, decisions):
+                    unit.eco_meta = {"tier": dec.tier, "deferred": dec.deferred}
+                    if dec.deferred:
+                        if self.controller is not None:
+                            # eco v2: hold now, release reactively (deadline
+                            # = the exact begin the static path would set)
+                            unit.opts.hold = True
+                            unit.eco_meta = self.controller.hold_meta(
+                                dec,
+                                sched.effective_duration(
+                                    unit.opts.time_s, unit.name, "",
+                                    getattr(unit, "tool", ""),
+                                ),
+                            )
+                            deferred_units.append((unit, dec))
+                        else:
+                            unit.opts.set_begin(dec.begin_directive)
+                        result.eco_deferred += 1
 
         # 4. write scripts, then pipeline the actual submissions
         prepared = [unit.prepare() for unit, _ in units]
@@ -441,6 +465,29 @@ class SubmitEngine:
             log_submissions(entries)
         return result
 
+    def _batch_scheduler(self, cluster: str, registry):
+        """The scheduler pricing one placed group.
+
+        An explicit ``scheduler=`` always wins; a federation member prices
+        through its own per-cluster :class:`EcoScheduler`; otherwise one is
+        built from config — exactly the pre-federation behaviour. The
+        engine's predictor is attached through a copy so a caller-supplied
+        scheduler keeps exactly the behaviour it was configured with.
+        """
+        sched = self.scheduler
+        if sched is None and cluster and registry is not None:
+            sched = registry.get(cluster).scheduler
+        if sched is None:
+            from .eco import EcoScheduler
+
+            return EcoScheduler(predictor=self.predictor)
+        if self.predictor is not None and getattr(sched, "predictor", None) is None:
+            import copy
+
+            sched = copy.copy(sched)
+            sched.predictor = self.predictor
+        return sched
+
     # -- completion tracking ---------------------------------------------------
 
     def states(self, result: BatchResult) -> dict[str, str]:
@@ -454,9 +501,11 @@ class SubmitEngine:
             parsed = _parse_array_spec(jid)
             if parsed is not None:
                 compressed.append((*parsed, state))
+        from .federation import array_base_id
+
         out: dict[str, str] = {}
         for jid in result.ids:
-            state = live.get(jid) or live.get(jid.split("_")[0])
+            state = live.get(jid) or live.get(array_base_id(jid))
             if state is None:
                 state = _compressed_state(jid, compressed) or "COMPLETED"
             out[jid] = state
@@ -495,13 +544,16 @@ def _parse_array_spec(jobid: str):
 
     Real SLURM reports a pending array as ONE row in this form (tasks only
     get their own ``123_k`` rows once running); the simulator always emits
-    expanded rows. Returns ``(base, {task, ...})`` or None.
+    expanded rows. A federation prefix (``green:123_[0-4]``) is kept on the
+    base. Returns ``(base, {task, ...})`` or None.
     """
     global _ARRAY_SPEC_RE
     import re
 
     if _ARRAY_SPEC_RE is None:
-        _ARRAY_SPEC_RE = re.compile(r"^(\d+)_\[([0-9,\-]+)(?:%\d+)?\]$")
+        _ARRAY_SPEC_RE = re.compile(
+            r"^((?:[^:\s]+:)?\d+)_\[([0-9,\-]+)(?:%\d+)?\]$"
+        )
     m = _ARRAY_SPEC_RE.match(jobid)
     if not m:
         return None
@@ -512,17 +564,20 @@ def _parse_array_spec(jobid: str):
             tasks.update(range(int(lo), int(hi) + 1))
         elif part:
             tasks.add(int(part))
-    return int(m.group(1)), tasks
+    return m.group(1), tasks
 
 
 def _compressed_state(jid: str, compressed) -> "str | None":
-    if "_" not in jid:
+    from .federation import join_cluster_id, split_cluster_id
+
+    cluster, bare = split_cluster_id(jid)  # cluster names may contain "_"
+    if "_" not in bare:
         return None
-    base_s, _, task_s = jid.partition("_")
-    if not (base_s.isdigit() and task_s.isdigit()):
+    base_s, _, task_s = bare.partition("_")
+    if not task_s.isdigit():
         return None
-    base, task = int(base_s), int(task_s)
+    base_key, task = join_cluster_id(cluster, base_s), int(task_s)
     for cbase, tasks, state in compressed:
-        if cbase == base and task in tasks:
+        if cbase == base_key and task in tasks:
             return state
     return None

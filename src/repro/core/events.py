@@ -92,6 +92,9 @@ class JobEvent:
     state: str = ""  # queue state after the transition ("" when implied)
     node: str = ""
     reason: str = ""
+    #: federation member the transition happened on ("" outside a
+    #: FederatedBackend; the jobid is then cluster-prefixed to match)
+    cluster: str = ""
 
     @property
     def is_terminal(self) -> bool:
@@ -177,6 +180,7 @@ def diff_snapshots(prev, cur, now: datetime) -> "list[JobEvent]":
             name=row.get("name", ""), user=row.get("user", ""),
             state=state or row.get("state", ""),
             node=row.get("nodelist", ""), reason=reason or row.get("reason", ""),
+            cluster=row.get("cluster", ""),
         ))
 
     for jid, row in cur.items():
@@ -206,6 +210,7 @@ def diff_snapshots(prev, cur, now: datetime) -> "list[JobEvent]":
                 type=terminal_event_for_state(""), jobid=jid, at=now,
                 name=row.get("name", ""), user=row.get("user", ""),
                 state="", node=row.get("nodelist", ""),
+                cluster=row.get("cluster", ""),
             ))
     return events
 

@@ -1,0 +1,626 @@
+"""Multi-cluster federation — registry, routing and carbon-aware placement.
+
+The paper's eco mode defers jobs in *time*; federation adds the second
+axis, deferring in *space*: a flexible job is routed to whichever member
+cluster is cheapest in carbon-and-queue-wait terms.
+
+Three pieces, layered on the existing :class:`~repro.core.backend.Backend`
+protocol so nothing above the backend seam needs to know how many clusters
+exist:
+
+* :class:`ClusterRegistry` — named :class:`ClusterHandle` s built from
+  ``[cluster.<name>]`` stanzas in ``~/.nbislurm.config`` (kind, per-cluster
+  carbon trace, capacity/TDP metadata, per-cluster eco windows);
+* :class:`FederatedBackend` — implements the Backend protocol by fanning
+  ``queue()`` / ``cancel()`` / ``accounting()`` out across the members and
+  namespacing every job id as ``<cluster>:<jobid>`` at its boundary, with
+  one aggregated :class:`~repro.core.events.EventBus` re-emitting member
+  events cluster-tagged;
+* :class:`Placer` — scores each *feasible* member by predicted queue wait
+  (live queue backlog, durations refined by the
+  :class:`~repro.accounting.predict.RuntimePredictor`) combined with the
+  member's carbon intensity over the job's predicted span. Eco-tier jobs
+  land on the greenest feasible cluster; urgent jobs land on the fastest.
+
+With no stanzas configured none of this is instantiated — ``get_backend()``
+returns the plain single-cluster backend and every decision is bit-identical
+to the pre-federation stack (property-pinned in ``tests/test_federation.py``).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace as _dc_replace
+from datetime import datetime, timedelta
+
+from .config import NBIConfig, load_config
+from .eco import CarbonTrace, EcoScheduler
+from .events import EventBus
+
+#: per-cluster config keys that override the global eco-window/horizon
+#: settings when present inside a ``[cluster.<name>]`` stanza
+_ECO_OVERRIDE_KEYS = (
+    "eco_weekday_windows", "eco_weekend_windows", "peak_hours",
+    "eco_horizon_days", "eco_min_delay_minutes",
+)
+
+_VALID_KINDS = ("sim", "slurm")
+
+
+# ---------------------------------------------------------------------------
+# Namespaced job ids
+# ---------------------------------------------------------------------------
+
+
+def split_cluster_id(jobid) -> "tuple[str, str]":
+    """``"green:123_4"`` → ``("green", "123_4")``; bare ids → ``("", id)``."""
+    s = str(jobid)
+    cluster, sep, bare = s.partition(":")
+    if sep and cluster and bare:
+        return cluster, bare
+    return "", s
+
+
+def join_cluster_id(cluster: str, jobid) -> str:
+    """Prefix ``jobid`` with its cluster (no-op for an empty cluster)."""
+    bare = str(jobid)
+    return f"{cluster}:{bare}" if cluster else bare
+
+
+def array_base_id(jobid) -> str:
+    """The array base of an id, cluster prefix preserved.
+
+    ``green:123_4`` → ``green:123``; ``123_4`` → ``123``. Safe for
+    cluster names containing ``_`` (the prefix is split on ``:`` first).
+    """
+    cluster, bare = split_cluster_id(jobid)
+    return join_cluster_id(cluster, bare.partition("_")[0])
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ClusterHandle:
+    """One federation member: a named backend plus placement metadata."""
+
+    name: str
+    kind: str = "sim"  # sim | slurm
+    backend: object = None
+    carbon_trace: CarbonTrace | None = None
+    #: per-cluster EcoScheduler (this cluster's carbon trace and window
+    #: overrides); the engine prices eco deferral through it
+    scheduler: EcoScheduler | None = None
+    watts_per_cpu: float = 12.0  # TDP metadata (the sim charges with it)
+    nodes: int = 4
+    cpus_per_node: int = 64
+    memory_mb_per_node: int = 262144
+    queue: str = ""  # default partition override for routed jobs
+
+    @property
+    def total_cpus(self) -> int:
+        return self.nodes * self.cpus_per_node
+
+    def fits(self, cpus: int, memory_mb: int) -> bool:
+        """Could one node of this cluster ever run this job?"""
+        return cpus <= self.cpus_per_node and memory_mb <= self.memory_mb_per_node
+
+
+class ClusterRegistry:
+    """Ordered collection of named :class:`ClusterHandle` s.
+
+    Built from config stanzas (:meth:`from_config`) or assembled directly
+    in tests/benchmarks. The first declared cluster is the **default** —
+    the anchor for placement counterfactuals and for jobs pinned with
+    ``runjob`` (no ``--anywhere``) — unless the top-level config key
+    ``default_cluster`` names another member.
+    """
+
+    def __init__(self, handles: "list[ClusterHandle]", default: str = ""):
+        if not handles:
+            raise ValueError("a ClusterRegistry needs at least one cluster")
+        self._handles: dict[str, ClusterHandle] = {}
+        for h in handles:
+            if h.name in self._handles:
+                raise ValueError(f"duplicate cluster name {h.name!r}")
+            self._handles[h.name] = h
+        if default and default not in self._handles:
+            raise ValueError(
+                f"default_cluster {default!r} is not a configured cluster "
+                f"(have: {', '.join(self._handles)})"
+            )
+        self.default_name = default or next(iter(self._handles))
+
+    @classmethod
+    def from_config(cls, cfg: NBIConfig | None = None) -> "ClusterRegistry":
+        """Build the registry the ``[cluster.<name>]`` stanzas describe."""
+        cfg = cfg if cfg is not None else load_config()
+        names = cfg.cluster_names()
+        if not names:
+            raise ValueError(
+                "no [cluster.<name>] stanzas in "
+                + (cfg.path or "the config file")
+            )
+        handles = [cls._handle_from_section(cfg, n) for n in names]
+        return cls(handles, default=cfg.get("default_cluster", "").strip())
+
+    @staticmethod
+    def _handle_from_section(cfg: NBIConfig, name: str) -> ClusterHandle:
+        sec = cfg.cluster_section(name)
+        kind = (sec.get("kind", "sim") or "sim").strip().lower()
+        if kind not in _VALID_KINDS:
+            raise ValueError(
+                f"cluster {name!r}: unknown kind {kind!r} "
+                f"(valid kinds: {', '.join(_VALID_KINDS)})"
+            )
+        trace_path = sec.get("carbon_trace", "").strip()
+        trace = CarbonTrace.from_csv(trace_path) if trace_path else None
+        nodes = int(sec.get("nodes", "4") or 4)
+        cpus = int(sec.get("cpus_per_node", "64") or 64)
+        mem = int(sec.get("memory_mb", "262144") or 262144)
+        watts = float(sec.get("watts_per_cpu", cfg.get("energy_cpu_watts")))
+        # per-cluster eco windows: stanza keys overlay the global ones
+        overlay = {k: v for k, v in sec.items() if k in _ECO_OVERRIDE_KEYS}
+        sched_cfg = NBIConfig(values={**cfg.values, **overlay}, path=cfg.path)
+        scheduler = EcoScheduler(sched_cfg, carbon_trace=trace)
+        if kind == "slurm":
+            from .backend import SlurmBackend
+
+            backend = SlurmBackend()
+        else:
+            from .backend import _current_user
+            from .simcluster import SimCluster, SimNode
+
+            backend = SimCluster(
+                nodes=[
+                    SimNode(f"{name}-n{i:03d}", cpus=cpus, memory_mb=mem)
+                    for i in range(nodes)
+                ],
+                default_user=_current_user(),
+                watts_per_cpu=watts,
+                name=name,
+            )
+        return ClusterHandle(
+            name=name, kind=kind, backend=backend,
+            carbon_trace=trace, scheduler=scheduler,
+            watts_per_cpu=watts, nodes=nodes, cpus_per_node=cpus,
+            memory_mb_per_node=mem, queue=sec.get("queue", "").strip(),
+        )
+
+    # -- collection protocol --------------------------------------------------
+
+    def __len__(self) -> int:
+        return len(self._handles)
+
+    def __iter__(self):
+        return iter(self._handles.values())
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._handles
+
+    def names(self) -> "list[str]":
+        return list(self._handles)
+
+    def get(self, name: str) -> ClusterHandle:
+        try:
+            return self._handles[name]
+        except KeyError:
+            raise KeyError(
+                f"unknown cluster {name!r} (have: {', '.join(self._handles)})"
+            ) from None
+
+    def default(self) -> ClusterHandle:
+        return self._handles[self.default_name]
+
+
+# ---------------------------------------------------------------------------
+# Placement
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Placement:
+    """One routing decision, with the scored alternatives kept for audit."""
+
+    cluster: str
+    wait_s: float  # predicted queue wait on the chosen cluster
+    carbon_gco2_kwh: float | None  # mean intensity over the predicted span
+    eco: bool  # scored green-first (True) or fast-first (False)
+    #: every feasible candidate as (name, wait_s, carbon) — chosen included
+    candidates: tuple = ()
+
+
+class Placer:
+    """Score member clusters for one job; greenest-feasible vs fastest.
+
+    *Feasibility* is static capacity: a cluster whose largest node cannot
+    hold the job's cpus/memory is never a candidate. *Queue wait* is a
+    backlog estimate from the live queue snapshot — cpu-seconds of work
+    ahead (running jobs' remaining time, pending jobs' limits, refined by
+    the ``predictor`` when it knows the job) divided by cluster capacity.
+    *Carbon* is the member trace's mean intensity over the job's predicted
+    span starting after that wait.
+
+    Eco-tier jobs sort green-first (carbon, then wait); urgent jobs sort
+    fast-first (wait, then carbon). Ties break on the cluster name so
+    placement is deterministic.
+    """
+
+    def __init__(self, registry: ClusterRegistry, *, predictor=None):
+        self.registry = registry
+        self.predictor = predictor
+        self.placements = 0  # observability (bench_federation reports it)
+        #: cpu-seconds charged for placements not yet visible in queue():
+        #: within one batch the live snapshot lags the routing, so each
+        #: choice is charged here and cleared once actually submitted —
+        #: an urgent batch then spreads by capacity instead of piling onto
+        #: whichever member looked fastest at batch start
+        self._inflight: dict[str, float] = {}
+        #: per-batch member queue snapshots (one queue() per member per
+        #: batch, not per placement; cleared with the in-flight charges)
+        self._snapshots: dict[str, list] = {}
+
+    # -- public API -----------------------------------------------------------
+
+    def place(self, job, now: datetime, *, eco: bool = False,
+              charge: bool = True) -> Placement:
+        """Route one :class:`~repro.core.job.Job`-shaped object."""
+        opts = job.opts
+        return self.place_spec(
+            cpus=getattr(opts, "threads", 1),
+            memory_mb=getattr(opts, "memory_mb", 0),
+            time_s=getattr(opts, "time_s", 3600),
+            now=now,
+            name=getattr(job, "name", ""),
+            tool=getattr(job, "tool", ""),
+            eco=eco,
+            charge=charge,
+        )
+
+    def place_spec(
+        self,
+        cpus: int,
+        memory_mb: int,
+        time_s: int,
+        now: datetime,
+        *,
+        name: str = "",
+        tool: str = "",
+        eco: bool = False,
+        charge: bool = True,
+    ) -> Placement:
+        duration_s = self._duration(time_s, name, tool)
+        feasible = [h for h in self.registry if h.fits(cpus, memory_mb)]
+        if not feasible:
+            # nothing fits anywhere: fall back to every member and let the
+            # chosen backend queue (and eventually reject) it — a job must
+            # never be silently dropped at placement time
+            feasible = list(self.registry)
+        cands = []
+        for h in feasible:
+            wait = self.queue_wait_s(h)
+            start = now + timedelta(seconds=wait)
+            carbon = (
+                h.carbon_trace.mean_over(start, duration_s)
+                if h.carbon_trace is not None
+                else None
+            )
+            cands.append((h.name, wait, carbon))
+        inf = float("inf")
+        if eco:
+            key = lambda c: (c[2] if c[2] is not None else inf, c[1], c[0])  # noqa: E731
+        else:
+            key = lambda c: (c[1], c[2] if c[2] is not None else inf, c[0])  # noqa: E731
+        best = min(cands, key=key)
+        self.placements += 1
+        if charge:  # probes (dry runs) must not skew later placements
+            self._inflight[best[0]] = (
+                self._inflight.get(best[0], 0.0) + max(1, cpus) * duration_s
+            )
+        return Placement(
+            cluster=best[0], wait_s=best[1], carbon_gco2_kwh=best[2],
+            eco=eco, candidates=tuple(cands),
+        )
+
+    def clear_inflight(self) -> None:
+        """Forget placement charges and the per-batch queue snapshots —
+        the member queues now reflect them."""
+        self._inflight.clear()
+        self._snapshots.clear()
+
+    def queue_wait_s(self, handle: ClusterHandle) -> float:
+        """Backlog estimate: cpu-seconds of queued work / cluster capacity.
+
+        The member queue is snapshotted once per batch (a 500-job batch
+        across real SLURM members must not fork 500 squeues per member);
+        in-flight charges model everything placed since the snapshot.
+        """
+        from .resources import parse_time_s
+
+        if handle.name not in self._snapshots:
+            self._snapshots[handle.name] = handle.backend.queue()
+        backlog = 0.0
+        for row in self._snapshots[handle.name]:
+            try:
+                cpus = float(row.get("cpus") or 1)
+            except ValueError:
+                cpus = 1.0
+            state = row.get("state", "")
+            span = ""
+            if state == "RUNNING":
+                span = row.get("time_left", "")
+            elif state == "PENDING":
+                span = row.get("time_limit", "")
+            if not span:
+                continue
+            try:
+                seconds = parse_time_s(span)
+            except ValueError:
+                continue
+            if state == "PENDING":
+                seconds = self._duration(
+                    seconds, row.get("name", ""), ""
+                )
+            backlog += cpus * seconds
+        backlog += self._inflight.get(handle.name, 0.0)
+        return backlog / max(1, handle.total_cpus)
+
+    # -- internals ------------------------------------------------------------
+
+    def _duration(self, time_s: int, name: str, tool: str) -> int:
+        if self.predictor is None or not (name or tool):
+            return time_s
+        return self.predictor.predict(time_s, name=name, tool=tool)
+
+
+# ---------------------------------------------------------------------------
+# FederatedBackend
+# ---------------------------------------------------------------------------
+
+
+class FederatedBackend:
+    """The Backend protocol, fanned out across a :class:`ClusterRegistry`.
+
+    Job ids cross this boundary namespaced as ``<cluster>:<jobid>``
+    (``<cluster>:<base>_<task>`` for array tasks); queue rows, accounting
+    rows, node records and re-emitted events all carry a ``cluster``
+    field. Inward, each member backend sees exactly the bare ids and jobs
+    it always did — a member cannot tell it is federated.
+    """
+
+    def __init__(self, registry: ClusterRegistry, *, placer: Placer | None = None,
+                 predictor=None):
+        self.registry = registry
+        self.placer = placer if placer is not None else Placer(
+            registry, predictor=predictor
+        )
+        #: aggregated event stream: member events re-emitted with the
+        #: jobid namespaced and ``cluster`` set
+        self.bus = EventBus()
+        self._member_tokens: list = []
+        for h in registry:
+            mbus = getattr(h.backend, "bus", None)
+            if mbus is not None:
+                token = mbus.subscribe(self._reemitter(h.name))
+                self._member_tokens.append((mbus, token))
+        # config fingerprint for the shared-instance cache (backend.py)
+        self._config_key = None
+
+    def _reemitter(self, name: str):
+        def forward(event):
+            self.bus.emit(_dc_replace(
+                event, jobid=join_cluster_id(name, event.jobid), cluster=name,
+            ))
+
+        return forward
+
+    def close(self) -> None:
+        """Unsubscribe from member buses (discarded instances must not
+        keep re-emitting)."""
+        for mbus, token in self._member_tokens:
+            mbus.unsubscribe(token)
+        self._member_tokens = []
+
+    # -- properties ------------------------------------------------------------
+
+    @property
+    def all_sim(self) -> bool:
+        """True when every member can advance simulated time (tests, demos)."""
+        return all(hasattr(h.backend, "advance") for h in self.registry)
+
+    @property
+    def now(self) -> datetime:
+        """The federation clock: the latest member sim clock, else wall time."""
+        clocks = [
+            h.backend.now for h in self.registry if hasattr(h.backend, "now")
+        ]
+        return max(clocks) if clocks else datetime.now()
+
+    def names(self) -> "list[str]":
+        return self.registry.names()
+
+    # -- Backend protocol: submission -------------------------------------------
+
+    def _route(self, job, now: datetime | None = None) -> str:
+        """The member this job goes to: its pin, or the placer's choice."""
+        pinned = getattr(job, "cluster", "") or ""
+        if pinned:
+            self.registry.get(pinned)  # raise early on unknown pins
+            return pinned
+        eco = bool((getattr(job, "eco_meta", None) or {}).get("deferred"))
+        return self.placer.place(job, now or self.now, eco=eco).cluster
+
+    def submit(self, job) -> str:
+        name = self._route(job)
+        handle = self.registry.get(name)
+        if handle.queue and not job.opts.queue:
+            job.opts.queue = handle.queue
+        base = handle.backend.submit(job)
+        job.cluster = name
+        self.placer.clear_inflight()  # the member queue now shows the job
+        return join_cluster_id(name, base)
+
+    def submit_many(self, jobs: list) -> "list[str]":
+        """Route every job, then batch per member (order preserved)."""
+        jobs = list(jobs)
+        now = self.now
+        ids: "list[str | None]" = [None] * len(jobs)
+        groups: dict[str, list[int]] = {}
+        for i, job in enumerate(jobs):
+            name = self._route(job, now)
+            job.cluster = name
+            groups.setdefault(name, []).append(i)
+        for name, idxs in groups.items():
+            handle = self.registry.get(name)
+            for i in idxs:
+                if handle.queue and not jobs[i].opts.queue:
+                    jobs[i].opts.queue = handle.queue
+            be = handle.backend
+            many = getattr(be, "submit_many", None)
+            batch = [jobs[i] for i in idxs]
+            base_ids = many(batch) if many else [be.submit(j) for j in batch]
+            for i, base in zip(idxs, base_ids):
+                ids[i] = join_cluster_id(name, base)
+        self.placer.clear_inflight()  # member queues now show the batch
+        return ids  # type: ignore[return-value]
+
+    # -- Backend protocol: queries ----------------------------------------------
+
+    def queue(self) -> "list[dict]":
+        rows = []
+        for h in self.registry:
+            for row in h.backend.queue():
+                row = dict(row)
+                row["jobid"] = join_cluster_id(h.name, row["jobid"])
+                row["cluster"] = h.name
+                rows.append(row)
+        return rows
+
+    def nodes_info(self) -> "list[dict]":
+        out = []
+        for h in self.registry:
+            for rec in h.backend.nodes_info():
+                rec = dict(rec)
+                rec["name"] = join_cluster_id(h.name, rec.get("name", ""))
+                rec["cluster"] = h.name
+                out.append(rec)
+        return out
+
+    def accounting(self, **kw) -> list:
+        """Every member's accounting, cluster-tagged and id-namespaced.
+
+        Keyword arguments (``since=``, ``user=``) are forwarded only to
+        members whose accounting accepts them (sacct-backed members do;
+        the simulator takes none).
+        """
+        out = []
+        for h in self.registry:
+            acct = getattr(h.backend, "accounting", None)
+            if acct is None:
+                continue
+            rows = acct(**kw) if kw and _accepts_kwargs(acct, kw) else acct()
+            for row in rows:
+                if isinstance(row, dict):
+                    row = dict(row)
+                    row["jobid"] = join_cluster_id(h.name, str(row.get("jobid", "")))
+                    row["cluster"] = h.name
+                else:  # SimJob dataclass: copy, never mutate the member's
+                    row = _dc_replace(row, jobid=join_cluster_id(h.name, row.jobid))
+                    row.cluster = h.name
+                out.append(row)
+        return out
+
+    def get(self, jobid):
+        """Resolve one job (simulator members only), namespaced copy out."""
+        cluster, bare = split_cluster_id(jobid)
+        handles = [self.registry.get(cluster)] if cluster else list(self.registry)
+        for h in handles:
+            getter = getattr(h.backend, "get", None)
+            if getter is None:
+                continue
+            job = getter(bare)
+            if job is not None:
+                job = _dc_replace(job, jobid=join_cluster_id(h.name, job.jobid))
+                job.cluster = h.name
+                return job
+        return None
+
+    # -- Backend protocol: control -----------------------------------------------
+
+    def _group_ids(self, jobids: list) -> "dict[str, list[str]]":
+        """Split namespaced ids per member; bare ids go to the default."""
+        groups: dict[str, list[str]] = {}
+        for jid in jobids:
+            cluster, bare = split_cluster_id(jid)
+            groups.setdefault(cluster or self.registry.default_name, []).append(bare)
+        return groups
+
+    def cancel(self, jobids: list) -> None:
+        for name, bare in self._group_ids(jobids).items():
+            self.registry.get(name).backend.cancel(bare)
+
+    def release(self, jobids: list) -> None:
+        for name, bare in self._group_ids(jobids).items():
+            be = self.registry.get(name).backend
+            rel = getattr(be, "release", None)
+            if rel is not None:
+                rel(bare)
+
+    # -- simulator conveniences (every member must be a sim) ----------------------
+
+    def advance(self, seconds: float = 0, *, to: datetime | None = None):
+        """Advance every sim member in lockstep (tests/demos/benchmarks)."""
+        self._require_sim("advance")
+        target = to if to is not None else self.now + timedelta(seconds=seconds)
+        for h in self.registry:
+            h.backend.advance(to=target)
+        return self
+
+    def run_until_idle(self, max_days: int = 30):
+        self._require_sim("run_until_idle")
+        for h in self.registry:
+            h.backend.run_until_idle(max_days)
+        # re-sync member clocks so the next advance() is a true lockstep
+        latest = self.now
+        for h in self.registry:
+            if h.backend.now < latest:
+                h.backend.advance(to=latest)
+        return self
+
+    def wake_at(self, t: datetime) -> None:
+        for h in self.registry:
+            wake = getattr(h.backend, "wake_at", None)
+            if wake is not None:
+                wake(t)
+
+    def add_tick_hook(self, fn) -> None:
+        """Register a reactive controller hook on every sim member."""
+        for h in self.registry:
+            add = getattr(h.backend, "add_tick_hook", None)
+            if add is not None:
+                add(fn)
+
+    def remove_tick_hook(self, fn) -> None:
+        for h in self.registry:
+            rem = getattr(h.backend, "remove_tick_hook", None)
+            if rem is not None:
+                rem(fn)
+
+    def _require_sim(self, op: str) -> None:
+        if not self.all_sim:
+            raise RuntimeError(
+                f"{op}() needs every federation member to be a simulator"
+            )
+
+
+def _accepts_kwargs(fn, kw: dict) -> bool:
+    import inspect
+
+    try:
+        params = inspect.signature(fn).parameters
+    except (TypeError, ValueError):
+        return False
+    if any(p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values()):
+        return True
+    return all(k in params for k in kw)

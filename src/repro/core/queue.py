@@ -39,17 +39,20 @@ class QueuedJob:
     reason: str = ""
     cpus: str = ""
     memory: str = ""
+    #: federation member this row came from ("" on a plain backend; the
+    #: jobid is then cluster-prefixed, e.g. ``green:123_4``)
+    cluster: str = ""
 
     @property
     def jobid_num(self) -> int:
-        """Numeric job id (array tasks ``123_4`` → 123)."""
-        m = re.match(r"^(\d+)", self.jobid)
+        """Numeric job id (``123_4`` → 123; ``green:123_4`` → 123)."""
+        m = re.match(r"^(?:[^:\s]+:)?(\d+)", self.jobid)
         return int(m.group(1)) if m else -1
 
     @property
     def array_task(self) -> "int | None":
         """Array task index (``123_4`` → 4); None for plain jobs."""
-        m = re.match(r"^\d+_(\d+)$", self.jobid)
+        m = re.match(r"^(?:[^:\s]+:)?\d+_(\d+)$", self.jobid)
         return int(m.group(1)) if m else None
 
     def is_active(self) -> bool:
@@ -57,7 +60,9 @@ class QueuedJob:
 
     @classmethod
     def from_record(cls, rec: dict) -> "QueuedJob":
-        return cls(**{k: str(rec.get(k, "")) for k in SQUEUE_FIELDS})
+        job = cls(**{k: str(rec.get(k, "")) for k in SQUEUE_FIELDS})
+        job.cluster = str(rec.get("cluster", ""))
+        return job
 
     def to_dict(self) -> dict:
         """JSON payload with numeric fields typed (one dialect across all
@@ -68,6 +73,8 @@ class QueuedJob:
                 out[key] = int(out[key])
             except ValueError:
                 pass  # squeue oddities ("4000Mc") stay verbatim
+        if self.cluster:  # federation only — single-cluster JSON unchanged
+            out["cluster"] = self.cluster
         return out
 
     @classmethod

@@ -102,7 +102,11 @@ class SimCluster:
         execute: bool = False,
         watts_per_cpu: float = 12.0,
         bus: EventBus | None = None,
+        name: str = "",
     ):
+        #: federation member name ("" for a standalone simulator); the
+        #: FederatedBackend namespaces ids/events with it at its boundary
+        self.name = name
         self.nodes = nodes or [SimNode(f"n{i:03d}") for i in range(4)]
         self.now = now or datetime(2026, 3, 18, 10, 0, 0)
         self.default_user = default_user

@@ -645,3 +645,69 @@ class TestFinalReviewFixes:
         assert collect(FakeSlurm(), custom) == 1
         (rec,) = custom.scan()
         assert rec.eco_deferred and rec.tool == "prokka"
+
+
+class TestSacctRegressions:
+    """Satellite: NodeList oddities and orphan/out-of-order job steps."""
+
+    LINE = ("300|aln|alice|main|4|8G|01:00:00|2026-03-18T09:00:00|"
+            "{start}|{end}|{state}|{elapsed}|{energy}|{node}")
+
+    def _line(self, jobid="300", state="COMPLETED", elapsed="3600",
+              energy="0", node="n001",
+              start="2026-03-18T10:00:00", end="2026-03-18T11:00:00"):
+        return self.LINE.format(
+            start=start, end=end, state=state, elapsed=elapsed,
+            energy=energy, node=node,
+        ).replace("300", jobid, 1)
+
+    def test_nodelist_none_assigned_normalised_empty(self):
+        # sacct prints "None assigned" for jobs that never started
+        (row,) = parse_sacct_output(
+            self._line(state="CANCELLED", elapsed="0", node="None assigned",
+                       start="Unknown", end="2026-03-18T11:00:00") + "\n"
+        )
+        assert row["node"] == ""
+        assert row["started_at"] == ""
+
+    def test_nodelist_none_normalised_empty(self):
+        (row,) = parse_sacct_output(self._line(node="None") + "\n")
+        assert row["node"] == ""
+
+    def test_orphan_batch_step_produces_no_row(self):
+        # the parent row was filtered out (e.g. --user scoping): the
+        # orphan step must neither crash nor fabricate a job row
+        text = (
+            "999.batch|batch|||4||||2026-03-18T10:00:00|2026-03-18T11:00:00"
+            "|COMPLETED|3600|5.00K|n001\n"
+            "999.extern|extern|||4||||2026-03-18T10:00:00|2026-03-18T11:00:00"
+            "|COMPLETED|3600|0|n001\n"
+        )
+        assert parse_sacct_output(text) == []
+
+    def test_step_before_parent_still_backfills_energy(self):
+        # step order is not guaranteed: a .batch step arriving before its
+        # parent row must still donate its ConsumedEnergy
+        step = ("300.batch|batch|||4||||2026-03-18T10:00:00|"
+                "2026-03-18T11:00:00|COMPLETED|3600|7.20K|n001")
+        text = step + "\n" + self._line() + "\n"
+        (row,) = parse_sacct_output(text)
+        assert row["jobid"] == "300"
+        assert parse_consumed_energy(row["consumed_energy"]) == pytest.approx(7200.0)
+
+    def test_parent_measured_energy_not_overwritten_by_step(self):
+        step = ("300.batch|batch|||4||||2026-03-18T10:00:00|"
+                "2026-03-18T11:00:00|COMPLETED|3600|7.20K|n001")
+        text = self._line(energy="9.00K") + "\n" + step + "\n"
+        (row,) = parse_sacct_output(text)
+        assert parse_consumed_energy(row["consumed_energy"]) == pytest.approx(9000.0)
+
+    def test_energyless_steps_are_ignored(self):
+        text = (
+            "301.extern|extern|||4||||2026-03-18T10:00:00|"
+            "2026-03-18T11:00:00|COMPLETED|3600|0|n001\n"
+            + self._line(jobid="301") + "\n"
+        )
+        (row,) = parse_sacct_output(text)
+        assert row["jobid"] == "301"
+        assert parse_consumed_energy(row["consumed_energy"]) == 0.0

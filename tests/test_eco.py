@@ -160,3 +160,81 @@ class TestConfigFile:
         assert cfg.get_windows("eco_weekend_windows") == [(0, 420), (660, 960)]
         assert cfg.get_windows("peak_hours") == [(1020, 1200)]
         assert cfg.get_bool("economy_mode") is True  # paper: eco ON by default
+
+
+class TestWindowParsing:
+    """Satellite: overnight / midnight-spanning windows and malformed
+    stanza diagnostics in NBIConfig.get_windows / _parse_hhmm."""
+
+    def _cfg(self, **values):
+        from repro.core.config import NBIConfig
+
+        return NBIConfig(values=values)
+
+    def test_overnight_window_splits_at_midnight(self):
+        cfg = self._cfg(eco_weekday_windows="22:00-06:00")
+        assert cfg.get_windows("eco_weekday_windows") == [
+            (22 * 60, 24 * 60), (0, 6 * 60),
+        ]
+
+    def test_overnight_ending_at_midnight_keeps_one_half(self):
+        cfg = self._cfg(eco_weekday_windows="23:30-00:00")
+        assert cfg.get_windows("eco_weekday_windows") == [(23 * 60 + 30, 24 * 60)]
+
+    def test_midnight_to_midnight_24h_window_unsplit(self):
+        cfg = self._cfg(eco_weekday_windows="00:00-24:00")
+        assert cfg.get_windows("eco_weekday_windows") == [(0, 24 * 60)]
+
+    def test_overnight_mixed_with_plain_windows(self):
+        cfg = self._cfg(eco_weekday_windows="11:00-13:00,22:00-02:30")
+        assert cfg.get_windows("eco_weekday_windows") == [
+            (660, 780), (1320, 1440), (0, 150),
+        ]
+
+    def test_scheduler_uses_overnight_window(self):
+        # a job priced on Wednesday evening lands in the 22:00 half, and a
+        # short job fits tier 1 inside the same-night 22:00-24:00 slice
+        sched = EcoScheduler(
+            self._cfg(
+                eco_weekday_windows="22:00-06:00",
+                eco_weekend_windows="22:00-06:00",
+                peak_hours="",
+                eco_horizon_days="3",
+                eco_min_delay_minutes="0",
+            )
+        )
+        now = datetime(2026, 3, 18, 10, 0)  # Wednesday morning
+        decision = sched.next_window(3600, now)
+        assert decision.deferred
+        assert decision.begin == datetime(2026, 3, 18, 22, 0)
+        assert decision.tier == 1
+
+    def test_malformed_window_no_dash_names_key(self):
+        cfg = self._cfg(eco_weekday_windows="10:00")
+        with pytest.raises(ValueError) as e:
+            cfg.get_windows("eco_weekday_windows")
+        assert "eco_weekday_windows" in str(e.value)
+        assert "10:00" in str(e.value)
+        assert "HH:MM-HH:MM" in str(e.value)
+
+    def test_malformed_window_missing_end(self):
+        cfg = self._cfg(peak_hours="17:00-")
+        with pytest.raises(ValueError, match="peak_hours"):
+            cfg.get_windows("peak_hours")
+
+    def test_malformed_time_of_day_not_numeric(self):
+        cfg = self._cfg(peak_hours="aa:bb-cc:dd")
+        with pytest.raises(ValueError) as e:
+            cfg.get_windows("peak_hours")
+        assert "peak_hours" in str(e.value)
+        assert "aa:bb" in str(e.value)
+
+    def test_malformed_time_of_day_no_colon(self):
+        cfg = self._cfg(peak_hours="1700-2000")
+        with pytest.raises(ValueError, match="expected HH:MM"):
+            cfg.get_windows("peak_hours")
+
+    def test_time_of_day_out_of_range(self):
+        cfg = self._cfg(peak_hours="25:00-26:00")
+        with pytest.raises(ValueError, match="out of range"):
+            cfg.get_windows("peak_hours")
