@@ -1,15 +1,19 @@
 """Accounting subsystem benchmark — store throughput, report latency, and
 the predictor's effect on eco-mode tier placement.
 
-Four measurements:
+Five measurements:
   1. HistoryStore append throughput (single-record and batched) — the
      store sits on every job-completion path, so appends must be cheap;
   2. scan + report aggregation latency over a 10k-record archive — the
      interactive ``ecoreport`` budget;
-  3. predictor benefit: a repeat workload with padded 12 h limits but
+  3. indexed report latency vs archive size (10k/50k/100k records): a
+     fixed ``--since`` window must cost the same whatever the archive
+     size behind it — flat with the SQLite sidecar index, linear on the
+     plain scan;
+  4. predictor benefit: a repeat workload with padded 12 h limits but
      ~1 h true runtimes, priced by the plain scheduler vs the
      history-fed one — tier-1 rate and completes-inside-window rate;
-  4. a 1k-job SimCluster round trip (submit → run → collect → report)
+  5. a 1k-job SimCluster round trip (submit → run → collect → report)
      proving the closed loop reports nonzero energy/carbon/savings.
 """
 
@@ -95,6 +99,60 @@ def store_throughput(n: int = 10000) -> dict:
         "report_groups": len(rep["groups"]),
         "report_saved_gco2": rep["total"]["carbon_saved_gco2"],
     }
+
+
+def indexed_report(sizes=(10_000, 50_000, 100_000), window_records: int = 1440) -> dict:
+    """Report latency vs archive size: flat with the index, linear without.
+
+    Archives are date-ordered (one record per simulated minute), so an
+    ``ecoreport --since`` window covering the last ``window_records``
+    minutes selects the same number of records whatever the archive size —
+    the honest way to measure whether query cost follows the *answer* size
+    (indexed) or the *archive* size (scan).
+    """
+    base = datetime(2026, 1, 1, 0, 0, 0)
+    out: dict = {"sizes": list(sizes), "window_records": window_records}
+    indexed_ms, scan_ms, ingest_s = [], [], []
+    for size in sizes:
+        store = _tmp_store(f"idx-{size}.jsonl")
+        store.append_many([
+            JobRecord(
+                jobid=str(i), name=f"sweep-{i % 37}", user=f"user{i % 11}",
+                state="COMPLETED", cpus=2, time_limit_s=7200,
+                runtime_s=1800 + i % 600,
+                started_at=(base + timedelta(minutes=i)).isoformat(),
+                finished_at=(base + timedelta(minutes=i + 30)).isoformat(),
+                energy_kwh=0.05, carbon_gco2=12.0, carbon_nodefer_gco2=17.0,
+            )
+            for i in range(size)
+        ])
+        since = base + timedelta(minutes=size - window_records)
+        t0 = time.perf_counter()
+        store.records(since=since)  # first query pays the one-off ingest
+        ingest_s.append(time.perf_counter() - t0)
+        reps = 5
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            recs = store.records(since=since)
+        indexed_ms.append((time.perf_counter() - t0) / reps * 1e3)
+        assert len(recs) == window_records
+        report_dict(recs, by="user")
+        t0 = time.perf_counter()
+        scan_recs = store._records_scan(since=since)
+        scan_ms.append((time.perf_counter() - t0) * 1e3)
+        assert len(scan_recs) == window_records
+    out["index_ingest_s"] = ingest_s
+    out["window_query_indexed_ms"] = indexed_ms
+    out["window_query_scan_ms"] = scan_ms
+    # flatness: indexed latency at the biggest archive vs the smallest —
+    # ~1.0 means cost follows the window, not the archive
+    out["indexed_flatness_ratio"] = indexed_ms[-1] / max(indexed_ms[0], 1e-9)
+    out["scan_growth_ratio"] = scan_ms[-1] / max(scan_ms[0], 1e-9)
+    print("  indexed report (fixed 1-day window): "
+          + ", ".join(f"{s//1000}k→{m:.1f}ms" for s, m in zip(sizes, indexed_ms))
+          + f" (flatness ×{out['indexed_flatness_ratio']:.2f}; "
+          + f"scan grows ×{out['scan_growth_ratio']:.1f})")
+    return out
 
 
 def predictor_benefit(n_jobs: int = 300, seed: int = 3) -> dict:
@@ -191,6 +249,7 @@ def sim_round_trip(n_jobs: int = 1000) -> dict:
 def run() -> dict:
     out = {
         "store": store_throughput(),
+        "indexed": indexed_report(),
         "predictor": predictor_benefit(),
         "round_trip": sim_round_trip(),
     }

@@ -1,26 +1,41 @@
 """Federation benchmark — placement throughput and carbon saved by routing.
 
-Three measurements:
+Five measurements:
   1. placement + submission throughput: 1,000 jobs routed by the Placer
      across 4 heterogeneous sim clusters through the SubmitEngine (one
      live queue snapshot per member per batch, not per job);
-  2. carbon saved vs a single-cluster baseline: the same eco workload run
+  2. vectorized placement throughput: 100k specs through
+     ``Placer.place_many`` (the numpy hot path), cross-checked for exact
+     equality against the scalar ``place_spec`` loop on a sample —
+     the headline ≥50k placements/s target lives here;
+  3. a full simulated day: ``NBI_BENCH_DAY_JOBS`` jobs (default 100,000)
+     in hourly cohorts through SubmitEngine + FederatedBackend with an
+     EventCollector archiving terminal events, asserting conservation
+     and zero tracker reconciliation drift along the way;
+  4. carbon saved vs a single-cluster baseline: the same eco workload run
      (a) entirely on the default (dirty-grid) cluster and (b) through the
      carbon-aware router across dirty/green members — collected into the
      accounting archive and differenced;
-  3. conservation: every submitted job appears exactly once across the
+  5. conservation: every submitted job appears exactly once across the
      federated queue, the accounting fan-out and the report — no job
      lost, none double-counted.
 """
 
 from __future__ import annotations
 
+import os
 import tempfile
 import time
 from datetime import datetime
 from pathlib import Path
 
-from repro.accounting import EnergyModel, HistoryStore, collect, report_dict
+from repro.accounting import (
+    EnergyModel,
+    EventCollector,
+    HistoryStore,
+    collect,
+    report_dict,
+)
 from repro.core import (
     ClusterHandle,
     ClusterRegistry,
@@ -28,6 +43,7 @@ from repro.core import (
     FederatedBackend,
     Job,
     Opts,
+    Placer,
     SimCluster,
     SimNode,
     SubmitEngine,
@@ -51,14 +67,15 @@ MEMBER_SPECS = [
 ]
 
 
-def _handle(name: str, gco2: float, nodes: int, cpus: int) -> ClusterHandle:
+def _handle(name: str, gco2: float, nodes: int, cpus: int,
+            now: datetime = T0) -> ClusterHandle:
     trace = CarbonTrace([gco2] * 168)
     return ClusterHandle(
         name=name, kind="sim",
         backend=SimCluster(
             nodes=[SimNode(f"{name}-n{i:02d}", cpus=cpus, memory_mb=262144)
                    for i in range(nodes)],
-            now=T0, default_user="bench", name=name,
+            now=now, default_user="bench", name=name,
         ),
         carbon_trace=trace,
         scheduler=EcoScheduler(carbon_trace=trace, **_WINDOWS),
@@ -100,8 +117,127 @@ def _collect_report(backend, tag: str) -> dict:
     return {"collected": collected, "report": rep}
 
 
+def _specs(n: int) -> list:
+    return [
+        {
+            "cpus": 1 + (i % 8),
+            "memory_mb": 2048 if i % 5 else 131072,
+            "time_s": 1800 * (1 + i % 4),
+            "name": f"sweep-{i % 53}",
+            "tool": "" if i % 3 else "kraken2",
+            "eco": bool(i % 2),
+        }
+        for i in range(n)
+    ]
+
+
+def vectorized_placements(n: int = 100_000) -> dict:
+    """``place_many`` throughput on a big mixed batch + exactness check."""
+    fed = make_federation()
+    placer = fed.placer
+    specs = _specs(n)
+    t0 = time.perf_counter()
+    placements = placer.place_many(specs, T0)
+    wall = time.perf_counter() - t0
+    rate = n / wall
+    placer.clear_inflight()
+
+    # exactness: the same prefix through the scalar reference on a fresh
+    # placer must be bit-identical (the full property pin lives in
+    # tests/test_placer_vectorized.py; this is the benchmark's own guard)
+    sample = specs[:2000]
+    ref_placer = Placer(fed.registry)
+    ref = [
+        ref_placer.place_spec(
+            cpus=s["cpus"], memory_mb=s["memory_mb"], time_s=s["time_s"],
+            now=T0, name=s["name"], tool=s["tool"], eco=s["eco"],
+        )
+        for s in sample
+    ]
+    vec_placer = Placer(fed.registry)
+    vec = vec_placer.place_many(sample, T0)
+    exact = all(
+        v.cluster == r.cluster
+        and v.wait_s == r.wait_s
+        and v.carbon_gco2_kwh == r.carbon_gco2_kwh
+        and v.candidates == r.candidates
+        for v, r in zip(vec, ref)
+    ) and vec_placer._inflight == ref_placer._inflight
+    fed.close()
+    out = {
+        "specs": n,
+        "wall_s": wall,
+        "vectorized_placements_per_s": rate,
+        "scalar_equivalent": exact,
+        "meets_50k_target": rate >= 50_000,
+    }
+    print(f"  vectorized: {n} placements in {wall:.2f}s "
+          f"({rate:.0f}/s, target ≥50k) | scalar-equivalent={exact}")
+    return out
+
+
+def simulated_day(total_jobs: "int | None" = None) -> dict:
+    """A full day of hourly cohorts through the whole federated stack."""
+    total_jobs = total_jobs or int(os.environ.get("NBI_BENCH_DAY_JOBS", "100000"))
+    day_t0 = datetime(2026, 3, 18, 0, 0, 0)
+    handles = [_handle(*spec, now=day_t0) for spec in MEMBER_SPECS]
+    fed = FederatedBackend(ClusterRegistry(handles))
+    engine = SubmitEngine(fed, eco=True, coalesce=False, now=day_t0)
+    with tempfile.TemporaryDirectory() as d:
+        store = HistoryStore(Path(d) / "day.jsonl")
+        model = EnergyModel(
+            cluster_traces={n: CarbonTrace([g] * 168)
+                            for n, g, _, _ in MEMBER_SPECS},
+            default_cluster=MEMBER_SPECS[0][0],
+        )
+        coll = EventCollector(fed, store, model, flush_every=1024).attach(fed.bus)
+        per_hour = total_jobs // 24
+        submitted = 0
+        max_drift = 0.0
+        t0 = time.perf_counter()
+        for hour in range(24):
+            n = per_hour + (total_jobs % 24 if hour == 23 else 0)
+            jobs = [
+                Job(name=f"day-{hour:02d}-{i}", command="true",
+                    opts=Opts(threads=1 + (i % 4), memory_mb=2048,
+                              time_s=1800 * (1 + i % 3)),
+                    sim_duration_s=300 + (i % 7) * 120)
+                for i in range(n)
+            ]
+            submitted += len(engine.submit_many(jobs).ids)
+            fed.advance(3600)
+            drift = fed.tracker.reconcile()
+            if drift:
+                max_drift = max(max_drift, max(abs(v) for v in drift.values()))
+        fed.run_until_idle(max_days=30)
+        coll.detach()
+        wall = time.perf_counter() - t0
+        archived = len(store.ids())
+        rep = report_dict(store.records(), by="cluster")
+    conserved = submitted == total_jobs == archived == rep["total"]["jobs"]
+    fed.close()
+    out = {
+        "jobs": total_jobs,
+        "wall_s": wall,
+        "day_jobs_per_s": total_jobs / wall,
+        "archived": archived,
+        "report_jobs": rep["total"]["jobs"],
+        "conserved": conserved,
+        "max_reconcile_drift_cpu_s": max_drift,
+        "carbon_saved_gco2": rep["total"]["carbon_saved_gco2"],
+    }
+    print(f"  day: {total_jobs} jobs simulated+archived in {wall:.1f}s "
+          f"({out['day_jobs_per_s']:.0f} jobs/s) | conserved={conserved} "
+          f"| max reconcile drift {max_drift:g} cpu·s")
+    return out
+
+
 def run() -> dict:
     out: dict = {}
+
+    # -- 0. the vectorized hot path + the full simulated day ------------------
+    out["vectorized"] = vectorized_placements()
+    out["day"] = simulated_day()
 
     # -- 1. placement throughput: 1k jobs across 4 clusters -------------------
     fed = make_federation()

@@ -1,0 +1,56 @@
+"""CI gate: fail on benchmark regressions vs the committed trajectories.
+
+    PYTHONPATH=src python -m benchmarks.check_bench
+
+Reads ``results/benchmarks.json`` (produced by ``benchmarks.run``) and
+compares every tracked section against the last entry of its committed
+``BENCH_<section>.json`` (see :mod:`benchmarks.trajectory`): a gated rate
+more than the tolerance below baseline, or a false invariant
+(conservation, scalar-equivalence), exits nonzero. Sections absent from
+the results (e.g. a ``--only`` subset) are skipped; a missing trajectory
+file just means this run becomes the baseline.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from benchmarks.trajectory import RESULTS, TOLERANCE, TRACKED, check
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="benchmarks.check_bench")
+    ap.add_argument("--tolerance", type=float, default=TOLERANCE,
+                    help=f"allowed fractional rate drop (default {TOLERANCE})")
+    ap.add_argument("--results", default=str(RESULTS / "benchmarks.json"),
+                    help="benchmarks.json to check")
+    args = ap.parse_args(argv)
+
+    try:
+        results = json.loads(open(args.results).read())
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"cannot read {args.results}: {e}", file=sys.stderr)
+        return 2
+
+    failures: list = []
+    checked = 0
+    for section in TRACKED:
+        payload = results.get(section)
+        if not isinstance(payload, dict) or "error" in payload:
+            continue
+        checked += 1
+        failures.extend(check(section, payload, tolerance=args.tolerance))
+    if failures:
+        print("benchmark regressions:", file=sys.stderr)
+        for f in failures:
+            print(f"  FAIL {f}", file=sys.stderr)
+        return 1
+    print(f"benchmarks OK ({checked} tracked section(s), "
+          f"tolerance {100 * args.tolerance:.0f}%)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -92,6 +92,9 @@ SECTIONS = ["eco", "events", "accounting", "federation", "submission",
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="benchmarks.run")
     ap.add_argument("--only", default="", help="comma list of sections")
+    ap.add_argument("--publish", action="store_true",
+                    help="append tracked sections' headline metrics to the "
+                         "committed BENCH_<section>.json trajectory files")
     args = ap.parse_args(argv)
     want = [s for s in args.only.split(",") if s] or SECTIONS
 
@@ -148,6 +151,17 @@ def main(argv=None) -> int:
             traceback.print_exc()
     (RESULTS / "benchmarks.json").write_text(json.dumps(all_out, indent=1, default=str))
     print(f"\nwrote results/benchmarks.json; failures={failures}")
+
+    if args.publish:
+        from benchmarks import trajectory
+
+        for section in trajectory.TRACKED:
+            payload = all_out.get(section)
+            if not isinstance(payload, dict) or "error" in payload:
+                continue
+            entry = trajectory.publish(section, payload)
+            print(f"published {trajectory.bench_path(section).name}: "
+                  f"{json.dumps(entry['rates'])}")
     return 1 if failures else 0
 
 

@@ -1,0 +1,155 @@
+"""Benchmark trajectory files — ``BENCH_<section>.json`` at the repo root.
+
+Each tracked section appends one entry per publish: a timestamp, the git
+commit, and a flat dict of headline metrics pulled out of that section's
+``results/benchmarks.json`` payload. The files are committed, so the
+repo's own history carries the performance trajectory — and CI can fail
+a change that regresses a rate by more than the tolerance without any
+external dashboard.
+
+Two kinds of tracked values:
+
+* **gated metrics** — rates (higher is better). A publish that drops one
+  by more than ``TOLERANCE`` vs the last committed entry is a regression.
+  Latency-ish numbers are recorded in the entries for plotting but NOT
+  gated: wall-clock on shared CI runners is too noisy for a hard gate.
+* **invariants** — booleans that must simply be true (conservation,
+  scalar-equivalence). Any publish with a false invariant fails.
+"""
+
+from __future__ import annotations
+
+import json
+import subprocess
+import time
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+RESULTS = ROOT / "results"
+
+#: regression tolerance on gated rate metrics (fraction of baseline)
+TOLERANCE = 0.30
+
+#: section → {"rates": {metric name: path into the section payload},
+#:            "invariants": {...}, "extra": {... recorded, never gated}}
+TRACKED = {
+    "federation": {
+        "rates": {
+            "vectorized_placements_per_s":
+                ("vectorized", "vectorized_placements_per_s"),
+            "day_jobs_per_s": ("day", "day_jobs_per_s"),
+            "engine_placement_jobs_per_s": ("placement_jobs_per_s",),
+        },
+        "invariants": {
+            "scalar_equivalent": ("vectorized", "scalar_equivalent"),
+            "day_conserved": ("day", "conserved"),
+            "conserved": ("conserved",),
+        },
+        "extra": {
+            "day_jobs": ("day", "jobs"),
+            "max_reconcile_drift_cpu_s": ("day", "max_reconcile_drift_cpu_s"),
+            "carbon_saved_pct": ("carbon_saved_pct",),
+        },
+    },
+    "accounting": {
+        "rates": {
+            "append_many_rec_s": ("store", "append_many_rec_s"),
+            "scan_rec_s": ("store", "scan_rec_s"),
+        },
+        "invariants": {},
+        "extra": {
+            "window_query_indexed_ms_max_archive":
+                ("indexed", "window_query_indexed_ms", -1),
+            "indexed_flatness_ratio": ("indexed", "indexed_flatness_ratio"),
+            "report_10k_ms": ("store", "report_10k_ms"),
+        },
+    },
+}
+
+
+def bench_path(section: str) -> Path:
+    return ROOT / f"BENCH_{section}.json"
+
+
+def _dig(payload: dict, path: tuple):
+    cur = payload
+    for step in path:
+        if isinstance(step, int):
+            cur = cur[step]
+        else:
+            if not isinstance(cur, dict) or step not in cur:
+                return None
+            cur = cur[step]
+    return cur
+
+
+def _git_commit() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=ROOT,
+            capture_output=True, text=True, timeout=10, check=True,
+        ).stdout.strip()
+    except Exception:
+        return ""
+
+
+def extract(section: str, payload: dict) -> dict:
+    """The trajectory entry for one section's benchmark payload."""
+    spec = TRACKED[section]
+    entry = {
+        "utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "commit": _git_commit(),
+        "rates": {k: _dig(payload, p) for k, p in spec["rates"].items()},
+        "invariants": {k: _dig(payload, p) for k, p in spec["invariants"].items()},
+        "extra": {k: _dig(payload, p) for k, p in spec["extra"].items()},
+    }
+    return entry
+
+
+def load_trajectory(section: str) -> list:
+    path = bench_path(section)
+    if not path.is_file():
+        return []
+    try:
+        data = json.loads(path.read_text())
+    except json.JSONDecodeError:
+        return []
+    return data if isinstance(data, list) else []
+
+
+def publish(section: str, payload: dict) -> dict:
+    """Append this run's entry to ``BENCH_<section>.json``; returns it."""
+    entry = extract(section, payload)
+    traj = load_trajectory(section)
+    traj.append(entry)
+    bench_path(section).write_text(json.dumps(traj, indent=1) + "\n")
+    return entry
+
+
+def check(section: str, payload: dict, *, tolerance: float = TOLERANCE) -> list:
+    """Regression check vs the last committed trajectory entry.
+
+    Returns a list of human-readable failures (empty == pass). A missing
+    trajectory or baseline metric is never a failure — the first publish
+    IS the baseline.
+    """
+    failures: list = []
+    entry = extract(section, payload)
+    for name, ok in entry["invariants"].items():
+        if ok is False:
+            failures.append(f"{section}: invariant {name} is false")
+    traj = load_trajectory(section)
+    if not traj:
+        return failures
+    baseline = traj[-1].get("rates", {})
+    for name, value in entry["rates"].items():
+        base = baseline.get(name)
+        if base is None or value is None or base <= 0:
+            continue
+        if value < base * (1.0 - tolerance):
+            failures.append(
+                f"{section}: {name} regressed {base:.0f} → {value:.0f} "
+                f"(-{100 * (1 - value / base):.0f}%, tolerance "
+                f"{100 * tolerance:.0f}%)"
+            )
+    return failures

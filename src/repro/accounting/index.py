@@ -1,0 +1,420 @@
+"""``HistoryIndex`` — SQLite sidecar index over the JSONL job archive.
+
+The JSONL file stays the source of truth (append-only, crash-tolerant,
+human-greppable — see :mod:`repro.accounting.store`). This module keeps a
+disposable SQLite database next to it (``<archive>.idx``) so the read
+paths — ``ids()`` for collector dedup, ``records()`` for ``ecoreport``
+filters, per-key runtime lists for the :class:`RuntimePredictor` — are
+O(query) instead of O(archive).
+
+Design rules:
+
+* **JSONL is truth, the index is a cache.** The index ingests the archive
+  incrementally by byte offset; any read starts with a cheap ``refresh()``
+  that only parses bytes appended since the last one. If the file shrank
+  or its head bytes changed (rotated, rewritten, migrated), the index is
+  rebuilt from scratch — a rebuild is just one full scan, i.e. exactly
+  what every read used to cost.
+* **Bit-equal answers.** Every query reproduces the scan-and-filter
+  semantics of :class:`HistoryStore` exactly, including skipping torn or
+  corrupt lines and honouring a parseable unterminated final line (kept
+  out of the database, overlaid at query time, because a later append
+  would merge with it into one corrupt line — which is also what a plain
+  scan would then see).
+* **Fail open.** Any sqlite error propagates to the caller
+  (:class:`HistoryStore`), which falls back to the plain scan and stops
+  using the index for that store instance. Deleting ``<archive>.idx`` is
+  always safe.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import sqlite3
+import threading
+from pathlib import Path
+
+from datetime import datetime, timezone
+
+SCHEMA_VERSION = 1
+
+#: bytes of the archive head fingerprinted to detect in-place rewrites
+_HEAD_BYTES = 4096
+
+_SCHEMA = """
+CREATE TABLE IF NOT EXISTS meta (
+    key   TEXT PRIMARY KEY,
+    value TEXT NOT NULL
+);
+CREATE TABLE IF NOT EXISTS records (
+    seq       INTEGER PRIMARY KEY,
+    jobid     TEXT NOT NULL,
+    user      TEXT NOT NULL,
+    state     TEXT NOT NULL,
+    cluster   TEXT NOT NULL,
+    tkey      TEXT NOT NULL,
+    sortts    TEXT NOT NULL,
+    completed INTEGER NOT NULL,
+    runtime_s INTEGER NOT NULL,
+    payload   TEXT NOT NULL
+);
+CREATE INDEX IF NOT EXISTS ix_records_jobid ON records (jobid);
+CREATE INDEX IF NOT EXISTS ix_records_user ON records (user);
+CREATE INDEX IF NOT EXISTS ix_records_tkey ON records (tkey, completed, runtime_s);
+CREATE INDEX IF NOT EXISTS ix_records_sortts ON records (sortts);
+"""
+
+
+def _ts_key(t: "datetime | None") -> str:
+    """Normalise a datetime to a fixed-width, lexicographically ordered key.
+
+    Naive datetimes (everything the simulator and ``datetime.now()``
+    produce) format as ``YYYY-MM-DDTHH:MM:SS.ffffff`` — fixed width, so
+    string order is chronological order. Aware datetimes are converted to
+    UTC and stripped, which keeps aware-vs-aware comparisons exact.
+    """
+    if t is None:
+        return ""
+    if t.tzinfo is not None:
+        t = t.astimezone(timezone.utc).replace(tzinfo=None)
+    return t.isoformat(sep="T", timespec="microseconds")
+
+
+class HistoryIndex:
+    """Incremental SQLite index over one JSONL archive file."""
+
+    def __init__(self, archive_path: "str | Path"):
+        self.path = Path(archive_path)
+        self.db_path = self.path.with_name(self.path.name + ".idx")
+        self._lock = threading.Lock()
+        self._conn: "sqlite3.Connection | None" = None
+        #: parseable-but-unterminated final line, overlaid on query results
+        self._tail: "dict | None" = None
+        # observability
+        self.rebuilds = 0
+        self.ingested = 0
+
+    # -- connection & schema -------------------------------------------------
+
+    def _connect(self) -> sqlite3.Connection:
+        if self._conn is not None:
+            return self._conn
+        self.db_path.parent.mkdir(parents=True, exist_ok=True)
+        conn = sqlite3.connect(
+            str(self.db_path), timeout=5.0, check_same_thread=False
+        )
+        try:
+            conn.execute("PRAGMA journal_mode=WAL")
+            conn.execute("PRAGMA synchronous=NORMAL")
+            conn.executescript(_SCHEMA)
+            ver = self._meta_get(conn, "version")
+            if ver != str(SCHEMA_VERSION):
+                if ver is not None:
+                    # older/newer schema: drop and rebuild from the JSONL
+                    conn.executescript(
+                        "DROP TABLE IF EXISTS records; DROP TABLE IF EXISTS meta;"
+                    )
+                    conn.executescript(_SCHEMA)
+                with conn:
+                    self._meta_set(conn, "version", str(SCHEMA_VERSION))
+        except sqlite3.DatabaseError:
+            # corrupt sidecar: it is only a cache — remove and start over
+            conn.close()
+            self.db_path.unlink(missing_ok=True)
+            conn = sqlite3.connect(
+                str(self.db_path), timeout=5.0, check_same_thread=False
+            )
+            conn.execute("PRAGMA journal_mode=WAL")
+            conn.execute("PRAGMA synchronous=NORMAL")
+            conn.executescript(_SCHEMA)
+            with conn:
+                self._meta_set(conn, "version", str(SCHEMA_VERSION))
+        self._conn = conn
+        return conn
+
+    def close(self) -> None:
+        with self._lock:
+            if self._conn is not None:
+                self._conn.close()
+                self._conn = None
+
+    @staticmethod
+    def _meta_get(conn: sqlite3.Connection, key: str) -> "str | None":
+        row = conn.execute(
+            "SELECT value FROM meta WHERE key = ?", (key,)
+        ).fetchone()
+        return row[0] if row else None
+
+    @staticmethod
+    def _meta_set(conn: sqlite3.Connection, key: str, value: str) -> None:
+        conn.execute(
+            "INSERT INTO meta (key, value) VALUES (?, ?) "
+            "ON CONFLICT(key) DO UPDATE SET value = excluded.value",
+            (key, value),
+        )
+
+    # -- ingest --------------------------------------------------------------
+
+    def refresh(self) -> None:
+        """Bring the index up to date with the archive file.
+
+        Cheap when nothing changed (one stat + one head-hash check);
+        otherwise parses only the appended bytes. Called by every query.
+        """
+        with self._lock:
+            self._refresh_locked()
+
+    def _refresh_locked(self) -> None:
+        conn = self._connect()
+        try:
+            size = self.path.stat().st_size
+        except OSError:
+            size = 0
+        offset = int(self._meta_get(conn, "offset") or 0)
+        head_len = int(self._meta_get(conn, "head_len") or 0)
+        head_hash = self._meta_get(conn, "head_hash") or ""
+
+        if size < offset or not self._head_matches(head_len, head_hash):
+            # archive truncated, rotated, or rewritten in place: rebuild
+            with conn:
+                conn.execute("DELETE FROM records")
+                self._meta_set(conn, "offset", "0")
+                self._meta_set(conn, "head_len", "0")
+                self._meta_set(conn, "head_hash", "")
+            offset = 0
+            self.rebuilds += 1
+
+        self._tail = None
+        if size <= offset:
+            return
+
+        with self.path.open("rb") as fh:
+            fh.seek(offset)
+            data = fh.read(size - offset)
+        nl = data.rfind(b"\n")
+        chunk, tail = (data[: nl + 1], data[nl + 1:]) if nl >= 0 else (b"", data)
+
+        rows = []
+        seq0 = offset  # byte offset of each line start doubles as a stable,
+        pos = 0        # strictly increasing seq → file order == seq order
+        for raw in chunk.splitlines(keepends=True):
+            start = seq0 + pos
+            pos += len(raw)
+            row = _row_from_line(raw, start)
+            if row is not None:
+                rows.append(row)
+        if tail:
+            self._tail = _parse_line(tail)
+
+        new_offset = offset + len(chunk)
+        new_head_len = min(new_offset, _HEAD_BYTES)
+        with conn:  # one transaction per refresh: crash-safe, serialized
+            if rows:
+                conn.executemany(
+                    "INSERT OR REPLACE INTO records "
+                    "(seq, jobid, user, state, cluster, tkey, sortts, "
+                    " completed, runtime_s, payload) "
+                    "VALUES (?, ?, ?, ?, ?, ?, ?, ?, ?, ?)",
+                    rows,
+                )
+            self._meta_set(conn, "offset", str(new_offset))
+            self._meta_set(conn, "head_len", str(new_head_len))
+            self._meta_set(conn, "head_hash", self._hash_head(new_head_len))
+        self.ingested += len(rows)
+
+    def _head_matches(self, head_len: int, head_hash: str) -> bool:
+        if head_len <= 0:
+            return True  # nothing fingerprinted yet
+        return self._hash_head(head_len) == head_hash
+
+    def _hash_head(self, head_len: int) -> str:
+        if head_len <= 0:
+            return ""
+        try:
+            with self.path.open("rb") as fh:
+                return hashlib.sha256(fh.read(head_len)).hexdigest()
+        except OSError:
+            return ""
+
+    # -- queries -------------------------------------------------------------
+
+    def ids(self) -> set:
+        self.refresh()
+        with self._lock:
+            conn = self._connect()
+            out = {row[0] for row in conn.execute("SELECT DISTINCT jobid FROM records")}
+        tail = self._tail_record()
+        if tail is not None:
+            out.add(tail.jobid)
+        return out
+
+    def count(self) -> int:
+        self.refresh()
+        with self._lock:
+            conn = self._connect()
+            (n,) = conn.execute("SELECT COUNT(*) FROM records").fetchone()
+        return int(n) + (1 if self._tail_record() is not None else 0)
+
+    def records(
+        self,
+        *,
+        user: "str | None" = None,
+        tool: "str | None" = None,
+        state: "str | None" = None,
+        since: "datetime | None" = None,
+        cluster: "str | None" = None,
+    ) -> list:
+        """Same result, same order, as the store's scan-and-filter path."""
+        from .store import JobRecord
+
+        self.refresh()
+        where, params = [], []
+        if user is not None:
+            where.append("user = ?")
+            params.append(user)
+        if cluster is not None:
+            where.append("cluster = ?")
+            params.append(cluster)
+        if tool is not None:
+            where.append("tkey = ?")
+            params.append(tool)
+        if state is not None:
+            where.append("state = ?")
+            params.append(state)
+        if since is not None:
+            # records with no usable timestamp have sortts = '' and are
+            # excluded, exactly as the scan path excludes t-is-None rows
+            where.append("sortts >= ?")
+            params.append(_ts_key(since))
+        # no ORDER BY: it would bias the planner toward walking the whole
+        # table in primary-key order instead of using the filter indexes;
+        # file order is restored by the (trivial) seq sort in Python
+        sql = "SELECT seq, payload FROM records"
+        if where:
+            sql += " WHERE " + " AND ".join(where)
+        with self._lock:
+            conn = self._connect()
+            rows = conn.execute(sql, params).fetchall()
+        rows.sort(key=lambda r: r[0])
+        out = [JobRecord.from_dict(json.loads(p)) for _, p in rows]
+        tail = self._tail_record()
+        if tail is not None and _passes_filters(
+            tail, user=user, tool=tool, state=state, since=since, cluster=cluster
+        ):
+            out.append(tail)
+        return out
+
+    def runtimes_for(self, key: str, user: str = "") -> list:
+        """Ascending COMPLETED runtimes for a predictor key.
+
+        Mirrors :meth:`RuntimePredictor._lookup`: the ``(user, key)`` list
+        when the user has any history under this key, else the key-wide
+        list (which may be empty).
+        """
+        from .store import name_stem
+
+        self.refresh()
+        tail = self._tail_record()
+        tail_rt: "int | None" = None
+        tail_user = ""
+        if (
+            tail is not None
+            and tail.completed
+            and tail.runtime_s > 0
+            and (tail.tool or name_stem(tail.name)) == key
+        ):
+            tail_rt, tail_user = int(tail.runtime_s), tail.user
+        base = (
+            "SELECT runtime_s FROM records "
+            "WHERE tkey = ? AND completed = 1 AND runtime_s > 0"
+        )
+        with self._lock:
+            conn = self._connect()
+            if user:
+                rts = [
+                    r[0]
+                    for r in conn.execute(
+                        base + " AND user = ? ORDER BY runtime_s", (key, user)
+                    )
+                ]
+                if tail_rt is not None and tail_user == user:
+                    return sorted(rts + [tail_rt])
+                if rts:
+                    # the (user, key) list exists; the tail (different user)
+                    # could only extend the key-wide list, which is unused
+                    return rts
+            rts = [r[0] for r in conn.execute(base + " ORDER BY runtime_s", (key,))]
+        if tail_rt is not None:
+            rts = sorted(rts + [tail_rt])
+        return rts
+
+    # -- internals -----------------------------------------------------------
+
+    def _tail_record(self):
+        from .store import JobRecord
+
+        if self._tail is None:
+            return None
+        try:
+            return JobRecord.from_dict(self._tail)
+        except TypeError:
+            return None
+
+
+def _parse_line(raw: bytes) -> "dict | None":
+    try:
+        line = raw.decode("utf-8").strip()
+    except UnicodeDecodeError:
+        return None
+    if not line:
+        return None
+    try:
+        d = json.loads(line)
+    except json.JSONDecodeError:
+        return None
+    return d if isinstance(d, dict) else None
+
+
+def _row_from_line(raw: bytes, seq: int) -> "tuple | None":
+    from .store import JobRecord, name_stem
+
+    d = _parse_line(raw)
+    if d is None:
+        return None
+    try:
+        rec = JobRecord.from_dict(d)
+    except TypeError:
+        return None
+    sortts = _ts_key(rec.started_dt() or rec.requested_dt())
+    return (
+        seq,
+        str(rec.jobid),
+        str(rec.user),
+        str(rec.state),
+        str(rec.cluster),
+        str(rec.tool or name_stem(rec.name)),
+        sortts,
+        1 if rec.completed else 0,
+        int(rec.runtime_s or 0),
+        json.dumps(d, separators=(",", ":"), sort_keys=True),
+    )
+
+
+def _passes_filters(r, *, user, tool, state, since, cluster) -> bool:
+    """The scan path's filter predicate, verbatim (for the tail overlay)."""
+    from .store import name_stem
+
+    if user is not None and r.user != user:
+        return False
+    if cluster is not None and r.cluster != cluster:
+        return False
+    if tool is not None and (r.tool or name_stem(r.name)) != tool:
+        return False
+    if state is not None and r.state != state:
+        return False
+    if since is not None:
+        t = r.started_dt() or r.requested_dt()
+        if t is None or t < since:
+            return False
+    return True

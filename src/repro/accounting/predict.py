@@ -55,6 +55,8 @@ class RuntimePredictor:
         self.min_samples = max(1, int(min_samples))
         self.margin = float(margin)
         self._index: dict | None = None
+        #: per-(user, key) memo of indexed lookups, cleared by refresh()
+        self._key_cache: dict = {}
 
     # -- public API ----------------------------------------------------------
 
@@ -85,10 +87,23 @@ class RuntimePredictor:
     def refresh(self) -> None:
         """Drop the cached index; the next predict() rescans the store."""
         self._index = None
+        self._key_cache = {}
 
     # -- internals -----------------------------------------------------------
 
     def _lookup(self, user: str, key: str) -> list:
+        if self._index is None:
+            # prefer the store's sidecar index: one O(key) query instead of
+            # a full-archive scan, memoized per (user, key) until refresh()
+            memo = self._key_cache.get((user, key))
+            if memo is not None:
+                return memo
+            runtimes_for = getattr(self.store, "runtimes_for", None)
+            if runtimes_for is not None:
+                rts = runtimes_for(key, user)
+                if rts is not None:
+                    self._key_cache[(user, key)] = rts
+                    return rts
         idx = self._build()
         if user and (user, key) in idx:
             return idx[(user, key)]

@@ -183,11 +183,26 @@ def log_submissions(entries) -> None:
 
 
 class HistoryStore:
-    """Append-only JSONL store of :class:`JobRecord` entries."""
+    """Append-only JSONL store of :class:`JobRecord` entries.
+
+    Reads go through a SQLite sidecar index (``<archive>.idx``, see
+    :mod:`repro.accounting.index`) when available, so ``ids()``,
+    ``records()`` filters and predictor lookups cost O(query) instead of
+    O(archive). The JSONL file remains the source of truth: the index is
+    rebuilt from it whenever it disagrees, any index error falls back to
+    the plain scan, and ``NBI_HISTORY_INDEX=0`` disables it outright.
+    """
 
     def __init__(self, path: "str | Path | None" = None):
         self.path = history_path(str(path) if path is not None else None)
         self._lock = threading.Lock()
+        self._index_obj = None
+        self._index_broken = False
+        self._submit_log: "SubmitLog | None" = None
+        # ids() cache, valid while the file size matches what we last saw —
+        # collectors call ids() per collect(), appends keep it warm
+        self._ids_cache: "set | None" = None
+        self._ids_cache_size = -1
 
     # -- writing -------------------------------------------------------------
 
@@ -203,8 +218,18 @@ class HistoryStore:
         )
         with self._lock:
             self.path.parent.mkdir(parents=True, exist_ok=True)
+            try:
+                size0 = self.path.stat().st_size
+            except OSError:
+                size0 = 0
             with self.path.open("a", encoding="utf-8") as fh:
                 fh.write(payload)
+            if self._ids_cache is not None:
+                if self._ids_cache_size == size0:
+                    self._ids_cache.update(str(r.jobid) for r in records)
+                    self._ids_cache_size = size0 + len(payload.encode("utf-8"))
+                else:
+                    self._ids_cache = None  # file changed under us: drop
 
     # -- reading -------------------------------------------------------------
 
@@ -226,17 +251,51 @@ class HistoryStore:
         return self.scan()
 
     def __len__(self) -> int:
+        idx = self._idx()
+        if idx is not None:
+            try:
+                return idx.count()
+            except Exception:
+                self._index_broken = True
         return sum(1 for _ in self.scan())
 
     def ids(self) -> set:
-        """Job ids already archived (collectors dedup against this)."""
-        return {r.jobid for r in self.scan()}
+        """Job ids already archived (collectors dedup against this).
+
+        Cached between calls and kept warm by :meth:`append_many`, so a
+        collect() loop pays the archive read once, not once per cycle.
+        Always returns a fresh set — callers mutate it for local dedup.
+        """
+        try:
+            size = self.path.stat().st_size
+        except OSError:
+            size = 0
+        with self._lock:
+            if self._ids_cache is not None and self._ids_cache_size == size:
+                return set(self._ids_cache)
+        out: "set | None" = None
+        idx = self._idx()
+        if idx is not None:
+            try:
+                out = idx.ids()
+            except Exception:
+                self._index_broken = True
+        if out is None:
+            out = {r.jobid for r in self.scan()}
+        with self._lock:
+            self._ids_cache = set(out)
+            self._ids_cache_size = size
+        return out
 
     # -- submission-side companion --------------------------------------------
 
     def submit_log(self) -> "SubmitLog":
         """The sidecar recording submission-time facts for this archive."""
-        return SubmitLog(self.path.with_name(self.path.name + ".submits"))
+        if self._submit_log is None:
+            self._submit_log = SubmitLog(
+                self.path.with_name(self.path.name + ".submits")
+            )
+        return self._submit_log
 
     def records(
         self,
@@ -247,6 +306,29 @@ class HistoryStore:
         since: datetime | None = None,
         cluster: str | None = None,
     ) -> "list[JobRecord]":
+        idx = self._idx()
+        if idx is not None:
+            try:
+                return idx.records(
+                    user=user, tool=tool, state=state, since=since,
+                    cluster=cluster,
+                )
+            except Exception:
+                self._index_broken = True
+        return self._records_scan(
+            user=user, tool=tool, state=state, since=since, cluster=cluster
+        )
+
+    def _records_scan(
+        self,
+        *,
+        user: str | None = None,
+        tool: str | None = None,
+        state: str | None = None,
+        since: datetime | None = None,
+        cluster: str | None = None,
+    ) -> "list[JobRecord]":
+        """The scan-and-filter reference path (index bypassed)."""
         out = []
         for r in self.scan():
             if user is not None and r.user != user:
@@ -265,6 +347,36 @@ class HistoryStore:
                     continue
             out.append(r)
         return out
+
+    def runtimes_for(self, key: str, user: str = "") -> "list[int] | None":
+        """Ascending COMPLETED runtimes for a predictor key via the index,
+        or None when no index is available (caller falls back to a scan)."""
+        idx = self._idx()
+        if idx is None:
+            return None
+        try:
+            return idx.runtimes_for(key, user)
+        except Exception:
+            self._index_broken = True
+            return None
+
+    # -- index plumbing -------------------------------------------------------
+
+    def _idx(self):
+        """The sidecar index, or None (disabled via env, or broken)."""
+        if self._index_broken:
+            return None
+        if os.environ.get("NBI_HISTORY_INDEX", "1").lower() in ("0", "false", "no"):
+            return None
+        if self._index_obj is None:
+            try:
+                from .index import HistoryIndex
+
+                self._index_obj = HistoryIndex(self.path)
+            except Exception:
+                self._index_broken = True
+                return None
+        return self._index_obj
 
 
 class SubmitLog:
@@ -311,20 +423,66 @@ class SubmitLog:
                 fh.write(payload)
 
     def load(self) -> "dict[str, dict]":
-        """jobid → journal entry (later entries win)."""
-        out: dict[str, dict] = {}
-        if not self.path.is_file():
-            return out
-        with self.path.open("r", encoding="utf-8") as fh:
-            for line in fh:
-                line = line.strip()
-                if not line:
-                    continue
-                try:
-                    entry = json.loads(line)
-                except json.JSONDecodeError:
-                    continue
-                jid = str(entry.get("jobid", ""))
-                if jid:
-                    out[jid] = entry
+        """jobid → journal entry (later entries win).
+
+        Incremental: a process-wide cache remembers how many bytes of each
+        journal have been parsed, so repeated loads (one per ``collect()``
+        cycle) only read what was appended since. Returns fresh dicts —
+        callers merge and overwrite freely without corrupting the cache.
+        """
+        try:
+            size = self.path.stat().st_size
+        except OSError:
+            with _JOURNAL_CACHE_LOCK:
+                _JOURNAL_CACHE.pop(self.path, None)
+            return {}
+        with _JOURNAL_CACHE_LOCK:
+            offset, entries = _JOURNAL_CACHE.get(self.path, (0, {}))
+            if size < offset:  # truncated/replaced: start over
+                offset, entries = 0, {}
+            tail = b""
+            if size > offset:
+                with self.path.open("rb") as fh:
+                    fh.seek(offset)
+                    data = fh.read(size - offset)
+                nl = data.rfind(b"\n")
+                chunk, tail = (
+                    (data[: nl + 1], data[nl + 1:]) if nl >= 0 else (b"", data)
+                )
+                if chunk:
+                    entries = dict(entries)
+                    for raw in chunk.splitlines():
+                        entry = _parse_journal_line(raw)
+                        if entry is not None:
+                            entries[str(entry["jobid"])] = entry
+                    offset += len(chunk)
+                # the unterminated tail is NOT cached: a later append merges
+                # with it into one (likely corrupt) line, exactly as a full
+                # rescan would then see — so it is only overlaid per-call
+                _JOURNAL_CACHE[self.path] = (offset, entries)
+            out = {k: dict(v) for k, v in entries.items()}
+        tail_entry = _parse_journal_line(tail)
+        if tail_entry is not None:
+            out[str(tail_entry["jobid"])] = tail_entry
         return out
+
+
+def _parse_journal_line(raw: bytes) -> "dict | None":
+    try:
+        line = raw.decode("utf-8").strip()
+    except UnicodeDecodeError:
+        return None
+    if not line:
+        return None
+    try:
+        entry = json.loads(line)
+    except json.JSONDecodeError:
+        return None
+    if not isinstance(entry, dict) or not str(entry.get("jobid", "")):
+        return None
+    return entry
+
+
+#: journal read cache: path → (bytes parsed, jobid → entry)
+_JOURNAL_CACHE: "dict[Path, tuple[int, dict]]" = {}
+_JOURNAL_CACHE_LOCK = threading.Lock()

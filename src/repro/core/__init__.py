@@ -25,6 +25,7 @@ from .eco import CarbonTrace, EcoDecision, EcoScheduler
 from .ecocontroller import EcoController, HeldJob, ReleaseRecord
 from .engine import BatchResult, QueueCache, SubmitEngine, get_queue_cache, reset_queue_cache
 from .federation import (
+    BacklogTracker,
     ClusterHandle,
     ClusterRegistry,
     FederatedBackend,
@@ -56,7 +57,7 @@ __all__ = [
     "get_queue_cache", "reset_queue_cache",
     "CarbonTrace", "EcoDecision", "EcoScheduler",
     "EcoController", "HeldJob", "ReleaseRecord",
-    "ClusterHandle", "ClusterRegistry", "FederatedBackend",
+    "BacklogTracker", "ClusterHandle", "ClusterRegistry", "FederatedBackend",
     "Placement", "Placer", "array_base_id",
     "join_cluster_id", "split_cluster_id",
     "EVENT_TYPES", "TERMINAL_EVENTS", "EventBus", "JobEvent",

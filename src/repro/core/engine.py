@@ -361,11 +361,21 @@ class SubmitEngine:
         registry = getattr(self.backend, "registry", None)
         if placer is not None:
             clock = self.now or datetime.now()
-            for unit, _ in units:
-                if not getattr(unit, "cluster", ""):
-                    eco_unit = self.eco or bool(
-                        (getattr(unit, "eco_meta", None) or {}).get("deferred")
-                    )
+            unplaced = [u for u, _ in units if not getattr(u, "cluster", "")]
+            eco_flags = [
+                self.eco or bool(
+                    (getattr(u, "eco_meta", None) or {}).get("deferred")
+                )
+                for u in unplaced
+            ]
+            if unplaced and hasattr(placer, "place_jobs"):
+                # one batched (vectorized) placement pass; identical
+                # order and charging to the per-unit place() loop
+                placements = placer.place_jobs(unplaced, clock, eco_flags)
+                for unit, placement in zip(unplaced, placements):
+                    unit.cluster = placement.cluster
+            else:  # duck-typed placers only need place()
+                for unit, eco_unit in zip(unplaced, eco_flags):
                     unit.cluster = placer.place(unit, clock, eco=eco_unit).cluster
             result.placements = {
                 getattr(u, "cluster", "") for u, _ in units

@@ -29,12 +29,19 @@ to the pre-federation stack (property-pinned in ``tests/test_federation.py``).
 
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, replace as _dc_replace
 from datetime import datetime, timedelta
 
 from .config import NBIConfig, load_config
 from .eco import CarbonTrace, EcoScheduler
-from .events import EventBus
+from . import events as _ev
+from .events import EventBus, TERMINAL_EVENTS
+
+try:
+    import numpy as _np
+except ImportError:  # pragma: no cover — numpy is optional for the core
+    _np = None
 
 #: per-cluster config keys that override the global eco-window/horizon
 #: settings when present inside a ``[cluster.<name>]`` stanza
@@ -260,6 +267,14 @@ class Placer:
         #: per-batch member queue snapshots (one queue() per member per
         #: batch, not per placement; cleared with the in-flight charges)
         self._snapshots: dict[str, list] = {}
+        #: optional :class:`BacklogTracker` (set by FederatedBackend):
+        #: when attached, backlog comes from the event-driven incremental
+        #: state instead of fresh queue() snapshots
+        self.tracker: "BacklogTracker | None" = None
+        #: per-batch base-backlog cache (one backlog computation per
+        #: member per batch, whatever the source; cleared with the
+        #: in-flight charges)
+        self._base_cache: dict[str, float] = {}
 
     # -- public API -----------------------------------------------------------
 
@@ -323,19 +338,175 @@ class Placer:
             eco=eco, candidates=tuple(cands),
         )
 
+    def place_many(self, specs, now: datetime, *, charge: bool = True) -> "list[Placement]":
+        """Route a batch of job specs, in order — the vectorized hot path.
+
+        Each spec is a mapping with keys ``cpus``, ``memory_mb``,
+        ``time_s`` and optional ``name``, ``tool``, ``eco``. The result is
+        bit-identical to calling :meth:`place_spec` once per spec in the
+        same order (property-pinned in ``tests/test_placer_vectorized.py``):
+        same chosen clusters, same wait/carbon floats, same tie-breaks,
+        same in-flight charge state afterwards.
+
+        The per-job Python work is batched through numpy — feasibility
+        matrix, predicted durations, span hours and charge amounts are one
+        array pass each, and carbon-over-span collapses to a 168-entry
+        lookup table per (member, span) — leaving only the inherently
+        sequential part (each charged placement shifts the next job's
+        wait) as a cheap O(members) inner step. Without numpy it falls
+        back to the scalar loop.
+        """
+        specs = list(specs)
+        if not specs:
+            return []
+        if _np is None:  # numpy unavailable — the scalar loop is the spec
+            return [
+                self.place_spec(
+                    cpus=int(s.get("cpus", 1)),
+                    memory_mb=int(s.get("memory_mb", 0)),
+                    time_s=int(s.get("time_s", 3600)),
+                    now=now,
+                    name=s.get("name", ""),
+                    tool=s.get("tool", ""),
+                    eco=bool(s.get("eco", False)),
+                    charge=charge,
+                )
+                for s in specs
+            ]
+        handles = list(self.registry)
+        m_count = len(handles)
+        names = [h.name for h in handles]
+        caps = [max(1, h.total_cpus) for h in handles]
+        traces = [h.carbon_trace for h in handles]
+        base = [self._backlog_cpu_s(h) for h in handles]
+        infl = [self._inflight.get(n, 0.0) for n in names]
+        wait = [(base[m] + infl[m]) / caps[m] for m in range(m_count)]
+        e0_us = _week_us(now)
+        h0 = [_hour_of_week_after(e0_us, wait[m]) for m in range(m_count)]
+        tables: dict[tuple[int, int], list] = {}  # (member, hours) → mean table
+
+        # one numpy pass over the whole batch: durations, feasibility,
+        # span hours, charge amounts
+        durs = self._durations(specs)
+        cpus_a = _np.asarray([int(s.get("cpus", 1)) for s in specs], dtype=_np.int64)
+        mem_a = _np.asarray([int(s.get("memory_mb", 0)) for s in specs], dtype=_np.int64)
+        dur_a = _np.asarray(durs, dtype=_np.int64)
+        node_cpus = _np.asarray([h.cpus_per_node for h in handles], dtype=_np.int64)
+        node_mem = _np.asarray([h.memory_mb_per_node for h in handles], dtype=_np.int64)
+        feas = (cpus_a[:, None] <= node_cpus[None, :]) & (
+            mem_a[:, None] <= node_mem[None, :]
+        )
+        # nothing fits anywhere → fall back to every member (a job must
+        # never be silently dropped at placement time)
+        feas[~feas.any(axis=1)] = True
+        masks = (feas @ (1 << _np.arange(m_count, dtype=_np.int64))).tolist()
+        hours_l = _np.maximum(1, _np.rint(dur_a / 3600.0)).astype(_np.int64).tolist()
+        charge_l = (_np.maximum(1, cpus_a) * dur_a).tolist()
+        eco_l = [bool(s.get("eco", False)) for s in specs]
+        members_by_mask: dict[int, tuple] = {}
+        inf = float("inf")
+
+        out: list[Placement] = []
+        for i in range(len(specs)):
+            idxs = members_by_mask.get(masks[i])
+            if idxs is None:
+                idxs = tuple(m for m in range(m_count) if masks[i] >> m & 1)
+                members_by_mask[masks[i]] = idxs
+            hours = hours_l[i]
+            eco_i = eco_l[i]
+            cands = []
+            best = -1
+            best_key = None
+            best_wait = 0.0
+            best_carbon: float | None = None
+            for m in idxs:
+                tr = traces[m]
+                if tr is None:
+                    carbon = None
+                    ckey = inf
+                else:
+                    tbl = tables.get((m, hours))
+                    if tbl is None:
+                        tbl = _mean_table(tr, hours)
+                        tables[(m, hours)] = tbl
+                    carbon = tbl[h0[m]]
+                    ckey = carbon
+                w = wait[m]
+                cands.append((names[m], w, carbon))
+                key = (ckey, w, names[m]) if eco_i else (w, ckey, names[m])
+                if best_key is None or key < best_key:
+                    best_key, best, best_wait, best_carbon = key, m, w, carbon
+            self.placements += 1
+            if charge:
+                infl[best] += charge_l[i]
+                wait[best] = (base[best] + infl[best]) / caps[best]
+                h0[best] = _hour_of_week_after(e0_us, wait[best])
+            out.append(Placement(
+                cluster=names[best], wait_s=best_wait,
+                carbon_gco2_kwh=best_carbon, eco=eco_i,
+                candidates=tuple(cands),
+            ))
+        if charge:
+            for m in range(m_count):
+                if infl[m]:
+                    self._inflight[names[m]] = infl[m]
+        return out
+
+    def place_jobs(self, jobs, now: datetime, eco_flags=None, *,
+                   charge: bool = True) -> "list[Placement]":
+        """Batch-route :class:`~repro.core.job.Job`-shaped objects (the
+        SubmitEngine's path); same order/charging as per-job :meth:`place`."""
+        jobs = list(jobs)
+        if eco_flags is None:
+            eco_flags = [False] * len(jobs)
+        specs = []
+        for job, eco in zip(jobs, eco_flags):
+            opts = job.opts
+            specs.append({
+                "cpus": getattr(opts, "threads", 1),
+                "memory_mb": getattr(opts, "memory_mb", 0),
+                "time_s": getattr(opts, "time_s", 3600),
+                "name": getattr(job, "name", ""),
+                "tool": getattr(job, "tool", ""),
+                "eco": bool(eco),
+            })
+        return self.place_many(specs, now, charge=charge)
+
     def clear_inflight(self) -> None:
-        """Forget placement charges and the per-batch queue snapshots —
-        the member queues now reflect them."""
+        """Forget placement charges, the per-batch queue snapshots and the
+        per-batch backlog cache — the member queues now reflect them."""
         self._inflight.clear()
         self._snapshots.clear()
+        self._base_cache.clear()
 
     def queue_wait_s(self, handle: ClusterHandle) -> float:
         """Backlog estimate: cpu-seconds of queued work / cluster capacity.
 
-        The member queue is snapshotted once per batch (a 500-job batch
-        across real SLURM members must not fork 500 squeues per member);
-        in-flight charges model everything placed since the snapshot.
+        The base backlog comes from the attached :class:`BacklogTracker`
+        when there is one (event-driven, no queue() calls), else from a
+        member queue snapshot taken once per batch (a 500-job batch across
+        real SLURM members must not fork 500 squeues per member);
+        in-flight charges model everything placed since.
         """
+        backlog = self._backlog_cpu_s(handle)
+        backlog += self._inflight.get(handle.name, 0.0)
+        return backlog / max(1, handle.total_cpus)
+
+    # -- internals ------------------------------------------------------------
+
+    def _backlog_cpu_s(self, handle: ClusterHandle) -> float:
+        """Base backlog (no in-flight charges), cached for the batch."""
+        cached = self._base_cache.get(handle.name)
+        if cached is not None:
+            return cached
+        if self.tracker is not None and self.tracker.covers(handle.name):
+            backlog = self.tracker.backlog_cpu_s(handle.name)
+        else:
+            backlog = self._snapshot_backlog(handle)
+        self._base_cache[handle.name] = backlog
+        return backlog
+
+    def _snapshot_backlog(self, handle: ClusterHandle) -> float:
         from .resources import parse_time_s
 
         if handle.name not in self._snapshots:
@@ -363,15 +534,270 @@ class Placer:
                     seconds, row.get("name", ""), ""
                 )
             backlog += cpus * seconds
-        backlog += self._inflight.get(handle.name, 0.0)
-        return backlog / max(1, handle.total_cpus)
-
-    # -- internals ------------------------------------------------------------
+        return backlog
 
     def _duration(self, time_s: int, name: str, tool: str) -> int:
-        if self.predictor is None or not (name or tool):
-            return time_s
-        return self.predictor.predict(time_s, name=name, tool=tool)
+        return _predicted_duration(self.predictor, time_s, name, tool)
+
+    def _durations(self, specs) -> list:
+        """Predicted durations for a batch, memoized per distinct key —
+        a sweep of N identical jobs costs one predictor call, not N."""
+        memo: dict = {}
+        out = []
+        for s in specs:
+            key = (
+                int(s.get("time_s", 3600)), s.get("name", ""), s.get("tool", ""),
+            )
+            d = memo.get(key)
+            if d is None:
+                d = _predicted_duration(self.predictor, *key)
+                memo[key] = d
+            out.append(d)
+        return out
+
+
+def _predicted_duration(predictor, time_s: int, name: str, tool: str) -> int:
+    if predictor is None or not (name or tool):
+        return time_s
+    return predictor.predict(time_s, name=name, tool=tool)
+
+
+# -- exact-arithmetic helpers for the vectorized scorer ----------------------
+#
+# place_spec computes carbon as trace.mean_over(now + timedelta(seconds=wait),
+# duration): the vectorized path must reproduce that float-for-float. The
+# helpers below replicate (a) timedelta's microsecond quantisation of a float
+# seconds value (round-half-even, like CPython's accumulate()), and (b)
+# mean_over's sequential hourly accumulation, as a 168-entry table over the
+# start hour-of-week.
+
+_US_PER_HOUR = 3_600_000_000
+
+
+def _week_us(t: datetime) -> int:
+    """Microseconds since Monday 00:00 of ``t``'s week."""
+    return (
+        (t.weekday() * 86400 + t.hour * 3600 + t.minute * 60 + t.second)
+        * 1_000_000
+        + t.microsecond
+    )
+
+
+def _hour_of_week_after(e0_us: int, wait_s: float) -> int:
+    frac, whole = math.modf(wait_s)
+    us = int(whole) * 1_000_000 + round(frac * 1e6)
+    return (e0_us + us) // _US_PER_HOUR % 168
+
+
+def _mean_table(trace: CarbonTrace, hours: int) -> "list[float]":
+    """``tbl[h0]`` = mean_over for a span of ``hours`` starting in week
+    hour ``h0`` — same sequential accumulation as CarbonTrace.mean_over."""
+    hourly = trace.hourly
+    length = len(hourly)
+    tbl = []
+    for h0 in range(168):
+        total = 0.0
+        for i in range(hours):
+            total += hourly[(h0 + i) % 168 % length]
+        tbl.append(total / hours)
+    return tbl
+
+
+# ---------------------------------------------------------------------------
+# BacklogTracker
+# ---------------------------------------------------------------------------
+
+
+class BacklogTracker:
+    """Event-driven per-cluster backlog, in cpu-seconds of queued work.
+
+    The Placer's original backlog source re-snapshots every member queue
+    once per batch — O(queue) per member per batch, which dominates the
+    placement hot path on a busy simulated day. The tracker instead
+    subscribes to the federation's :class:`~repro.core.events.EventBus`
+    and charges/discharges each cluster's backlog as SUBMITTED / STARTED /
+    REQUEUED / terminal events arrive, so a backlog query is O(running)
+    with no queue() call at all.
+
+    Every contribution replicates the snapshot-walk formula exactly —
+    pending jobs charge ``cpus × predicted(time_limit, name)`` (the same
+    format/parse roundtrip and name-only predictor key the snapshot path
+    uses), running jobs charge ``cpus × max(0, limit - int(now - start))``
+    with the same integer truncation — and all contributions are integral
+    floats, so the incremental sum is *bit-identical* to a fresh snapshot,
+    not merely close. :meth:`reconcile` verifies that against real
+    snapshots (recording any drift, then adopting the snapshot state) and
+    runs automatically every ``reconcile_every`` events as a drift guard.
+
+    Only members whose backend resolves ``get(jobid)`` (the simulator)
+    are covered; real-SLURM members transparently keep the snapshot path.
+    """
+
+    def __init__(self, registry: ClusterRegistry, bus: EventBus | None, *,
+                 predictor=None, reconcile_every: int = 4096):
+        self.registry = registry
+        self.predictor = predictor
+        self.reconcile_every = max(0, int(reconcile_every))
+        self._pending: dict[str, dict[str, float]] = {}  # cluster → jobid → charge
+        self._pending_sum: dict[str, float] = {}
+        #: cluster → jobid → (cpus, time_limit_s, started_at)
+        self._running: dict[str, dict[str, tuple]] = {}
+        self._covered: dict[str, bool] = {}
+        for h in registry:
+            self._pending[h.name] = {}
+            self._pending_sum[h.name] = 0.0
+            self._running[h.name] = {}
+            self._covered[h.name] = hasattr(h.backend, "get")
+        # observability
+        self.events_seen = 0
+        self.reconciles = 0
+        self.max_drift_cpu_s = 0.0
+        self._events_since_reconcile = 0
+        self._bus = bus
+        self._token = bus.subscribe(self._on_event) if bus is not None else None
+        self.prime()
+
+    # -- lifecycle ------------------------------------------------------------
+
+    def close(self) -> None:
+        """Unsubscribe (a discarded tracker must stop receiving events)."""
+        if self._token is not None:
+            self._bus.unsubscribe(self._token)
+            self._token = None
+
+    def covers(self, name: str) -> bool:
+        return self._covered.get(name, False)
+
+    def prime(self) -> None:
+        """Adopt the current member queues (initial sync; no drift read)."""
+        for h in self.registry:
+            if not self._covered.get(h.name):
+                continue
+            pend, run = self._state_from_queue(h)
+            self._pending[h.name] = pend
+            self._pending_sum[h.name] = sum(pend.values())
+            self._running[h.name] = run
+
+    # -- queries --------------------------------------------------------------
+
+    def backlog_cpu_s(self, name: str, now: datetime | None = None) -> float:
+        """Cluster ``name``'s backlog in cpu-seconds, at ``now`` (default:
+        the member's own clock) — same value a fresh snapshot walk gives."""
+        handle = self.registry.get(name)
+        if now is None:
+            now = getattr(handle.backend, "now", None) or datetime.now()
+        backlog = self._pending_sum[name]
+        for cpus_f, limit_s, started_at in self._running[name].values():
+            left = limit_s - int((now - started_at).total_seconds())
+            if left > 0:
+                backlog += cpus_f * left
+        return backlog
+
+    def reconcile(self) -> "dict[str, float]":
+        """Recompute every covered member from a fresh queue() snapshot;
+        returns per-cluster drift (incremental − fresh, in cpu-seconds)
+        and adopts the snapshot state."""
+        drift: dict[str, float] = {}
+        for h in self.registry:
+            if not self._covered.get(h.name):
+                continue
+            now = getattr(h.backend, "now", None) or datetime.now()
+            incremental = self.backlog_cpu_s(h.name, now=now)
+            pend, run = self._state_from_queue(h)
+            self._pending[h.name] = pend
+            self._pending_sum[h.name] = sum(pend.values())
+            self._running[h.name] = run
+            fresh = self.backlog_cpu_s(h.name, now=now)
+            drift[h.name] = incremental - fresh
+            self.max_drift_cpu_s = max(self.max_drift_cpu_s, abs(drift[h.name]))
+        self.reconciles += 1
+        self._events_since_reconcile = 0
+        return drift
+
+    # -- event handling --------------------------------------------------------
+
+    def _on_event(self, event) -> None:
+        cname = getattr(event, "cluster", "") or ""
+        if not self._covered.get(cname):
+            return
+        _, bare = split_cluster_id(event.jobid)
+        etype = event.type
+        if etype == _ev.SUBMITTED:
+            self._charge_pending(cname, bare)
+        elif etype == _ev.STARTED:
+            self._discharge_pending(cname, bare)
+            job = self._job(cname, bare)
+            if job is not None and job.started_at is not None:
+                self._running[cname][bare] = (
+                    float(job.cpus), int(job.time_limit_s), job.started_at,
+                )
+        elif etype == _ev.REQUEUED:
+            self._running[cname].pop(bare, None)
+            self._charge_pending(cname, bare)
+        elif etype in TERMINAL_EVENTS:
+            self._discharge_pending(cname, bare)
+            self._running[cname].pop(bare, None)
+        self.events_seen += 1
+        self._events_since_reconcile += 1
+        if self.reconcile_every and self._events_since_reconcile >= self.reconcile_every:
+            self.reconcile()
+
+    # -- internals -------------------------------------------------------------
+
+    def _job(self, cname: str, bare: str):
+        return self.registry.get(cname).backend.get(bare)
+
+    def _charge_pending(self, cname: str, bare: str) -> None:
+        job = self._job(cname, bare)
+        if job is None:
+            return
+        charge = float(job.cpus) * _predicted_duration(
+            self.predictor, int(job.time_limit_s), getattr(job, "name", ""), "",
+        )
+        pend = self._pending[cname]
+        old = pend.get(bare)
+        if old is not None:
+            self._pending_sum[cname] -= old
+        pend[bare] = charge
+        self._pending_sum[cname] += charge
+
+    def _discharge_pending(self, cname: str, bare: str) -> None:
+        old = self._pending[cname].pop(bare, None)
+        if old is not None:
+            self._pending_sum[cname] -= old
+
+    def _state_from_queue(self, handle: ClusterHandle):
+        """Pending charges + running tuples from a fresh queue() snapshot,
+        with exactly the snapshot-walk arithmetic."""
+        from .resources import parse_time_s
+
+        pend: dict[str, float] = {}
+        run: dict[str, tuple] = {}
+        get = getattr(handle.backend, "get", None)
+        for row in handle.backend.queue():
+            jid = str(row.get("jobid", ""))
+            try:
+                cpus = float(row.get("cpus") or 1)
+            except ValueError:
+                cpus = 1.0
+            state = row.get("state", "")
+            if state == "PENDING":
+                span = row.get("time_limit", "")
+                if not span:
+                    continue
+                try:
+                    seconds = parse_time_s(span)
+                except ValueError:
+                    continue
+                pend[jid] = cpus * _predicted_duration(
+                    self.predictor, seconds, row.get("name", ""), "",
+                )
+            elif state == "RUNNING":
+                job = get(jid) if get is not None else None
+                if job is None or job.started_at is None:
+                    continue
+                run[jid] = (float(job.cpus), int(job.time_limit_s), job.started_at)
+        return pend, run
 
 
 # ---------------------------------------------------------------------------
@@ -390,7 +816,7 @@ class FederatedBackend:
     """
 
     def __init__(self, registry: ClusterRegistry, *, placer: Placer | None = None,
-                 predictor=None):
+                 predictor=None, tracker: bool = True):
         self.registry = registry
         self.placer = placer if placer is not None else Placer(
             registry, predictor=predictor
@@ -404,6 +830,15 @@ class FederatedBackend:
             if mbus is not None:
                 token = mbus.subscribe(self._reemitter(h.name))
                 self._member_tokens.append((mbus, token))
+        #: event-driven backlog tracking (on by default): members whose
+        #: backend resolves get() — the simulator — are tracked
+        #: incrementally; others keep the per-batch snapshot path
+        self.tracker: BacklogTracker | None = None
+        if tracker:
+            self.tracker = BacklogTracker(
+                registry, self.bus, predictor=self.placer.predictor,
+            )
+            self.placer.tracker = self.tracker
         # config fingerprint for the shared-instance cache (backend.py)
         self._config_key = None
 
@@ -421,6 +856,11 @@ class FederatedBackend:
         for mbus, token in self._member_tokens:
             mbus.unsubscribe(token)
         self._member_tokens = []
+        if self.tracker is not None:
+            self.tracker.close()
+            if self.placer.tracker is self.tracker:
+                self.placer.tracker = None
+            self.tracker = None
 
     # -- properties ------------------------------------------------------------
 

@@ -114,6 +114,18 @@ class SimCluster:
         self.execute = execute
         self.watts_per_cpu = watts_per_cpu
         self.jobs: dict[str, SimJob] = {}
+        #: non-terminal jobs only — the hot-path iterations (queue(),
+        #: scheduling passes, next-event scans) walk this instead of the
+        #: ever-growing full job table; entries are retired at the same
+        #: three sites that set a terminal state
+        self._active: dict[str, SimJob] = {}
+        #: str(base_id) → tasks in submission order (dependency lookups,
+        #: base-id cancel/release/get without a full-table scan)
+        self._by_base: dict[str, list[SimJob]] = {}
+        #: bumped whenever node capacity may have *increased* mid-pass
+        #: (job released, node restored) — invalidates the scheduling
+        #: pass's failed-requirement dominance cache
+        self._cap_bump = 0
         self._next_id = 1000001
         self._defer_schedule = False
         self._failures: list[tuple[datetime, str]] = []  # scheduled node failures
@@ -167,6 +179,8 @@ class SimCluster:
             if held:
                 j.reason = ev.HELD_REASON
             self.jobs[jid] = j
+            self._active[jid] = j
+            self._by_base.setdefault(str(base), []).append(j)
             self._emit(ev.SUBMITTED, j)
         self._log(f"submit {base} name={job.name} tasks={n_tasks}")
         self._try_schedule()
@@ -193,9 +207,9 @@ class SimCluster:
 
     def queue(self) -> list[dict]:
         rows = []
-        for j in sorted(self.jobs.values(), key=lambda j: (j.base_id, j.array_task_id or 0)):
+        for j in sorted(self._active.values(), key=lambda j: (j.base_id, j.array_task_id or 0)):
             if j.state in _TERMINAL:
-                continue
+                continue  # defensive: state set directly, not via a transition
             used = int((self.now - j.started_at).total_seconds()) if j.started_at else 0
             left = max(0, j.time_limit_s - used) if j.state == "RUNNING" else 0
             rows.append(
@@ -225,13 +239,12 @@ class SimCluster:
         if jid in self.jobs:
             return self.jobs[jid]
         # base id of an array: return first task
-        for j in self.jobs.values():
-            if str(j.base_id) == jid:
-                return j
+        for j in self._by_base.get(jid, ()):
+            return j
         return None
 
     def states_of(self, base_id: int) -> list[str]:
-        return [j.state for j in self.jobs.values() if j.base_id == int(base_id)]
+        return [j.state for j in self._by_base.get(str(int(base_id)), ())]
 
     def nodes_info(self) -> list[dict]:
         return [
@@ -246,9 +259,10 @@ class SimCluster:
         targets = set()
         for jid in jobids:
             jid = str(jid)
-            for j in self.jobs.values():
-                if j.jobid == jid or str(j.base_id) == jid:
-                    targets.add(j.jobid)
+            if jid in self.jobs:
+                targets.add(jid)
+            for j in self._by_base.get(jid, ()):
+                targets.add(j.jobid)
         for jid in targets:
             j = self.jobs[jid]
             if j.state in _TERMINAL:
@@ -258,6 +272,7 @@ class SimCluster:
                 self._charge(j, (self.now - j.started_at).total_seconds())
             j.state = "CANCELLED"
             j.finished_at = self.now
+            self._retire(j)
             self._log(f"cancel {jid}")
             self._emit(ev.CANCELLED, j)
         self._try_schedule()
@@ -271,9 +286,11 @@ class SimCluster:
         released = False
         for jid in jobids:
             jid = str(jid)
-            for j in self.jobs.values():
-                if j.jobid != jid and str(j.base_id) != jid:
-                    continue
+            exact = self.jobs.get(jid)
+            cands = ([exact] if exact is not None else []) + [
+                j for j in self._by_base.get(jid, ()) if j is not exact
+            ]
+            for j in cands:
                 if not j.held or j.state in _TERMINAL:
                     continue
                 j.held = False
@@ -294,7 +311,7 @@ class SimCluster:
         node = self._node(name)
         node.state = "DOWN"
         self._log(f"node_fail {name}")
-        for j in self.jobs.values():
+        for j in list(self._active.values()):
             if j.state == "RUNNING" and j.node == name:
                 self._release(j, node_down=True)
                 self._charge(j, (self.now - j.started_at).total_seconds())
@@ -309,11 +326,13 @@ class SimCluster:
                 else:
                     j.state = "NODE_FAIL"
                     j.finished_at = self.now
+                    self._retire(j)
                     self._emit(ev.NODE_FAIL, j)
         self._try_schedule()
 
     def restore_node(self, name: str) -> None:
         self._node(name).state = "UP"
+        self._cap_bump += 1
         self._log(f"node_up {name}")
         self._try_schedule()
 
@@ -369,7 +388,7 @@ class SimCluster:
         """Advance until no active jobs remain (bounded)."""
         deadline = self.now + timedelta(days=max_days)
         while self.now < deadline:
-            active = [j for j in self.jobs.values() if j.state not in _TERMINAL
+            active = [j for j in self._active.values() if j.state not in _TERMINAL
                       and j.reason != "DependencyNeverSatisfied"]
             if not active:
                 break
@@ -389,7 +408,7 @@ class SimCluster:
 
     def _next_event_time(self, target: datetime) -> datetime | None:
         times = []
-        for j in self.jobs.values():
+        for j in self._active.values():
             if j.state == "RUNNING":
                 end = j.started_at + timedelta(
                     seconds=min(j.duration_s, j.time_limit_s)
@@ -409,7 +428,7 @@ class SimCluster:
         for _, name in due:
             self.fail_node(name)
         # completions
-        for j in sorted(self.jobs.values(), key=lambda j: j.jobid):
+        for j in sorted(self._active.values(), key=lambda j: j.jobid):
             if j.state != "RUNNING":
                 continue
             runtime = min(j.duration_s, j.time_limit_s)
@@ -423,6 +442,7 @@ class SimCluster:
         self._charge(j, min(j.duration_s, j.time_limit_s))
         if j.duration_s > j.time_limit_s:
             j.state = "TIMEOUT"
+            self._retire(j)
             self._log(f"timeout {j.jobid}")
             self._emit(ev.TIMEOUT, j)
             return
@@ -444,6 +464,7 @@ class SimCluster:
                 j.reason = f"NonZeroExitCode({proc.returncode})"
         else:
             j.state = "COMPLETED"
+        self._retire(j)
         self._log(f"finish {j.jobid} state={j.state}")
         self._emit(ev.COMPLETED if j.state == "COMPLETED" else ev.FAILED, j)
 
@@ -452,7 +473,12 @@ class SimCluster:
         jobs are charged per attempt — the wasted partial run is real)."""
         j.energy_j += self.watts_per_cpu * j.cpus * max(0.0, seconds)
 
+    def _retire(self, j: SimJob) -> None:
+        """Drop a job that just went terminal from the active index."""
+        self._active.pop(j.jobid, None)
+
     def _release(self, j: SimJob, node_down: bool = False) -> None:
+        self._cap_bump += 1
         if j.node:
             node = self._node(j.node)
             if not node_down or node.state == "UP":
@@ -465,7 +491,7 @@ class SimCluster:
     def _deps_state(self, j: SimJob) -> str:
         """'ok' | 'wait' | 'never' for afterok semantics."""
         for dep in j.dependencies:
-            dep_jobs = [x for x in self.jobs.values() if str(x.base_id) == str(dep)]
+            dep_jobs = self._by_base.get(str(dep), [])
             if not dep_jobs:
                 return "wait"
             for d in dep_jobs:
@@ -479,9 +505,15 @@ class SimCluster:
         if self._defer_schedule:
             return
         pending = sorted(
-            (j for j in self.jobs.values() if j.state == "PENDING"),
+            (j for j in self._active.values() if j.state == "PENDING"),
             key=lambda j: (j.base_id, j.array_task_id or 0),
         )
+        # requirement sizes that already failed this pass: capacity only
+        # shrinks as jobs place, so anything at least as big must fail
+        # too — unless capacity came back (release/restore mid-pass via
+        # an event subscriber), which _cap_bump detects
+        failed: list[tuple[int, int]] = []
+        bump0 = self._cap_bump
         for j in pending:
             if j.state != "PENDING":
                 continue  # an event subscriber already transitioned it
@@ -498,6 +530,12 @@ class SimCluster:
             if deps == "wait":
                 j.reason = "Dependency"
                 continue
+            if self._cap_bump != bump0:
+                failed.clear()
+                bump0 = self._cap_bump
+            if any(fc <= j.cpus and fm <= j.memory_mb for fc, fm in failed):
+                j.reason = "Resources"
+                continue
             placed = False
             for node in self.nodes:
                 if node.fits(j.cpus, j.memory_mb):
@@ -513,6 +551,8 @@ class SimCluster:
                     break
             if not placed:
                 j.reason = "Resources"
+                if len(failed) < 32:  # bound the dominance scan itself
+                    failed.append((j.cpus, j.memory_mb))
 
     def _log(self, msg: str) -> None:
         self.events_log.append((self.now, msg))

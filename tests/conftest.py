@@ -32,14 +32,18 @@ def _per_test_timeout(request):
         yield
         return
 
+    # slow-marked tests (opt-in full-scale stress runs) get a much wider
+    # budget: they assert their own wall-clock bounds internally
+    budget = TEST_TIMEOUT_S * (8 if request.node.get_closest_marker("slow") else 1)
+
     def _timed_out(signum, frame):
         pytest.fail(
-            f"test exceeded NBI_TEST_TIMEOUT_S={TEST_TIMEOUT_S}s "
+            f"test exceeded {budget}s (NBI_TEST_TIMEOUT_S={TEST_TIMEOUT_S}) "
             f"({request.node.nodeid})", pytrace=False,
         )
 
     old = signal.signal(signal.SIGALRM, _timed_out)
-    signal.setitimer(signal.ITIMER_REAL, TEST_TIMEOUT_S)
+    signal.setitimer(signal.ITIMER_REAL, budget)
     try:
         yield
     finally:

@@ -65,10 +65,10 @@ def make_handle(name, intensity=None, *, nodes=2, cpus=8, mem=32768,
     )
 
 
-def make_fed(*specs, default=""):
+def make_fed(*specs, default="", tracker=True):
     """specs: (name, intensity) pairs → a two-plus-member federation."""
     reg = ClusterRegistry([make_handle(n, i) for n, i in specs], default=default)
-    return FederatedBackend(reg)
+    return FederatedBackend(reg, tracker=tracker)
 
 
 def job(name="j", cpus=1, mem=1024, time_s=1800, duration=60, **kw):
@@ -771,7 +771,9 @@ class TestReviewRegressions:
         # tasks are live in the queue — never misreported COMPLETED
         assert set(states.values()) <= {"RUNNING", "PENDING"}
 
-    def test_placer_snapshots_once_per_batch(self):
+    def test_placer_no_snapshots_with_tracker(self):
+        # the event-driven BacklogTracker replaces per-batch snapshots:
+        # placement must not call queue() at all
         fed = make_fed(("a", None), ("b", None))
         counts = {"a": 0, "b": 0}
         for h in fed.registry:
@@ -785,7 +787,53 @@ class TestReviewRegressions:
         SubmitEngine(fed, coalesce=False).submit_many(
             [job(name=f"j{i}") for i in range(20)]
         )
+        assert counts == {"a": 0, "b": 0}
+
+    def test_placer_snapshots_once_per_batch_without_tracker(self):
+        # without a tracker (e.g. real-SLURM members) the old guarantee
+        # holds: one queue() per member per batch, not per job
+        fed = make_fed(("a", None), ("b", None), tracker=False)
+        assert fed.tracker is None
+        counts = {"a": 0, "b": 0}
+        for h in fed.registry:
+            orig = h.backend.queue
+
+            def counted(name=h.name, orig=orig):
+                counts[name] += 1
+                return orig()
+
+            h.backend.queue = counted
+        SubmitEngine(fed, coalesce=False).submit_many(
+            [job(name=f"j{i}") for i in range(20)]
+        )
         assert counts == {"a": 1, "b": 1}  # one snapshot per member per batch
+
+    def test_tracker_backlog_matches_snapshot(self):
+        # charge on SUBMITTED, move on STARTED, discharge at terminal —
+        # at every point the incremental backlog equals a fresh snapshot
+        fed = make_fed(("a", None), ("b", None))
+        tracker = fed.tracker
+        assert tracker is not None
+
+        def fresh(handle):
+            p = Placer(fed.registry)  # snapshot-path reference
+            return p._snapshot_backlog(handle)
+
+        def check():
+            for h in fed.registry:
+                assert tracker.backlog_cpu_s(h.name) == fresh(h)
+
+        check()  # empty
+        engine = SubmitEngine(fed, coalesce=False)
+        engine.submit_many([job(name=f"j{i}", cpus=2) for i in range(30)])
+        check()  # mix of RUNNING and PENDING
+        fed.advance(90)  # running jobs have less time left now
+        check()
+        fed.run_until_idle()
+        check()  # all drained
+        drift = tracker.reconcile()
+        assert all(v == 0.0 for v in drift.values())
+        assert tracker.max_drift_cpu_s == 0.0
 
     def test_uncharged_probe_does_not_skew_routing(self):
         fed = make_fed(("a", None), ("b", None))

@@ -1,0 +1,448 @@
+"""Regression tests for the SQLite-indexed :class:`HistoryStore`.
+
+The sidecar index (``<archive>.idx``) is a pure cache over the JSONL
+archive — every test here pins one consequence of that rule: migration
+from a pre-existing plain archive, identical answers to the scan path
+(including torn/corrupt lines), incremental ingest across appends,
+rebuild on rewrite/truncation, graceful fallback, and safety under
+concurrent append-while-query.
+"""
+
+from __future__ import annotations
+
+import json
+import random
+import threading
+from datetime import datetime, timedelta
+
+import pytest
+
+from repro.accounting import HistoryStore, JobRecord, RuntimePredictor
+from repro.accounting.index import HistoryIndex
+from repro.accounting.store import SubmitLog
+
+
+T0 = datetime(2026, 3, 2, 8, 0, 0)
+
+USERS = ["alice", "bob", ""]
+STATES = ["COMPLETED", "FAILED", "TIMEOUT", "CANCELLED"]
+CLUSTERS = ["", "coal", "wind"]
+TOOLS = ["", "kraken2", "blast"]
+
+
+def make_record(i: int, **kw) -> JobRecord:
+    d = dict(
+        jobid=str(1000 + i),
+        name=f"align-{i}",
+        user="alice",
+        state="COMPLETED",
+        cpus=2,
+        runtime_s=600 + i,
+        time_limit_s=3600,
+        submitted_at=(T0 + timedelta(minutes=i)).isoformat(),
+        started_at=(T0 + timedelta(minutes=i, seconds=30)).isoformat(),
+        finished_at=(T0 + timedelta(minutes=i + 11)).isoformat(),
+    )
+    d.update(kw)
+    return JobRecord(**d)
+
+
+def random_records(n: int, seed: int = 0) -> list:
+    rng = random.Random(seed)
+    out = []
+    for i in range(n):
+        out.append(
+            make_record(
+                i,
+                user=rng.choice(USERS),
+                state=rng.choice(STATES),
+                cluster=rng.choice(CLUSTERS),
+                tool=rng.choice(TOOLS),
+                runtime_s=rng.randrange(0, 7200),
+                # some records have no usable timestamps at all
+                started_at=""
+                if rng.random() < 0.2
+                else (T0 + timedelta(minutes=i)).isoformat(),
+                submitted_at=""
+                if rng.random() < 0.5
+                else (T0 + timedelta(minutes=i - 3)).isoformat(),
+            )
+        )
+    return out
+
+
+def scan_store(path) -> HistoryStore:
+    """A store with the index forced off: the reference implementation."""
+    s = HistoryStore(path)
+    s._index_broken = True
+    return s
+
+
+def dicts(records) -> list:
+    return [r.to_dict() for r in records]
+
+
+# ---------------------------------------------------------------------------
+# migration & equivalence
+# ---------------------------------------------------------------------------
+
+
+class TestMigrationAndEquivalence:
+    def test_index_builds_from_preexisting_jsonl(self, tmp_path):
+        """A plain archive written before the index existed migrates
+        transparently: first indexed read ingests the whole file."""
+        path = tmp_path / "h.jsonl"
+        recs = random_records(50)
+        scan_store(path).append_many(recs)
+        assert not (tmp_path / "h.jsonl.idx").exists()
+
+        s = HistoryStore(path)
+        assert dicts(s.records()) == dicts(recs)
+        assert s.ids() == {r.jobid for r in recs}
+        assert (tmp_path / "h.jsonl.idx").exists()
+        assert s._index_broken is False
+
+    @pytest.mark.parametrize(
+        "filters",
+        [
+            {},
+            {"user": "alice"},
+            {"user": ""},
+            {"state": "COMPLETED"},
+            {"cluster": "coal"},
+            {"tool": "kraken2"},
+            {"tool": "align"},  # name-stem key for untooled records
+            {"since": T0 + timedelta(minutes=25)},
+            {"user": "bob", "state": "FAILED", "since": T0 + timedelta(minutes=10)},
+            {"cluster": "", "tool": "blast"},
+        ],
+    )
+    def test_records_equivalent_to_scan(self, tmp_path, filters):
+        path = tmp_path / "h.jsonl"
+        HistoryStore(path).append_many(random_records(120, seed=7))
+        indexed = HistoryStore(path)
+        reference = scan_store(path)
+        assert dicts(indexed.records(**filters)) == dicts(
+            reference._records_scan(**filters)
+        )
+
+    def test_ids_and_len_equivalent(self, tmp_path):
+        path = tmp_path / "h.jsonl"
+        recs = random_records(40, seed=3)
+        HistoryStore(path).append_many(recs)
+        indexed, reference = HistoryStore(path), scan_store(path)
+        assert indexed.ids() == reference.ids()
+        assert len(indexed) == len(reference) == 40
+
+    def test_incremental_ingest_across_appends(self, tmp_path):
+        path = tmp_path / "h.jsonl"
+        s = HistoryStore(path)
+        s.append_many(random_records(10))
+        assert len(s.records()) == 10
+        idx = s._idx()
+        ingested0 = idx.ingested
+        s.append_many([make_record(100 + i) for i in range(5)])
+        assert len(s.records()) == 15
+        # only the appended lines were parsed, and no rebuild happened
+        assert idx.ingested == ingested0 + 5
+        assert idx.rebuilds == 0
+
+    def test_env_gate_disables_index(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("NBI_HISTORY_INDEX", "0")
+        path = tmp_path / "h.jsonl"
+        s = HistoryStore(path)
+        s.append_many(random_records(5))
+        assert len(s.records()) == 5
+        assert not (tmp_path / "h.jsonl.idx").exists()
+
+
+# ---------------------------------------------------------------------------
+# torn, corrupt, and rewritten archives
+# ---------------------------------------------------------------------------
+
+
+class TestCorruptionTolerance:
+    def test_corrupt_and_torn_lines_skipped_like_scan(self, tmp_path):
+        path = tmp_path / "h.jsonl"
+        good = random_records(6)
+        with path.open("w") as fh:
+            for i, r in enumerate(good):
+                fh.write(json.dumps(r.to_dict()) + "\n")
+                if i == 2:
+                    fh.write("{this is not json}\n")  # corrupt middle line
+            fh.write('{"jobid": "torn", "name": "x", "trunc')  # torn tail
+        indexed, reference = HistoryStore(path), scan_store(path)
+        assert dicts(indexed.records()) == dicts(reference._records_scan())
+        assert indexed.ids() == reference.ids() == {r.jobid for r in good}
+
+    def test_parseable_unterminated_tail_included(self, tmp_path):
+        """A valid final line with no newline (crash between write and
+        flush) is visible — exactly as the plain scan sees it — without
+        being baked into the index."""
+        path = tmp_path / "h.jsonl"
+        recs = random_records(4)
+        HistoryStore(path).append_many(recs)
+        with path.open("a") as fh:
+            fh.write(json.dumps(make_record(99).to_dict()))  # no newline
+        indexed, reference = HistoryStore(path), scan_store(path)
+        assert dicts(indexed.records()) == dicts(reference._records_scan())
+        assert "1099" in indexed.ids()
+        # a later append merges with the tail into one corrupt line; the
+        # index must agree with what a fresh scan now sees
+        with path.open("a") as fh:
+            fh.write(json.dumps(make_record(77).to_dict()) + "\n")
+        indexed2, reference2 = HistoryStore(path), scan_store(path)
+        assert dicts(indexed2.records()) == dicts(reference2._records_scan())
+        assert "1099" not in indexed2.ids()
+
+    def test_rewritten_archive_triggers_rebuild(self, tmp_path):
+        path = tmp_path / "h.jsonl"
+        s = HistoryStore(path)
+        s.append_many(random_records(20))
+        assert len(s.records()) == 20
+        # rewrite in place (rotation/manual edit): different head bytes
+        new = random_records(8, seed=42)
+        with path.open("w") as fh:
+            for r in new:
+                fh.write(json.dumps(r.to_dict(), sort_keys=True) + "\n")
+        s2 = HistoryStore(path)
+        assert dicts(s2.records()) == dicts(new)
+        assert s2.ids() == {r.jobid for r in new}
+
+    def test_truncated_archive_triggers_rebuild(self, tmp_path):
+        path = tmp_path / "h.jsonl"
+        s = HistoryStore(path)
+        recs = random_records(20)
+        s.append_many(recs)
+        assert len(s.records()) == 20
+        keep = path.read_text().splitlines(keepends=True)[:5]
+        path.write_text("".join(keep))
+        s2 = HistoryStore(path)
+        assert dicts(s2.records()) == dicts(recs[:5])
+
+    def test_corrupt_index_file_recovers(self, tmp_path):
+        path = tmp_path / "h.jsonl"
+        recs = random_records(10)
+        s = HistoryStore(path)
+        s.append_many(recs)
+        assert len(s.records()) == 10
+        s._idx().close()
+        (tmp_path / "h.jsonl.idx").write_bytes(b"\x00not a sqlite file\x00" * 64)
+        s2 = HistoryStore(path)
+        assert dicts(s2.records()) == dicts(recs)
+
+    def test_deleting_index_is_safe(self, tmp_path):
+        path = tmp_path / "h.jsonl"
+        recs = random_records(10)
+        s = HistoryStore(path)
+        s.append_many(recs)
+        assert len(s.records()) == 10
+        s._idx().close()
+        (tmp_path / "h.jsonl.idx").unlink()
+        s2 = HistoryStore(path)
+        assert dicts(s2.records()) == dicts(recs)
+
+
+# ---------------------------------------------------------------------------
+# concurrency
+# ---------------------------------------------------------------------------
+
+
+class TestConcurrency:
+    def test_append_while_query(self, tmp_path):
+        """Writers appending while readers query: no errors, every query
+        returns a consistent prefix, and the final state is complete."""
+        path = tmp_path / "h.jsonl"
+        store = HistoryStore(path)
+        store.append_many(random_records(10))
+        errors: list = []
+        done = threading.Event()
+
+        def writer():
+            try:
+                for i in range(30):
+                    store.append_many([make_record(200 + i, jobid=str(5000 + i))])
+            except Exception as e:  # pragma: no cover - failure path
+                errors.append(e)
+            finally:
+                done.set()
+
+        def reader():
+            # a separate store instance: its own connection + offsets
+            mine = HistoryStore(path)
+            try:
+                while not done.is_set():
+                    n = len(mine.records())
+                    assert 10 <= n <= 40
+                    ids = mine.ids()
+                    assert len(ids) == len(set(ids))
+            except Exception as e:  # pragma: no cover - failure path
+                errors.append(e)
+
+        threads = [threading.Thread(target=writer)] + [
+            threading.Thread(target=reader) for _ in range(2)
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=60)
+        assert not errors
+        final = HistoryStore(path)
+        assert len(final.records()) == 40
+        assert final.ids() == scan_store(path).ids()
+
+    def test_ids_cache_avoids_rescan(self, tmp_path, monkeypatch):
+        """collect() calls ids() every cycle; between appends it must be
+        served from cache, not a fresh archive read."""
+        monkeypatch.setenv("NBI_HISTORY_INDEX", "0")
+        path = tmp_path / "h.jsonl"
+        store = HistoryStore(path)
+        store.append_many(random_records(10))
+        scans = []
+        real_scan = HistoryStore.scan
+
+        def counting_scan(self):
+            scans.append(1)
+            return real_scan(self)
+
+        monkeypatch.setattr(HistoryStore, "scan", counting_scan)
+        first = store.ids()
+        assert len(scans) == 1
+        second = store.ids()
+        assert len(scans) == 1  # served from cache
+        assert first == second
+        first.add("mutated")  # caller-owned copy: cache unaffected
+        assert "mutated" not in store.ids()
+        # appends keep the cache warm instead of invalidating it
+        store.append_many([make_record(50)])
+        assert "1050" in store.ids()
+        assert len(scans) == 1
+        # an external write (another process) invalidates by size
+        with path.open("a") as fh:
+            fh.write(json.dumps(make_record(60).to_dict()) + "\n")
+        assert "1060" in store.ids()
+        assert len(scans) == 2
+
+
+# ---------------------------------------------------------------------------
+# predictor equivalence
+# ---------------------------------------------------------------------------
+
+
+class TestPredictorEquivalence:
+    def test_indexed_predictions_match_scan(self, tmp_path, monkeypatch):
+        path = tmp_path / "h.jsonl"
+        HistoryStore(path).append_many(random_records(150, seed=11))
+        indexed = RuntimePredictor(HistoryStore(path))
+        reference = RuntimePredictor(scan_store(path))
+        for user in USERS + ["nobody"]:
+            for key in ["align", "kraken2", "blast", "missing"]:
+                for limit in (1800, 12 * 3600):
+                    assert indexed.predict(
+                        limit, name=key, user=user
+                    ) == reference.predict(limit, name=key, user=user), (
+                        user,
+                        key,
+                        limit,
+                    )
+                assert indexed.sample_count(
+                    name=key, user=user
+                ) == reference.sample_count(name=key, user=user)
+        # the indexed predictor never paid the full-archive build
+        assert indexed._index is None
+        assert reference._index is not None
+
+    def test_refresh_clears_key_memo(self, tmp_path):
+        path = tmp_path / "h.jsonl"
+        store = HistoryStore(path)
+        store.append_many(
+            [make_record(i, name=f"slow-{i}", runtime_s=60) for i in range(5)]
+        )
+        p = RuntimePredictor(store)
+        assert p.predict(7200, name="slow-1") < 7200
+        before = p.predict(7200, name="slow-1")
+        store.append_many(
+            [make_record(50 + i, name=f"slow-{50+i}", runtime_s=7100) for i in range(20)]
+        )
+        assert p.predict(7200, name="slow-1") == before  # memoized
+        p.refresh()
+        assert p.predict(7200, name="slow-1") > before
+
+
+# ---------------------------------------------------------------------------
+# submit-log incremental cache
+# ---------------------------------------------------------------------------
+
+
+class TestSubmitLogCache:
+    def test_incremental_load_sees_appends(self, tmp_path):
+        log = SubmitLog(tmp_path / "h.jsonl.submits")
+        log.log_many([("1", "kraken2", None), ("2", "", {"tier": 1, "deferred": True})])
+        first = log.load()
+        assert set(first) == {"1", "2"}
+        log.log_many([("3", "blast", None), ("1", "megahit", None)])
+        second = log.load()
+        assert set(second) == {"1", "2", "3"}
+        assert second["1"]["tool"] == "megahit"  # later entries win
+
+    def test_returned_dicts_are_copies(self, tmp_path):
+        log = SubmitLog(tmp_path / "h.jsonl.submits")
+        log.log_many([("1", "kraken2", None)])
+        a = log.load()
+        a["1"]["tool"] = "tampered"
+        a["injected"] = {"jobid": "injected"}
+        b = log.load()
+        assert b["1"]["tool"] == "kraken2"
+        assert "injected" not in b
+
+    def test_truncation_resets_cache(self, tmp_path):
+        path = tmp_path / "h.jsonl.submits"
+        log = SubmitLog(path)
+        log.log_many([(str(i), "tool", None) for i in range(10)])
+        assert len(log.load()) == 10
+        path.write_text("")
+        assert log.load() == {}
+        log.log_many([("fresh", "tool", None)])
+        assert set(log.load()) == {"fresh"}
+
+    def test_missing_file_and_shared_instances(self, tmp_path):
+        path = tmp_path / "h.jsonl.submits"
+        assert SubmitLog(path).load() == {}
+        SubmitLog(path).log_many([("9", "tool", None)])
+        # a different instance (fresh HistoryStore) shares the cache by path
+        assert set(SubmitLog(path).load()) == {"9"}
+
+
+# ---------------------------------------------------------------------------
+# HistoryIndex internals
+# ---------------------------------------------------------------------------
+
+
+class TestIndexInternals:
+    def test_refresh_is_cheap_when_unchanged(self, tmp_path):
+        path = tmp_path / "h.jsonl"
+        HistoryStore(path).append_many(random_records(10))
+        idx = HistoryIndex(path)
+        idx.refresh()
+        assert idx.ingested == 10
+        for _ in range(5):
+            idx.refresh()
+        assert idx.ingested == 10
+        assert idx.rebuilds == 0
+
+    def test_runtimes_for_user_scoping(self, tmp_path):
+        path = tmp_path / "h.jsonl"
+        HistoryStore(path).append_many(
+            [make_record(0, user="alice", runtime_s=100),
+             make_record(1, user="alice", runtime_s=300),
+             make_record(2, user="bob", runtime_s=200),
+             make_record(3, user="bob", state="TIMEOUT", runtime_s=999),
+             make_record(4, user="", runtime_s=50)]
+        )
+        idx = HistoryIndex(path)
+        assert idx.runtimes_for("align", "alice") == [100, 300]
+        assert idx.runtimes_for("align", "bob") == [200]
+        # unknown user falls back to the key-wide list (all completed runs)
+        assert idx.runtimes_for("align", "carol") == [50, 100, 200, 300]
+        assert idx.runtimes_for("align") == [50, 100, 200, 300]
+        assert idx.runtimes_for("missing") == []

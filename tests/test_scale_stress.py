@@ -1,0 +1,188 @@
+"""Stress test: a simulated day of jobs through the full federated stack.
+
+Drives hourly cohorts through SubmitEngine → Placer → FederatedBackend →
+SimCluster members → EventBus → EventCollector → HistoryStore and asserts
+the invariants that must hold at any scale:
+
+* **conservation** — every submitted job appears exactly once in the
+  federated queue, exactly once in the archive, and exactly once in the
+  report totals; nothing lost, nothing double-counted;
+* **incremental backlog == fresh snapshot** — the event-driven
+  BacklogTracker's per-member backlog matches a from-scratch queue walk
+  at every reconciliation point (drift is identically 0.0: all
+  contributions are integral cpu-seconds, so summation order is
+  irrelevant even in floats);
+* **bounded wall-clock** — the run must finish inside a generous budget,
+  so a reintroduced O(n²) path (per-job snapshots, full-archive rescans)
+  fails loudly instead of just getting slower.
+
+The default (smoke) size keeps the tier-1 suite fast; the full 100k-job
+day runs under ``-m slow`` with ``NBI_STRESS_FULL=1`` (the benchmark
+suite exercises the same path at full scale on every publish).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from datetime import datetime, timedelta
+
+import pytest
+
+from repro.accounting import EnergyModel, EventCollector, HistoryStore, report_dict
+from repro.core import (
+    ClusterHandle,
+    ClusterRegistry,
+    EcoScheduler,
+    FederatedBackend,
+    Job,
+    Opts,
+    Placer,
+    SimCluster,
+    SimNode,
+    SubmitEngine,
+)
+from repro.core.eco import CarbonTrace
+
+T0 = datetime(2026, 3, 18, 0, 0, 0)  # Wednesday, midnight
+
+MEMBER_SPECS = [
+    ("coal", 600.0, 8, 64),
+    ("gas", 350.0, 4, 32),
+    ("wind", 80.0, 6, 64),
+    ("hydro", 40.0, 4, 48),
+]
+
+_WINDOWS = dict(
+    weekday_windows=[(0, 360)], weekend_windows=[(0, 420), (660, 960)],
+    peak_hours=[(1020, 1200)], horizon_days=14, min_delay_s=0,
+)
+
+
+def make_federation() -> FederatedBackend:
+    handles = []
+    for name, gco2, nodes, cpus in MEMBER_SPECS:
+        trace = CarbonTrace([gco2] * 168)
+        handles.append(ClusterHandle(
+            name=name, kind="sim",
+            backend=SimCluster(
+                nodes=[SimNode(f"{name}-n{i:02d}", cpus=cpus, memory_mb=262144)
+                       for i in range(nodes)],
+                now=T0, default_user="stress", name=name,
+            ),
+            carbon_trace=trace,
+            scheduler=EcoScheduler(carbon_trace=trace, **_WINDOWS),
+            nodes=nodes, cpus_per_node=cpus,
+        ))
+    return FederatedBackend(ClusterRegistry(handles))
+
+
+def cohort(hour: int, n: int) -> "list[Job]":
+    return [
+        Job(
+            name=f"day-{hour:02d}-{i}",
+            command=f"echo {i}",
+            opts=Opts(threads=1 + (i % 4), memory_mb=2048,
+                      time_s=1800 * (1 + i % 3)),
+            sim_duration_s=300 + (i % 7) * 120,
+        )
+        for i in range(n)
+    ]
+
+
+def snapshot_backlogs(fed: FederatedBackend) -> dict:
+    """A from-scratch queue walk per member: the tracker's ground truth."""
+    probe = Placer(fed.registry, predictor=fed.placer.predictor)
+    return {h.name: probe._snapshot_backlog(h) for h in fed.registry}
+
+
+def run_day(total_jobs: int, *, wall_budget_s: float, tmp_path) -> dict:
+    fed = make_federation()
+    engine = SubmitEngine(fed, eco=True, coalesce=False, now=T0)
+    store = HistoryStore(tmp_path / "day.jsonl")
+    model = EnergyModel(
+        cluster_traces={n: CarbonTrace([g] * 168) for n, g, _, _ in MEMBER_SPECS},
+        default_cluster=MEMBER_SPECS[0][0],
+    )
+    coll = EventCollector(fed, store, model, flush_every=512).attach(fed.bus)
+
+    per_hour = total_jobs // 24
+    submitted: "list[str]" = []
+    t_start = time.perf_counter()
+    for hour in range(24):
+        n = per_hour + (total_jobs % 24 if hour == 23 else 0)
+        result = engine.submit_many(cohort(hour, n))
+        submitted.extend(result.ids)
+        fed.advance(3600)
+        # reconciliation point: the incremental backlog must equal a
+        # fresh snapshot bit-for-bit, and the tracker must agree it drifted
+        # by exactly nothing
+        fresh = snapshot_backlogs(fed)
+        for name, backlog in fresh.items():
+            assert fed.tracker.backlog_cpu_s(name) == backlog, (hour, name)
+        drift = fed.tracker.reconcile()
+        assert all(v == 0.0 for v in drift.values()), (hour, drift)
+    fed.run_until_idle(max_days=30)
+    coll.detach()
+    wall = time.perf_counter() - t_start
+
+    assert fed.tracker.max_drift_cpu_s == 0.0
+    # drained: every member backlog is zero, incrementally and freshly
+    for name, backlog in snapshot_backlogs(fed).items():
+        assert backlog == 0.0
+        assert fed.tracker.backlog_cpu_s(name) == 0.0
+
+    # conservation: submitted == queue == archive == report
+    assert len(submitted) == total_jobs
+    assert len(set(submitted)) == total_jobs
+    archived_ids = store.ids()
+    assert len(archived_ids) == total_jobs
+    assert archived_ids == set(submitted)
+    rep = report_dict(store.records(), by="cluster")
+    assert rep["total"]["jobs"] == total_jobs
+    assert sum(g["jobs"] for g in rep["groups"]) == total_jobs
+    # every record landed on a real member exactly once
+    assert {g["key"] for g in rep["groups"]} <= {n for n, *_ in MEMBER_SPECS}
+
+    assert wall < wall_budget_s, (
+        f"simulated day of {total_jobs} jobs took {wall:.1f}s "
+        f"(budget {wall_budget_s}s) — an O(n²) path crept back in"
+    )
+    return {"wall_s": wall, "report": rep}
+
+
+class TestSimulatedDay:
+    def test_smoke_day(self, tmp_path):
+        """Tier-1 sized: the same invariants as the full day, in seconds."""
+        run_day(1200, wall_budget_s=120.0, tmp_path=tmp_path)
+
+    @pytest.mark.slow
+    @pytest.mark.skipif(
+        not os.environ.get("NBI_STRESS_FULL"),
+        reason="full 100k-job day: set NBI_STRESS_FULL=1 (and -m slow)",
+    )
+    def test_full_100k_day(self, tmp_path):
+        total = int(os.environ.get("NBI_STRESS_JOBS", "100000"))
+        run_day(total, wall_budget_s=1800.0, tmp_path=tmp_path)
+
+
+class TestTrackerUnderChurn:
+    def test_requeue_and_node_failure_keep_tracker_exact(self, tmp_path):
+        """Node failures requeue/kill jobs mid-flight; the tracker follows
+        through REQUEUED and NODE_FAIL events without drifting."""
+        fed = make_federation()
+        engine = SubmitEngine(fed, eco=False, coalesce=False, now=T0)
+        engine.submit_many(cohort(0, 120))
+        fed.advance(600)
+        for name, *_ in MEMBER_SPECS[:2]:
+            h = fed.registry.get(name)
+            h.backend.fail_node(f"{name}-n00")
+        fed.advance(1800)
+        fed.registry.get("coal").backend.restore_node("coal-n00")
+        fed.advance(600)
+        for name, backlog in snapshot_backlogs(fed).items():
+            assert fed.tracker.backlog_cpu_s(name) == backlog, name
+        drift = fed.tracker.reconcile()
+        assert all(v == 0.0 for v in drift.values()), drift
+        fed.run_until_idle(max_days=30)
+        assert all(v == 0.0 for v in snapshot_backlogs(fed).values())
