@@ -176,12 +176,19 @@ def vectorized_placements(n: int = 100_000) -> dict:
     return out
 
 
-def simulated_day(total_jobs: "int | None" = None) -> dict:
-    """A full day of hourly cohorts through the whole federated stack."""
+def simulated_day(total_jobs: "int | None" = None, *, on_backend=None) -> dict:
+    """A full day of hourly cohorts through the whole federated stack.
+
+    ``on_backend(fed)`` (optional) is called once the federation exists —
+    the obs benchmark uses it to attach a
+    :class:`~repro.obs.trace.JobTracer` to the bus. Whatever callable it
+    returns is invoked as teardown after the day drains, before close.
+    """
     total_jobs = total_jobs or int(os.environ.get("NBI_BENCH_DAY_JOBS", "100000"))
     day_t0 = datetime(2026, 3, 18, 0, 0, 0)
     handles = [_handle(*spec, now=day_t0) for spec in MEMBER_SPECS]
     fed = FederatedBackend(ClusterRegistry(handles))
+    teardown = on_backend(fed) if on_backend is not None else None
     engine = SubmitEngine(fed, eco=True, coalesce=False, now=day_t0)
     with tempfile.TemporaryDirectory() as d:
         store = HistoryStore(Path(d) / "day.jsonl")
@@ -215,6 +222,8 @@ def simulated_day(total_jobs: "int | None" = None) -> dict:
         archived = len(store.ids())
         rep = report_dict(store.records(), by="cluster")
     conserved = submitted == total_jobs == archived == rep["total"]["jobs"]
+    if callable(teardown):
+        teardown()
     fed.close()
     out = {
         "jobs": total_jobs,

@@ -1,0 +1,134 @@
+"""Observability benchmark — what does watching the stack cost?
+
+Runs the federated simulated day (``bench_federation.simulated_day``,
+``NBI_BENCH_DAY_JOBS`` jobs; CI uses 20,000) twice:
+
+1. **no-op**: the default :class:`~repro.obs.metrics.NullRegistry` active —
+   every instrumentation site pays its disabled-path cost (a couple of
+   attribute lookups per batch/poll). This is the rate the trajectory
+   gates against the pre-obs baseline.
+2. **instrumented**: a real :class:`MetricsRegistry` enabled AND a
+   :class:`~repro.obs.trace.JobTracer` subscribed to the federation bus —
+   every event folds into a span, every batch/poll records.
+
+Headlines:
+
+* ``overhead_pct`` — instrumented vs no-op wall time; the acceptance gate
+  is ≤5% (published as the ``overhead_ok`` invariant);
+* ``span_conservation`` — spans finalized by the tracer == jobs archived
+  by accounting == jobs submitted (tracing extends the conservation law);
+* the instrumented run's snapshot is persisted to
+  ``results/obs_day.json`` + ``results/obs_day.prom`` so CI can render it
+  with ``nbimon --json --snapshot`` and validate the exposition file with
+  ``nbimon --check-textfile``.
+"""
+
+from __future__ import annotations
+
+import os
+from pathlib import Path
+
+from repro.obs import metrics as obs_metrics
+from repro.obs.export import parse_textfile, write_snapshot, write_textfile
+from repro.obs.trace import JobTracer
+
+from .bench_federation import simulated_day
+
+RESULTS_DIR = Path(__file__).resolve().parent.parent / "results"
+SNAPSHOT_PATH = RESULTS_DIR / "obs_day.json"
+TEXTFILE_PATH = RESULTS_DIR / "obs_day.prom"
+
+#: acceptance ceiling: a fully traced day may cost at most this much
+OVERHEAD_LIMIT_PCT = 5.0
+
+#: alternating noop/instrumented repeats; best-of-N filters scheduler noise
+#: (single runs on shared runners swing ±30%, far beyond the 5% gate)
+REPEATS = max(1, int(os.environ.get("NBI_BENCH_OBS_REPEATS", "3")))
+
+
+def _instrumented_day() -> "tuple[dict, JobTracer, object]":
+    """One simulated day with a fresh registry + tracer on the bus."""
+    reg = obs_metrics.enable(obs_metrics.MetricsRegistry())
+    hooked: dict = {}
+
+    def on_backend(fed):
+        tracer = JobTracer(keep=64)
+        tracer.attach(fed.bus)
+        hooked["tracer"] = tracer
+        return tracer.detach
+
+    try:
+        inst = simulated_day(on_backend=on_backend)
+    finally:
+        obs_metrics.disable()
+    return inst, hooked["tracer"], reg
+
+
+def run() -> dict:
+    out: dict = {}
+
+    # -- 1. alternating repeats; best wall time on each side ------------------
+    obs_metrics.disable()
+    simulated_day()  # warmup: JIT-free, but page cache + allocator settle
+    noop = inst = tracer = reg = None
+    for _ in range(REPEATS):
+        obs_metrics.disable()
+        n = simulated_day()
+        if noop is None or n["wall_s"] < noop["wall_s"]:
+            noop = n
+        i, t, r = _instrumented_day()
+        if inst is None or i["wall_s"] < inst["wall_s"]:
+            inst = i
+        tracer, reg = t, r  # conservation + snapshot come from the LAST run
+
+    out["noop"] = {k: noop[k] for k in ("jobs", "wall_s", "day_jobs_per_s")}
+    out["noop_day_jobs_per_s"] = noop["day_jobs_per_s"]
+
+    # -- 2. persist the last instrumented run's registry ----------------------
+    snap = write_snapshot(SNAPSHOT_PATH, reg, meta={
+        "benchmark": "obs.simulated_day",
+        "jobs": inst["jobs"],
+        "spans_finished": tracer.finished,
+        "spans_open": len(tracer.open),
+        "archived": inst["archived"],
+        "outcomes": dict(sorted(tracer.outcomes.items())),
+    })
+    text = write_textfile(TEXTFILE_PATH, snap=snap)
+    parse_textfile(text)  # the exporter must emit what it can parse
+
+    out["instrumented"] = {
+        k: inst[k] for k in ("jobs", "wall_s", "day_jobs_per_s")
+    }
+    out["instrumented_day_jobs_per_s"] = inst["day_jobs_per_s"]
+    out["repeats"] = REPEATS
+    out["overhead_pct"] = (
+        100.0 * (inst["wall_s"] - noop["wall_s"]) / noop["wall_s"]
+        if noop["wall_s"] else 0.0
+    )
+    out["overhead_ok"] = out["overhead_pct"] <= OVERHEAD_LIMIT_PCT
+
+    # -- 3. trace conservation: every job became exactly one finished span ----
+    out["spans_finished"] = tracer.finished
+    out["spans_open"] = len(tracer.open)
+    out["archived"] = inst["archived"]
+    out["span_conservation"] = (
+        tracer.finished == inst["archived"] == inst["jobs"]
+        and len(tracer.open) == 0
+        and inst["conserved"]
+    )
+    out["metric_families"] = len(snap["metrics"])
+    out["snapshot_path"] = str(SNAPSHOT_PATH)
+    out["textfile_path"] = str(TEXTFILE_PATH)
+
+    print(f"  obs: no-op {noop['wall_s']:.1f}s vs instrumented "
+          f"{inst['wall_s']:.1f}s → overhead {out['overhead_pct']:+.1f}% "
+          f"(limit {OVERHEAD_LIMIT_PCT:.0f}%) | spans {tracer.finished}"
+          f"/{inst['jobs']} conserved={out['span_conservation']} | "
+          f"{out['metric_families']} metric families")
+    return out
+
+
+if __name__ == "__main__":
+    import json
+
+    print(json.dumps(run(), indent=1))

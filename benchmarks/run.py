@@ -11,6 +11,7 @@
 | federation | multi-cluster placement throughput, carbon saved by routing   |
 | submission | §Statement of Need: boilerplate reduction, submit throughput  |
 | queue      | Figure 1 / lsjobs-viewjobs-whojobs on a 2,000-job cluster     |
+| obs        | observability: traced vs no-op simulated day, span laws       |
 | kernels    | kernels vs oracles + VMEM budgets (TPU-facing)                |
 | train      | end-to-end training driver: tokens/s, learn, resume           |
 | serve      | batched decode service: prefill/decode throughput             |
@@ -86,7 +87,7 @@ def bench_roofline() -> dict:
 
 
 SECTIONS = ["eco", "events", "accounting", "federation", "submission",
-            "queue", "kernels", "train", "serve", "roofline"]
+            "queue", "obs", "kernels", "train", "serve", "roofline"]
 
 
 def main(argv=None) -> int:
@@ -129,6 +130,10 @@ def main(argv=None) -> int:
                 from benchmarks import bench_queue_tools
 
                 all_out[name] = bench_queue_tools.run()
+            elif name == "obs":
+                from benchmarks import bench_obs
+
+                all_out[name] = bench_obs.run()
             elif name == "kernels":
                 from benchmarks import bench_kernels
 

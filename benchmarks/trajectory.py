@@ -51,6 +51,23 @@ TRACKED = {
             "carbon_saved_pct": ("carbon_saved_pct",),
         },
     },
+    "obs": {
+        "rates": {
+            "noop_day_jobs_per_s": ("noop_day_jobs_per_s",),
+        },
+        "invariants": {
+            # fully traced day may cost at most OVERHEAD_LIMIT_PCT (5%)
+            # vs the no-op day — best-of-N on both sides
+            "overhead_ok": ("overhead_ok",),
+            # spans finalized == jobs archived == jobs submitted
+            "span_conservation": ("span_conservation",),
+        },
+        "extra": {
+            "overhead_pct": ("overhead_pct",),
+            "instrumented_day_jobs_per_s": ("instrumented_day_jobs_per_s",),
+            "metric_families": ("metric_families",),
+        },
+    },
     "accounting": {
         "rates": {
             "append_many_rec_s": ("store", "append_many_rec_s"),

@@ -184,11 +184,26 @@ class HistoryIndex:
                 self._meta_set(conn, "head_hash", "")
             offset = 0
             self.rebuilds += 1
+            from repro.obs.metrics import get_registry
+
+            get_registry().counter(
+                "nbi_history_index_rebuilds_total",
+                "full index rebuilds (archive truncated/rotated/rewritten)",
+            ).inc()
 
         self._tail = None
         if size <= offset:
             return
+        from repro.obs.metrics import get_registry, timed
 
+        reg = get_registry()
+        with timed(reg.histogram(
+            "nbi_history_index_ingest_seconds",
+            "incremental ingest of appended archive bytes",
+        )):
+            self._ingest_locked(conn, offset, size)
+
+    def _ingest_locked(self, conn, offset: int, size: int) -> None:
         with self.path.open("rb") as fh:
             fh.seek(offset)
             data = fh.read(size - offset)
@@ -222,6 +237,13 @@ class HistoryIndex:
             self._meta_set(conn, "head_len", str(new_head_len))
             self._meta_set(conn, "head_hash", self._hash_head(new_head_len))
         self.ingested += len(rows)
+        if rows:
+            from repro.obs.metrics import get_registry
+
+            get_registry().counter(
+                "nbi_history_index_ingested_total",
+                "archive records ingested incrementally",
+            ).inc(len(rows))
 
     def _head_matches(self, head_len: int, head_hash: str) -> bool:
         if head_len <= 0:

@@ -256,7 +256,7 @@ class HistoryStore:
             try:
                 return idx.count()
             except Exception:
-                self._index_broken = True
+                self._fail_open()
         return sum(1 for _ in self.scan())
 
     def ids(self) -> set:
@@ -279,7 +279,7 @@ class HistoryStore:
             try:
                 out = idx.ids()
             except Exception:
-                self._index_broken = True
+                self._fail_open()
         if out is None:
             out = {r.jobid for r in self.scan()}
         with self._lock:
@@ -314,7 +314,7 @@ class HistoryStore:
                     cluster=cluster,
                 )
             except Exception:
-                self._index_broken = True
+                self._fail_open()
         return self._records_scan(
             user=user, tool=tool, state=state, since=since, cluster=cluster
         )
@@ -357,10 +357,22 @@ class HistoryStore:
         try:
             return idx.runtimes_for(key, user)
         except Exception:
-            self._index_broken = True
+            self._fail_open()
             return None
 
     # -- index plumbing -------------------------------------------------------
+
+    def _fail_open(self) -> None:
+        """Stop using the index for this store: every later read takes the
+        plain JSONL scan (truth). Counted so operators can see a fleet
+        silently degrading to O(archive) reads."""
+        self._index_broken = True
+        from repro.obs.metrics import get_registry
+
+        get_registry().counter(
+            "nbi_history_fail_open_total",
+            "index errors that dropped a store to plain-scan reads",
+        ).inc()
 
     def _idx(self):
         """The sidecar index, or None (disabled via env, or broken)."""
@@ -374,7 +386,7 @@ class HistoryStore:
 
                 self._index_obj = HistoryIndex(self.path)
             except Exception:
-                self._index_broken = True
+                self._fail_open()
                 return None
         return self._index_obj
 

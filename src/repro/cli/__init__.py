@@ -9,5 +9,6 @@
 | whojobs   | cluster utilisation grouped by user                 |
 | session   | launch an interactive SLURM session                 |
 | nbilaunch | run a declarative tool wrapper (Launcher)           |
+| nbimon    | runtime metrics dump / Prometheus export / ticker   |
 | ecoreport | energy/carbon accounting + eco-mode savings report  |
 """

@@ -1,0 +1,173 @@
+"""nbimon — runtime observability surface (metrics + job-lifecycle spans).
+
+    nbimon                         # one-shot Prometheus text dump to stdout
+    nbimon --json                  # registry snapshot in the shared JSON dialect
+    nbimon --snapshot f.json ...   # render a saved snapshot (e.g. the
+                                   # benchmark day's results/obs_day.json)
+                                   # instead of this process's registry
+    nbimon --textfile out.prom     # write the node-exporter textfile
+    nbimon --check-textfile f.prom # validate an exposition file (CI gate)
+    nbimon --live                  # event ticker over the bus (mirrors
+                                   # viewjobs --live), summary stats on exit
+
+Metrics are per-process: a bare ``nbimon`` only sees what *this* process
+recorded, which is why long runs (benchmarks, daemons) persist a snapshot
+for ``--snapshot`` to render. ``--live`` enables the registry, attaches a
+:class:`~repro.obs.trace.JobTracer` to the backend's event bus (the
+simulator's native bus, or a :class:`~repro.core.events.
+PollingEventAdapter` on real SLURM) and prints one line per job
+transition, then the session's span/cache summary.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+from repro.obs import enable, get_registry
+from repro.obs import export as obs_export
+
+
+def _fmt_event(e) -> str:
+    when = e.at.strftime("%H:%M:%S") if hasattr(e.at, "strftime") else str(e.at)
+    tail = " ".join(p for p in (e.name, e.cluster and f"[{e.cluster}]") if p)
+    return f"{when} {e.type:<9} {e.jobid} {tail}".rstrip()
+
+
+def live_ticker(
+    backend,
+    *,
+    ticks: "int | None" = None,
+    duration_s: float = 0.0,
+    poll_s: float = 2.0,
+    out=print,
+    sleep=time.sleep,
+):
+    """Stream job events from ``backend`` and return the tracer.
+
+    On a simulator (native bus) each tick advances simulated time and the
+    loop ends early once the queue drains; on real SLURM each tick is one
+    adapter poll. ``ticks`` bounds the loop directly (tests);
+    ``duration_s`` converts to ticks at ``poll_s`` (0 = run until drained
+    / forever).
+    """
+    from repro.core.events import PollingEventAdapter
+    from repro.obs.trace import JobTracer
+
+    inner = getattr(backend, "inner", backend)
+    bus = getattr(inner, "bus", None)
+    sim_like = bus is not None and hasattr(inner, "advance")
+    adapter = None
+    if bus is None:
+        adapter = PollingEventAdapter(backend)
+        bus = adapter.bus
+        adapter.poll()  # baseline snapshot yields no events
+    tracer = JobTracer().attach(bus)
+    token = bus.subscribe(lambda e: out(_fmt_event(e)))
+    if ticks is None and duration_s:
+        ticks = max(1, int(duration_s / max(poll_s, 1e-9)))
+    try:
+        i = 0
+        while ticks is None or i < ticks:
+            if sim_like:
+                backend.advance(poll_s)
+                if not backend.queue():
+                    break  # simulated queue drained — nothing left to watch
+            else:
+                sleep(poll_s)
+                adapter.poll()
+            i += 1
+    except KeyboardInterrupt:
+        pass
+    finally:
+        bus.unsubscribe(token)
+        tracer.detach()
+    return tracer
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="nbimon",
+        description="dump, export, validate or live-stream runtime metrics",
+    )
+    ap.add_argument("--json", action="store_true",
+                    help="emit the metrics snapshot as JSON")
+    ap.add_argument("--snapshot", default=None, metavar="PATH",
+                    help="render a saved snapshot JSON instead of this "
+                         "process's registry")
+    ap.add_argument("--textfile", default=None, metavar="OUT",
+                    help="write a Prometheus textfile (node-exporter "
+                         "textfile-collector format)")
+    ap.add_argument("--check-textfile", default=None, metavar="PATH",
+                    help="parse+validate an exposition file; exit 1 if "
+                         "malformed")
+    ap.add_argument("--live", action="store_true",
+                    help="stream job events from the backend bus; prints "
+                         "session stats on exit")
+    ap.add_argument("--poll", type=float, default=2.0,
+                    help="seconds between live ticks (default 2)")
+    ap.add_argument("--for", dest="duration", type=float, default=0.0,
+                    help="live duration in seconds (0 = until drained / "
+                         "interrupted)")
+    args = ap.parse_args(argv)
+
+    from repro.cli.render import emit_json
+
+    if args.check_textfile:
+        try:
+            families = obs_export.parse_textfile(
+                Path(args.check_textfile).read_text(encoding="utf-8")
+            )
+        except (OSError, ValueError) as e:
+            print(f"nbimon: invalid textfile: {e}", file=sys.stderr)
+            return 1
+        if args.json:
+            emit_json({"ok": True, "families": families})
+        else:
+            samples = sum(f["samples"] for f in families.values())
+            print(f"ok: {len(families)} families, {samples} samples")
+        return 0
+
+    if args.live:
+        enable()  # the ticker's own counters should actually record
+        from repro.core import get_queue_cache
+
+        backend = get_queue_cache()
+        # --json promises machine-readable stdout: ticker lines move to
+        # stderr so the final stats payload parses clean
+        out = (lambda line: print(line, file=sys.stderr)) if args.json else print
+        tracer = live_ticker(
+            backend, duration_s=args.duration, poll_s=args.poll, out=out
+        )
+        stats = obs_export.session_stats(
+            cache=backend, registry=get_registry(), tracer=tracer
+        )
+        if args.json:
+            emit_json(stats)
+        else:
+            t = tracer.to_dict()
+            print(
+                f"{t['events_seen']} event(s), {t['spans_finished']} span(s) "
+                f"finished, {t['spans_open']} open"
+            )
+        return 0
+
+    if args.snapshot:
+        snap = obs_export.load_snapshot(args.snapshot)
+    else:
+        snap = obs_export.snapshot(get_registry())
+    if args.textfile:
+        obs_export.write_textfile(args.textfile, snap=snap)
+        if not args.json:
+            print(f"wrote {args.textfile}")
+    if args.json:
+        emit_json(snap)
+    elif not args.textfile:
+        sys.stdout.write(obs_export.prometheus_from_snapshot(snap))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

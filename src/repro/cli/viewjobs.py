@@ -411,8 +411,15 @@ def main(argv=None) -> int:
                          "instead of every tick; shows an event ticker")
     ap.add_argument("--once", action="store_true",
                     help="render one frame to stdout (no tty needed)")
+    ap.add_argument("--stats", action="store_true",
+                    help="print this session's observability snapshot "
+                         "(cache hit rate, polls saved) as JSON on exit")
     args = ap.parse_args(argv)
 
+    if args.stats:
+        from repro.obs import enable
+
+        enable()  # record this session's counters, not no-ops
     backend = get_queue_cache()  # shared TTL cache: refresh ticks dedupe
     user = None
     if not args.all:
@@ -439,12 +446,22 @@ def main(argv=None) -> int:
             bus = adapter.bus
             adapter.poll()  # baseline
         vm.bind_bus(bus)
+    def print_stats() -> None:
+        if not args.stats:
+            return
+        from repro.cli.render import emit_json
+        from repro.obs.export import session_stats
+
+        emit_json(session_stats(cache=backend))
+
     if args.once:
         print("\n".join(vm.render()))
+        print_stats()
         return 0
     import curses
 
     curses.wrapper(_curses_main, vm, args.refresh, adapter)
+    print_stats()
     return 0
 
 

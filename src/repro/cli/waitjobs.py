@@ -261,9 +261,16 @@ def main(argv=None) -> int:
     ap.add_argument("--eco-release", action="store_true",
                     help="adopt held eco jobs (runjob --eco-hold) and "
                          "release them reactively while waiting")
+    ap.add_argument("--stats", action="store_true",
+                    help="print this session's observability snapshot on "
+                         "exit (queue polls saved, cache hit rate) as JSON")
     ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args(argv)
 
+    if args.stats:
+        from repro.obs import enable
+
+        enable()  # record this session's counters, not no-ops
     backend = get_queue_cache()  # dedupes squeue across the poll loop
     user = args.user
     if user is None and not args.ids and not args.name:
@@ -299,7 +306,12 @@ def main(argv=None) -> int:
     if args.json:
         from repro.cli.render import emit_json
 
-        emit_json(result.to_dict())
+        payload = result.to_dict()
+        if args.stats:
+            from repro.obs.export import session_stats
+
+            payload["stats"] = session_stats(cache=backend)
+        emit_json(payload)
         return result.exit_code
     if not result.ok:
         print("timeout")
@@ -308,6 +320,11 @@ def main(argv=None) -> int:
               + " ".join(sorted(result.failed_ids)))
     elif not args.quiet:
         print("all jobs finished")
+    if args.stats:
+        from repro.cli.render import emit_json
+        from repro.obs.export import session_stats
+
+        emit_json(session_stats(cache=backend))
     return result.exit_code
 
 

@@ -192,10 +192,25 @@ class EcoScheduler:
         peak_windows = self._absolute_peak_windows(
             earliest, horizon + timedelta(seconds=max_dur)
         )
-        return [
-            self._decide(d, now, eco_windows=eco_windows, peak_windows=peak_windows)
-            for d in durations_s
-        ]
+        from repro.obs.metrics import get_registry, timed
+
+        reg = get_registry()
+        with timed(reg.histogram(
+            "nbi_eco_decide_seconds", "decide_many batch pricing wall time"
+        )):
+            decisions = [
+                self._decide(d, now, eco_windows=eco_windows,
+                             peak_windows=peak_windows)
+                for d in durations_s
+            ]
+        if reg.enabled:
+            tiers = reg.counter(
+                "nbi_eco_decisions_total", "eco pricing decisions, by tier",
+                labels=("tier",),
+            )
+            for dec in decisions:
+                tiers.labels(tier=str(dec.tier)).inc()
+        return decisions
 
     def _decide(
         self,

@@ -214,6 +214,14 @@ class EcoController:
             registered_at=now or self._now or datetime.now(),
             cluster=_cluster_of(jid),
         )
+        from repro.obs.metrics import get_registry
+
+        reg = get_registry()
+        reg.counter(
+            "nbi_eco_held_total", "jobs submitted held for reactive release",
+            labels=("tier",),
+        ).labels(tier=str(decision.tier)).inc()
+        reg.gauge("nbi_eco_held_open", "jobs currently held").set(len(self.held))
         self._wake(decision.begin)
 
     # -- reaction --------------------------------------------------------------
@@ -250,12 +258,22 @@ class EcoController:
         if not targets:
             return []
         ids = [h.jobid for h in targets]
+        from repro.obs.metrics import get_registry
+
+        reg = get_registry()
+        releases = reg.counter(
+            "nbi_eco_released_total",
+            "held jobs released, early (favourable) vs at-deadline",
+            labels=("kind",),
+        )
         for h in targets:  # drop before release(): its events re-enter tick
             del self.held[h.jobid]
+            early = now < h.deadline
             self.released.append(ReleaseRecord(
-                jobid=h.jobid, at=now, deadline=h.deadline,
-                early=now < h.deadline,
+                jobid=h.jobid, at=now, deadline=h.deadline, early=early,
             ))
+            releases.labels(kind="early" if early else "deadline").inc()
+        reg.gauge("nbi_eco_held_open", "jobs currently held").set(len(self.held))
         self.backend.release(ids)
         return ids
 

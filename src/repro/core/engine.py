@@ -29,6 +29,7 @@ from datetime import datetime
 
 from .job import Job
 from .queue import SQUEUE_FIELDS  # noqa: F401  (re-exported schema for callers)
+from repro.obs.metrics import get_registry, timed
 
 
 # ---------------------------------------------------------------------------
@@ -81,12 +82,22 @@ class QueueCache:
 
     def queue(self) -> list[dict]:
         now = self._clock()
+        reg = get_registry()
         if self._rows is not None and now - self._fetched_at < self.ttl_s:
             self.hits += 1
+            reg.counter(
+                "nbi_queuecache_hits_total", "queue() calls served from snapshot"
+            ).inc()
             return self._rows
-        self._rows = self.inner.queue()
+        with timed(reg.histogram(
+            "nbi_queuecache_refresh_seconds", "backend.queue() refresh latency"
+        )):
+            self._rows = self.inner.queue()
         self._fetched_at = now
         self.polls += 1
+        reg.counter(
+            "nbi_queuecache_polls_total", "real backend.queue() polls"
+        ).inc()
         return self._rows
 
     def submit(self, job) -> int:
@@ -137,6 +148,12 @@ class QueueCache:
     def _on_event(self, event) -> None:
         if self._rows is not None:
             self.event_invalidations += 1
+            # counted only on a real invalidation (bounded by polls), never
+            # on the per-event fast path — native emission stays obs-free
+            get_registry().counter(
+                "nbi_queuecache_event_invalidations_total",
+                "snapshots dropped by bus events",
+            ).inc()
         self.invalidate()
 
     def __getattr__(self, name):
@@ -313,6 +330,8 @@ class SubmitEngine:
         """Submit every job; returns per-job ids in input order."""
         jobs = list(jobs)
         result = BatchResult(ids=[""] * len(jobs))
+        _reg = get_registry()  # per-batch instrumentation, never per-job
+        _t0 = _time.perf_counter() if _reg.enabled else 0.0
 
         # 1. partition into coalescible groups and singletons
         groups: dict[object, list[int]] = {}
@@ -473,6 +492,39 @@ class SubmitEngine:
                 else:
                     entries.append((str(base), unit.tool, unit.eco_meta))
             log_submissions(entries)
+
+        if _reg.enabled:
+            _reg.counter(
+                "nbi_engine_batches_total", "submit_many calls"
+            ).inc()
+            _reg.counter(
+                "nbi_engine_jobs_total", "jobs submitted through the engine"
+            ).inc(len(jobs))
+            _reg.counter(
+                "nbi_engine_coalesced_jobs_total",
+                "input jobs folded into job arrays",
+            ).inc(result.coalesced)
+            _reg.counter(
+                "nbi_engine_sbatch_calls_total", "submission units issued"
+            ).inc(result.sbatch_calls)
+            _reg.counter(
+                "nbi_engine_eco_deferred_total",
+                "submission units deferred by eco pricing",
+            ).inc(result.eco_deferred)
+            if jobs:
+                _reg.histogram(
+                    "nbi_engine_batch_size", "jobs per submit_many batch",
+                    buckets=(1, 2, 5, 10, 25, 50, 100, 250, 500,
+                             1000, 2500, 5000, 10000),
+                ).observe(len(jobs))
+                # coalesce ratio: fraction of the batch that rode an array
+                _reg.gauge(
+                    "nbi_engine_coalesce_ratio",
+                    "coalesced fraction of the last batch",
+                ).set(result.coalesced / len(jobs))
+            _reg.histogram(
+                "nbi_engine_submit_seconds", "submit_many wall time"
+            ).observe(_time.perf_counter() - _t0)
         return result
 
     def _batch_scheduler(self, cluster: str, registry):

@@ -148,6 +148,15 @@ class EventBus:
                 self.delivered += 1
             except Exception as e:  # noqa: BLE001 — isolate subscribers
                 self.errors.append((event, e))
+                # cold path only: the happy path stays obs-free so native
+                # emission keeps its ~1M events/s
+                from repro.obs.metrics import get_registry
+
+                get_registry().counter(
+                    "nbi_bus_subscriber_errors_total",
+                    "subscriber exceptions swallowed by EventBus.emit",
+                    labels=("type",),
+                ).labels(type=event.type).inc()
 
     def __len__(self) -> int:
         return len(self._subs)
@@ -240,6 +249,12 @@ class PollingEventAdapter:
         self._acct = None  # at most one accounting call per poll
         rows = {r["jobid"]: dict(r) for r in self.backend.queue()}
         self.polls += 1
+        from repro.obs.metrics import get_registry
+
+        get_registry().counter(
+            "nbi_adapter_polls_total",
+            "queue snapshots taken by PollingEventAdapter",
+        ).inc()
         events = diff_snapshots(self._prev, rows, now)
         self._prev = rows
         events = [self._resolve_terminal(e) if e.is_terminal and not e.state

@@ -30,8 +30,11 @@ to the pre-federation stack (property-pinned in ``tests/test_federation.py``).
 from __future__ import annotations
 
 import math
+import time as _time
 from dataclasses import dataclass, replace as _dc_replace
 from datetime import datetime, timedelta
+
+from repro.obs.metrics import get_registry as _get_registry
 
 from .config import NBIConfig, load_config
 from .eco import CarbonTrace, EcoScheduler
@@ -359,8 +362,10 @@ class Placer:
         specs = list(specs)
         if not specs:
             return []
+        _reg = _get_registry()
+        _t0 = _time.perf_counter() if _reg.enabled else 0.0
         if _np is None:  # numpy unavailable — the scalar loop is the spec
-            return [
+            placements = [
                 self.place_spec(
                     cpus=int(s.get("cpus", 1)),
                     memory_mb=int(s.get("memory_mb", 0)),
@@ -373,6 +378,8 @@ class Placer:
                 )
                 for s in specs
             ]
+            self._record_place_many(_reg, "fallback", len(specs), _t0)
+            return placements
         handles = list(self.registry)
         m_count = len(handles)
         names = [h.name for h in handles]
@@ -450,7 +457,21 @@ class Placer:
             for m in range(m_count):
                 if infl[m]:
                     self._inflight[names[m]] = infl[m]
+        self._record_place_many(_reg, "vectorized", len(specs), _t0)
         return out
+
+    @staticmethod
+    def _record_place_many(reg, path: str, n: int, t0: float) -> None:
+        if not reg.enabled:
+            return
+        reg.counter(
+            "nbi_placer_placements_total",
+            "batch placements, by scoring path",
+            labels=("path",),
+        ).labels(path=path).inc(n)
+        reg.histogram(
+            "nbi_placer_score_seconds", "place_many batch scoring wall time"
+        ).observe(_time.perf_counter() - t0)
 
     def place_jobs(self, jobs, now: datetime, eco_flags=None, *,
                    charge: bool = True) -> "list[Placement]":
@@ -928,9 +949,19 @@ class FederatedBackend:
     # -- Backend protocol: queries ----------------------------------------------
 
     def queue(self) -> "list[dict]":
+        reg = _get_registry()
+        fanout = reg.histogram(
+            "nbi_federation_member_queue_seconds",
+            "per-member queue() fanout latency",
+            labels=("cluster",),
+        ) if reg.enabled else None
         rows = []
         for h in self.registry:
-            for row in h.backend.queue():
+            t0 = _time.perf_counter() if fanout is not None else 0.0
+            member_rows = h.backend.queue()
+            if fanout is not None:
+                fanout.labels(cluster=h.name).observe(_time.perf_counter() - t0)
+            for row in member_rows:
                 row = dict(row)
                 row["jobid"] = join_cluster_id(h.name, row["jobid"])
                 row["cluster"] = h.name

@@ -1,0 +1,290 @@
+"""Exporters for the metrics registry: Prometheus textfile + JSON snapshot.
+
+Two faithful views of one :class:`~repro.obs.metrics.MetricsRegistry`:
+
+* :func:`snapshot` — a plain JSON-able dict (serialized through the CLI
+  suite's shared :func:`repro.cli.render.to_json` dialect, so ``nbimon
+  --json`` output reads exactly like every other tool's ``--json``);
+* :func:`to_prometheus` — the Prometheus *text exposition format*
+  (``# HELP`` / ``# TYPE`` headers, ``_bucket{le=…}`` / ``_sum`` /
+  ``_count`` expansion for histograms), suitable for the node-exporter
+  textfile collector or a one-shot scrape.
+
+:func:`parse_textfile` is the matching validator: it re-parses an
+exposition file, checks label syntax, histogram bucket monotonicity and
+``_count``/``+Inf`` agreement, and returns per-family sample counts — CI
+runs it (via ``nbimon --check-textfile``) over the benchmark's published
+textfile so a malformed exporter can never land silently.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from pathlib import Path
+
+from .metrics import MetricsRegistry, get_registry
+
+_INF = float("inf")
+
+
+# ---------------------------------------------------------------------------
+# JSON snapshot
+# ---------------------------------------------------------------------------
+
+
+def snapshot(registry=None, *, meta: "dict | None" = None) -> dict:
+    """The registry as one JSON-able dict (the ``nbimon --json`` payload)."""
+    registry = registry if registry is not None else get_registry()
+    metrics: dict = {}
+    for fam in registry.families():
+        series = []
+        for labels, child in fam.samples():
+            if fam.kind == "histogram":
+                series.append({
+                    "labels": labels,
+                    "buckets": _cumulative(fam.buckets, child.counts),
+                    "sum": child.sum,
+                    "count": child.count,
+                })
+            else:
+                series.append({"labels": labels, "value": child.value})
+        metrics[fam.name] = {
+            "type": fam.kind,
+            "help": fam.help,
+            "series": series,
+        }
+    out = {"metrics": metrics}
+    if meta:
+        out["meta"] = dict(meta)
+    return out
+
+
+def _cumulative(buckets: tuple, counts: list) -> "list[list]":
+    """Per-bucket counts → Prometheus-style cumulative ``[le, count]``."""
+    out = []
+    total = 0
+    for bound, n in zip(buckets, counts):
+        total += n
+        out.append([bound, total])
+    total += counts[-1]
+    out.append(["+Inf", total])
+    return out
+
+
+def write_snapshot(path, registry=None, *, meta: "dict | None" = None) -> dict:
+    """Serialize :func:`snapshot` to ``path`` in the shared JSON dialect."""
+    from repro.cli.render import to_json
+
+    snap = snapshot(registry, meta=meta)
+    p = Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(to_json(snap) + "\n", encoding="utf-8")
+    return snap
+
+
+def load_snapshot(path) -> dict:
+    import json
+
+    return json.loads(Path(path).read_text(encoding="utf-8"))
+
+
+# ---------------------------------------------------------------------------
+# Prometheus text exposition
+# ---------------------------------------------------------------------------
+
+
+def _escape_help(s: str) -> str:
+    return s.replace("\\", "\\\\").replace("\n", "\\n")
+
+
+def _escape_label(s: str) -> str:
+    return s.replace("\\", "\\\\").replace('"', '\\"').replace("\n", "\\n")
+
+
+def _labels_text(labels: dict, extra: "tuple | None" = None) -> str:
+    pairs = [f'{k}="{_escape_label(str(v))}"' for k, v in labels.items()]
+    if extra is not None:
+        pairs.append(f'{extra[0]}="{extra[1]}"')
+    return "{" + ",".join(pairs) + "}" if pairs else ""
+
+
+def _fmt(v: float) -> str:
+    if v == _INF:
+        return "+Inf"
+    if isinstance(v, float) and v.is_integer():
+        return str(int(v))
+    return repr(float(v))
+
+
+def prometheus_from_snapshot(snap: dict) -> str:
+    """Render a :func:`snapshot` dict as Prometheus exposition text."""
+    lines: list[str] = []
+    for name in sorted(snap.get("metrics", {})):
+        fam = snap["metrics"][name]
+        kind = fam.get("type", "counter")
+        if fam.get("help"):
+            lines.append(f"# HELP {name} {_escape_help(fam['help'])}")
+        lines.append(f"# TYPE {name} {kind}")
+        for s in fam.get("series", []):
+            labels = s.get("labels", {})
+            if kind == "histogram":
+                for le, count in s.get("buckets", []):
+                    lines.append(
+                        f"{name}_bucket"
+                        f"{_labels_text(labels, ('le', _fmt(le) if le != '+Inf' else '+Inf'))}"
+                        f" {int(count)}"
+                    )
+                lines.append(f"{name}_sum{_labels_text(labels)} {_fmt(float(s['sum']))}")
+                lines.append(f"{name}_count{_labels_text(labels)} {int(s['count'])}")
+            else:
+                lines.append(f"{name}{_labels_text(labels)} {_fmt(float(s['value']))}")
+    return "\n".join(lines) + ("\n" if lines else "")
+
+
+def to_prometheus(registry=None) -> str:
+    return prometheus_from_snapshot(snapshot(registry))
+
+
+def write_textfile(path, registry=None, *, snap: "dict | None" = None) -> str:
+    """Write the exposition text (from a registry or a snapshot dict)."""
+    text = prometheus_from_snapshot(snap) if snap is not None else to_prometheus(registry)
+    p = Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(text, encoding="utf-8")
+    return text
+
+
+# ---------------------------------------------------------------------------
+# Validator / parser
+# ---------------------------------------------------------------------------
+
+_NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+_SAMPLE_RE = re.compile(
+    r"^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)"
+    r"(?:\{(?P<labels>[^}]*)\})?"
+    r"\s+(?P<value>[^\s]+)\s*$"
+)
+_LABEL_RE = re.compile(r'([a-zA-Z_][a-zA-Z0-9_]*)="((?:[^"\\]|\\.)*)"')
+
+
+def parse_textfile(text: str) -> dict:
+    """Parse (and validate) Prometheus exposition text.
+
+    Returns ``{family name: {"type": ..., "samples": N}}``. Raises
+    :class:`ValueError` on any malformed line, unparseable value,
+    non-monotone histogram buckets, or a histogram whose ``_count``
+    disagrees with its ``+Inf`` bucket.
+    """
+    families: dict = {}
+    hist: dict = {}  # (name, labels-frozen) → {"buckets": [...], "count": ..}
+
+    def family_for(sample_name: str) -> "tuple[str, str]":
+        for suffix in ("_bucket", "_sum", "_count"):
+            base = sample_name[: -len(suffix)]
+            if sample_name.endswith(suffix) and families.get(base, {}).get(
+                "type"
+            ) == "histogram":
+                return base, suffix
+        return sample_name, ""
+
+    for lineno, line in enumerate(text.splitlines(), start=1):
+        line = line.rstrip()
+        if not line:
+            continue
+        if line.startswith("#"):
+            parts = line.split(None, 3)
+            if len(parts) >= 3 and parts[1] == "TYPE":
+                name, kind = parts[2], (parts[3] if len(parts) > 3 else "")
+                if not _NAME_RE.match(name):
+                    raise ValueError(f"line {lineno}: bad metric name {name!r}")
+                if kind not in ("counter", "gauge", "histogram", "summary", "untyped"):
+                    raise ValueError(f"line {lineno}: bad TYPE {kind!r}")
+                families.setdefault(name, {"type": kind, "samples": 0})
+            continue
+        m = _SAMPLE_RE.match(line)
+        if not m:
+            raise ValueError(f"line {lineno}: malformed sample {line!r}")
+        raw_labels = m.group("labels")
+        labels: dict = {}
+        if raw_labels:
+            consumed = _LABEL_RE.findall(raw_labels)
+            rebuilt = ",".join(f'{k}="{v}"' for k, v in consumed)
+            if rebuilt != raw_labels:
+                raise ValueError(f"line {lineno}: malformed labels {{{raw_labels}}}")
+            labels = dict(consumed)
+        value_s = m.group("value")
+        try:
+            value = float(value_s.replace("+Inf", "inf").replace("-Inf", "-inf"))
+        except ValueError:
+            raise ValueError(
+                f"line {lineno}: unparseable value {value_s!r}"
+            ) from None
+        if math.isnan(value):
+            raise ValueError(f"line {lineno}: NaN sample value")
+        base, suffix = family_for(m.group("name"))
+        fam = families.setdefault(base, {"type": "untyped", "samples": 0})
+        fam["samples"] += 1
+        if suffix in ("_bucket", "_count"):
+            key_labels = {k: v for k, v in labels.items() if k != "le"}
+            key = (base, tuple(sorted(key_labels.items())))
+            h = hist.setdefault(key, {"buckets": [], "count": None})
+            if suffix == "_bucket":
+                if "le" not in labels:
+                    raise ValueError(f"line {lineno}: _bucket without le=")
+                le = float(labels["le"].replace("+Inf", "inf"))
+                h["buckets"].append((le, value))
+            else:
+                h["count"] = value
+
+    for (name, _), h in hist.items():
+        counts = [c for _, c in h["buckets"]]
+        if counts != sorted(counts):
+            raise ValueError(f"{name}: histogram buckets not cumulative")
+        les = [le for le, _ in h["buckets"]]
+        if les != sorted(les):
+            raise ValueError(f"{name}: histogram le= bounds not sorted")
+        if les and les[-1] != _INF:
+            raise ValueError(f"{name}: histogram missing +Inf bucket")
+        if counts and h["count"] is not None and h["count"] != counts[-1]:
+            raise ValueError(
+                f"{name}: _count {h['count']} != +Inf bucket {counts[-1]}"
+            )
+    return families
+
+
+# ---------------------------------------------------------------------------
+# Session stats (waitjobs/viewjobs --stats, nbimon summary)
+# ---------------------------------------------------------------------------
+
+
+def session_stats(cache=None, registry=None, *, tracer=None) -> dict:
+    """One process's observability summary, CLI-friendly.
+
+    ``cache`` (a :class:`~repro.core.engine.QueueCache`) contributes the
+    poll-dedup headline numbers even when metrics were never enabled —
+    the cache keeps plain-int counters of its own.
+    """
+    out: dict = {}
+    if cache is not None:
+        polls = int(getattr(cache, "polls", 0))
+        hits = int(getattr(cache, "hits", 0))
+        calls = polls + hits
+        out["queue_cache"] = {
+            "polls": polls,
+            "hits": hits,
+            "polls_saved": hits,
+            "hit_rate": (hits / calls) if calls else 0.0,
+            "event_invalidations": int(getattr(cache, "event_invalidations", 0)),
+        }
+    if tracer is not None:
+        out["trace"] = tracer.to_dict()
+    registry = registry if registry is not None else get_registry()
+    if getattr(registry, "enabled", False):
+        out["registry"] = snapshot(registry)["metrics"]
+    return out
+
+
+def make_registry() -> MetricsRegistry:
+    """A fresh standalone registry (benchmarks compare several)."""
+    return MetricsRegistry()

@@ -1,0 +1,361 @@
+"""``MetricsRegistry`` — the stack's runtime metrics substrate (stdlib-only).
+
+Counters, gauges and histograms with Prometheus-style labels, behind one
+thread-safe registry. Instrumentation sites across the stack (SubmitEngine,
+QueueCache, Placer, EcoController, the history index, the event bus) call
+:func:`get_registry` at use time and record into whatever registry is
+active:
+
+* **disabled by default** — the active registry is a :class:`NullRegistry`
+  whose metric objects are shared no-op singletons, so an un-instrumented
+  run pays a couple of attribute lookups per *batch*, never per job (the
+  overhead on the 20k-job simulated day is measured by
+  ``benchmarks/bench_obs.py`` and gated ≤5% in CI);
+* :func:`enable` (or ``NBI_OBS=1`` in the environment) swaps in a real
+  :class:`MetricsRegistry`; every site starts recording immediately — no
+  re-wiring, because sites never cache the registry across calls.
+
+Naming follows Prometheus conventions: ``nbi_<subsystem>_<what>_<unit>``,
+``_total`` suffix on counters, seconds for time. Label keys are declared
+per family (``cluster=``, ``tier=``, ``path=`` …); see
+``docs/observability.md`` for the full catalogue.
+
+Exporters live in :mod:`repro.obs.export`; per-job lifecycle tracing in
+:mod:`repro.obs.trace`. This module imports nothing from ``repro`` so any
+layer (including ``repro.core.events``) can use it without cycles.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+import time as _time
+
+#: default buckets for latency histograms (seconds) — sub-ms to minutes
+LATENCY_BUCKETS = (
+    0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5,
+    1.0, 2.5, 5.0, 10.0, 30.0, 60.0, 120.0, 300.0,
+)
+
+#: default buckets for job-scale durations (seconds) — minutes to a week
+DURATION_BUCKETS = (
+    60.0, 300.0, 900.0, 1800.0, 3600.0, 7200.0, 14400.0, 28800.0,
+    57600.0, 86400.0, 172800.0, 604800.0,
+)
+
+_INF = float("inf")
+
+
+def _label_values(names: tuple, kw: dict) -> tuple:
+    if set(kw) != set(names):
+        raise ValueError(
+            f"labels {sorted(kw)} do not match declared {sorted(names)}"
+        )
+    return tuple(str(kw[n]) for n in names)
+
+
+class _Child:
+    """One (labelset → value) sample of a counter or gauge family."""
+
+    __slots__ = ("_family", "value")
+
+    def __init__(self, family):
+        self._family = family
+        self.value = 0.0
+
+    def inc(self, amount: float = 1.0) -> None:
+        with self._family._lock:
+            self.value += amount
+
+    def dec(self, amount: float = 1.0) -> None:
+        self.inc(-amount)
+
+    def set(self, value: float) -> None:
+        with self._family._lock:
+            self.value = float(value)
+
+
+class _HistogramChild:
+    """One labelset of a histogram family: bucket counts + sum + count."""
+
+    __slots__ = ("_family", "counts", "sum", "count")
+
+    def __init__(self, family):
+        self._family = family
+        self.counts = [0] * (len(family.buckets) + 1)  # last slot = +Inf
+        self.sum = 0.0
+        self.count = 0
+
+    def observe(self, value: float) -> None:
+        fam = self._family
+        with fam._lock:
+            i = 0
+            for bound in fam.buckets:
+                if value <= bound:
+                    break
+                i += 1
+            self.counts[i] += 1
+            self.sum += value
+            self.count += 1
+
+
+class MetricFamily:
+    """A named metric with declared label keys and per-labelset children.
+
+    A family declared with no labels IS its own single sample — call
+    ``inc()`` / ``set()`` / ``observe()`` on it directly. With labels,
+    ``labels(key=value, ...)`` resolves (and memoizes) the child.
+    """
+
+    def __init__(self, name: str, kind: str, help: str = "",
+                 label_names: tuple = (), buckets: tuple = ()):
+        self.name = name
+        self.kind = kind  # counter | gauge | histogram
+        self.help = help
+        self.label_names = tuple(label_names)
+        self.buckets = tuple(float(b) for b in buckets)
+        self._lock = threading.Lock()
+        self._children: dict[tuple, object] = {}
+        self._default = None
+        if not self.label_names:
+            self._default = self._make_child()
+            self._children[()] = self._default
+
+    def _make_child(self):
+        if self.kind == "histogram":
+            return _HistogramChild(self)
+        return _Child(self)
+
+    def labels(self, **kw):
+        key = _label_values(self.label_names, kw)
+        child = self._children.get(key)
+        if child is None:
+            with self._lock:
+                child = self._children.setdefault(key, self._make_child())
+        return child
+
+    # -- label-less conveniences (raise when the family declares labels) ------
+
+    def _require_default(self):
+        if self._default is None:
+            raise ValueError(
+                f"{self.name} declares labels {self.label_names}; "
+                f"use .labels(...)"
+            )
+        return self._default
+
+    def inc(self, amount: float = 1.0) -> None:
+        self._require_default().inc(amount)
+
+    def dec(self, amount: float = 1.0) -> None:
+        self._require_default().dec(amount)
+
+    def set(self, value: float) -> None:
+        self._require_default().set(value)
+
+    def observe(self, value: float) -> None:
+        self._require_default().observe(value)
+
+    @property
+    def value(self) -> float:
+        return self._require_default().value
+
+    # -- read side -------------------------------------------------------------
+
+    def samples(self) -> "list[tuple[dict, object]]":
+        """``[(labels_dict, child), ...]`` in insertion order."""
+        with self._lock:
+            items = list(self._children.items())
+        return [
+            (dict(zip(self.label_names, key)), child) for key, child in items
+        ]
+
+
+class MetricsRegistry:
+    """Thread-safe collection of :class:`MetricFamily` s.
+
+    ``counter`` / ``gauge`` / ``histogram`` are idempotent: the first call
+    declares the family, later calls return it (and must agree on kind —
+    re-declaring a name as a different kind raises).
+    """
+
+    enabled = True
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._families: dict[str, MetricFamily] = {}
+
+    def _family(self, name: str, kind: str, help: str, labels: tuple,
+                buckets: tuple = ()) -> MetricFamily:
+        fam = self._families.get(name)
+        if fam is None:
+            with self._lock:
+                fam = self._families.get(name)
+                if fam is None:
+                    fam = MetricFamily(name, kind, help, labels, buckets)
+                    self._families[name] = fam
+        if fam.kind != kind:
+            raise ValueError(
+                f"{name} already registered as {fam.kind}, not {kind}"
+            )
+        return fam
+
+    def counter(self, name: str, help: str = "", labels: tuple = ()) -> MetricFamily:
+        return self._family(name, "counter", help, labels)
+
+    def gauge(self, name: str, help: str = "", labels: tuple = ()) -> MetricFamily:
+        return self._family(name, "gauge", help, labels)
+
+    def histogram(self, name: str, help: str = "", labels: tuple = (),
+                  buckets: tuple = LATENCY_BUCKETS) -> MetricFamily:
+        return self._family(name, "histogram", help, labels, buckets)
+
+    def families(self) -> "list[MetricFamily]":
+        with self._lock:
+            return list(self._families.values())
+
+    def get(self, name: str) -> "MetricFamily | None":
+        return self._families.get(name)
+
+    def reset(self) -> None:
+        """Drop every family (tests; a long-lived daemon keeps its own)."""
+        with self._lock:
+            self._families.clear()
+
+
+# ---------------------------------------------------------------------------
+# No-op twin — the disabled-by-default fast path
+# ---------------------------------------------------------------------------
+
+
+class _NullMetric:
+    """Shared do-nothing stand-in for every metric object."""
+
+    __slots__ = ()
+    value = 0.0
+    sum = 0.0
+    count = 0
+
+    def labels(self, **kw):
+        return self
+
+    def inc(self, amount: float = 1.0) -> None:
+        pass
+
+    def dec(self, amount: float = 1.0) -> None:
+        pass
+
+    def set(self, value: float) -> None:
+        pass
+
+    def observe(self, value: float) -> None:
+        pass
+
+    def samples(self):
+        return []
+
+
+_NULL_METRIC = _NullMetric()
+
+
+class _NullTimer:
+    """Shared context manager that never reads the clock."""
+
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+_NULL_TIMER = _NullTimer()
+
+
+class NullRegistry:
+    """API-compatible registry whose metrics are shared no-ops."""
+
+    enabled = False
+
+    def counter(self, name: str, help: str = "", labels: tuple = ()):
+        return _NULL_METRIC
+
+    def gauge(self, name: str, help: str = "", labels: tuple = ()):
+        return _NULL_METRIC
+
+    def histogram(self, name: str, help: str = "", labels: tuple = (),
+                  buckets: tuple = LATENCY_BUCKETS):
+        return _NULL_METRIC
+
+    def families(self):
+        return []
+
+    def get(self, name: str):
+        return None
+
+    def reset(self) -> None:
+        pass
+
+
+NULL_REGISTRY = NullRegistry()
+
+
+class _Timer:
+    """``with timed(hist):`` — observes elapsed seconds on exit."""
+
+    __slots__ = ("_hist", "_t0")
+
+    def __init__(self, hist):
+        self._hist = hist
+
+    def __enter__(self):
+        self._t0 = _time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self._hist.observe(_time.perf_counter() - self._t0)
+        return False
+
+
+def timed(hist):
+    """Time a block into ``hist``; free when ``hist`` is the null metric."""
+    if hist is _NULL_METRIC:
+        return _NULL_TIMER
+    return _Timer(hist)
+
+
+# ---------------------------------------------------------------------------
+# The active registry
+# ---------------------------------------------------------------------------
+
+_active: "MetricsRegistry | NullRegistry" = (
+    MetricsRegistry()
+    if os.environ.get("NBI_OBS", "").lower() in ("1", "true", "yes", "on")
+    else NULL_REGISTRY
+)
+
+
+def get_registry() -> "MetricsRegistry | NullRegistry":
+    """The registry instrumentation records into right now."""
+    return _active
+
+
+def enable(registry: "MetricsRegistry | None" = None) -> MetricsRegistry:
+    """Switch instrumentation on; returns the active real registry.
+
+    Idempotent: with a real registry already active (and no explicit
+    ``registry``), it is kept — counters accumulated so far survive.
+    """
+    global _active
+    if registry is not None:
+        _active = registry
+    elif not _active.enabled:
+        _active = MetricsRegistry()
+    return _active  # type: ignore[return-value]
+
+
+def disable() -> None:
+    """Back to the no-op registry (the default state)."""
+    global _active
+    _active = NULL_REGISTRY

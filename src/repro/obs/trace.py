@@ -1,0 +1,259 @@
+"""``JobTracer`` — per-job lifecycle spans derived from the event bus.
+
+Every job's life is already announced as typed
+:class:`~repro.core.events.JobEvent` s (natively by the simulator, or
+synthesised by the :class:`~repro.core.events.PollingEventAdapter` on real
+SLURM — the adapter emits the same vocabulary, so span timelines are
+backend-agnostic; ``tests/test_trace_parity.py`` pins that). The tracer
+subscribes once and folds the stream into :class:`JobSpan` s::
+
+    submitted → (held) → released → started → COMPLETED/FAILED/…
+
+recording, into the active :class:`~repro.obs.metrics.MetricsRegistry`:
+
+* ``nbi_trace_events_total{type=}`` — every event seen;
+* ``nbi_trace_spans_total{outcome=}`` — one per terminal event;
+* ``nbi_trace_open_spans`` — gauge of jobs still in flight;
+* ``nbi_trace_queue_wait_seconds{cluster=}`` — submit→start;
+* ``nbi_trace_hold_seconds{cluster=}`` — submit→release of held jobs;
+* ``nbi_trace_lifetime_seconds{cluster=}`` — submit→terminal.
+
+The tracer also keeps its own plain-int counts (``finished``, outcome
+tallies) independent of the registry, so span conservation — spans
+finalized == jobs archived — can be asserted even with metrics disabled.
+Finished spans themselves are retained in a bounded deque (``keep`` most
+recent) for the ``nbimon --live`` ticker and tests; the counts are exact
+regardless of the bound.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from datetime import datetime
+
+from repro.core import events as ev
+from .metrics import DURATION_BUCKETS, get_registry
+
+
+@dataclass
+class JobSpan:
+    """One job's observed lifecycle timeline."""
+
+    jobid: str
+    cluster: str = ""
+    name: str = ""
+    user: str = ""
+    submitted_at: "datetime | None" = None
+    released_at: "datetime | None" = None
+    started_at: "datetime | None" = None
+    terminal_at: "datetime | None" = None
+    outcome: str = ""  # terminal event type ("" while open)
+    held: bool = False  # observed held (JobHeldUser) at submission
+    #: the raw timeline: every (event type, instant) in arrival order
+    events: "list[tuple[str, datetime]]" = field(default_factory=list)
+
+    @property
+    def is_open(self) -> bool:
+        return not self.outcome
+
+    @property
+    def timeline(self) -> tuple:
+        return tuple(self.events)
+
+    def _delta(self, a: "datetime | None", b: "datetime | None"):
+        if a is None or b is None:
+            return None
+        return (b - a).total_seconds()
+
+    @property
+    def queue_wait_s(self) -> "float | None":
+        """Submit → start (None when either end was not observed)."""
+        return self._delta(self.submitted_at, self.started_at)
+
+    @property
+    def hold_s(self) -> "float | None":
+        """Submit → release, for jobs observed held at submission."""
+        if not self.held:
+            return None
+        return self._delta(self.submitted_at, self.released_at)
+
+    @property
+    def lifetime_s(self) -> "float | None":
+        return self._delta(self.submitted_at, self.terminal_at)
+
+    def to_dict(self) -> dict:
+        return {
+            "jobid": self.jobid,
+            "cluster": self.cluster,
+            "name": self.name,
+            "user": self.user,
+            "outcome": self.outcome,
+            "held": self.held,
+            "queue_wait_s": self.queue_wait_s,
+            "hold_s": self.hold_s,
+            "lifetime_s": self.lifetime_s,
+            "events": [(t, at) for t, at in self.events],
+        }
+
+
+class JobTracer:
+    """Fold an :class:`~repro.core.events.EventBus` into job spans.
+
+    Construct, then :meth:`attach` to a bus (or feed :meth:`on_event`
+    directly). Detach before discarding — a subscribed tracer is kept
+    alive by the bus otherwise.
+    """
+
+    def __init__(self, *, keep: int = 1024, registry=None):
+        self.open: dict[str, JobSpan] = {}
+        self.recent: deque[JobSpan] = deque(maxlen=keep)
+        # exact tallies, independent of the metrics registry
+        self.seen = 0
+        self.finished = 0
+        self.outcomes: dict[str, int] = {}
+        self._bus_token: "tuple | None" = None
+        # metric handles resolved ONCE — on_event is the per-event hot path,
+        # so construct the tracer after enable() (nbimon/bench do); with
+        # metrics disabled these are shared no-ops
+        reg = registry if registry is not None else get_registry()
+        self._m_events = reg.counter(
+            "nbi_trace_events_total", "job events seen by the tracer",
+            labels=("type",),
+        )
+        self._m_spans = reg.counter(
+            "nbi_trace_spans_total", "job spans finalized, by outcome",
+            labels=("outcome",),
+        )
+        self._m_open = reg.gauge(
+            "nbi_trace_open_spans", "jobs currently in flight"
+        )
+        self._m_hold = reg.histogram(
+            "nbi_trace_hold_seconds",
+            "submit-to-release of held (eco-deferred) jobs",
+            labels=("cluster",), buckets=DURATION_BUCKETS,
+        )
+        self._m_wait = reg.histogram(
+            "nbi_trace_queue_wait_seconds", "submit-to-start queue wait",
+            labels=("cluster",), buckets=DURATION_BUCKETS,
+        )
+        self._m_life = reg.histogram(
+            "nbi_trace_lifetime_seconds", "submit-to-terminal lifetime",
+            labels=("cluster",), buckets=DURATION_BUCKETS,
+        )
+        # labeled-child caches: labels(**kw) memoizes inside the family but
+        # still pays kwargs + sort + lock per call; a plain dict keyed on the
+        # one label value is ~5x cheaper on the per-event path
+        self._ev_children: dict = {}
+        self._outcome_children: dict = {}
+        self._hold_children: dict = {}
+        self._wait_children: dict = {}
+        self._life_children: dict = {}
+
+    # -- wiring ----------------------------------------------------------------
+
+    def attach(self, bus) -> "JobTracer":
+        if self._bus_token is not None:
+            old_bus, token = self._bus_token
+            old_bus.unsubscribe(token)
+        self._bus_token = (bus, bus.subscribe(self.on_event))
+        return self
+
+    def detach(self) -> None:
+        if self._bus_token is not None:
+            bus, token = self._bus_token
+            bus.unsubscribe(token)
+            self._bus_token = None
+
+    # -- event folding ---------------------------------------------------------
+
+    def on_event(self, event) -> None:
+        self.seen += 1
+        c = self._ev_children.get(event.type)
+        if c is None:
+            c = self._ev_children[event.type] = \
+                self._m_events.labels(type=event.type)
+        c.inc()
+
+        span = self.open.get(event.jobid)
+        if span is None:
+            # first sighting — usually SUBMITTED, but a tracer attached
+            # mid-life still gets a span (with an empty front half)
+            span = JobSpan(jobid=event.jobid, cluster=event.cluster,
+                           name=event.name, user=event.user)
+            self.open[event.jobid] = span
+            self._m_open.set(len(self.open))
+        if event.cluster and not span.cluster:
+            span.cluster = event.cluster
+        if event.name and not span.name:
+            span.name = event.name
+        if event.user and not span.user:
+            span.user = event.user
+        span.events.append((event.type, event.at))
+
+        if event.type == ev.SUBMITTED:
+            span.submitted_at = event.at
+            if event.reason == ev.HELD_REASON:
+                span.held = True
+        elif event.type == ev.RELEASED:
+            span.released_at = event.at
+            span.held = True  # a release implies it was held
+            hold = span.hold_s
+            if hold is not None:
+                self._observe(self._hold_children, self._m_hold,
+                              span.cluster, hold)
+        elif event.type == ev.STARTED:
+            span.started_at = event.at
+            wait = span.queue_wait_s
+            if wait is not None:
+                self._observe(self._wait_children, self._m_wait,
+                              span.cluster, wait)
+        elif event.type == ev.REQUEUED:
+            span.started_at = None  # back to pending; next start re-times
+        elif event.is_terminal:
+            span.terminal_at = event.at
+            span.outcome = event.type
+            self._finalize(span)
+
+    @staticmethod
+    def _observe(cache: dict, family, cluster: str, value: float) -> None:
+        child = cache.get(cluster)
+        if child is None:
+            child = cache[cluster] = family.labels(cluster=cluster)
+        child.observe(value)
+
+    def _finalize(self, span: JobSpan) -> None:
+        self.open.pop(span.jobid, None)
+        self.recent.append(span)
+        self.finished += 1
+        self.outcomes[span.outcome] = self.outcomes.get(span.outcome, 0) + 1
+        c = self._outcome_children.get(span.outcome)
+        if c is None:
+            c = self._outcome_children[span.outcome] = \
+                self._m_spans.labels(outcome=span.outcome)
+        c.inc()
+        life = span.lifetime_s
+        if life is not None:
+            self._observe(self._life_children, self._m_life,
+                          span.cluster, life)
+        self._m_open.set(len(self.open))
+
+    # -- summaries ---------------------------------------------------------------
+
+    def timeline(self, jobid: str) -> tuple:
+        """The (type, at) timeline of one job, open or recently finished."""
+        span = self.open.get(jobid)
+        if span is not None:
+            return span.timeline
+        for s in self.recent:
+            if s.jobid == jobid:
+                return s.timeline
+        return ()
+
+    def to_dict(self) -> dict:
+        return {
+            "events_seen": self.seen,
+            "spans_finished": self.finished,
+            "spans_open": len(self.open),
+            "outcomes": dict(sorted(self.outcomes.items())),
+        }

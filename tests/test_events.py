@@ -67,6 +67,35 @@ class TestEventBus:
         assert len(seen) == 1  # delivery continued past the failure
         assert len(bus.errors) == 1
 
+    def test_subscriber_error_counted_and_delivery_completes(self):
+        """A failing subscriber is swallowed, counted in the obs registry,
+        and every later subscriber in the same emit still receives."""
+        from repro.obs import metrics as obs_metrics
+
+        reg = obs_metrics.enable(obs_metrics.MetricsRegistry())
+        try:
+            bus = EventBus()
+            before, after = [], []
+
+            def boom(e):
+                raise RuntimeError("bad subscriber")
+
+            bus.subscribe(before.append)
+            bus.subscribe(boom)
+            bus.subscribe(after.append)
+            e1 = JobEvent(type=ev.STARTED, jobid="1", at=T0)
+            e2 = JobEvent(type=ev.COMPLETED, jobid="1", at=T0)
+            bus.emit(e1)
+            bus.emit(e2)
+            assert before == [e1, e2] and after == [e1, e2]
+            assert [type(x).__name__ for _, x in bus.errors] == \
+                ["RuntimeError", "RuntimeError"]
+            fam = reg.get("nbi_bus_subscriber_errors_total")
+            assert fam.labels(type=ev.STARTED).value == 1
+            assert fam.labels(type=ev.COMPLETED).value == 1
+        finally:
+            obs_metrics.disable()
+
     def test_history_ring(self):
         bus = EventBus(history=4)
         for i in range(10):

@@ -1,0 +1,155 @@
+"""nbimon CLI: live ticker (native bus + polling adapter), snapshot and
+textfile flows, the exposition validator's exit codes, and the
+``--stats`` flag on waitjobs/viewjobs.
+"""
+
+import json
+
+import pytest
+
+from repro.cli import nbimon, waitjobs
+from repro.core import events as ev
+from repro.core.job import Job
+from repro.core.resources import Opts
+from repro.obs import metrics as m
+
+
+@pytest.fixture(autouse=True)
+def _obs_disabled():
+    m.disable()
+    yield
+    m.disable()
+
+
+def make_job(name="j", *, duration=60):
+    opts = Opts.new(threads=1, memory="1GB", time="1h")
+    return Job(name=name, command="true", opts=opts, sim_duration_s=duration)
+
+
+class TestLiveTicker:
+    def test_native_bus_runs_until_drained(self, sim):
+        make_job(name="watched", duration=120).run(sim)
+        lines = []
+        tracer = nbimon.live_ticker(sim, poll_s=60.0, ticks=50,
+                                    out=lines.append)
+        assert tracer.finished == 1 and not tracer.open
+        assert any(ev.COMPLETED in ln for ln in lines)
+        assert any("watched" in ln for ln in lines)
+        assert len(sim.bus) == 0  # ticker + tracer both unsubscribed
+
+    def test_adapter_path_without_bus(self, sim):
+        class BusLess:
+            """Backend shaped like real SLURM: queue()/get(), no bus."""
+
+            def __init__(self, inner):
+                self._inner = inner
+
+            def queue(self):
+                return self._inner.queue()
+
+            def get(self, jobid):
+                return self._inner.get(jobid)
+
+        make_job(duration=60).run(sim)
+        lines = []
+        tracer = nbimon.live_ticker(
+            BusLess(sim), ticks=3, poll_s=60.0, out=lines.append,
+            sleep=lambda s: sim.advance(s),
+        )
+        assert tracer.finished == 1
+        assert any(ev.COMPLETED in ln for ln in lines)
+
+    def test_duration_converts_to_ticks(self, sim):
+        ticked = []
+        nbimon.live_ticker(sim, duration_s=120.0, poll_s=60.0,
+                           out=ticked.append)
+        # empty queue: the sim loop drains immediately, no hang
+
+
+class TestMainFlows:
+    def _populated_registry(self):
+        reg = m.enable()
+        reg.counter("nbi_t_total", "t", labels=("cluster",)) \
+            .labels(cluster="green").inc(2)
+        reg.histogram("nbi_t_seconds", "t").observe(0.5)
+        return reg
+
+    def test_default_prometheus_dump(self, capsys):
+        self._populated_registry()
+        assert nbimon.main([]) == 0
+        out = capsys.readouterr().out
+        assert 'nbi_t_total{cluster="green"} 2' in out
+
+    def test_json_snapshot(self, capsys):
+        self._populated_registry()
+        assert nbimon.main(["--json"]) == 0
+        snap = json.loads(capsys.readouterr().out)
+        assert snap["metrics"]["nbi_t_total"]["series"][0]["value"] == 2.0
+
+    def test_textfile_write_and_check(self, capsys, tmp_path):
+        self._populated_registry()
+        prom = tmp_path / "nbi.prom"
+        assert nbimon.main(["--textfile", str(prom)]) == 0
+        assert prom.is_file()
+        capsys.readouterr()
+        assert nbimon.main(["--check-textfile", str(prom)]) == 0
+        assert capsys.readouterr().out.startswith("ok:")
+
+    def test_snapshot_file_rendering(self, capsys, tmp_path):
+        from repro.obs.export import write_snapshot
+
+        reg = m.MetricsRegistry()
+        reg.gauge("nbi_g", "g").set(7)
+        path = tmp_path / "snap.json"
+        write_snapshot(path, reg, meta={"jobs": 1})
+        assert nbimon.main(["--json", "--snapshot", str(path)]) == 0
+        snap = json.loads(capsys.readouterr().out)
+        assert snap["meta"]["jobs"] == 1
+        assert snap["metrics"]["nbi_g"]["series"][0]["value"] == 7.0
+
+    def test_check_rejects_malformed(self, capsys, tmp_path):
+        bad = tmp_path / "bad.prom"
+        bad.write_text("nbi_x NaN\n")
+        assert nbimon.main(["--check-textfile", str(bad)]) == 1
+        assert "invalid textfile" in capsys.readouterr().err
+
+    def test_check_missing_file(self, capsys, tmp_path):
+        assert nbimon.main(
+            ["--check-textfile", str(tmp_path / "absent.prom")]
+        ) == 1
+
+    def test_live_json_summary(self, capsys):
+        from repro.core import get_queue_cache
+
+        make_job(name="lv", duration=60).run(get_queue_cache())
+        assert nbimon.main(["--live", "--json", "--poll", "60"]) == 0
+        stats = json.loads(capsys.readouterr().out)
+        assert stats["trace"]["spans_finished"] == 1
+        assert "registry" in stats  # --live enables metrics
+
+
+class TestStatsFlag:
+    def test_waitjobs_stats_json(self, capsys):
+        from repro.core import get_queue_cache
+
+        backend = get_queue_cache()
+        jid = str(make_job(name="ws", duration=60).run(backend))
+        rc = waitjobs.main([jid, "--json", "--stats", "--poll", "60"])
+        payload = json.loads(capsys.readouterr().out)
+        assert rc == 0 and payload["jobs"][jid] == "COMPLETED"
+        assert "queue_cache" in payload["stats"]
+        assert "registry" in payload["stats"]  # --stats enabled metrics
+
+    def test_waitjobs_stats_text(self, capsys):
+        rc = waitjobs.main(["--stats", "--quiet", "-u", "nobody"])
+        out = capsys.readouterr().out
+        assert rc == 0 and '"queue_cache"' in out
+
+    def test_viewjobs_once_stats(self, capsys):
+        from repro.cli import viewjobs
+        from repro.core import get_queue_cache
+
+        make_job(name="vs", duration=60).run(get_queue_cache())
+        rc = viewjobs.main(["--once", "--stats"])
+        out = capsys.readouterr().out
+        assert rc == 0 and '"queue_cache"' in out and '"registry"' in out

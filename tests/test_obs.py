@@ -1,0 +1,326 @@
+"""Observability layer: MetricsRegistry semantics, the disabled-by-default
+no-op path, exporters (JSON snapshot + Prometheus textfile + validator),
+and JobTracer lifecycle spans against the simulator.
+"""
+
+import pytest
+
+from repro.core import QueueCache
+from repro.core import events as ev
+from repro.core.job import Job
+from repro.core.resources import Opts
+from repro.obs import metrics as m
+from repro.obs.export import (
+    load_snapshot,
+    parse_textfile,
+    prometheus_from_snapshot,
+    session_stats,
+    snapshot,
+    to_prometheus,
+    write_snapshot,
+    write_textfile,
+)
+from repro.obs.trace import JobTracer
+
+
+@pytest.fixture(autouse=True)
+def _obs_disabled():
+    """The active registry is module-global: leave every test clean."""
+    m.disable()
+    yield
+    m.disable()
+
+
+def make_job(name="j", *, cpus=1, time="1h", duration=60, hold=False):
+    opts = Opts.new(threads=cpus, memory="1GB", time=time)
+    opts.hold = hold
+    return Job(name=name, command="true", opts=opts, sim_duration_s=duration)
+
+
+class TestRegistry:
+    def test_counter_inc(self):
+        reg = m.MetricsRegistry()
+        c = reg.counter("c_total", "help text")
+        c.inc()
+        c.inc(2.5)
+        assert c.value == 3.5
+
+    def test_labels_are_separate_children(self):
+        reg = m.MetricsRegistry()
+        c = reg.counter("c_total", labels=("cluster",))
+        c.labels(cluster="a").inc()
+        c.labels(cluster="a").inc()
+        c.labels(cluster="b").inc()
+        assert c.labels(cluster="a").value == 2
+        assert c.labels(cluster="b").value == 1
+        assert len(c.samples()) == 2
+
+    def test_gauge_set_dec(self):
+        reg = m.MetricsRegistry()
+        g = reg.gauge("g")
+        g.set(10)
+        g.dec(3)
+        assert g.value == 7.0
+
+    def test_histogram_buckets(self):
+        reg = m.MetricsRegistry()
+        h = reg.histogram("h_seconds", buckets=(1.0, 10.0))
+        for v in (0.5, 0.9, 5.0, 100.0):
+            h.observe(v)
+        child = h.samples()[0][1]
+        assert child.counts == [2, 1, 1]  # ≤1, ≤10, +Inf overflow
+        assert child.count == 4 and child.sum == pytest.approx(106.4)
+
+    def test_declaration_is_idempotent(self):
+        reg = m.MetricsRegistry()
+        assert reg.counter("c_total") is reg.counter("c_total")
+
+    def test_kind_mismatch_raises(self):
+        reg = m.MetricsRegistry()
+        reg.counter("c_total")
+        with pytest.raises(ValueError, match="already registered"):
+            reg.gauge("c_total")
+
+    def test_undeclared_label_raises(self):
+        reg = m.MetricsRegistry()
+        c = reg.counter("c_total", labels=("cluster",))
+        with pytest.raises(ValueError, match="do not match declared"):
+            c.labels(wrong="x")
+
+    def test_labelless_call_on_labeled_family_raises(self):
+        reg = m.MetricsRegistry()
+        c = reg.counter("c_total", labels=("cluster",))
+        with pytest.raises(ValueError, match="use .labels"):
+            c.inc()
+
+    def test_reset_drops_families(self):
+        reg = m.MetricsRegistry()
+        reg.counter("c_total").inc()
+        reg.reset()
+        assert reg.get("c_total") is None and reg.families() == []
+
+
+class TestEnableDisable:
+    def test_disabled_by_default(self):
+        reg = m.get_registry()
+        assert reg.enabled is False
+        # recording into the null registry is a silent no-op
+        reg.counter("x_total").inc()
+        reg.histogram("h").observe(1.0)
+        assert reg.families() == []
+
+    def test_enable_swaps_in_real_registry(self):
+        reg = m.enable()
+        assert reg.enabled and m.get_registry() is reg
+        reg.counter("x_total").inc()
+        assert reg.get("x_total").value == 1
+
+    def test_enable_is_idempotent(self):
+        reg = m.enable()
+        reg.counter("x_total").inc()
+        assert m.enable() is reg  # counters survive a second enable()
+        assert reg.get("x_total").value == 1
+
+    def test_null_metrics_are_shared_singletons(self):
+        null = m.NULL_REGISTRY
+        assert null.counter("a") is null.histogram("b") is null.gauge("c")
+        assert null.counter("a").labels(anything="x") is null.counter("a")
+
+    def test_timed_null_histogram_is_free(self):
+        assert m.timed(m.NULL_REGISTRY.histogram("h")) is m._NULL_TIMER
+
+    def test_timed_records_elapsed(self):
+        reg = m.MetricsRegistry()
+        h = reg.histogram("h_seconds")
+        with m.timed(h):
+            pass
+        child = h.samples()[0][1]
+        assert child.count == 1 and child.sum >= 0.0
+
+
+class TestExport:
+    def _populated(self):
+        reg = m.MetricsRegistry()
+        reg.counter("nbi_a_total", "a counter", labels=("cluster",)) \
+            .labels(cluster="green").inc(3)
+        reg.gauge("nbi_b", "a gauge").set(7)
+        h = reg.histogram("nbi_c_seconds", "a histogram", buckets=(1.0, 10.0))
+        h.observe(0.5)
+        h.observe(99.0)
+        return reg
+
+    def test_snapshot_shape(self):
+        snap = snapshot(self._populated(), meta={"k": "v"})
+        assert snap["meta"] == {"k": "v"}
+        fam = snap["metrics"]["nbi_a_total"]
+        assert fam["type"] == "counter" and fam["help"] == "a counter"
+        assert fam["series"] == [
+            {"labels": {"cluster": "green"}, "value": 3.0}
+        ]
+        hist = snap["metrics"]["nbi_c_seconds"]["series"][0]
+        # cumulative buckets, ending with the +Inf total == count
+        assert hist["buckets"] == [[1.0, 1], [10.0, 1], ["+Inf", 2]]
+        assert hist["count"] == 2
+
+    def test_prometheus_roundtrip(self):
+        text = to_prometheus(self._populated())
+        assert '# TYPE nbi_a_total counter' in text
+        assert 'nbi_a_total{cluster="green"} 3' in text
+        assert 'nbi_c_seconds_bucket{le="+Inf"} 2' in text
+        families = parse_textfile(text)  # validator accepts the exporter
+        assert families["nbi_c_seconds"]["type"] == "histogram"
+        assert families["nbi_a_total"]["samples"] == 1
+
+    def test_write_and_load_snapshot(self, tmp_path):
+        path = tmp_path / "snap.json"
+        write_snapshot(path, self._populated(), meta={"jobs": 2})
+        snap = load_snapshot(path)
+        assert snap["meta"]["jobs"] == 2
+        # a snapshot file renders to the same exposition as the registry
+        assert prometheus_from_snapshot(snap) == to_prometheus(self._populated())
+
+    def test_write_textfile(self, tmp_path):
+        path = tmp_path / "out.prom"
+        text = write_textfile(path, self._populated())
+        assert path.read_text() == text
+        parse_textfile(text)
+
+    def test_label_escaping_roundtrips(self):
+        reg = m.MetricsRegistry()
+        reg.counter("nbi_esc_total", labels=("name",)) \
+            .labels(name='we"ird\\name').inc()
+        parse_textfile(to_prometheus(reg))
+
+    @pytest.mark.parametrize("bad", [
+        'nbi_x{le=}"oops"} 1',            # malformed labels
+        'nbi_x 1 2 3',                    # multi-token value
+        'nbi_x notanumber',               # unparseable value
+        'nbi_x NaN',                      # NaN sample
+        '# TYPE nbi_x wat',               # unknown TYPE
+    ])
+    def test_parse_rejects_malformed(self, bad):
+        with pytest.raises(ValueError):
+            parse_textfile(bad + "\n")
+
+    def test_parse_rejects_non_cumulative_histogram(self):
+        text = (
+            "# TYPE nbi_h histogram\n"
+            'nbi_h_bucket{le="1"} 5\n'
+            'nbi_h_bucket{le="10"} 3\n'  # decreasing — not cumulative
+            'nbi_h_bucket{le="+Inf"} 5\n'
+            "nbi_h_count 5\n"
+        )
+        with pytest.raises(ValueError, match="not cumulative"):
+            parse_textfile(text)
+
+    def test_parse_rejects_count_inf_disagreement(self):
+        text = (
+            "# TYPE nbi_h histogram\n"
+            'nbi_h_bucket{le="+Inf"} 5\n'
+            "nbi_h_count 4\n"
+        )
+        with pytest.raises(ValueError, match="_count"):
+            parse_textfile(text)
+
+    def test_parse_rejects_missing_inf(self):
+        text = (
+            "# TYPE nbi_h histogram\n"
+            'nbi_h_bucket{le="1"} 5\n'
+        )
+        with pytest.raises(ValueError, match=r"\+Inf"):
+            parse_textfile(text)
+
+
+class TestJobTracer:
+    def test_full_lifecycle_spans(self, sim):
+        reg = m.enable()
+        tracer = JobTracer().attach(sim.bus)
+        jids = [str(make_job(name=f"j{i}", duration=60 * (i + 1)).run(sim))
+                for i in range(3)]
+        sim.advance(3600)
+        tracer.detach()
+
+        assert tracer.finished == 3 and not tracer.open
+        assert tracer.outcomes == {"COMPLETED": 3}
+        span = next(s for s in tracer.recent if s.jobid == jids[0])
+        assert [t for t, _ in span.timeline] == [
+            ev.SUBMITTED, ev.STARTED, ev.COMPLETED,
+        ]
+        assert span.queue_wait_s is not None and span.queue_wait_s >= 0
+        assert span.lifetime_s == pytest.approx(60, abs=1)
+        assert span.hold_s is None  # never held
+        # the registry saw the same story
+        assert reg.get("nbi_trace_spans_total") \
+            .labels(outcome=ev.COMPLETED).value == 3
+        assert reg.get("nbi_trace_open_spans").value == 0
+        assert reg.get("nbi_trace_lifetime_seconds") \
+            .labels(cluster="").count == 3
+
+    def test_held_job_records_hold_duration(self, sim):
+        m.enable()
+        tracer = JobTracer().attach(sim.bus)
+        jid = str(make_job(hold=True, duration=60).run(sim))
+        sim.advance(300)
+        assert tracer.open[jid].held  # observed PENDING (JobHeldUser)
+        sim.release([jid])
+        sim.advance(3600)
+        tracer.detach()
+        span = next(s for s in tracer.recent if s.jobid == jid)
+        assert span.held and span.outcome == ev.COMPLETED
+        assert span.hold_s == pytest.approx(300, abs=1)
+
+    def test_timeout_outcome(self, sim):
+        tracer = JobTracer().attach(sim.bus)
+        jid = str(make_job(time="1m", duration=3600).run(sim))
+        sim.advance(7200)
+        tracer.detach()
+        span = next(s for s in tracer.recent if s.jobid == jid)
+        assert span.outcome == ev.TIMEOUT
+        assert tracer.outcomes == {ev.TIMEOUT: 1}
+
+    def test_exact_tallies_survive_disabled_metrics(self, sim):
+        # no enable(): null registry, but the plain-int accounting is exact
+        tracer = JobTracer().attach(sim.bus)
+        for i in range(5):
+            make_job(name=f"j{i}", duration=60).run(sim)
+        sim.advance(3600)
+        tracer.detach()
+        assert tracer.seen > 0
+        assert tracer.finished == 5 and tracer.to_dict()["spans_open"] == 0
+
+    def test_recent_is_bounded_but_counts_exact(self, sim):
+        tracer = JobTracer(keep=2).attach(sim.bus)
+        for i in range(5):
+            make_job(name=f"j{i}", duration=60).run(sim)
+        sim.advance(3600)
+        tracer.detach()
+        assert len(tracer.recent) == 2 and tracer.finished == 5
+
+    def test_detach_stops_folding(self, sim):
+        tracer = JobTracer().attach(sim.bus)
+        make_job(duration=60).run(sim)
+        tracer.detach()
+        sim.advance(3600)
+        assert tracer.finished == 0  # terminal event arrived after detach
+
+
+class TestSessionStats:
+    def test_queue_cache_headlines(self, sim):
+        cache = QueueCache(sim, ttl_s=60.0)
+        cache.queue()
+        cache.queue()
+        stats = session_stats(cache=cache)
+        qc = stats["queue_cache"]
+        assert qc["polls"] == 1 and qc["hits"] == 1
+        assert qc["polls_saved"] == 1 and qc["hit_rate"] == 0.5
+        assert "registry" not in stats  # metrics disabled
+
+    def test_registry_included_when_enabled(self, sim):
+        reg = m.enable()
+        reg.counter("nbi_x_total").inc()
+        stats = session_stats(cache=QueueCache(sim))
+        assert "nbi_x_total" in stats["registry"]
+
+    def test_tracer_summary(self):
+        stats = session_stats(tracer=JobTracer())
+        assert stats["trace"]["spans_finished"] == 0
