@@ -1,0 +1,153 @@
+"""SimCluster benchmark — the event-calendar scheduling hot path.
+
+Three measurements (plus a 1M-job stress variant):
+
+  1. **simulated day** — ``NBI_BENCH_DAY_JOBS`` jobs (default 100,000) in
+     hourly cohorts straight into one SimCluster (no federation layer in
+     the way: this times the simulator itself), drained with
+     ``run_until_idle`` and checked for conservation (every submitted job
+     reaches COMPLETED exactly once, energy charged for all of them);
+  2. **head-to-head vs the reference** — the same deep-backlog workload
+     (capacity ≪ submission rate, the pre-calendar worst case) through
+     the production event-calendar scheduler and through
+     ``repro.core.simref.ReferenceSimCluster`` (the original
+     sort-everything implementation the equivalence suite pins against).
+     ``speedup_ok`` gates ≥5×; the reference cost is quadratic in queue
+     depth, so the ratio grows with ``NBI_BENCH_SIM_REF_JOBS``;
+  3. **wake storm** — thousands of deduplicated ``wake_at`` controller
+     deadlines consumed by one ``advance()`` (the pre-calendar
+     list-append-then-sort made this quadratic too).
+
+With ``NBI_STRESS_FULL=1`` the day is additionally run at 1,000,000 jobs
+(the ROADMAP scale target) with the same conservation checks.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from datetime import datetime
+
+from repro.core import Job, Opts, SimCluster, SimNode
+from repro.core.simref import ReferenceSimCluster
+
+DAY_T0 = datetime(2026, 3, 18, 0, 0, 0)
+
+
+def _day_jobs(hour: int, n: int) -> "list[Job]":
+    return [
+        Job(name=f"day-{hour:02d}-{i}", command="true",
+            opts=Opts(threads=1 + (i % 4), memory_mb=2048,
+                      time_s=1800 * (1 + i % 3)),
+            sim_duration_s=300 + (i % 7) * 120)
+        for i in range(n)
+    ]
+
+
+def simulated_day(total_jobs: "int | None" = None) -> dict:
+    """Hourly cohorts into one 2,048-cpu simulator; drain; conserve."""
+    total_jobs = total_jobs or int(os.environ.get("NBI_BENCH_DAY_JOBS", "100000"))
+    sim = SimCluster(
+        nodes=[SimNode(f"n{i:03d}", cpus=64, memory_mb=262144)
+               for i in range(32)],
+        now=DAY_T0, default_user="bench",
+    )
+    per_hour = total_jobs // 24
+    submitted = 0
+    t0 = time.perf_counter()
+    for hour in range(24):
+        n = per_hour + (total_jobs % 24 if hour == 23 else 0)
+        jobs = _day_jobs(hour, n)
+        submitted += len(sim.submit_many(jobs))
+        sim.advance(3600)
+    sim.run_until_idle(max_days=30)
+    wall = time.perf_counter() - t0
+    states: dict = {}
+    for j in sim.jobs.values():
+        states[j.state] = states.get(j.state, 0) + 1
+    conserved = (
+        submitted == total_jobs
+        and len(sim.jobs) == total_jobs
+        and states.get("COMPLETED", 0) == total_jobs
+        and len(sim.accounting()) == total_jobs
+        and all(j.energy_j > 0 for j in sim.jobs.values())
+    )
+    out = {
+        "jobs": total_jobs,
+        "wall_s": wall,
+        "day_jobs_per_s": total_jobs / wall,
+        "states": states,
+        "conserved": conserved,
+        "sched_passes": sim.sched_passes,
+        "sched_considered": sim.sched_considered,
+        "considered_per_job": sim.sched_considered / total_jobs,
+    }
+    print(f"  day: {total_jobs} jobs in {wall:.1f}s "
+          f"({out['day_jobs_per_s']:.0f} jobs/s) | conserved={conserved} | "
+          f"{out['considered_per_job']:.1f} considered/job")
+    return out
+
+
+def _deep_backlog(cls, n: int) -> float:
+    """One undersized node, n short jobs: queue depth ≈ n for most of the
+    run — the shape where the old full-sweep scheduler went quadratic."""
+    sim = cls(nodes=[SimNode("n000", cpus=16, memory_mb=65536)], now=DAY_T0)
+    jobs = [Job(name=f"ref-{i}", command="true",
+                opts=Opts.new(threads=1, memory="1GB", time="1h"),
+                sim_duration_s=60) for i in range(n)]
+    t0 = time.perf_counter()
+    sim.submit_many(jobs)
+    sim.run_until_idle(max_days=30)
+    wall = time.perf_counter() - t0
+    assert all(j.state == "COMPLETED" for j in sim.jobs.values())
+    return wall
+
+
+def head_to_head(n: "int | None" = None) -> dict:
+    n = n or int(os.environ.get("NBI_BENCH_SIM_REF_JOBS", "3000"))
+    new_wall = min(_deep_backlog(SimCluster, n) for _ in range(2))
+    ref_wall = _deep_backlog(ReferenceSimCluster, n)
+    speedup = ref_wall / new_wall
+    out = {
+        "jobs": n,
+        "new_wall_s": new_wall,
+        "reference_wall_s": ref_wall,
+        "speedup_vs_reference": speedup,
+        "speedup_ok": speedup >= 5.0,
+    }
+    print(f"  head-to-head: {n}-job deep backlog {ref_wall:.2f}s → "
+          f"{new_wall:.2f}s ({speedup:.1f}x, gate ≥5x)")
+    return out
+
+
+def wake_storm(n_deadlines: int = 20000) -> dict:
+    sim = SimCluster(now=DAY_T0)
+    from datetime import timedelta
+
+    for i in range(n_deadlines):
+        sim.wake_at(DAY_T0 + timedelta(seconds=1 + i % (n_deadlines // 2)))
+    t0 = time.perf_counter()
+    sim.advance(n_deadlines)
+    wall = time.perf_counter() - t0
+    out = {
+        "deadlines": n_deadlines,
+        "wall_s": wall,
+        "wakeups_per_s": (n_deadlines // 2) / wall,
+    }
+    print(f"  wake storm: {n_deadlines} wake_at ({n_deadlines // 2} unique) "
+          f"consumed in {wall:.2f}s ({out['wakeups_per_s']:.0f}/s)")
+    return out
+
+
+def run() -> dict:
+    out: dict = {}
+    out["day"] = simulated_day()
+    out["reference"] = head_to_head()
+    out["wake"] = wake_storm()
+    if os.environ.get("NBI_STRESS_FULL"):
+        out["stress_1m"] = simulated_day(1_000_000)
+    return out
+
+
+if __name__ == "__main__":
+    run()

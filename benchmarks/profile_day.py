@@ -1,0 +1,79 @@
+"""Profile the simulated day — so the next bottleneck is one command away.
+
+    PYTHONPATH=src python -m benchmarks.profile_day --jobs 20000 --profile
+    PYTHONPATH=src python -m benchmarks.profile_day --shape deep --reference
+
+Shapes:
+  * ``day``  — the bench_sim hourly-cohort day on a 2,048-cpu cluster
+               (capacity roughly keeps up; exercises the event calendar);
+  * ``deep`` — the deep-backlog worst case (one undersized node, queue
+               depth ≈ job count; exercises the eligibility sets and the
+               max-free-capacity early exit).
+
+``--reference`` runs the same workload through
+``repro.core.simref.ReferenceSimCluster`` instead — profile both and diff
+the hot functions to see exactly what the event calendar bought.
+``--profile`` wraps the run in cProfile and prints the top of the
+cumulative-time table (tune with ``--top``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import cProfile
+import pstats
+import time
+
+from benchmarks.bench_sim import _deep_backlog, simulated_day
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="benchmarks.profile_day")
+    ap.add_argument("--jobs", type=int, default=20000,
+                    help="workload size (default 20000)")
+    ap.add_argument("--shape", choices=["day", "deep"], default="day")
+    ap.add_argument("--reference", action="store_true",
+                    help="run the pre-calendar reference scheduler instead")
+    ap.add_argument("--profile", action="store_true",
+                    help="wrap the run in cProfile and print hot functions")
+    ap.add_argument("--top", type=int, default=25,
+                    help="rows of the profile table to print (default 25)")
+    args = ap.parse_args(argv)
+
+    if args.reference:
+        from repro.core.simref import ReferenceSimCluster as cluster_cls
+    else:
+        from repro.core import SimCluster as cluster_cls
+
+    def work():
+        if args.shape == "deep":
+            wall = _deep_backlog(cluster_cls, args.jobs)
+        else:
+            if args.reference:
+                raise SystemExit(
+                    "--shape day --reference would take hours at this size; "
+                    "use --shape deep (the contested case) or a tiny --jobs"
+                )
+            wall = simulated_day(args.jobs)["wall_s"]
+        return wall
+
+    label = "reference" if args.reference else "event-calendar"
+    print(f"profiling shape={args.shape} jobs={args.jobs} ({label})")
+    if args.profile:
+        pr = cProfile.Profile()
+        pr.enable()
+        wall = work()
+        pr.disable()
+        stats = pstats.Stats(pr)
+        stats.sort_stats("cumulative").print_stats(args.top)
+    else:
+        t0 = time.perf_counter()
+        work()
+        wall = time.perf_counter() - t0
+    print(f"done: {args.jobs} jobs in {wall:.2f}s "
+          f"({args.jobs / wall:.0f} jobs/s)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

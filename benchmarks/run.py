@@ -9,6 +9,7 @@
 | events     | event bus vs polling: waitjobs snapshots, dispatch, eco v2    |
 | accounting | history store throughput, predictor tier lift, carbon loop    |
 | federation | multi-cluster placement throughput, carbon saved by routing   |
+| sim        | SimCluster event-calendar day, speedup vs reference scheduler |
 | submission | §Statement of Need: boilerplate reduction, submit throughput  |
 | queue      | Figure 1 / lsjobs-viewjobs-whojobs on a 2,000-job cluster     |
 | obs        | observability: traced vs no-op simulated day, span laws       |
@@ -86,7 +87,7 @@ def bench_roofline() -> dict:
     return {"cells": len(json.loads(path.read_text())) if path.exists() else 0}
 
 
-SECTIONS = ["eco", "events", "accounting", "federation", "submission",
+SECTIONS = ["eco", "events", "accounting", "federation", "sim", "submission",
             "queue", "obs", "kernels", "train", "serve", "roofline"]
 
 
@@ -122,6 +123,10 @@ def main(argv=None) -> int:
                 from benchmarks import bench_federation
 
                 all_out[name] = bench_federation.run()
+            elif name == "sim":
+                from benchmarks import bench_sim
+
+                all_out[name] = bench_sim.run()
             elif name == "submission":
                 from benchmarks import bench_submission
 

@@ -68,6 +68,26 @@ TRACKED = {
             "metric_families": ("metric_families",),
         },
     },
+    "sim": {
+        "rates": {
+            "day_jobs_per_s": ("day", "day_jobs_per_s"),
+            "wakeups_per_s": ("wake", "wakeups_per_s"),
+        },
+        "invariants": {
+            "conserved": ("day", "conserved"),
+            # event-calendar scheduler ≥5× the pre-PR full-sweep reference
+            # on the deep-backlog worst case
+            "speedup_ok": ("reference", "speedup_ok"),
+        },
+        "extra": {
+            "day_jobs": ("day", "jobs"),
+            "considered_per_job": ("day", "considered_per_job"),
+            "speedup_vs_reference": ("reference", "speedup_vs_reference"),
+            "reference_jobs": ("reference", "jobs"),
+            "stress_1m_jobs_per_s": ("stress_1m", "day_jobs_per_s"),
+            "stress_1m_conserved": ("stress_1m", "conserved"),
+        },
+    },
     "accounting": {
         "rates": {
             "append_many_rec_s": ("store", "append_many_rec_s"),

@@ -222,7 +222,7 @@ class EcoController:
             labels=("tier",),
         ).labels(tier=str(decision.tier)).inc()
         reg.gauge("nbi_eco_held_open", "jobs currently held").set(len(self.held))
-        self._wake(decision.begin)
+        self._wake(decision.begin, cluster=self.held[jid].cluster)
 
     # -- reaction --------------------------------------------------------------
 
@@ -352,7 +352,7 @@ class EcoController:
                 registered_at=self._now or datetime.now(),
                 cluster=_cluster_of(jid),
             )
-            self._wake(deadline)
+            self._wake(deadline, cluster=self.held[jid].cluster)
             adopted += 1
         return adopted
 
@@ -361,11 +361,18 @@ class EcoController:
     def _tick_hook(self, sim, now: datetime) -> None:
         self.tick(now)
 
-    def _wake(self, t: datetime) -> None:
+    def _wake(self, t: datetime, cluster: str = "") -> None:
         inner = getattr(self.backend, "inner", self.backend)
         wake = getattr(inner, "wake_at", None)
-        if wake is not None:
-            wake(t)
+        if wake is None:
+            return
+        if cluster:
+            try:
+                wake(t, cluster=cluster)
+                return
+            except TypeError:
+                pass  # single-cluster backend: no cluster routing
+        wake(t)
 
     def bind_bus(self, bus) -> None:
         """React to a :class:`PollingEventAdapter`'s synthetic events."""

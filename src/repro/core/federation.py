@@ -1059,8 +1059,14 @@ class FederatedBackend:
                 h.backend.advance(to=latest)
         return self
 
-    def wake_at(self, t: datetime) -> None:
+    def wake_at(self, t: datetime, cluster: str = "") -> None:
+        """Register a controller deadline; with ``cluster=`` only that
+        member's calendar gets the entry (an eco deadline on a held job
+        concerns one cluster — waking every member would add a spurious
+        ``advance()`` stop per member per deadline)."""
         for h in self.registry:
+            if cluster and h.name != cluster:
+                continue
             wake = getattr(h.backend, "wake_at", None)
             if wake is not None:
                 wake(t)

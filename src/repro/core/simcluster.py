@@ -23,20 +23,53 @@ it happens — callers subscribe instead of diffing ``queue()`` snapshots.
 ``tick_hooks`` and ``wake_at()`` let reactive controllers (the eco
 hold-and-release daemon) run at every event boundary and at their own
 deadlines inside ``advance()``.
+
+Scaling: the simulator keeps a single ``heapq`` **event calendar**
+(completion times pushed at start, ``--begin`` eligibility at submit,
+scheduled node failures, ``wake_at`` deadlines) with lazy invalidation,
+so finding the next stop is O(log n) instead of a full active-set scan.
+Scheduling works off **incrementally maintained eligibility sets**: a
+FIFO runnable deque (ids are monotonic, so insertion order is priority
+order) plus implicit parking for held / begin-gated / dependency-blocked
+jobs — dependency waiters are woken by terminal events on their
+dependency's base id, begin-gated jobs by the calendar — so a pass
+touches only eligible work, with a max-free-capacity early exit when a
+failed requirement dominates everything still runnable. The schedule is
+pinned bit-identical to the straightforward reference implementation in
+:mod:`repro.core.simref` by ``tests/test_sim_equivalence.py``.
 """
 
 from __future__ import annotations
 
+import heapq
 import os
 import subprocess
+from collections import deque
 from dataclasses import dataclass, field
 from datetime import datetime, timedelta
+
+from repro.obs.metrics import get_registry
 
 from . import events as ev
 from .events import EventBus, JobEvent
 from .resources import format_slurm_time
 
 _TERMINAL = ("COMPLETED", "FAILED", "CANCELLED", "TIMEOUT", "NODE_FAIL")
+
+# calendar entry kinds — the tuple shape establishes a total heap order at
+# equal instants: node failures are processed before completions (matching
+# the reference's failures-then-completions pass), completions/begins in
+# numeric (base_id, array_task_id) order, wakeups carry no payload
+_EV_FAIL = 0  # (at, 0, node_name)
+_EV_FINISH = 1  # (at, 1, (base, task), jobid, epoch)
+_EV_BEGIN = 2  # (at, 2, (base, task), jobid)
+_EV_WAKE = 3  # (at, 3)
+
+_INF = float("inf")
+
+
+def _jkey(j: "SimJob") -> tuple:
+    return (j.base_id, j.array_task_id or 0)
 
 
 @dataclass
@@ -114,10 +147,10 @@ class SimCluster:
         self.execute = execute
         self.watts_per_cpu = watts_per_cpu
         self.jobs: dict[str, SimJob] = {}
-        #: non-terminal jobs only — the hot-path iterations (queue(),
-        #: scheduling passes, next-event scans) walk this instead of the
-        #: ever-growing full job table; entries are retired at the same
-        #: three sites that set a terminal state
+        #: non-terminal jobs only — insertion order is (base_id, task)
+        #: order because ids are handed out monotonically and entries are
+        #: only ever appended (never re-inserted), which is what lets
+        #: queue()/accounting() skip their per-call sorts
         self._active: dict[str, SimJob] = {}
         #: str(base_id) → tasks in submission order (dependency lookups,
         #: base-id cancel/release/get without a full-table scan)
@@ -128,13 +161,55 @@ class SimCluster:
         self._cap_bump = 0
         self._next_id = 1000001
         self._defer_schedule = False
-        self._failures: list[tuple[datetime, str]] = []  # scheduled node failures
         self.events_log: list[tuple[datetime, str]] = []
         #: typed event stream; one JobEvent per state transition
         self.bus = bus if bus is not None else EventBus()
         #: reactive controllers: fn(sim, now) at every event boundary
         self.tick_hooks: list = []
-        self._wakeups: list[datetime] = []  # extra advance() stops (sorted)
+        # -- event calendar -------------------------------------------------
+        #: the unified heap: completions, begin times, node failures and
+        #: wake_at deadlines, invalidated lazily on pop
+        self._calendar: list[tuple] = []
+        #: entries that came due at the *current* instant but must be
+        #: processed at the next stop (a 0-duration job started at stop t
+        #: finishes at the following stop, exactly like the reference's
+        #: strict now < t next-event filter)
+        self._due_buffer: list[tuple] = []
+        #: jobid → start count; a FINISH entry is only valid if the job is
+        #: still RUNNING *and* its epoch matches (requeue+restart safety)
+        self._epoch: dict[str, int] = {}
+        #: wake_at dedup (the heap itself may not be scanned cheaply)
+        self._wake_set: set[datetime] = set()
+        # -- eligibility sets ----------------------------------------------
+        #: PENDING jobs known runnable but blocked on capacity, in
+        #: (base, task) order; every entry already carries reason
+        #: "Resources" from the pass that parked it
+        self._runnable: deque[SimJob] = deque()
+        #: newly eligible jobs awaiting classification (fresh submits,
+        #: released holds, fired begins, woken dependency waiters,
+        #: requeues), with a set guard against duplicate enqueues
+        self._fresh: list[SimJob] = []
+        self._fresh_set: set[str] = set()
+        #: str(dep base_id) → {jobid: waiter}; woken (popped) whenever any
+        #: task of that base reaches a terminal state
+        self._dep_waiters: dict[str, dict[str, SimJob]] = {}
+        #: active jobs parked forever with DependencyNeverSatisfied —
+        #: run_until_idle's idleness test is then two len() calls
+        self._never: set[str] = set()
+        #: conservative minima over every job in _runnable (plus any
+        #: runnable fresh of the current pass): if a failed requirement
+        #: (fc, fm) has fc <= min_cpus and fm <= min_mem it dominates the
+        #: whole queue and the pass can stop walking (max-free-capacity
+        #: early exit); recomputed exactly on every full walk
+        self._run_min_cpus: float = _INF
+        self._run_min_mem: float = _INF
+        self._nodes_by_name: dict[str, SimNode] = {n.name: n for n in self.nodes}
+        # -- observability (plain ints on the hot path; flushed to the
+        #    metrics registry once per advance() and only when enabled) ----
+        self.sched_passes = 0
+        self.sched_considered = 0
+        self._obs_passes = 0
+        self._obs_considered = 0
 
     # ------------------------------------------------------------------ submit
 
@@ -181,6 +256,11 @@ class SimCluster:
             self.jobs[jid] = j
             self._active[jid] = j
             self._by_base.setdefault(str(base), []).append(j)
+            if begin is not None and begin > self.now:
+                heapq.heappush(
+                    self._calendar, (begin, _EV_BEGIN, (base, t), jid)
+                )
+            self._enqueue_fresh(j)
             self._emit(ev.SUBMITTED, j)
         self._log(f"submit {base} name={job.name} tasks={n_tasks}")
         self._try_schedule()
@@ -207,7 +287,7 @@ class SimCluster:
 
     def queue(self) -> list[dict]:
         rows = []
-        for j in sorted(self._active.values(), key=lambda j: (j.base_id, j.array_task_id or 0)):
+        for j in self._active.values():  # insertion order == id order
             if j.state in _TERMINAL:
                 continue  # defensive: state set directly, not via a transition
             used = int((self.now - j.started_at).total_seconds()) if j.started_at else 0
@@ -231,8 +311,8 @@ class SimCluster:
         return rows
 
     def accounting(self) -> list[SimJob]:
-        """All jobs ever seen (sacct analogue)."""
-        return sorted(self.jobs.values(), key=lambda j: (j.base_id, j.array_task_id or 0))
+        """All jobs ever seen (sacct analogue), in id order."""
+        return list(self.jobs.values())  # insertion order == id order
 
     def get(self, jobid) -> SimJob | None:
         jid = str(jobid)
@@ -275,6 +355,7 @@ class SimCluster:
             self._retire(j)
             self._log(f"cancel {jid}")
             self._emit(ev.CANCELLED, j)
+            self._wake_dependents(j)
         self._try_schedule()
 
     def release(self, jobids: list) -> None:
@@ -297,6 +378,7 @@ class SimCluster:
                 if j.reason == ev.HELD_REASON:
                     j.reason = ""
                 released = True
+                self._enqueue_fresh(j)
                 self._log(f"release {j.jobid}")
                 self._emit(ev.RELEASED, j)
         if released:
@@ -305,8 +387,7 @@ class SimCluster:
     def fail_node(self, name: str, at: datetime | None = None) -> None:
         """Fail a node now, or schedule a failure at a future (sim) time."""
         if at is not None and at > self.now:
-            self._failures.append((at, name))
-            self._failures.sort()
+            heapq.heappush(self._calendar, (at, _EV_FAIL, name))
             return
         node = self._node(name)
         node.state = "DOWN"
@@ -321,6 +402,7 @@ class SimCluster:
                     j.node = None
                     j.started_at = None
                     j.restarts += 1
+                    self._enqueue_fresh(j)
                     self._log(f"requeue {j.jobid}")
                     self._emit(ev.REQUEUED, j)
                 else:
@@ -328,6 +410,7 @@ class SimCluster:
                     j.finished_at = self.now
                     self._retire(j)
                     self._emit(ev.NODE_FAIL, j)
+                    self._wake_dependents(j)
         self._try_schedule()
 
     def restore_node(self, name: str) -> None:
@@ -357,6 +440,7 @@ class SimCluster:
         self._process_due_events()
         self._try_schedule()
         self._tick()
+        self._flush_obs()
         return self
 
     def wake_at(self, t: datetime) -> None:
@@ -364,11 +448,12 @@ class SimCluster:
 
         Controllers use this for deadlines the job table knows nothing
         about — e.g. an eco hold-and-release deadline on a held job, which
-        carries no ``--begin`` of its own. Past times are ignored.
+        carries no ``--begin`` of its own. Past times are ignored;
+        duplicates are coalesced into a single calendar entry.
         """
-        if t > self.now and t not in self._wakeups:
-            self._wakeups.append(t)
-            self._wakeups.sort()
+        if t > self.now and t not in self._wake_set:
+            self._wake_set.add(t)
+            heapq.heappush(self._calendar, (t, _EV_WAKE))
 
     def add_tick_hook(self, fn) -> None:
         """Register ``fn(sim, now)`` to run at every ``advance()`` stop."""
@@ -380,7 +465,6 @@ class SimCluster:
             self.tick_hooks.remove(fn)
 
     def _tick(self) -> None:
-        self._wakeups = [t for t in self._wakeups if t > self.now]
         for fn in list(self.tick_hooks):
             fn(self, self.now)
 
@@ -388,9 +472,9 @@ class SimCluster:
         """Advance until no active jobs remain (bounded)."""
         deadline = self.now + timedelta(days=max_days)
         while self.now < deadline:
-            active = [j for j in self._active.values() if j.state not in _TERMINAL
-                      and j.reason != "DependencyNeverSatisfied"]
-            if not active:
+            # active jobs that can still make progress: everything live
+            # except the permanently dependency-stuck
+            if len(self._active) - len(self._never) <= 0:
                 break
             t = self._next_event_time(deadline)
             if t is None:
@@ -401,40 +485,100 @@ class SimCluster:
     # ------------------------------------------------------------------ internals
 
     def _node(self, name: str) -> SimNode:
-        for n in self.nodes:
-            if n.name == name:
-                return n
-        raise KeyError(name)
+        n = self._nodes_by_name.get(name)
+        if n is None:
+            # callers may swap/extend self.nodes directly; rebuild once
+            self._nodes_by_name = {n.name: n for n in self.nodes}
+            n = self._nodes_by_name.get(name)
+            if n is None:
+                raise KeyError(name)
+        return n
+
+    def _entry_stale(self, entry: tuple) -> bool:
+        kind = entry[1]
+        if kind == _EV_FINISH:
+            j = self._active.get(entry[3])
+            return (
+                j is None
+                or j.state != "RUNNING"
+                or self._epoch.get(entry[3], 0) != entry[4]
+            )
+        if kind == _EV_BEGIN:
+            j = self._active.get(entry[3])
+            return j is None or j.state != "PENDING"
+        return False  # FAIL / WAKE entries never go stale
 
     def _next_event_time(self, target: datetime) -> datetime | None:
-        times = []
-        for j in self._active.values():
-            if j.state == "RUNNING":
-                end = j.started_at + timedelta(
-                    seconds=min(j.duration_s, j.time_limit_s)
-                )
-                times.append(end)
-            elif j.state == "PENDING" and j.begin and j.begin > self.now:
-                times.append(j.begin)
-        times += [t for t, _ in self._failures]
-        times += self._wakeups  # controller deadlines (wake_at)
-        future = [t for t in times if self.now < t <= target]
-        return min(future) if future else None
+        """Earliest calendar instant in ``(now, target]``, or None.
+
+        Stale entries (cancelled/requeued jobs, fired begins) are discarded
+        as they surface; entries already due (``t <= now`` — a 0-duration
+        job started at this very stop) are buffered for the *next*
+        ``_process_due_events``, preserving the reference's strict
+        ``now < t`` stop semantics.
+        """
+        cal = self._calendar
+        while cal:
+            entry = cal[0]
+            if self._entry_stale(entry):
+                heapq.heappop(cal)
+                continue
+            t = entry[0]
+            if t <= self.now:
+                heapq.heappop(cal)
+                if entry[1] == _EV_WAKE:
+                    self._wake_set.discard(t)
+                else:
+                    self._due_buffer.append(entry)
+                continue
+            if t <= target:
+                return t
+            return None
+        return None
 
     def _process_due_events(self) -> None:
-        # node failures scheduled for <= now
-        due = [(t, n) for t, n in self._failures if t <= self.now]
-        self._failures = [(t, n) for t, n in self._failures if t > self.now]
-        for _, name in due:
-            self.fail_node(name)
-        # completions
-        for j in sorted(self._active.values(), key=lambda j: j.jobid):
-            if j.state != "RUNNING":
-                continue
-            runtime = min(j.duration_s, j.time_limit_s)
-            end = j.started_at + timedelta(seconds=runtime)
-            if end <= self.now:
-                self._finish(j)
+        """Apply every calendar entry with ``at <= now``.
+
+        Node failures first (in time order), then completions in numeric
+        ``(base_id, array_task_id)`` order regardless of their instants —
+        exactly the reference's two-phase pass. A failure's requeue
+        side-effects may start 0-duration work that also completes *now*;
+        the re-drain loop picks those up in the same call, as the
+        reference's post-failure completion sweep does.
+        """
+        due = self._due_buffer
+        self._due_buffer = []
+        cal = self._calendar
+        finishes: list[tuple] = []
+        fails: list[tuple] = []
+        while True:
+            while cal and cal[0][0] <= self.now:
+                due.append(heapq.heappop(cal))
+            if not due:
+                break
+            for entry in due:
+                kind = entry[1]
+                if kind == _EV_FAIL:
+                    fails.append(entry)
+                elif kind == _EV_FINISH:
+                    finishes.append(entry)
+                elif kind == _EV_BEGIN:
+                    j = self._active.get(entry[3])
+                    if j is not None and j.state == "PENDING":
+                        self._enqueue_fresh(j)
+                elif kind == _EV_WAKE:
+                    self._wake_set.discard(entry[0])
+            due = []
+            if not fails:
+                break
+            for entry in sorted(fails):
+                self.fail_node(entry[2])
+            fails = []
+            # fail_node reschedules; newly started 0-duration jobs have
+            # completions due at this same instant — drain again
+        for entry in sorted(finishes, key=lambda e: e[2]):
+            if not self._entry_stale(entry):
+                self._finish(self._active[entry[3]])
 
     def _finish(self, j: SimJob) -> None:
         self._release(j)
@@ -445,6 +589,7 @@ class SimCluster:
             self._retire(j)
             self._log(f"timeout {j.jobid}")
             self._emit(ev.TIMEOUT, j)
+            self._wake_dependents(j)
             return
         if self.execute and j.script_path and os.path.exists(j.script_path):
             env = dict(os.environ)
@@ -467,6 +612,7 @@ class SimCluster:
         self._retire(j)
         self._log(f"finish {j.jobid} state={j.state}")
         self._emit(ev.COMPLETED if j.state == "COMPLETED" else ev.FAILED, j)
+        self._wake_dependents(j)
 
     def _charge(self, j: SimJob, seconds: float) -> None:
         """Accumulate consumed energy for ``seconds`` of occupancy (requeued
@@ -474,8 +620,12 @@ class SimCluster:
         j.energy_j += self.watts_per_cpu * j.cpus * max(0.0, seconds)
 
     def _retire(self, j: SimJob) -> None:
-        """Drop a job that just went terminal from the active index."""
+        """Drop a job that just went terminal from the active indexes."""
         self._active.pop(j.jobid, None)
+        self._epoch.pop(j.jobid, None)
+        self._never.discard(j.jobid)
+        if j.dependencies:
+            self._unregister_waiter(j)
 
     def _release(self, j: SimJob, node_down: bool = False) -> None:
         self._cap_bump += 1
@@ -501,40 +651,116 @@ class SimCluster:
                     return "wait"
         return "ok"
 
-    def _try_schedule(self) -> None:
-        if self._defer_schedule:
-            return
-        pending = sorted(
-            (j for j in self._active.values() if j.state == "PENDING"),
-            key=lambda j: (j.base_id, j.array_task_id or 0),
-        )
-        # requirement sizes that already failed this pass: capacity only
-        # shrinks as jobs place, so anything at least as big must fail
-        # too — unless capacity came back (release/restore mid-pass via
-        # an event subscriber), which _cap_bump detects
-        failed: list[tuple[int, int]] = []
-        bump0 = self._cap_bump
-        for j in pending:
-            if j.state != "PENDING":
-                continue  # an event subscriber already transitioned it
+    # -- eligibility maintenance -------------------------------------------
+
+    def _enqueue_fresh(self, j: SimJob) -> None:
+        """Queue a job for (re)classification at the next scheduling pass."""
+        if j.jobid not in self._fresh_set:
+            self._fresh_set.add(j.jobid)
+            self._fresh.append(j)
+
+    def _wake_dependents(self, j: SimJob) -> None:
+        """A task of base ``j`` went terminal: reclassify its waiters."""
+        waiters = self._dep_waiters.pop(str(j.base_id), None)
+        if waiters:
+            for w in waiters.values():
+                if w.state == "PENDING" and w.jobid in self._active:
+                    self._enqueue_fresh(w)
+
+    def _register_waiter(self, j: SimJob) -> None:
+        for dep in j.dependencies:
+            self._dep_waiters.setdefault(str(dep), {})[j.jobid] = j
+
+    def _unregister_waiter(self, j: SimJob) -> None:
+        for dep in j.dependencies:
+            waiters = self._dep_waiters.get(str(dep))
+            if waiters is not None:
+                waiters.pop(j.jobid, None)
+                if not waiters:
+                    del self._dep_waiters[str(dep)]
+
+    def _classify_fresh(self) -> list[SimJob]:
+        """Sort newly eligible jobs into parked buckets or the runnable set.
+
+        Returns this pass's runnable newcomers in (base, task) order.
+        Parked jobs get the same reason strings, at the same observable
+        instants, as the reference's full-sweep reclassification: held and
+        begin-gated jobs wait for their release/calendar events,
+        dependency waiters are indexed under every dependency so the
+        dependency's own terminal event re-enqueues them.
+        """
+        fresh, self._fresh = self._fresh, []
+        self._fresh_set.clear()
+        runnable: list[SimJob] = []
+        for j in fresh:
+            if j.state != "PENDING" or j.jobid not in self._active:
+                continue  # transitioned (cancelled, placed…) since enqueue
             if j.held:
                 j.reason = ev.HELD_REASON
                 continue
             if j.begin and self.now < j.begin:
                 j.reason = "BeginTime"
                 continue
-            deps = self._deps_state(j)
-            if deps == "never":
-                j.reason = "DependencyNeverSatisfied"
-                continue
-            if deps == "wait":
-                j.reason = "Dependency"
-                continue
+            if j.dependencies:
+                deps = self._deps_state(j)
+                if deps == "never":
+                    j.reason = "DependencyNeverSatisfied"
+                    self._never.add(j.jobid)
+                    self._unregister_waiter(j)
+                    continue
+                if deps == "wait":
+                    j.reason = "Dependency"
+                    self._register_waiter(j)
+                    continue
+                self._unregister_waiter(j)
+            runnable.append(j)
+            if j.cpus < self._run_min_cpus:
+                self._run_min_cpus = j.cpus
+            if j.memory_mb < self._run_min_mem:
+                self._run_min_mem = j.memory_mb
+        runnable.sort(key=_jkey)
+        return runnable
+
+    def _try_schedule(self) -> None:
+        if self._defer_schedule:
+            return
+        self.sched_passes += 1
+        fresh_run = self._classify_fresh()
+        rq = self._runnable
+        if not rq and not fresh_run:
+            return
+        # requirement sizes that already failed this pass: capacity only
+        # shrinks as jobs place, so anything at least as big must fail
+        # too — unless capacity came back (release/restore mid-pass via
+        # an event subscriber), which _cap_bump detects
+        failed: list[tuple[int, int]] = []
+        bump0 = self._cap_bump
+        survivors: list[SimJob] = []
+        fi = 0
+        nfresh = len(fresh_run)
+        early_exit = False
+        # merged walk over the standing runnable deque and this pass's
+        # newcomers, in (base, task) order — FIFO priority, exactly the
+        # order the reference's sort-everything sweep visits runnable work
+        while True:
+            if rq and (fi >= nfresh or _jkey(rq[0]) < _jkey(fresh_run[fi])):
+                j = rq.popleft()
+                if j.state != "PENDING" or j.jobid not in self._active:
+                    continue  # tombstone: cancelled while parked
+            elif fi < nfresh:
+                j = fresh_run[fi]
+                fi += 1
+                if j.state != "PENDING":
+                    continue  # an event subscriber already transitioned it
+            else:
+                break
+            self.sched_considered += 1
             if self._cap_bump != bump0:
                 failed.clear()
                 bump0 = self._cap_bump
             if any(fc <= j.cpus and fm <= j.memory_mb for fc, fm in failed):
                 j.reason = "Resources"
+                survivors.append(j)
                 continue
             placed = False
             for node in self.nodes:
@@ -546,13 +772,98 @@ class SimCluster:
                     j.reason = ""
                     j.started_at = self.now
                     placed = True
+                    epoch = self._epoch.get(j.jobid, 0) + 1
+                    self._epoch[j.jobid] = epoch
+                    end = self.now + timedelta(
+                        seconds=min(j.duration_s, j.time_limit_s)
+                    )
+                    heapq.heappush(
+                        self._calendar,
+                        (end, _EV_FINISH, _jkey(j), j.jobid, epoch),
+                    )
                     self._log(f"start {j.jobid} on {node.name}")
                     self._emit(ev.STARTED, j)
                     break
             if not placed:
                 j.reason = "Resources"
+                survivors.append(j)
                 if len(failed) < 32:  # bound the dominance scan itself
                     failed.append((j.cpus, j.memory_mb))
+                # max-free-capacity early exit: this requirement dominates
+                # every job still queued (it is no larger than the
+                # conservative minima), so each of them would take the
+                # dominance branch above — and between here and the end of
+                # the reference's sweep nothing emits, so capacity cannot
+                # come back mid-tail. Deque entries already carry reason
+                # "Resources"; unprocessed newcomers get it below.
+                if (
+                    j.cpus <= self._run_min_cpus
+                    and j.memory_mb <= self._run_min_mem
+                ):
+                    early_exit = True
+                    break
+        if early_exit:
+            # unwalked newcomers: stamp the reason the reference would and
+            # file them straight into the deque — they never need
+            # reclassifying (their hold/begin/dependency gates are all
+            # permanently open), only capacity. Monotonic ids make plain
+            # append the common case; a woken dependency waiter with an
+            # old id falls back to a two-pointer merge.
+            leftovers = []
+            while fi < nfresh:
+                j = fresh_run[fi]
+                fi += 1
+                if j.state == "PENDING":
+                    j.reason = "Resources"
+                    leftovers.append(j)
+            if leftovers:
+                if not rq or _jkey(rq[-1]) < _jkey(leftovers[0]):
+                    rq.extend(leftovers)
+                else:
+                    old = list(rq)
+                    rq.clear()
+                    oi, li = 0, 0
+                    while oi < len(old) and li < len(leftovers):
+                        if _jkey(old[oi]) < _jkey(leftovers[li]):
+                            rq.append(old[oi])
+                            oi += 1
+                        else:
+                            rq.append(leftovers[li])
+                            li += 1
+                    rq.extend(old[oi:])
+                    rq.extend(leftovers[li:])
+            rq.extendleft(reversed(survivors))
+        else:
+            # full walk: the survivors ARE the runnable set; recompute the
+            # minima exactly so the early exit stays as sharp as possible
+            rq.extend(survivors)
+            mc, mm = _INF, _INF
+            for j in survivors:
+                if j.cpus < mc:
+                    mc = j.cpus
+                if j.memory_mb < mm:
+                    mm = j.memory_mb
+            self._run_min_cpus = mc
+            self._run_min_mem = mm
+
+    def _flush_obs(self) -> None:
+        reg = get_registry()
+        if not reg.enabled:
+            return
+        dp = self.sched_passes - self._obs_passes
+        dc = self.sched_considered - self._obs_considered
+        self._obs_passes = self.sched_passes
+        self._obs_considered = self.sched_considered
+        if dp:
+            reg.counter(
+                "nbi_sim_schedule_passes_total",
+                "SimCluster scheduling passes",
+            ).inc(dp)
+        if dc:
+            reg.counter(
+                "nbi_sim_schedule_considered_total",
+                "Jobs examined by SimCluster scheduling passes",
+            ).inc(dc)
 
     def _log(self, msg: str) -> None:
         self.events_log.append((self.now, msg))

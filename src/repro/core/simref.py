@@ -1,0 +1,464 @@
+"""``ReferenceSimCluster`` — the pre-event-heap scheduler, kept as the spec.
+
+:class:`~repro.core.simcluster.SimCluster` rebuilt its three hot paths
+around a single ``heapq`` event calendar and incrementally maintained
+eligibility sets (see ``docs/architecture.md`` → *The event calendar*).
+This module preserves the simple implementation it replaced — full
+active-table scans in ``_next_event_time``, a sort-everything sweep in
+``_try_schedule`` — as the executable specification, exactly like the
+scalar ``Placer.place_spec`` loop remains the spec for the vectorized
+``place_many``.
+
+``tests/test_sim_equivalence.py`` drives randomized workloads (arrays,
+dependencies, holds/releases, node churn, timeouts, requeues, cancels,
+controller wakeups) through both implementations and asserts identical
+``(at, type, jobid)`` event streams, ``events_log`` lines, energy charges
+and final job states. ``benchmarks/bench_sim.py`` runs the same day
+head-to-head to publish the speedup the calendar buys.
+
+One deliberate difference from the historical code: completions due at the
+same instant are ordered by ``(base_id, array_task_id)`` — numeric — not
+by the jobid *string*. The string sort diverges from submission order once
+ids pass 9,999,999 (``"10000000" < "9999999"``), which at 1M-job scale is
+a real workload; both implementations carry the fix, and
+``tests/test_simcluster.py`` pins the boundary.
+
+Nothing imports this module at runtime; it exists for the equivalence
+suite and the benchmark. Do not grow features here — change the
+production class and extend the equivalence suite instead.
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+from datetime import datetime, timedelta
+
+from . import events as ev
+from .events import EventBus, JobEvent
+from .resources import format_slurm_time
+from .simcluster import SimJob, SimNode, _TERMINAL
+
+
+class ReferenceSimCluster:
+    """O(active)-per-event SLURM model: the equivalence suite's oracle."""
+
+    def __init__(
+        self,
+        nodes: "list[SimNode] | None" = None,
+        now: datetime | None = None,
+        default_user: str = "user",
+        default_duration_s: int = 60,
+        execute: bool = False,
+        watts_per_cpu: float = 12.0,
+        bus: EventBus | None = None,
+        name: str = "",
+    ):
+        self.name = name
+        self.nodes = nodes or [SimNode(f"n{i:03d}") for i in range(4)]
+        self.now = now or datetime(2026, 3, 18, 10, 0, 0)
+        self.default_user = default_user
+        self.default_duration_s = default_duration_s
+        self.execute = execute
+        self.watts_per_cpu = watts_per_cpu
+        self.jobs: dict[str, SimJob] = {}
+        self._active: dict[str, SimJob] = {}
+        self._by_base: dict[str, list[SimJob]] = {}
+        self._cap_bump = 0
+        self._next_id = 1000001
+        self._defer_schedule = False
+        self._failures: list[tuple[datetime, str]] = []
+        self.events_log: list[tuple[datetime, str]] = []
+        self.bus = bus if bus is not None else EventBus()
+        self.tick_hooks: list = []
+        self._wakeups: list[datetime] = []
+
+    # ------------------------------------------------------------------ submit
+
+    def submit(self, job) -> int:
+        opts = job.opts
+        base = self._next_id
+        self._next_id += 1
+        begin = None
+        if opts.begin:
+            begin = datetime.fromisoformat(opts.begin)
+        duration = job.sim_duration_s
+        if duration is None:
+            duration = self.default_duration_s
+        eco_meta = getattr(job, "eco_meta", None) or {}
+        held = bool(getattr(opts, "hold", False))
+        n_tasks = max(1, opts.array_size)
+        for t in range(n_tasks):
+            jid = f"{base}_{t}" if opts.array_size > 0 else str(base)
+            j = SimJob(
+                jobid=jid,
+                name=job.name,
+                user=self.default_user,
+                partition=opts.queue or "main",
+                cpus=opts.threads,
+                memory_mb=opts.memory_mb,
+                time_limit_s=opts.time_s,
+                duration_s=int(duration),
+                submitted_at=self.now,
+                begin=begin,
+                dependencies=[str(d) for d in opts.dependencies],
+                dependency_type=opts.dependency_type,
+                requeue=opts.requeue,
+                script_path=job.script_path,
+                array_task_id=t if opts.array_size > 0 else None,
+                held=held,
+                tool=getattr(job, "tool", "") or "",
+                eco_deferred=bool(eco_meta.get("deferred", False)),
+                eco_tier=int(eco_meta.get("tier", 0) or 0),
+            )
+            if held:
+                j.reason = ev.HELD_REASON
+            self.jobs[jid] = j
+            self._active[jid] = j
+            self._by_base.setdefault(str(base), []).append(j)
+            self._emit(ev.SUBMITTED, j)
+        self._log(f"submit {base} name={job.name} tasks={n_tasks}")
+        self._try_schedule()
+        return base
+
+    def submit_many(self, jobs: list) -> list[int]:
+        ids = []
+        self._defer_schedule = True
+        try:
+            for job in jobs:
+                ids.append(self.submit(job))
+        finally:
+            self._defer_schedule = False
+        self._try_schedule()
+        return ids
+
+    # ------------------------------------------------------------------ queries
+
+    def queue(self) -> list[dict]:
+        rows = []
+        for j in sorted(self._active.values(), key=lambda j: (j.base_id, j.array_task_id or 0)):
+            if j.state in _TERMINAL:
+                continue
+            used = int((self.now - j.started_at).total_seconds()) if j.started_at else 0
+            left = max(0, j.time_limit_s - used) if j.state == "RUNNING" else 0
+            rows.append(
+                {
+                    "jobid": j.jobid,
+                    "user": j.user,
+                    "queue": j.partition,
+                    "name": j.name,
+                    "state": j.state,
+                    "time_used": format_slurm_time(used),
+                    "time_left": format_slurm_time(left),
+                    "time_limit": format_slurm_time(j.time_limit_s),
+                    "nodelist": j.node or "",
+                    "reason": j.reason,
+                    "cpus": str(j.cpus),
+                    "memory": str(j.memory_mb),
+                }
+            )
+        return rows
+
+    def accounting(self) -> list[SimJob]:
+        return sorted(self.jobs.values(), key=lambda j: (j.base_id, j.array_task_id or 0))
+
+    def get(self, jobid) -> SimJob | None:
+        jid = str(jobid)
+        if jid in self.jobs:
+            return self.jobs[jid]
+        for j in self._by_base.get(jid, ()):
+            return j
+        return None
+
+    def states_of(self, base_id: int) -> list[str]:
+        return [j.state for j in self._by_base.get(str(int(base_id)), ())]
+
+    def nodes_info(self) -> list[dict]:
+        return [
+            {"name": n.name, "cpus": n.cpus, "memory_mb": n.memory_mb,
+             "state": n.state, "used_cpus": n.used_cpus}
+            for n in self.nodes
+        ]
+
+    # ------------------------------------------------------------------ control
+
+    def cancel(self, jobids: list) -> None:
+        targets = set()
+        for jid in jobids:
+            jid = str(jid)
+            if jid in self.jobs:
+                targets.add(jid)
+            for j in self._by_base.get(jid, ()):
+                targets.add(j.jobid)
+        for jid in targets:
+            j = self.jobs[jid]
+            if j.state in _TERMINAL:
+                continue
+            if j.state == "RUNNING":
+                self._release(j)
+                self._charge(j, (self.now - j.started_at).total_seconds())
+            j.state = "CANCELLED"
+            j.finished_at = self.now
+            self._retire(j)
+            self._log(f"cancel {jid}")
+            self._emit(ev.CANCELLED, j)
+        self._try_schedule()
+
+    def release(self, jobids: list) -> None:
+        released = False
+        for jid in jobids:
+            jid = str(jid)
+            exact = self.jobs.get(jid)
+            cands = ([exact] if exact is not None else []) + [
+                j for j in self._by_base.get(jid, ()) if j is not exact
+            ]
+            for j in cands:
+                if not j.held or j.state in _TERMINAL:
+                    continue
+                j.held = False
+                if j.reason == ev.HELD_REASON:
+                    j.reason = ""
+                released = True
+                self._log(f"release {j.jobid}")
+                self._emit(ev.RELEASED, j)
+        if released:
+            self._try_schedule()
+
+    def fail_node(self, name: str, at: datetime | None = None) -> None:
+        if at is not None and at > self.now:
+            self._failures.append((at, name))
+            self._failures.sort()
+            return
+        node = self._node(name)
+        node.state = "DOWN"
+        self._log(f"node_fail {name}")
+        for j in list(self._active.values()):
+            if j.state == "RUNNING" and j.node == name:
+                self._release(j, node_down=True)
+                self._charge(j, (self.now - j.started_at).total_seconds())
+                if j.requeue:
+                    j.state = "PENDING"
+                    j.reason = "BeginTime" if j.begin and j.begin > self.now else "Resources"
+                    j.node = None
+                    j.started_at = None
+                    j.restarts += 1
+                    self._log(f"requeue {j.jobid}")
+                    self._emit(ev.REQUEUED, j)
+                else:
+                    j.state = "NODE_FAIL"
+                    j.finished_at = self.now
+                    self._retire(j)
+                    self._emit(ev.NODE_FAIL, j)
+        self._try_schedule()
+
+    def restore_node(self, name: str) -> None:
+        self._node(name).state = "UP"
+        self._cap_bump += 1
+        self._log(f"node_up {name}")
+        self._try_schedule()
+
+    # ------------------------------------------------------------------ clock
+
+    def advance(self, seconds: float = 0, *, to: datetime | None = None):
+        target = to if to is not None else self.now + timedelta(seconds=seconds)
+        while True:
+            t = self._next_event_time(target)
+            if t is None:
+                break
+            self.now = t
+            self._process_due_events()
+            self._try_schedule()
+            self._tick()
+        self.now = max(self.now, target)
+        self._process_due_events()
+        self._try_schedule()
+        self._tick()
+        return self
+
+    def wake_at(self, t: datetime) -> None:
+        if t > self.now and t not in self._wakeups:
+            self._wakeups.append(t)
+            self._wakeups.sort()
+
+    def add_tick_hook(self, fn) -> None:
+        if fn not in self.tick_hooks:
+            self.tick_hooks.append(fn)
+
+    def remove_tick_hook(self, fn) -> None:
+        if fn in self.tick_hooks:
+            self.tick_hooks.remove(fn)
+
+    def _tick(self) -> None:
+        self._wakeups = [t for t in self._wakeups if t > self.now]
+        for fn in list(self.tick_hooks):
+            fn(self, self.now)
+
+    def run_until_idle(self, max_days: int = 30):
+        deadline = self.now + timedelta(days=max_days)
+        while self.now < deadline:
+            active = [j for j in self._active.values() if j.state not in _TERMINAL
+                      and j.reason != "DependencyNeverSatisfied"]
+            if not active:
+                break
+            t = self._next_event_time(deadline)
+            if t is None:
+                break
+            self.advance(to=t)
+        return self
+
+    # ------------------------------------------------------------------ internals
+
+    def _node(self, name: str) -> SimNode:
+        for n in self.nodes:
+            if n.name == name:
+                return n
+        raise KeyError(name)
+
+    def _next_event_time(self, target: datetime) -> datetime | None:
+        times = []
+        for j in self._active.values():
+            if j.state == "RUNNING":
+                end = j.started_at + timedelta(
+                    seconds=min(j.duration_s, j.time_limit_s)
+                )
+                times.append(end)
+            elif j.state == "PENDING" and j.begin and j.begin > self.now:
+                times.append(j.begin)
+        times += [t for t, _ in self._failures]
+        times += self._wakeups
+        future = [t for t in times if self.now < t <= target]
+        return min(future) if future else None
+
+    def _process_due_events(self) -> None:
+        due = [(t, n) for t, n in self._failures if t <= self.now]
+        self._failures = [(t, n) for t, n in self._failures if t > self.now]
+        for _, name in due:
+            self.fail_node(name)
+        # completions, in numeric (base, task) order — NOT jobid string order
+        for j in sorted(self._active.values(),
+                        key=lambda j: (j.base_id, j.array_task_id or 0)):
+            if j.state != "RUNNING":
+                continue
+            runtime = min(j.duration_s, j.time_limit_s)
+            end = j.started_at + timedelta(seconds=runtime)
+            if end <= self.now:
+                self._finish(j)
+
+    def _finish(self, j: SimJob) -> None:
+        self._release(j)
+        j.finished_at = self.now
+        self._charge(j, min(j.duration_s, j.time_limit_s))
+        if j.duration_s > j.time_limit_s:
+            j.state = "TIMEOUT"
+            self._retire(j)
+            self._log(f"timeout {j.jobid}")
+            self._emit(ev.TIMEOUT, j)
+            return
+        if self.execute and j.script_path and os.path.exists(j.script_path):
+            env = dict(os.environ)
+            env["SLURM_JOB_ID"] = str(j.base_id)
+            env["SLURM_CPUS_PER_TASK"] = str(j.cpus)
+            if j.array_task_id is not None:
+                env["SLURM_ARRAY_TASK_ID"] = str(j.array_task_id)
+                env["SLURM_ARRAY_JOB_ID"] = str(j.base_id)
+            proc = subprocess.run(
+                ["bash", j.script_path],
+                env=env,
+                capture_output=True,
+                text=True,
+            )
+            j.state = "COMPLETED" if proc.returncode == 0 else "FAILED"
+            if proc.returncode != 0:
+                j.reason = f"NonZeroExitCode({proc.returncode})"
+        else:
+            j.state = "COMPLETED"
+        self._retire(j)
+        self._log(f"finish {j.jobid} state={j.state}")
+        self._emit(ev.COMPLETED if j.state == "COMPLETED" else ev.FAILED, j)
+
+    def _charge(self, j: SimJob, seconds: float) -> None:
+        j.energy_j += self.watts_per_cpu * j.cpus * max(0.0, seconds)
+
+    def _retire(self, j: SimJob) -> None:
+        self._active.pop(j.jobid, None)
+
+    def _release(self, j: SimJob, node_down: bool = False) -> None:
+        self._cap_bump += 1
+        if j.node:
+            node = self._node(j.node)
+            if not node_down or node.state == "UP":
+                node.used_cpus -= j.cpus
+                node.used_mem -= j.memory_mb
+            else:
+                node.used_cpus = max(0, node.used_cpus - j.cpus)
+                node.used_mem = max(0, node.used_mem - j.memory_mb)
+
+    def _deps_state(self, j: SimJob) -> str:
+        for dep in j.dependencies:
+            dep_jobs = self._by_base.get(str(dep), [])
+            if not dep_jobs:
+                return "wait"
+            for d in dep_jobs:
+                if d.state in ("FAILED", "CANCELLED", "TIMEOUT", "NODE_FAIL"):
+                    return "never"
+                if d.state != "COMPLETED":
+                    return "wait"
+        return "ok"
+
+    def _try_schedule(self) -> None:
+        if self._defer_schedule:
+            return
+        pending = sorted(
+            (j for j in self._active.values() if j.state == "PENDING"),
+            key=lambda j: (j.base_id, j.array_task_id or 0),
+        )
+        failed: list[tuple[int, int]] = []
+        bump0 = self._cap_bump
+        for j in pending:
+            if j.state != "PENDING":
+                continue
+            if j.held:
+                j.reason = ev.HELD_REASON
+                continue
+            if j.begin and self.now < j.begin:
+                j.reason = "BeginTime"
+                continue
+            deps = self._deps_state(j)
+            if deps == "never":
+                j.reason = "DependencyNeverSatisfied"
+                continue
+            if deps == "wait":
+                j.reason = "Dependency"
+                continue
+            if self._cap_bump != bump0:
+                failed.clear()
+                bump0 = self._cap_bump
+            if any(fc <= j.cpus and fm <= j.memory_mb for fc, fm in failed):
+                j.reason = "Resources"
+                continue
+            placed = False
+            for node in self.nodes:
+                if node.fits(j.cpus, j.memory_mb):
+                    node.used_cpus += j.cpus
+                    node.used_mem += j.memory_mb
+                    j.node = node.name
+                    j.state = "RUNNING"
+                    j.reason = ""
+                    j.started_at = self.now
+                    placed = True
+                    self._log(f"start {j.jobid} on {node.name}")
+                    self._emit(ev.STARTED, j)
+                    break
+            if not placed:
+                j.reason = "Resources"
+                if len(failed) < 32:
+                    failed.append((j.cpus, j.memory_mb))
+
+    def _log(self, msg: str) -> None:
+        self.events_log.append((self.now, msg))
+
+    def _emit(self, type_: str, j: SimJob) -> None:
+        self.bus.emit(JobEvent(
+            type=type_, jobid=j.jobid, at=self.now, name=j.name,
+            user=j.user, state=j.state, node=j.node or "", reason=j.reason,
+        ))

@@ -843,3 +843,59 @@ class TestReviewRegressions:
         charged = fed.placer.place_spec(8, 1024, 7200, T0)
         assert fed.placer._inflight != {}
         assert charged.cluster in ("a", "b")
+
+
+class TestClusterScopedWake:
+    """wake_at(cluster=) routes a controller deadline to one member's
+    event calendar instead of stamping every cluster with the stop."""
+
+    def test_wake_targets_one_member(self):
+        fed = make_fed(("a", 100), ("b", 500))
+        t = T0 + timedelta(hours=2)
+        fed.wake_at(t, cluster="b")
+        a = fed.registry.get("a").backend
+        b = fed.registry.get("b").backend
+        assert t not in a._wake_set
+        assert t in b._wake_set
+        fed.wake_at(t)  # no cluster: legacy fan-out to everyone
+        assert t in a._wake_set
+
+    def test_eco_register_wakes_only_held_jobs_cluster(self):
+        from repro.core.eco import EcoDecision
+
+        fed = make_fed(("a", 100), ("b", 500))
+        controller = EcoController(fed, EcoScheduler(
+            weekday_windows=[(0, 360)], weekend_windows=[(0, 360)],
+            peak_hours=[], horizon_days=7, min_delay_s=0,
+        ), now=T0)
+        jx = job(name="held-b")
+        jx.opts.hold = True
+        jx.cluster = "b"
+        fed.submit(jx.prepare())
+        deadline = T0 + timedelta(hours=20)
+        controller.register(
+            "b:1000001", EcoDecision(begin=deadline, tier=2, deferred=True),
+            now=T0, duration_s=60,
+        )
+        assert deadline in fed.registry.get("b").backend._wake_set
+        assert deadline not in fed.registry.get("a").backend._wake_set
+
+    def test_plain_backend_wake_unaffected(self, tmp_path):
+        """EcoController._wake falls back cleanly when the backend's
+        wake_at has no cluster routing (standalone SimCluster)."""
+        sim = SimCluster(now=T0)
+        controller = EcoController(sim, EcoScheduler(
+            weekday_windows=[(0, 360)], weekend_windows=[(0, 360)],
+            peak_hours=[], horizon_days=7, min_delay_s=0,
+        ), now=T0)
+        from repro.core.eco import EcoDecision
+
+        jx = job(name="held")
+        jx.opts.hold = True
+        sim.submit(jx.prepare())
+        deadline = T0 + timedelta(hours=20)
+        controller.register(
+            "1000001", EcoDecision(begin=deadline, tier=2, deferred=True),
+            now=T0, duration_s=60,
+        )
+        assert deadline in sim._wake_set

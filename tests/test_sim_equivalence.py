@@ -1,0 +1,316 @@
+"""Equivalence pin: the event-calendar SimCluster IS the reference model.
+
+``repro.core.simref.ReferenceSimCluster`` keeps the original
+sort-everything-per-pass scheduler (O(active) next-event scans, O(pending)
+scheduling sweeps). The production ``SimCluster`` replaces those hot paths
+with a heap calendar and incremental eligibility sets — and this suite is
+what licenses that rewrite: randomized workloads covering submits, arrays,
+``--begin``, ``afterok`` chains, holds/releases, cancels, node
+failure/restore, timeouts and requeues are driven through BOTH simulators
+from identical op scripts, asserting byte-identical
+
+* typed event streams ``(at, type, jobid, state, reason, node)``,
+* ``events_log`` transcripts,
+* ``queue()`` snapshots at every step,
+* final per-job fields (state/reason/node/times/restarts) and energy.
+
+Same idiom as ``tests/test_placer_vectorized.py`` (scalar ``place_spec``
+pins vectorized ``place_many``) and ``tests/test_trace_parity.py``.
+"""
+
+from __future__ import annotations
+
+import random
+from datetime import datetime, timedelta
+
+import pytest
+
+from repro.core.job import Job
+from repro.core.resources import Opts
+from repro.core.simcluster import SimCluster, SimNode
+from repro.core.simref import ReferenceSimCluster
+
+T0 = datetime(2026, 3, 18, 8, 0, 0)
+
+N_SEEDS = 28  # acceptance floor is 25
+
+
+# ---------------------------------------------------------------------------
+# op-script generation: one random program, interpreted on both simulators
+# ---------------------------------------------------------------------------
+
+
+def _gen_job(rng: random.Random, i: int, submitted_ids: list[int], now_s: int):
+    """One randomized job spec (as plain data, so both sims build their own)."""
+    spec = {
+        "name": f"j{i}",
+        "cpus": rng.choice([1, 1, 2, 4, 8]),
+        "memory": rng.choice(["1GB", "2GB", "4GB"]),
+        "time": rng.choice(["10m", "30m", "2h"]),
+        "duration": rng.choice([0, 30, 60, 90, 300, 1200, 2400, 7200]),
+        "array": rng.choice([0, 0, 0, 0, 2, 3, 5]),
+        "hold": rng.random() < 0.12,
+        "requeue": rng.random() < 0.8,
+        "begin_s": None,
+        "deps": [],
+    }
+    if rng.random() < 0.15:
+        spec["begin_s"] = now_s + rng.choice([60, 600, 1800, 3600])
+    if submitted_ids and rng.random() < 0.25:
+        spec["deps"] = rng.sample(
+            submitted_ids, k=min(len(submitted_ids), rng.choice([1, 1, 2]))
+        )
+    return spec
+
+
+def gen_script(seed: int) -> list:
+    """A random op program: (op, payload) steps with interleaved advances."""
+    rng = random.Random(seed)
+    ops: list = []
+    submitted: list[int] = []  # symbolic ids: index into submissions
+    now_s = 0
+    n_steps = rng.randint(25, 45)
+    for step in range(n_steps):
+        r = rng.random()
+        if r < 0.45 or not submitted:
+            spec = _gen_job(rng, step, submitted, now_s)
+            ops.append(("submit", spec))
+            submitted.append(len(submitted))
+        elif r < 0.55:
+            batch = [
+                _gen_job(rng, 1000 * step + k, submitted, now_s)
+                for k in range(rng.randint(2, 6))
+            ]
+            ops.append(("submit_many", batch))
+            for _ in batch:
+                submitted.append(len(submitted))
+        elif r < 0.63:
+            ops.append(("cancel", rng.sample(submitted, k=1)))
+        elif r < 0.71:
+            ops.append(("release", rng.sample(submitted, k=1)))
+        elif r < 0.76:
+            node = f"n{rng.randrange(3):03d}"
+            delay = rng.choice([0, 0, 120, 900])
+            ops.append(("fail_node", (node, now_s + delay if delay else None)))
+        elif r < 0.80:
+            ops.append(("restore_node", f"n{rng.randrange(3):03d}"))
+        elif r < 0.84:
+            ops.append(("wake_at", now_s + rng.choice([30, 45, 300, 300])))
+        else:
+            dt = rng.choice([0, 15, 60, 61, 300, 1800, 3600])
+            now_s += dt
+            ops.append(("advance", dt))
+    ops.append(("advance", 4 * 3600))
+    ops.append(("run_until_idle", 2))
+    return ops
+
+
+# ---------------------------------------------------------------------------
+# interpretation
+# ---------------------------------------------------------------------------
+
+
+def make_job(spec: dict, id_map: dict) -> Job:
+    opts = Opts.new(
+        threads=spec["cpus"], memory=spec["memory"], time=spec["time"]
+    )
+    if spec["array"]:
+        opts.array_size = spec["array"]
+    if spec["hold"]:
+        opts.hold = True
+    opts.requeue = spec["requeue"]
+    if spec["begin_s"] is not None:
+        opts.begin = (T0 + timedelta(seconds=spec["begin_s"])).isoformat()
+    opts.dependencies = [str(id_map[d]) for d in spec["deps"]]
+    return Job(
+        name=spec["name"], command="true", opts=opts,
+        sim_duration_s=spec["duration"],
+    )
+
+
+def fresh_sim(cls):
+    nodes = [SimNode(f"n{i:03d}", cpus=8, memory_mb=16384) for i in range(3)]
+    return cls(nodes=nodes, now=T0)
+
+
+def run_script(sim, ops: list) -> list:
+    """Interpret an op program; returns queue() snapshots per step."""
+    recorded = []
+    sim.bus.subscribe(recorded.append)
+    id_map: dict[int, int] = {}  # symbolic id -> real base id
+    snaps = []
+    for op, payload in ops:
+        if op == "submit":
+            id_map[len(id_map)] = sim.submit(make_job(payload, id_map))
+        elif op == "submit_many":
+            jobs = []
+            base_sym = len(id_map)
+            for k, spec in enumerate(payload):
+                # deps resolve against ids assigned before this batch
+                jobs.append(make_job(spec, id_map))
+                id_map[base_sym + k] = None  # placeholder
+            ids = sim.submit_many(jobs)
+            for k, real in enumerate(ids):
+                id_map[base_sym + k] = real
+        elif op == "cancel":
+            sim.cancel([id_map[s] for s in payload])
+        elif op == "release":
+            sim.release([id_map[s] for s in payload])
+        elif op == "fail_node":
+            node, at_s = payload
+            at = T0 + timedelta(seconds=at_s) if at_s is not None else None
+            try:
+                sim.fail_node(node, at=at)
+            except KeyError:
+                pass  # node name not in this topology variant
+        elif op == "restore_node":
+            sim.restore_node(payload)
+        elif op == "wake_at":
+            sim.wake_at(T0 + timedelta(seconds=payload))
+        elif op == "advance":
+            sim.advance(payload)
+        elif op == "run_until_idle":
+            sim.run_until_idle(max_days=payload)
+        snaps.append(sim.queue())
+    return [recorded, snaps]
+
+
+def event_tuples(events: list) -> list:
+    return [
+        (e.at, e.type, e.jobid, e.state, e.reason, e.node) for e in events
+    ]
+
+
+def final_fields(sim) -> dict:
+    return {
+        jid: (
+            j.state, j.reason, j.node, j.started_at, j.finished_at,
+            j.restarts, j.held, j.energy_j,
+        )
+        for jid, j in sim.jobs.items()
+    }
+
+
+def assert_equivalent(seed: int) -> None:
+    ops = gen_script(seed)
+    new = fresh_sim(SimCluster)
+    ref = fresh_sim(ReferenceSimCluster)
+    new_events, new_snaps = run_script(new, ops)
+    ref_events, ref_snaps = run_script(ref, ops)
+
+    assert event_tuples(new_events) == event_tuples(ref_events), (
+        f"seed {seed}: event streams diverge"
+    )
+    assert new.events_log == ref.events_log, f"seed {seed}: events_log"
+    assert new_snaps == ref_snaps, f"seed {seed}: queue() snapshots"
+    assert new.now == ref.now, f"seed {seed}: final clock"
+    assert final_fields(new) == final_fields(ref), f"seed {seed}: job table"
+    assert sum(j.energy_j for j in new.jobs.values()) == sum(
+        j.energy_j for j in ref.jobs.values()
+    ), f"seed {seed}: energy"
+    # node occupancy must drain identically too
+    assert new.nodes_info() == ref.nodes_info(), f"seed {seed}: nodes"
+
+
+# ---------------------------------------------------------------------------
+# the pin
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(N_SEEDS))
+def test_randomized_equivalence(seed):
+    assert_equivalent(seed)
+
+
+class TestDirectedEquivalence:
+    """Hand-built corners the random programs may under-sample."""
+
+    def test_zero_duration_burst(self):
+        """0-duration jobs finish at the NEXT stop, identically."""
+        new, ref = fresh_sim(SimCluster), fresh_sim(ReferenceSimCluster)
+        for sim in (new, ref):
+            ops = [("submit", {
+                "name": f"z{i}", "cpus": 1, "memory": "1GB", "time": "10m",
+                "duration": 0, "array": 0, "hold": False, "requeue": True,
+                "begin_s": None, "deps": [],
+            }) for i in range(8)] + [("advance", 60)]
+            run_script(sim, ops)
+        assert event_tuples(new.bus.history) == event_tuples(ref.bus.history)
+        assert new.events_log == ref.events_log
+
+    def test_dependency_fanout_after_failure(self):
+        """A failing dep flips every waiter to DependencyNeverSatisfied at
+        the same instant in both simulators."""
+        base = {
+            "cpus": 1, "memory": "1GB", "time": "10m", "array": 0,
+            "hold": False, "requeue": True, "begin_s": None, "deps": [],
+        }
+        ops = [
+            ("submit", dict(base, name="root", duration=7200)),  # blocks node
+            ("submit", dict(base, name="victim", duration=900)),
+            ("advance", 60),
+            ("cancel", [1]),  # victim cancelled -> waiters can never run
+        ]
+        ops += [
+            ("submit", dict(base, name=f"w{i}", duration=60, deps=[1]))
+            for i in range(6)
+        ]
+        ops += [("advance", 3 * 3600), ("run_until_idle", 1)]
+        new, ref = fresh_sim(SimCluster), fresh_sim(ReferenceSimCluster)
+        new_ev, new_sn = run_script(new, ops)
+        ref_ev, ref_sn = run_script(ref, ops)
+        assert event_tuples(new_ev) == event_tuples(ref_ev)
+        assert new_sn == ref_sn
+        assert final_fields(new) == final_fields(ref)
+        never = [j for j in new.jobs.values()
+                 if j.reason == "DependencyNeverSatisfied"]
+        assert len(never) == 6  # the scenario actually exercised the path
+
+    def test_requeue_storm(self):
+        """Node churn under load: requeues, restarts and re-placements."""
+        base = {
+            "cpus": 2, "memory": "2GB", "time": "2h", "array": 0,
+            "hold": False, "requeue": True, "begin_s": None, "deps": [],
+        }
+        ops = [("submit", dict(base, name=f"r{i}", duration=3600))
+               for i in range(12)]
+        ops += [
+            ("advance", 600),
+            ("fail_node", ("n000", None)),
+            ("advance", 600),
+            ("restore_node", "n000"),
+            ("advance", 600),
+            ("fail_node", ("n001", 2400)),  # scheduled failure
+            ("advance", 7200),
+            ("restore_node", "n001"),
+            ("run_until_idle", 1),
+        ]
+        new, ref = fresh_sim(SimCluster), fresh_sim(ReferenceSimCluster)
+        new_ev, new_sn = run_script(new, ops)
+        ref_ev, ref_sn = run_script(ref, ops)
+        assert event_tuples(new_ev) == event_tuples(ref_ev)
+        assert new.events_log == ref.events_log
+        assert new_sn == ref_sn
+        assert final_fields(new) == final_fields(ref)
+        assert any(j.restarts for j in new.jobs.values())
+
+    def test_timeout_vs_begin_same_instant(self):
+        """A timeout and a begin-eligibility landing on one instant order
+        identically (failures/completions before scheduling)."""
+        base = {
+            "cpus": 8, "memory": "8GB", "time": "10m", "array": 0,
+            "hold": False, "requeue": True, "deps": [],
+        }
+        ops = [
+            # duration > limit -> TIMEOUT at t=600 on the full node
+            ("submit", dict(base, name="hog", duration=7200, begin_s=None)),
+            # becomes eligible exactly at t=600, needs the hog's node
+            ("submit", dict(base, name="heir", duration=60, begin_s=600)),
+            ("advance", 1200),
+            ("run_until_idle", 1),
+        ]
+        new, ref = fresh_sim(SimCluster), fresh_sim(ReferenceSimCluster)
+        new_ev, _ = run_script(new, ops)
+        ref_ev, _ = run_script(ref, ops)
+        assert event_tuples(new_ev) == event_tuples(ref_ev)
+        assert new.events_log == ref.events_log

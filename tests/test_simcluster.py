@@ -161,3 +161,77 @@ class TestExecution:
         exec_sim.run_until_idle()
         lines = sorted((tmp_path / "out").read_text().split())
         assert lines == ["0:x", "1:y"]
+
+
+class TestEventCalendar:
+    """The heap-calendar hot paths: numeric completion order across id
+    digit-count boundaries, the name→node index, and wake_at at scale."""
+
+    def test_completion_order_across_digit_boundary(self):
+        """Jobs 9999999 and 10000000 finish together: numeric id order,
+        not lexicographic ("10000000" < "9999999" as strings — the
+        pre-calendar sort keyed on the jobid string)."""
+        sim = SimCluster(nodes=[SimNode("n0", cpus=8)])
+        sim._next_id = 9_999_999
+        a = mkjob("a", duration=60, cpus=1).run(sim)  # 9999999
+        b = mkjob("b", duration=60, cpus=1).run(sim)  # 10000000
+        assert (a, b) == (9_999_999, 10_000_000)
+        sim.advance(120)
+        finishes = [msg for _, msg in sim.events_log if msg.startswith("finish")]
+        assert finishes == [
+            "finish 9999999 state=COMPLETED",
+            "finish 10000000 state=COMPLETED",
+        ]
+        term = [e.jobid for e in sim.bus.history if e.type == "COMPLETED"]
+        assert term == ["9999999", "10000000"]
+
+    def test_array_completion_order_across_boundary(self):
+        sim = SimCluster(nodes=[SimNode("n0", cpus=16)])
+        sim._next_id = 9_999_999
+        opts = Opts.new(threads=1, memory="1GB", time="1h")
+        opts.array_size = 3
+        ids = []
+        for name in ("early", "late"):  # bases 9999999 and 10000000
+            ids.append(Job(name=name, command="true", opts=opts,
+                           sim_duration_s=60).run(sim))
+        sim.advance(120)
+        done = [e.jobid for e in sim.bus.history if e.type == "COMPLETED"]
+        expect = [f"{base}_{t}" for base in ids for t in range(3)]
+        assert done == expect
+
+    def test_node_lookup_is_indexed(self, sim):
+        assert sim._node("n000") is sim.nodes[0]
+        # callers may grow the topology directly; the index self-heals
+        sim.nodes.append(SimNode("extra"))
+        assert sim._node("extra") is sim.nodes[-1]
+        try:
+            sim._node("nope")
+        except KeyError:
+            pass
+        else:
+            raise AssertionError("unknown node must raise KeyError")
+
+    def test_thousands_of_wakeups_cheap(self, sim):
+        """wake_at deadlines go to the shared heap (deduplicated); a day
+        with thousands of controller deadlines must stay near-instant —
+        the pre-calendar list-append-then-sort made this quadratic."""
+        import time as _t
+
+        t0 = sim.now
+        for i in range(5000):
+            sim.wake_at(t0 + timedelta(seconds=10 + (i % 2500)))  # dupes too
+        assert len(sim._wake_set) == 2500
+        stops = []
+        sim.add_tick_hook(lambda s, now: stops.append(now))
+        w0 = _t.perf_counter()
+        sim.advance(3600)
+        wall = _t.perf_counter() - w0
+        assert wall < 2.0
+        assert len(set(stops)) == 2501  # every deadline + the target stop
+        assert not sim._wake_set  # all consumed
+
+    def test_wake_at_past_ignored(self, sim):
+        sim.advance(100)
+        sim.wake_at(sim.now - timedelta(seconds=1))
+        sim.wake_at(sim.now)
+        assert not sim._wake_set
