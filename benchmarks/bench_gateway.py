@@ -1,0 +1,175 @@
+"""Gateway daemon benchmark — the poll-amplification claim, gated in CI.
+
+Eight concurrent clients monitor a simulated day, submitting batches as
+it unfolds. Two deployments of the *same* workload:
+
+* **direct** — 8 independent CLI processes, modelled as 8 per-process
+  :class:`QueueCache`\\ s over the same cluster whose TTL has lapsed by
+  the next monitoring tick (what independent ``lsjobs`` loops do): every
+  tick costs 8 real ``backend.queue()`` polls.
+* **daemon** — one :class:`GatewayServer` owns the only QueueCache; the
+  8 clients make the same reads as Unix-socket RPCs and share its single
+  snapshot: every tick costs 1 real poll.
+
+The headline invariant (``check_bench.py`` fails CI when false): the
+daemon takes **>= 8x fewer** backend polls, and the cluster ends the day
+in an identical state — same job ids, same names, same final states —
+so the dedup is free, not a behaviour change.
+"""
+
+from __future__ import annotations
+
+import tempfile
+import time
+from concurrent.futures import ThreadPoolExecutor
+from pathlib import Path
+
+from repro.cli.session import GatewayClient
+from repro.core import Job, Opts, SimCluster
+from repro.core.engine import QueueCache, SubmitEngine
+from repro.core.gateway import GatewayServer
+
+N_CLIENTS = 8
+BATCHES = 16  # one batch submitted per tick until exhausted
+JOBS_PER_BATCH = 5
+TICK_S = 120.0
+
+
+class _CountingBackend:
+    """Proxy over the simulator counting real ``queue()`` polls."""
+
+    def __init__(self, sim: SimCluster):
+        self.sim = sim
+        self.calls = 0
+
+    def queue(self):
+        self.calls += 1
+        return self.sim.queue()
+
+    def __getattr__(self, name):
+        return getattr(self.sim, name)
+
+
+def _batch_jobs(batch: int) -> list[Job]:
+    jobs = []
+    for slot in range(JOBS_PER_BATCH):
+        k = batch * JOBS_PER_BATCH + slot
+        jobs.append(Job(
+            name=f"day-{k:03d}", command="true",
+            opts=Opts.new(threads=2, memory="2GB", time="2h"),
+            sim_duration_s=180 + (k % 12) * 120,
+        ))
+    return jobs
+
+
+def _drive(submit, advance, read_all) -> int:
+    """One simulated day: submit while batches remain, tick, everyone
+    reads. Returns the tick count (identical across modes by design)."""
+    ticks = 0
+    batch = 0
+    while True:
+        if batch < BATCHES:
+            submit(batch % N_CLIENTS, _batch_jobs(batch))
+            batch += 1
+        advance(TICK_S)
+        rows = read_all()
+        ticks += 1
+        if batch >= BATCHES and not rows:
+            return ticks
+        if ticks > 500:
+            raise RuntimeError("workload failed to drain")
+
+
+def _outcome(sim: SimCluster) -> list:
+    return sorted((jid, j.name, j.state) for jid, j in sim.jobs.items())
+
+
+def run_direct() -> dict:
+    sim = SimCluster()
+    counted = _CountingBackend(sim)
+    # ttl 0: by the next tick every independent process's snapshot has
+    # lapsed — each of the 8 re-polls, which is the deployment being fixed
+    caches = [QueueCache(counted, ttl_s=0.0) for _ in range(N_CLIENTS)]
+
+    def submit(client: int, jobs: list[Job]):
+        SubmitEngine(caches[client], coalesce=True).submit_many(jobs)
+
+    def read_all():
+        rows = [c.queue() for c in caches]
+        return rows[0]
+
+    ticks = _drive(submit, lambda s: counted.advance(s), read_all)
+    return {"ticks": ticks, "polls": counted.calls, "outcome": _outcome(sim)}
+
+
+def run_daemon() -> dict:
+    sim = SimCluster()
+    counted = _CountingBackend(sim)
+    sock = str(Path(tempfile.mkdtemp(prefix="nbi-bench-gw-")) / "gw.sock")
+    server = GatewayServer(counted, sock, ttl_s=3600.0, eco=False,
+                           rate=1e9, burst=1e9)
+    server.start()
+    clients = [GatewayClient(sock, user=f"user{i}") for i in range(N_CLIENTS)]
+    rpcs = 0
+    try:
+        with ThreadPoolExecutor(max_workers=N_CLIENTS) as pool:
+
+            def submit(client: int, jobs: list[Job]):
+                clients[client].submit_batch(jobs, eco=False, coalesce=True)
+
+            def read_all():
+                nonlocal rpcs
+                rows = list(pool.map(lambda c: c.queue(), clients))
+                rpcs += N_CLIENTS
+                return rows[0]
+
+            t0 = time.perf_counter()
+            ticks = _drive(submit, lambda s: clients[0].advance(s), read_all)
+            wall = time.perf_counter() - t0
+    finally:
+        server.close()
+    return {
+        "ticks": ticks,
+        "polls": counted.calls,
+        "outcome": _outcome(sim),
+        "queue_rpcs": rpcs,
+        "wall_s": wall,
+        "throttled": server.throttled,
+    }
+
+
+def run() -> dict:
+    direct = run_direct()
+    daemon = run_daemon()
+    amplification = direct["polls"] / max(1, daemon["polls"])
+    out = {
+        "clients": N_CLIENTS,
+        "jobs": BATCHES * JOBS_PER_BATCH,
+        "ticks": daemon["ticks"],
+        "direct_polls": direct["polls"],
+        "daemon_polls": daemon["polls"],
+        "poll_amplification_x": amplification,
+        "poll_amplification_ok": (
+            amplification >= float(N_CLIENTS)
+            and direct["ticks"] == daemon["ticks"]
+        ),
+        "outcomes_identical": direct["outcome"] == daemon["outcome"],
+        "daemon_queue_rpcs": daemon["queue_rpcs"],
+        "daemon_wall_s": daemon["wall_s"],
+        "daemon_queue_rps": daemon["queue_rpcs"] / max(daemon["wall_s"], 1e-9),
+        "daemon_throttled": daemon["throttled"],
+    }
+    print(f"  {out['jobs']} jobs over {out['ticks']} ticks x "
+          f"{N_CLIENTS} clients")
+    print(f"  backend polls: direct {out['direct_polls']} -> daemon "
+          f"{out['daemon_polls']} ({amplification:.1f}x fewer; "
+          f"outcomes identical: {out['outcomes_identical']})")
+    print(f"  daemon served {out['daemon_queue_rpcs']} queue RPCs in "
+          f"{out['daemon_wall_s']:.2f}s ({out['daemon_queue_rps']:.0f} rps)")
+    return out
+
+
+if __name__ == "__main__":
+    import json
+
+    print(json.dumps(run(), indent=1, default=str))

@@ -12,6 +12,7 @@
 | sim        | SimCluster event-calendar day, speedup vs reference scheduler |
 | submission | §Statement of Need: boilerplate reduction, submit throughput  |
 | queue      | Figure 1 / lsjobs-viewjobs-whojobs on a 2,000-job cluster     |
+| gateway    | shared daemon: 8 clients, one poller — poll amplification     |
 | obs        | observability: traced vs no-op simulated day, span laws       |
 | kernels    | kernels vs oracles + VMEM budgets (TPU-facing)                |
 | train      | end-to-end training driver: tokens/s, learn, resume           |
@@ -88,7 +89,7 @@ def bench_roofline() -> dict:
 
 
 SECTIONS = ["eco", "events", "accounting", "federation", "sim", "submission",
-            "queue", "obs", "kernels", "train", "serve", "roofline"]
+            "queue", "gateway", "obs", "kernels", "train", "serve", "roofline"]
 
 
 def main(argv=None) -> int:
@@ -135,6 +136,10 @@ def main(argv=None) -> int:
                 from benchmarks import bench_queue_tools
 
                 all_out[name] = bench_queue_tools.run()
+            elif name == "gateway":
+                from benchmarks import bench_gateway
+
+                all_out[name] = bench_gateway.run()
             elif name == "obs":
                 from benchmarks import bench_obs
 

@@ -88,6 +88,24 @@ TRACKED = {
             "stress_1m_conserved": ("stress_1m", "conserved"),
         },
     },
+    "gateway": {
+        "rates": {
+            "daemon_queue_rps": ("daemon_queue_rps",),
+        },
+        "invariants": {
+            # >= N_CLIENTS x fewer backend polls than independent processes
+            "poll_amplification_ok": ("poll_amplification_ok",),
+            # same job ids / names / final states in both deployments
+            "outcomes_identical": ("outcomes_identical",),
+        },
+        "extra": {
+            "poll_amplification_x": ("poll_amplification_x",),
+            "direct_polls": ("direct_polls",),
+            "daemon_polls": ("daemon_polls",),
+            "clients": ("clients",),
+            "jobs": ("jobs",),
+        },
+    },
     "accounting": {
         "rates": {
             "append_many_rec_s": ("store", "append_many_rec_s"),

@@ -9,8 +9,9 @@ from __future__ import annotations
 import argparse
 import sys
 
-from repro.core import Queue, get_queue_cache
+from repro.core import Queue
 from repro.cli.render import emit_json, render_table, state_color
+from repro.cli.session import add_gateway_args, resolve_backend
 
 HEADERS = ["JobID", "User", "Queue", "JobName", "State",
            "TimeUsed", "TimeLeft", "TimeLimit", "NodeList", "Reason"]
@@ -40,9 +41,12 @@ def main(argv=None) -> int:
     ap.add_argument("--json", dest="as_json", action="store_true",
                     help="emit the (filtered) queue as JSON for scripting")
     ap.add_argument("--no-color", action="store_true")
+    add_gateway_args(ap)
     args = ap.parse_args(argv)
 
-    backend = get_queue_cache()  # shared TTL cache over squeue
+    # nbid daemon when present (one poll serves every client on the host),
+    # else the classic shared TTL cache over squeue
+    backend = resolve_backend(args.gateway, args.gateway_socket)
     user = None if args.all else args.user
     if user is None and not args.all:
         import getpass

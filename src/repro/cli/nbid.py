@@ -1,0 +1,136 @@
+"""nbid — the NBI-Slurm gateway daemon.
+
+    nbid                        # serve in the foreground (^C to stop)
+    nbid --status               # one-line health of the running daemon
+    nbid --status --json        # full stats RPC payload
+    nbid --stop                 # ask the running daemon to shut down
+
+One nbid per host owns the QueueCache, EventBus, federation
+Placer/BacklogTracker and EcoController; every CLI (lsjobs, runjob,
+waitjobs, viewjobs, whojobs, nbimon) detects the socket automatically and
+becomes a thin client — one backend poll serves all of them, and held eco
+jobs keep being released after the submitting shells exit. See
+``docs/gateway.md`` for the protocol and a systemd user-service example.
+"""
+
+from __future__ import annotations
+
+import argparse
+import signal
+import sys
+
+from repro.core.gateway import GatewayServer, default_socket_path
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="nbid", description="serve the NBI-Slurm gateway daemon"
+    )
+    ap.add_argument("--socket", default=None, metavar="PATH",
+                    help="Unix socket to serve on (default: "
+                         "$NBI_GATEWAY_SOCKET or the per-user runtime path)")
+    ap.add_argument("--backend", default=None, metavar="KIND",
+                    help="backend kind (slurm|sim|federated; default: "
+                         "$REPRO_BACKEND / auto)")
+    ap.add_argument("--ttl", type=float, default=2.0,
+                    help="QueueCache TTL seconds (default 2; events "
+                         "invalidate sooner)")
+    ap.add_argument("--poll", type=float, default=15.0,
+                    help="background poll/tick cadence against real "
+                         "backends (default 15s)")
+    ap.add_argument("--rate", type=float, default=50.0,
+                    help="fair-share tokens/s per user (default 50)")
+    ap.add_argument("--burst", type=float, default=100.0,
+                    help="fair-share bucket capacity per user (default 100)")
+    ap.add_argument("--no-eco", dest="eco", action="store_false",
+                    help="do not own an EcoController (clients then manage "
+                         "held jobs themselves)")
+    ap.add_argument("--obs", action="store_true",
+                    help="enable the metrics registry (NBI_OBS=1 "
+                         "equivalent) so stats/nbimon scrapes carry "
+                         "request-latency metrics")
+    ap.add_argument("--status", action="store_true",
+                    help="query the running daemon instead of serving")
+    ap.add_argument("--stop", action="store_true",
+                    help="shut the running daemon down")
+    ap.add_argument("--json", action="store_true",
+                    help="with --status: emit the full stats payload")
+    args = ap.parse_args(argv)
+    socket_path = args.socket or default_socket_path()
+
+    if args.status or args.stop:
+        from repro.cli.session import GatewayClient
+
+        client = GatewayClient(socket_path)
+        try:
+            if args.stop:
+                client.shutdown()
+                print(f"gateway at {socket_path} stopping")
+                return 0
+            stats = client.stats()
+        except ConnectionError as e:
+            print(f"nbid: {e}", file=sys.stderr)
+            return 1
+        if args.json:
+            from repro.cli.render import emit_json
+
+            emit_json(stats)
+        else:
+            d = stats.get("daemon", {})
+            qc = stats.get("queue_cache", {})
+            eco = stats.get("eco", {})
+            print(
+                f"nbid pid {d.get('pid')} on {d.get('socket')} "
+                f"[{d.get('backend')}] up {d.get('uptime_s', 0.0):.0f}s | "
+                f"{d.get('connections', 0)} conn, "
+                f"{sum(d.get('requests', {}).values())} req, "
+                f"{d.get('throttled', 0)} throttled | "
+                f"cache {qc.get('polls', 0)} polls / {qc.get('hits', 0)} hits"
+                + (f" | eco {eco.get('held', 0)} held" if eco else "")
+            )
+        return 0
+
+    if args.obs:
+        from repro.obs import enable
+
+        enable()
+    backend = None
+    if args.backend:
+        from repro.core import get_backend
+
+        backend = get_backend(args.backend)
+    server = GatewayServer(
+        backend,
+        socket_path,
+        ttl_s=args.ttl,
+        eco=args.eco,
+        rate=args.rate,
+        burst=args.burst,
+        poll_s=args.poll,
+    )
+    try:
+        server.bind()
+    except Exception as e:  # noqa: BLE001 — stale socket, perms, live daemon
+        print(f"nbid: cannot bind {socket_path}: {e}", file=sys.stderr)
+        return 1
+
+    def _stop(signum, frame):
+        server.close()
+
+    signal.signal(signal.SIGTERM, _stop)
+    signal.signal(signal.SIGINT, _stop)
+    print(
+        f"nbid: serving {type(server.backend).__name__} on {socket_path} "
+        f"(eco={'on' if server.controller else 'off'}, "
+        f"rate={args.rate:g}/s burst={args.burst:g})",
+        flush=True,
+    )
+    try:
+        server.serve_forever()
+    finally:
+        server.close()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -111,6 +111,9 @@ def main(argv=None) -> int:
     ap.add_argument("--for", dest="duration", type=float, default=0.0,
                     help="live duration in seconds (0 = until drained / "
                          "interrupted)")
+    from repro.cli.session import add_gateway_args
+
+    add_gateway_args(ap)
     args = ap.parse_args(argv)
 
     from repro.cli.render import emit_json
@@ -132,12 +135,42 @@ def main(argv=None) -> int:
 
     if args.live:
         enable()  # the ticker's own counters should actually record
-        from repro.core import get_queue_cache
+        from repro.cli.session import GatewayClient, resolve_backend
 
-        backend = get_queue_cache()
+        try:
+            backend = resolve_backend(args.gateway, args.gateway_socket)
+        except ConnectionError as e:
+            print(f"nbimon: {e}", file=sys.stderr)
+            return 1
         # --json promises machine-readable stdout: ticker lines move to
         # stderr so the final stats payload parses clean
         out = (lambda line: print(line, file=sys.stderr)) if args.json else print
+        if isinstance(backend, GatewayClient):
+            # daemon mode: stream the daemon's aggregated event ticker —
+            # no in-process bus or polling adapter, the daemon's single
+            # subscription fans out to every nbimon on the host
+            count = 0
+            try:
+                for e in backend.events(
+                    poll_s=args.poll, duration_s=args.duration
+                ):
+                    out(_fmt_event(e))
+                    count += 1
+            except KeyboardInterrupt:
+                pass
+            except ConnectionError as e:
+                print(f"nbimon: event stream lost: {e}", file=sys.stderr)
+                return 1
+            try:
+                payload = backend.stats()
+            except ConnectionError:
+                payload = {}
+            payload["events_streamed"] = count
+            if args.json:
+                emit_json(payload)
+            else:
+                print(f"{count} event(s) streamed from {backend.socket_path}")
+            return 0
         tracer = live_ticker(
             backend, duration_s=args.duration, poll_s=args.poll, out=out
         )
@@ -151,6 +184,36 @@ def main(argv=None) -> int:
             print(
                 f"{t['events_seen']} event(s), {t['spans_finished']} span(s) "
                 f"finished, {t['spans_open']} open"
+            )
+        return 0
+
+    if args.gateway:
+        # scrape the daemon: its stats RPC carries daemon counters, queue-
+        # cache numbers and (when the daemon runs with NBI_OBS=1) the full
+        # metrics snapshot — rendered as Prometheus text like a local dump
+        from repro.cli.session import GatewayClient
+
+        try:
+            payload = GatewayClient(args.gateway_socket).stats()
+        except ConnectionError as e:
+            print(f"nbimon: {e}", file=sys.stderr)
+            return 1
+        if args.json:
+            emit_json(payload)
+        elif payload.get("metrics"):
+            sys.stdout.write(obs_export.prometheus_from_snapshot(
+                {"metrics": payload["metrics"]}
+            ))
+        else:
+            d = payload.get("daemon", {})
+            qc = payload.get("queue_cache", {})
+            print(
+                f"gateway pid {d.get('pid')} up {d.get('uptime_s', 0.0):.0f}s "
+                f"| {d.get('connections', 0)} connection(s), "
+                f"{sum(d.get('requests', {}).values())} request(s), "
+                f"{d.get('throttled', 0)} throttled "
+                f"| cache: {qc.get('polls', 0)} poll(s), "
+                f"{qc.get('hits', 0)} hit(s)"
             )
         return 0
 

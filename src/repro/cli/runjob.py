@@ -83,6 +83,9 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--dry-run", action="store_true",
                     help="print the generated script, do not submit")
     ap.add_argument("--now", default=None, help=argparse.SUPPRESS)  # tests
+    from repro.cli.session import add_gateway_args
+
+    add_gateway_args(ap)
     return ap
 
 
@@ -120,6 +123,54 @@ def _hold_controller(sched, now):
     return controller
 
 
+def _submit_via_gateway(client, args, opts) -> int:
+    """Submit through a live nbid daemon.
+
+    Placement, array coalescing, eco pricing AND hold-and-release all
+    happen daemon-side (the daemon owns the EcoController, so held jobs
+    keep being released after this shell exits — no adoption loop
+    needed). The client only ships Job payloads and prints ids.
+    """
+    if args.from_file:
+        try:
+            commands = read_command_file(args.from_file)
+        except OSError as e:
+            print(f"cannot read {args.from_file}: {e.strerror or e}",
+                  file=sys.stderr)
+            return 1
+        if not commands:
+            print(f"no commands in {args.from_file}", file=sys.stderr)
+            return 1
+        jobs = [
+            Job(name=args.name if args.array else f"{args.name}-{i}",
+                command=cmd, opts=deepcopy(opts))
+            for i, cmd in enumerate(commands)
+        ]
+    else:
+        jobs = [Job(name=args.name, command=" ".join(args.command),
+                    opts=opts, files=args.files, workdir="")]
+    if args.cluster:
+        for job in jobs:
+            job.cluster = args.cluster
+    result = client.submit_batch(
+        jobs, eco=args.eco, coalesce=bool(args.array)
+    )
+    if result["eco_deferred"]:
+        print(
+            f"eco mode: {result['eco_deferred']} submission(s) held for "
+            f"favourable load (released by the gateway daemon)"
+        )
+    for jid in result["ids"]:
+        print(jid)
+    if args.array and args.from_file:
+        print(
+            f"# {len(result['ids'])} task(s) in "
+            f"{result['sbatch_calls']} submission(s) [gateway]",
+            file=sys.stderr,
+        )
+    return 0
+
+
 def main(argv=None) -> int:
     ap = build_parser()
     args = ap.parse_args(argv)
@@ -136,6 +187,31 @@ def main(argv=None) -> int:
         ap.error("--cluster pins a member; --anywhere routes freely — "
                  "pick one")
     cfg = load_config()
+
+    # --- daemon mode: a live nbid owns pricing/placement/holding; this
+    # process stays a thin client (dry runs always render locally)
+    if not args.dry_run and args.gateway is not False:
+        from repro.cli.session import GatewayClient, resolve_backend
+
+        be = resolve_backend(args.gateway, args.gateway_socket)
+        if isinstance(be, GatewayClient):
+            opts = Opts(
+                queue=args.queue if args.queue is not None else cfg.get("queue"),
+                threads=args.cpus,
+                memory_mb=memory_mb_from_cli(args.memory),
+                time_s=parse_time_s(args.time),
+                email_address=args.email,
+                email_type="END" if args.email else "NONE",
+                output_dir=args.output_dir,
+                gres=args.gres,
+                extra=list(args.sbatch),
+                tmpdir=cfg.get("tmpdir") or "",
+            )
+            if args.after:
+                opts.dependencies = [int(a) for a in args.after]
+            if args.begin:
+                opts.set_begin(args.begin)
+            return _submit_via_gateway(be, args, opts)
 
     # --- federation routing: resolve which member cluster this goes to
     backend = get_backend()

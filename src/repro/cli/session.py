@@ -1,4 +1,4 @@
-"""session — launch an interactive SLURM session.
+"""session — interactive SLURM sessions + the gateway thin client.
 
     session                 # 1 CPU, 4 GB, 2 h on the default partition
     session -c 8 -m 16 -t 4 # 8 CPUs, 16 GB, 4 hours
@@ -7,16 +7,246 @@
 Runs ``srun --pty bash`` with the requested resources. With ``--print`` (or
 when srun is unavailable — e.g. under the simulator backend) the fully
 formed command line is printed instead, which is also what the tests assert.
+
+This module is also where every CLI acquires **daemon mode**:
+:class:`GatewayClient` speaks the :mod:`repro.core.gateway` protocol over
+the per-host Unix socket and implements the Backend protocol, so any tool
+can treat the daemon exactly like a local backend. :func:`resolve_backend`
+is the one seam the CLIs call — it probes the socket and **transparently
+falls back to the in-process path** (``get_queue_cache()``) when no daemon
+is running, which keeps every existing invocation byte-identical while a
+running ``nbid`` silently collapses N processes' polling into one.
 """
 
 from __future__ import annotations
 
 import argparse
+import getpass
 import os
 import shutil
+import socket
 
-from repro.core import load_config, parse_time_s, format_slurm_time
 from repro.cli.runjob import memory_mb_from_cli
+from repro.core import format_slurm_time, load_config, parse_time_s
+from repro.core.gateway import (
+    GatewayConnectionLost,
+    GatewayError,
+    default_socket_path,
+    event_from_wire,
+    job_to_wire,
+    recv_frame,
+    send_frame,
+)
+
+
+# ---------------------------------------------------------------------------
+# GatewayClient — the Backend-protocol thin client
+# ---------------------------------------------------------------------------
+
+
+class GatewayClient:
+    """Backend-protocol client for a running :class:`GatewayServer`.
+
+    One short-lived connection per RPC (``wait`` and ``events`` hold
+    theirs open for the stream) — no shared socket state, so a client
+    object is safe to use from argparse-driven CLI code without lifecycle
+    ceremony. All errors surface as :class:`GatewayError` (daemon said
+    no) or :class:`GatewayConnectionLost` (daemon went away), the latter
+    a ``ConnectionError`` so existing retry/except paths compose.
+    """
+
+    def __init__(self, socket_path: str | None = None, *,
+                 user: str | None = None, timeout_s: float = 30.0):
+        self.socket_path = socket_path or default_socket_path()
+        if user is None:
+            try:
+                user = getpass.getuser()
+            except Exception:  # noqa: BLE001 — no passwd entry in containers
+                user = os.environ.get("USER", "anonymous")
+        self.user = user
+        self.timeout_s = timeout_s
+        self._next_id = 1
+
+    # -- plumbing -------------------------------------------------------------
+
+    def _connect(self, timeout_s: "float | None") -> socket.socket:
+        sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        sock.settimeout(timeout_s)
+        try:
+            sock.connect(self.socket_path)
+        except OSError as e:
+            sock.close()
+            raise GatewayConnectionLost(
+                f"no gateway at {self.socket_path}: {e}"
+            ) from e
+        return sock
+
+    def _call(self, method: str, *, _timeout_s: "float | None" = -1, **params):
+        timeout = self.timeout_s if _timeout_s == -1 else _timeout_s
+        params.setdefault("user", self.user)
+        rid = self._next_id
+        self._next_id += 1
+        sock = self._connect(timeout)
+        try:
+            try:
+                send_frame(sock, {"id": rid, "method": method, "params": params})
+                resp = recv_frame(sock)
+            except (OSError, ConnectionError) as e:
+                if isinstance(e, GatewayConnectionLost):
+                    raise
+                raise GatewayConnectionLost(
+                    f"gateway connection lost during {method}: {e}"
+                ) from e
+            if resp is None:
+                raise GatewayConnectionLost(
+                    f"gateway closed the connection during {method}"
+                )
+            if not resp.get("ok"):
+                raise GatewayError(str(resp.get("error", "unknown error")))
+            return resp.get("result")
+        finally:
+            sock.close()
+
+    # -- Backend protocol -----------------------------------------------------
+
+    def queue(self) -> list[dict]:
+        return self._call("queue")
+
+    def nodes_info(self) -> list[dict]:
+        return self._call("nodes_info")
+
+    def cancel(self, jobids: list) -> None:
+        self._call("cancel", ids=[str(j) for j in jobids])
+
+    def release(self, jobids: list) -> None:
+        self._call("release", ids=[str(j) for j in jobids])
+
+    def submit(self, job):
+        result = self.submit_batch([job])
+        base = result["base_ids"][0]
+        job.jobid = base
+        return base
+
+    def submit_many(self, jobs: list) -> list:
+        return self.submit_batch(jobs)["base_ids"]
+
+    # -- daemon-side services --------------------------------------------------
+
+    def submit_batch(self, jobs: list, *, eco: "bool | None" = None,
+                     coalesce: bool = True) -> dict:
+        """Submit through the daemon's SubmitEngine (placement, array
+        coalescing and eco hold-and-release all happen daemon-side — the
+        daemon keeps releasing held jobs after this process exits)."""
+        return self._call(
+            "submit_batch",
+            jobs=[job_to_wire(j) for j in jobs],
+            eco=eco, coalesce=coalesce,
+            _timeout_s=max(self.timeout_s, 300.0),
+        )
+
+    def wait(self, *, ids=None, user=None, name=None,
+             poll_s: float = 15.0, timeout_s: float = 0.0) -> dict:
+        """Server-side wait: blocks until the watch set drains."""
+        return self._call(
+            "wait",
+            ids=[str(i) for i in ids] if ids else None,
+            watch_user=user, name=name,
+            poll_s=poll_s, timeout_s=timeout_s,
+            _timeout_s=None,  # the daemon owns the deadline
+        )
+
+    def events(self, *, poll_s: float = 2.0, duration_s: float = 0.0,
+               max_events: int = 0):
+        """Generator over the daemon's aggregated event ticker
+        (:class:`~repro.core.events.JobEvent` objects)."""
+        rid = self._next_id
+        self._next_id += 1
+        sock = self._connect(None)
+        try:
+            send_frame(sock, {
+                "id": rid, "method": "events_subscribe",
+                "params": {"user": self.user, "poll_s": poll_s,
+                           "duration_s": duration_s,
+                           "max_events": max_events},
+            })
+            first = recv_frame(sock)
+            if first is None or not first.get("ok"):
+                raise GatewayError(
+                    str((first or {}).get("error", "subscribe failed"))
+                )
+            while True:
+                frame = recv_frame(sock)
+                if frame is None or frame.get("end"):
+                    return
+                if "event" in frame:
+                    yield event_from_wire(frame["event"])
+        except (OSError, ConnectionError) as e:
+            if isinstance(e, GatewayConnectionLost):
+                raise
+            raise GatewayConnectionLost(f"event stream lost: {e}") from e
+        finally:
+            sock.close()
+
+    def stats(self) -> dict:
+        return self._call("stats")
+
+    def ping(self) -> dict:
+        return self._call("ping", _timeout_s=2.0)
+
+    def advance(self, seconds: float) -> dict:
+        """Advance the daemon's simulated clock (sim backends only)."""
+        return self._call("advance", seconds=float(seconds), _timeout_s=None)
+
+    def shutdown(self) -> dict:
+        return self._call("shutdown")
+
+
+# ---------------------------------------------------------------------------
+# The CLI seam: --gateway/--no-gateway + transparent fallback
+# ---------------------------------------------------------------------------
+
+
+def add_gateway_args(ap: argparse.ArgumentParser) -> None:
+    """The shared ``--gateway`` / ``--no-gateway`` / ``--gateway-socket``
+    flags (default: auto-detect the socket, fall back in-process)."""
+    g = ap.add_mutually_exclusive_group()
+    g.add_argument("--gateway", dest="gateway", action="store_true",
+                   default=None,
+                   help="require the nbid daemon (error when absent)")
+    g.add_argument("--no-gateway", dest="gateway", action="store_false",
+                   help="force the in-process path even with a daemon up")
+    ap.add_argument("--gateway-socket", default=None, metavar="PATH",
+                    help="daemon socket (default: $NBI_GATEWAY_SOCKET or "
+                         "the per-user runtime path)")
+
+
+def resolve_backend(gateway: "bool | None" = None,
+                    socket_path: str | None = None):
+    """The backend a CLI should talk to.
+
+    ``gateway=True`` requires a live daemon (raises
+    :class:`GatewayConnectionLost` otherwise); ``False`` forces the
+    classic in-process shared cache; ``None`` (the default) probes the
+    socket once and silently falls back — with no daemon running the
+    returned object IS ``get_queue_cache()``, byte-identical behaviour.
+    """
+    if gateway is None and os.environ.get("NBI_NO_GATEWAY", ""):
+        gateway = False
+    if gateway is False:
+        from repro.core import get_queue_cache
+
+        return get_queue_cache()
+    client = GatewayClient(socket_path)
+    if gateway:
+        client.ping()  # raises GatewayConnectionLost when absent
+        return client
+    try:
+        client.ping()
+        return client
+    except (ConnectionError, GatewayError, OSError):
+        from repro.core import get_queue_cache
+
+        return get_queue_cache()
 
 
 def srun_command(

@@ -25,7 +25,7 @@ import time
 from collections import deque
 from dataclasses import dataclass, field
 
-from repro.core import Queue, QueuedJob, get_queue_cache
+from repro.core import Queue, QueuedJob
 from repro.cli.render import COLORS, RESET, STATE_COLORS
 
 COLUMNS = [  # (key, header, default width, default visible)
@@ -414,13 +414,18 @@ def main(argv=None) -> int:
     ap.add_argument("--stats", action="store_true",
                     help="print this session's observability snapshot "
                          "(cache hit rate, polls saved) as JSON on exit")
+    from repro.cli.session import add_gateway_args, resolve_backend
+
+    add_gateway_args(ap)
     args = ap.parse_args(argv)
 
     if args.stats:
         from repro.obs import enable
 
         enable()  # record this session's counters, not no-ops
-    backend = get_queue_cache()  # shared TTL cache: refresh ticks dedupe
+    # daemon when present (one poll serves every viewer), else the
+    # shared TTL cache: refresh ticks dedupe either way
+    backend = resolve_backend(args.gateway, args.gateway_socket)
     user = None
     if not args.all:
         user = args.user

@@ -9,7 +9,9 @@
 
 Exit status: 0 when every watched job COMPLETED, 1 when any ended
 FAILED / TIMEOUT / NODE_FAIL (or otherwise short of COMPLETED, e.g.
-CANCELLED), 2 on timeout.
+CANCELLED), 2 on timeout, 3 when the backend/daemon connection was lost
+mid-wait (the jobs may still be running — distinct from a timeout, which
+means the jobs were observed but too slow).
 
 Event-driven: instead of re-polling squeue until the watch set drains
 (one snapshot per poll tick), waitjobs takes ONE snapshot to resolve the
@@ -24,10 +26,11 @@ the wait loop advances simulated time, so integration tests run instantly.
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 from dataclasses import dataclass, field
 
-from repro.core import Queue, get_queue_cache
+from repro.core import Queue
 from repro.core.events import TERMINAL_EVENTS, PollingEventAdapter
 from repro.core.simcluster import SimCluster
 
@@ -42,6 +45,9 @@ class WaitResult:
     ok: bool  # the watch set drained before the timeout
     states: dict = field(default_factory=dict)  # jobid → final state
     snapshots: int = 0  # queue() snapshots taken end to end
+    #: the backend/daemon went away mid-wait: the watched jobs may well
+    #: still be running — must NOT read as a timeout (exit 3, not 2)
+    connection_lost: bool = False
 
     @property
     def failed_ids(self) -> list:
@@ -53,6 +59,8 @@ class WaitResult:
 
     @property
     def exit_code(self) -> int:
+        if self.connection_lost:
+            return 3
         if not self.ok:
             return 2
         return 0 if self.all_completed else 1
@@ -60,7 +68,8 @@ class WaitResult:
     def to_dict(self) -> dict:
         return {
             "ok": self.ok,
-            "timed_out": not self.ok,
+            "timed_out": not self.ok and not self.connection_lost,
+            "connection_lost": self.connection_lost,
             "exit_code": self.exit_code,
             "jobs": dict(sorted(self.states.items())),
             "failed": sorted(self.failed_ids),
@@ -136,33 +145,44 @@ def wait_for_events(
                     result.ok = False
                     return result
                 backend.advance(poll_s)
+        except ConnectionError:
+            result.ok = False
+            result.connection_lost = True
+            return result
         finally:
             bus.unsubscribe(token)
     else:
         adapter = PollingEventAdapter(backend)
         adapter.bus.subscribe(on_event, types=TERMINAL_EVENTS)
-        adapter.poll()  # baseline snapshot (no events by definition)
-        baseline = set(adapter._prev or {})
-        result.snapshots += 1
-        # a watched job can finish between the matching_ids snapshot and
-        # the baseline poll; it will never produce a vanish event, so
-        # resolve it here instead of blocking on it forever
-        raced = [jid for jid in remaining if jid not in baseline]
-        result.states.update(_final_states(inner, raced))
-        remaining -= set(raced)
-        while remaining:
-            if progress:
-                progress(len(remaining))
-            if timeout_s and time.monotonic() - start > timeout_s:
-                result.ok = False
-                return result
-            time.sleep(poll_s)
-            if controller is not None:
-                from datetime import datetime
-
-                controller.tick(datetime.now())
-            adapter.poll()
+        try:
+            adapter.poll()  # baseline snapshot (no events by definition)
+            baseline = set(adapter._prev or {})
             result.snapshots += 1
+            # a watched job can finish between the matching_ids snapshot
+            # and the baseline poll; it will never produce a vanish event,
+            # so resolve it here instead of blocking on it forever
+            raced = [jid for jid in remaining if jid not in baseline]
+            result.states.update(_final_states(inner, raced))
+            remaining -= set(raced)
+            while remaining:
+                if progress:
+                    progress(len(remaining))
+                if timeout_s and time.monotonic() - start > timeout_s:
+                    result.ok = False
+                    return result
+                time.sleep(poll_s)
+                if controller is not None:
+                    from datetime import datetime
+
+                    controller.tick(datetime.now())
+                adapter.poll()
+                result.snapshots += 1
+        except ConnectionError:
+            # the backend (a gateway daemon, a broken pipe to squeue's
+            # host) went away mid-wait: the jobs may still be running
+            result.ok = False
+            result.connection_lost = True
+            return result
     result.states.update(_final_states(inner, watched - set(result.states)))
     return result
 
@@ -265,13 +285,22 @@ def main(argv=None) -> int:
                     help="print this session's observability snapshot on "
                          "exit (queue polls saved, cache hit rate) as JSON")
     ap.add_argument("--quiet", action="store_true")
+    from repro.cli.session import add_gateway_args
+
+    add_gateway_args(ap)
     args = ap.parse_args(argv)
 
     if args.stats:
         from repro.obs import enable
 
         enable()  # record this session's counters, not no-ops
-    backend = get_queue_cache()  # dedupes squeue across the poll loop
+    from repro.cli.session import GatewayClient, resolve_backend
+
+    try:
+        backend = resolve_backend(args.gateway, args.gateway_socket)
+    except ConnectionError as e:
+        print(f"gateway connection failed: {e}", file=sys.stderr)
+        return 3
     user = args.user
     if user is None and not args.ids and not args.name:
         import getpass
@@ -281,28 +310,47 @@ def main(argv=None) -> int:
         except Exception:
             user = None
 
-    controller = None
-    if args.eco_release:
-        from repro.core import EcoController
+    if isinstance(backend, GatewayClient):
+        # server-side wait: the daemon subscribes once on its own bus and
+        # blocks this RPC until the watch set drains (its EcoController
+        # keeps releasing held jobs — --eco-release is implicit)
+        if args.eco_release and not args.quiet and not args.json:
+            print("eco: held-job release is owned by the gateway daemon")
+        try:
+            r = backend.wait(
+                ids=args.ids or None, user=user, name=args.name,
+                poll_s=args.poll, timeout_s=args.timeout,
+            )
+            result = WaitResult(
+                ok=bool(r.get("ok")),
+                states=dict(r.get("states", {})),
+                snapshots=int(r.get("snapshots", 0)),
+            )
+        except ConnectionError:
+            result = WaitResult(ok=False, connection_lost=True)
+    else:
+        controller = None
+        if args.eco_release:
+            from repro.core import EcoController
 
-        controller = EcoController.adopt(backend)
-        if not args.quiet and controller.held:
-            print(f"eco: managing {len(controller.held)} held job(s)")
+            controller = EcoController.adopt(backend)
+            if not args.quiet and controller.held:
+                print(f"eco: managing {len(controller.held)} held job(s)")
 
-    def progress(n):
-        if not args.quiet and not args.json:
-            print(f"waiting on {n} job(s)...", flush=True)
+        def progress(n):
+            if not args.quiet and not args.json:
+                print(f"waiting on {n} job(s)...", flush=True)
 
-    result = wait_for_events(
-        backend,
-        user=user,
-        name=args.name,
-        ids=args.ids or None,
-        poll_s=args.poll,
-        timeout_s=args.timeout,
-        progress=progress,
-        controller=controller,
-    )
+        result = wait_for_events(
+            backend,
+            user=user,
+            name=args.name,
+            ids=args.ids or None,
+            poll_s=args.poll,
+            timeout_s=args.timeout,
+            progress=progress,
+            controller=controller,
+        )
     if args.json:
         from repro.cli.render import emit_json
 
@@ -313,7 +361,9 @@ def main(argv=None) -> int:
             payload["stats"] = session_stats(cache=backend)
         emit_json(payload)
         return result.exit_code
-    if not result.ok:
+    if result.connection_lost:
+        print("connection lost", file=sys.stderr)
+    elif not result.ok:
         print("timeout")
     elif result.failed_ids:
         print(f"{len(result.failed_ids)} job(s) failed: "

@@ -8,8 +8,9 @@ from __future__ import annotations
 
 import argparse
 
-from repro.core import Queue, get_queue_cache
+from repro.core import Queue
 from repro.cli.render import emit_json, render_table
+from repro.cli.session import add_gateway_args, resolve_backend
 
 
 def utilisation_records(q: Queue) -> list[dict]:
@@ -82,9 +83,11 @@ def main(argv=None) -> int:
     ap.add_argument("--json", dest="as_json", action="store_true",
                     help="emit per-user utilisation as JSON for scripting")
     ap.add_argument("--no-color", action="store_true")
+    add_gateway_args(ap)
     args = ap.parse_args(argv)
 
-    q = Queue(queue=args.partition, backend=get_queue_cache())
+    backend = resolve_backend(args.gateway, args.gateway_socket)
+    q = Queue(queue=args.partition, backend=backend)
     if args.as_json:
         emit_json(utilisation_records(q))
         return 0

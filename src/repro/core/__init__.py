@@ -18,7 +18,14 @@ from .backend import (
     SlurmBackend,
     get_backend,
     parse_sacct_output,
+    reset_backend,
     reset_shared_sim,
+)
+from .gateway import (
+    GatewayConnectionLost,
+    GatewayError,
+    GatewayServer,
+    default_socket_path,
 )
 from .config import NBIConfig, load_config, write_config
 from .eco import CarbonTrace, EcoDecision, EcoScheduler
@@ -68,6 +75,9 @@ __all__ = [
     "Queue", "QueuedJob",
     "NBIConfig", "load_config", "write_config",
     "SimCluster", "SimJob", "SimNode",
-    "BatchSubmitError", "SlurmBackend", "get_backend", "reset_shared_sim",
+    "BatchSubmitError", "SlurmBackend", "get_backend",
+    "reset_backend", "reset_shared_sim",
+    "GatewayConnectionLost", "GatewayError", "GatewayServer",
+    "default_socket_path",
     "format_slurm_time", "parse_memory_mb", "parse_sacct_output", "parse_time_s",
 ]

@@ -331,6 +331,11 @@ def _shared_federation(*, required: bool):
         from .federation import ClusterRegistry, FederatedBackend
 
         if _SHARED_FED is not None:
+            # the shared QueueCache may be subscribed to the outgoing
+            # federation's bus: detach it BEFORE closing, or it stays a
+            # live subscriber of a dead backend until the next
+            # get_queue_cache() call notices (stale-subscriber leak)
+            _detach_shared_cache(_SHARED_FED)
             _SHARED_FED.close()
         _SHARED_FED = FederatedBackend(
             ClusterRegistry.from_config(cfg),
@@ -340,17 +345,40 @@ def _shared_federation(*, required: bool):
     return _SHARED_FED
 
 
+def _detach_shared_cache(backend) -> None:
+    """Unbind the process-shared QueueCache if it fronts ``backend``.
+
+    Must run *before* the backend is closed/dropped: a cache left
+    subscribed to a dead backend's bus keeps receiving (and acting on)
+    events from a world that no longer exists.
+    """
+    from . import engine
+
+    cache = engine._SHARED_CACHE
+    if cache is not None and cache.inner is backend:
+        cache.unbind_bus()
+
+
 def reset_shared_sim() -> None:
     """Forget the shared simulator/federation and the queue cache
     (test isolation)."""
     global _SHARED_SIM, _SHARED_FED
     _SHARED_SIM = None
-    if _SHARED_FED is not None:
-        _SHARED_FED.close()
-    _SHARED_FED = None
+    # detach the cache first: dropping a backend that still has the shared
+    # cache subscribed to its bus leaks a stale subscriber
     from .engine import reset_queue_cache
 
     reset_queue_cache()
+    if _SHARED_FED is not None:
+        _SHARED_FED.close()
+    _SHARED_FED = None
+
+
+def reset_backend() -> None:
+    """Public name for dropping every process-shared backend singleton
+    (simulator, federation, queue cache) — what tests and a cycling
+    gateway daemon call between worlds."""
+    reset_shared_sim()
 
 
 def _current_user() -> str:

@@ -23,6 +23,7 @@ their own mutations.
 
 from __future__ import annotations
 
+import threading
 import time as _time
 from dataclasses import dataclass, field
 from datetime import datetime
@@ -69,6 +70,13 @@ class QueueCache:
         self._clock = clock
         self._rows: list[dict] | None = None
         self._fetched_at: float = 0.0
+        # Held across the whole check-then-refresh in queue(): concurrent
+        # readers (gateway daemon connection threads) single-flight through
+        # one backend poll per invalidation window instead of racing N
+        # refreshes and tearing each other's snapshots. RLock because a
+        # refresh against the simulator can emit events that re-enter
+        # invalidate() on this same thread.
+        self._mu = threading.RLock()
         self._bus_token: "tuple | None" = None  # (bus, token)
         # observability (the queue-tools benchmark reports these)
         self.polls = 0  # real backend.queue() calls
@@ -81,24 +89,26 @@ class QueueCache:
     # -- Backend protocol -----------------------------------------------------
 
     def queue(self) -> list[dict]:
-        now = self._clock()
         reg = get_registry()
-        if self._rows is not None and now - self._fetched_at < self.ttl_s:
-            self.hits += 1
+        with self._mu:
+            now = self._clock()
+            if self._rows is not None and now - self._fetched_at < self.ttl_s:
+                self.hits += 1
+                reg.counter(
+                    "nbi_queuecache_hits_total", "queue() calls served from snapshot"
+                ).inc()
+                return self._rows
+            with timed(reg.histogram(
+                "nbi_queuecache_refresh_seconds", "backend.queue() refresh latency"
+            )):
+                rows = self.inner.queue()
+            self._rows = rows
+            self._fetched_at = now
+            self.polls += 1
             reg.counter(
-                "nbi_queuecache_hits_total", "queue() calls served from snapshot"
+                "nbi_queuecache_polls_total", "real backend.queue() polls"
             ).inc()
-            return self._rows
-        with timed(reg.histogram(
-            "nbi_queuecache_refresh_seconds", "backend.queue() refresh latency"
-        )):
-            self._rows = self.inner.queue()
-        self._fetched_at = now
-        self.polls += 1
-        reg.counter(
-            "nbi_queuecache_polls_total", "real backend.queue() polls"
-        ).inc()
-        return self._rows
+            return rows
 
     def submit(self, job) -> int:
         jobid = self.inner.submit(job)
@@ -126,7 +136,8 @@ class QueueCache:
 
     def invalidate(self) -> None:
         """Drop the snapshot; the next ``queue()`` re-polls the backend."""
-        self._rows = None
+        with self._mu:
+            self._rows = None
 
     def bind_bus(self, bus) -> None:
         """Invalidate on every :class:`~repro.core.events.JobEvent` on ``bus``."""
@@ -146,15 +157,17 @@ class QueueCache:
             self._bus_token = None
 
     def _on_event(self, event) -> None:
-        if self._rows is not None:
-            self.event_invalidations += 1
-            # counted only on a real invalidation (bounded by polls), never
-            # on the per-event fast path — native emission stays obs-free
-            get_registry().counter(
-                "nbi_queuecache_event_invalidations_total",
-                "snapshots dropped by bus events",
-            ).inc()
-        self.invalidate()
+        with self._mu:
+            if self._rows is not None:
+                self.event_invalidations += 1
+                # counted only on a real invalidation (bounded by polls),
+                # never on the per-event fast path — native emission stays
+                # obs-free
+                get_registry().counter(
+                    "nbi_queuecache_event_invalidations_total",
+                    "snapshots dropped by bus events",
+                ).inc()
+            self._rows = None
 
     def __getattr__(self, name):
         # Delegate simulator conveniences (get, accounting, jobs, now, ...);

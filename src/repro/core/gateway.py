@@ -1,0 +1,804 @@
+"""Shared gateway daemon — one poller, one placer, N thin clients.
+
+Every CLI process used to build its own backend, QueueCache, Placer and
+EcoController; at institutional scale that is N users × M tools
+independently hammering ``squeue`` and re-deriving identical placement
+state. :class:`GatewayServer` is a long-running per-host daemon that owns
+exactly ONE of each — the cache, the event bus, the federation
+placer/backlog tracker that ride the backend, and the eco
+hold-and-release controller — and serves thin clients over a Unix domain
+socket. One backend poll serves everyone, and held-job release / eco
+deadlines keep firing after the submitting shell exits because the
+*daemon*, not the CLI, owns the controller.
+
+Protocol: length-prefixed JSON-RPC. Each frame is a 4-byte big-endian
+payload length followed by that many bytes of UTF-8 JSON. Requests are
+``{"id": n, "method": str, "params": {...}}``; responses are
+``{"id": n, "ok": true, "result": ...}`` or ``{"id": n, "ok": false,
+"error": str}``. ``events_subscribe`` is the one streaming method: after
+the initial response the server keeps sending ``{"event": {...}}``
+frames until the client disconnects (or the requested duration elapses,
+closed by an ``{"end": true}`` frame).
+
+Methods: ``ping``, ``queue``, ``nodes_info``, ``submit_batch``,
+``cancel``, ``release``, ``wait``, ``events_subscribe``, ``stats``,
+``advance`` (simulated backends only) and ``shutdown``.
+
+Fair share: every request draws one token from the calling user's
+token bucket (``rate`` tokens/s, ``burst`` capacity); an empty bucket
+delays the request instead of rejecting it, so a flood from one user
+slows that user down without starving the others.
+
+Namespacing: job ids submitted through the daemon are recorded against
+the submitting user; ``cancel``/``release`` refuse to touch another
+user's daemon-submitted jobs (ids the daemon never saw are passed
+through — it cannot know their owner).
+
+The thin-client side lives in :mod:`repro.cli.session`
+(``GatewayClient``): it speaks this protocol and transparently falls
+back to the in-process path when no daemon socket is present, which is
+what gives every existing CLI daemon mode without code churn.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import socket
+import struct
+import threading
+import time as _time
+from datetime import datetime
+
+from repro.obs.metrics import get_registry
+
+from . import events as ev
+from .engine import QueueCache
+
+PROTOCOL_VERSION = 1
+
+#: frames above this are refused — a corrupt length prefix must not make
+#: the daemon try to allocate gigabytes
+MAX_FRAME_BYTES = 32 * 1024 * 1024
+
+_LEN = struct.Struct(">I")
+
+
+class GatewayError(RuntimeError):
+    """The daemon answered, but with an error (bad request, unknown id...)."""
+
+
+class GatewayConnectionLost(ConnectionError):
+    """The daemon went away mid-conversation (socket closed / refused)."""
+
+
+# ---------------------------------------------------------------------------
+# Framing (shared by server and client)
+# ---------------------------------------------------------------------------
+
+
+def send_frame(sock: socket.socket, obj) -> None:
+    """Serialise ``obj`` as one length-prefixed JSON frame."""
+    payload = json.dumps(obj, separators=(",", ":"), default=str).encode("utf-8")
+    if len(payload) > MAX_FRAME_BYTES:
+        raise GatewayError(f"frame too large ({len(payload)} bytes)")
+    sock.sendall(_LEN.pack(len(payload)) + payload)
+
+
+def recv_frame(sock: socket.socket):
+    """Read one frame; returns the decoded object, or None on clean EOF."""
+    header = _recv_exact(sock, _LEN.size)
+    if header is None:
+        return None
+    (length,) = _LEN.unpack(header)
+    if length > MAX_FRAME_BYTES:
+        raise GatewayError(f"frame too large ({length} bytes)")
+    payload = _recv_exact(sock, length)
+    if payload is None:
+        raise GatewayConnectionLost("connection closed mid-frame")
+    return json.loads(payload.decode("utf-8"))
+
+
+def _recv_exact(sock: socket.socket, n: int) -> "bytes | None":
+    buf = b""
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            return None
+        buf += chunk
+    return buf
+
+
+def default_socket_path() -> str:
+    """Where clients look for the daemon: ``$NBI_GATEWAY_SOCKET``, else a
+    per-user path under ``$XDG_RUNTIME_DIR`` (``/tmp`` fallback)."""
+    explicit = os.environ.get("NBI_GATEWAY_SOCKET", "")
+    if explicit:
+        return explicit
+    run = os.environ.get("XDG_RUNTIME_DIR", "")
+    if run and os.path.isdir(run):
+        return os.path.join(run, "nbi-gateway.sock")
+    return f"/tmp/nbi-gateway-{os.getuid()}.sock"
+
+
+# ---------------------------------------------------------------------------
+# Fair-share rate limiting
+# ---------------------------------------------------------------------------
+
+
+class TokenBucket:
+    """Classic token bucket: ``rate`` tokens/s, ``burst`` capacity.
+
+    :meth:`reserve` always grants the token but returns how long the
+    caller should wait before acting on it (0.0 while the bucket has
+    credit) — delaying instead of rejecting is what makes the gateway's
+    fair share a throttle, not an error path.
+    """
+
+    def __init__(self, rate: float, burst: float, clock=_time.monotonic):
+        self.rate = max(1e-9, float(rate))
+        self.burst = max(1.0, float(burst))
+        self._clock = clock
+        self._tokens = self.burst
+        self._at = clock()
+        self._lock = threading.Lock()
+
+    def reserve(self, n: float = 1.0) -> float:
+        """Take ``n`` tokens; returns seconds to wait before proceeding."""
+        with self._lock:
+            now = self._clock()
+            self._tokens = min(self.burst, self._tokens + (now - self._at) * self.rate)
+            self._at = now
+            self._tokens -= n
+            if self._tokens >= 0:
+                return 0.0
+            return -self._tokens / self.rate
+
+
+# ---------------------------------------------------------------------------
+# Job wire format (client serialises, daemon reconstructs)
+# ---------------------------------------------------------------------------
+
+_OPTS_FIELDS = None
+
+
+def job_to_wire(job) -> dict:
+    """A :class:`~repro.core.job.Job` as a JSON-safe dict."""
+    from dataclasses import asdict
+
+    return {
+        "name": job.name,
+        "commands": list(job.commands),
+        "task_commands": list(job.task_commands) if job.task_commands else None,
+        "files": list(job.files),
+        "workdir": job.workdir,
+        "sim_duration_s": job.sim_duration_s,
+        "tool": getattr(job, "tool", ""),
+        "cluster": getattr(job, "cluster", ""),
+        "eco_meta": getattr(job, "eco_meta", None),
+        "prelude": list(job.prelude),
+        "trailer": list(job.trailer),
+        "opts": asdict(job.opts),
+    }
+
+
+def job_from_wire(wire: dict):
+    """Rebuild a submittable Job from :func:`job_to_wire` output.
+
+    Unknown ``opts`` keys are dropped (a newer client talking to an older
+    daemon must not crash it).
+    """
+    import dataclasses
+
+    from .job import Job
+    from .resources import Opts
+
+    global _OPTS_FIELDS
+    if _OPTS_FIELDS is None:
+        _OPTS_FIELDS = {f.name for f in dataclasses.fields(Opts)}
+    optsd = {k: v for k, v in dict(wire.get("opts") or {}).items()
+             if k in _OPTS_FIELDS}
+    job = Job(
+        name=str(wire.get("name", "job")),
+        command=list(wire.get("commands") or []),
+        opts=Opts(**optsd),
+        workdir=str(wire.get("workdir", "")),
+        sim_duration_s=wire.get("sim_duration_s"),
+    )
+    job.files = [str(f) for f in wire.get("files") or []]
+    tc = wire.get("task_commands")
+    job.task_commands = [str(c) for c in tc] if tc else None
+    job.prelude = [str(p) for p in wire.get("prelude") or []]
+    job.trailer = [str(t) for t in wire.get("trailer") or []]
+    job.tool = str(wire.get("tool", ""))
+    eco_meta = wire.get("eco_meta")
+    job.eco_meta = dict(eco_meta) if isinstance(eco_meta, dict) else None
+    cluster = str(wire.get("cluster", ""))
+    if cluster:
+        job.cluster = cluster
+    return job
+
+
+def event_to_wire(event) -> dict:
+    return {
+        "type": event.type,
+        "jobid": event.jobid,
+        "at": event.at.isoformat() if hasattr(event.at, "isoformat") else str(event.at),
+        "name": event.name,
+        "user": event.user,
+        "state": event.state,
+        "node": event.node,
+        "reason": event.reason,
+        "cluster": event.cluster,
+    }
+
+
+def event_from_wire(wire: dict):
+    at = wire.get("at", "")
+    try:
+        at = datetime.fromisoformat(at)
+    except (TypeError, ValueError):
+        at = datetime.now()
+    return ev.JobEvent(
+        type=str(wire.get("type", "")),
+        jobid=str(wire.get("jobid", "")),
+        at=at,
+        name=str(wire.get("name", "")),
+        user=str(wire.get("user", "")),
+        state=str(wire.get("state", "")),
+        node=str(wire.get("node", "")),
+        reason=str(wire.get("reason", "")),
+        cluster=str(wire.get("cluster", "")),
+    )
+
+
+# ---------------------------------------------------------------------------
+# The daemon
+# ---------------------------------------------------------------------------
+
+
+class GatewayServer:
+    """The per-host daemon: one cache, one bus, one controller; N clients.
+
+    Parameters
+    ----------
+    backend:
+        Backend-protocol object; default resolves via ``get_backend()``
+        (federated when stanzas are configured — the Placer and
+        BacklogTracker then ride along and are shared by every client).
+    socket_path:
+        Unix socket to listen on (default :func:`default_socket_path`).
+    ttl_s:
+        QueueCache TTL. Event invalidation makes staleness event-driven;
+        the TTL is only the fallback for eventless backends.
+    eco:
+        Build an :class:`~repro.core.ecocontroller.EcoController` owned
+        by the daemon: ``submit_batch(eco=True)`` submissions are held
+        and released reactively even after the submitting shell exits.
+    rate / burst:
+        Per-user token-bucket fair share (tokens/s, bucket capacity).
+    poll_s:
+        Background pump cadence against non-simulated backends (the
+        PollingEventAdapter poll / controller tick interval).
+    """
+
+    def __init__(
+        self,
+        backend=None,
+        socket_path: str | None = None,
+        *,
+        ttl_s: float = 2.0,
+        eco: bool = True,
+        rate: float = 50.0,
+        burst: float = 100.0,
+        max_throttle_s: float = 2.0,
+        poll_s: float = 15.0,
+        clock=_time.monotonic,
+    ):
+        if backend is None:
+            from .backend import get_backend
+
+            backend = get_backend()
+        inner = backend.inner if isinstance(backend, QueueCache) else backend
+        self.backend = inner
+        self.cache = (
+            backend if isinstance(backend, QueueCache)
+            else QueueCache(inner, ttl_s=ttl_s)
+        )
+        self.socket_path = socket_path or default_socket_path()
+        self._clock = clock
+        self.rate = float(rate)
+        self.burst = float(burst)
+        self.max_throttle_s = float(max_throttle_s)
+        self.poll_s = float(poll_s)
+        #: one advance()/poll-capable lock serialising every backend touch
+        #: from the per-connection threads (the simulator is not
+        #: thread-safe; real squeue/sbatch calls gain nothing from racing)
+        self._lock = threading.RLock()
+        self._sim_like = hasattr(inner, "advance")
+        self._adapter = None
+        bus = getattr(inner, "bus", None)
+        if bus is None:
+            # pushless backend (real SLURM): the daemon owns the single
+            # polling adapter; its bus is the daemon bus
+            self._adapter = ev.PollingEventAdapter(self.cache)
+            bus = self._adapter.bus
+        self.bus = bus
+        self.controller = None
+        if eco:
+            from .ecocontroller import EcoController
+
+            self.controller = EcoController(self.cache)
+        from .config import load_config
+
+        cfg = load_config()
+        self._eco_default = cfg.get_bool("economy_mode")
+        try:
+            from repro.accounting import predictor_from_config
+
+            self.predictor = predictor_from_config(cfg)
+        except Exception:  # noqa: BLE001 — predictor is an optional refinement
+            self.predictor = None
+        #: base job id (str) → submitting user (per-user namespacing)
+        self.owners: dict[str, str] = {}
+        self._buckets: dict[str, TokenBucket] = {}
+        self._buckets_lock = threading.Lock()
+        # plain-int daemon stats (exact even with metrics disabled)
+        self.started_at = _time.time()
+        self.connections = 0
+        self.inflight = 0
+        self.requests: dict[str, int] = {}
+        self.throttled = 0
+        self._stop = threading.Event()
+        self._listener: socket.socket | None = None
+        self._threads: list[threading.Thread] = []
+        self._pump_thread: threading.Thread | None = None
+        self._wait_wakeup = threading.Event()
+
+    # -- lifecycle -------------------------------------------------------------
+
+    def bind(self) -> "GatewayServer":
+        """Create and bind the listening socket (idempotent)."""
+        if self._listener is not None:
+            return self
+        path = self.socket_path
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        if os.path.exists(path):
+            # leftover from a crashed daemon? refuse only if it's live
+            probe = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+            try:
+                probe.settimeout(0.25)
+                probe.connect(path)
+                probe.close()
+                raise GatewayError(f"another gateway is live on {path}")
+            except (ConnectionRefusedError, socket.timeout, FileNotFoundError, OSError) as e:
+                if isinstance(e, GatewayError):
+                    raise
+                probe.close()
+                os.unlink(path)
+        listener = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        listener.bind(path)
+        # login-node usage: other users' thin clients must be able to
+        # connect (requests carry the user; ids are namespaced per user)
+        try:
+            os.chmod(path, 0o666)
+        except OSError:
+            pass
+        listener.listen(64)
+        listener.settimeout(0.2)  # periodic stop-flag checks
+        self._listener = listener
+        return self
+
+    def start(self) -> threading.Thread:
+        """Serve in a daemon thread (tests, benchmarks, embedded use)."""
+        self.bind()
+        t = threading.Thread(target=self.serve_forever, daemon=True,
+                             name="nbi-gateway-accept")
+        t.start()
+        return t
+
+    def serve_forever(self) -> None:
+        """Accept loop; returns after :meth:`close` (or ``shutdown`` RPC)."""
+        self.bind()
+        if not self._sim_like and self._pump_thread is None:
+            self._pump_thread = threading.Thread(
+                target=self._pump_loop, daemon=True, name="nbi-gateway-pump"
+            )
+            self._pump_thread.start()
+        while not self._stop.is_set():
+            try:
+                conn, _ = self._listener.accept()
+            except socket.timeout:
+                continue
+            except OSError:
+                break  # listener closed under us (close())
+            self.connections += 1
+            t = threading.Thread(
+                target=self._serve_conn, args=(conn,), daemon=True,
+                name=f"nbi-gateway-conn-{self.connections}",
+            )
+            t.start()
+            self._threads.append(t)
+            self._threads = [x for x in self._threads if x.is_alive()]
+
+    def close(self) -> None:
+        """Stop serving and detach everything the daemon subscribed.
+
+        A closed daemon must leave the backend exactly as it found it:
+        cache unbound from the bus, controller hooks removed — cycling
+        daemons in one process (tests) must not accumulate stale
+        subscribers.
+        """
+        self._stop.set()
+        self._wait_wakeup.set()
+        if self._listener is not None:
+            try:
+                self._listener.close()
+            finally:
+                self._listener = None
+        try:
+            if os.path.exists(self.socket_path):
+                os.unlink(self.socket_path)
+        except OSError:
+            pass
+        if self.controller is not None:
+            self.controller.detach()
+        self.cache.unbind_bus()
+
+    # -- connection handling -----------------------------------------------------
+
+    def _serve_conn(self, conn: socket.socket) -> None:
+        reg = get_registry()
+        self.inflight += 1
+        if reg.enabled:
+            reg.gauge(
+                "nbi_gateway_inflight_connections", "open client connections"
+            ).set(self.inflight)
+            reg.counter(
+                "nbi_gateway_connections_total", "client connections accepted"
+            ).inc()
+        try:
+            while not self._stop.is_set():
+                try:
+                    req = recv_frame(conn)
+                except (GatewayError, GatewayConnectionLost, OSError,
+                        json.JSONDecodeError):
+                    break
+                if req is None:
+                    break
+                self._handle(conn, req if isinstance(req, dict) else {})
+                if isinstance(req, dict) and req.get("method") == "shutdown":
+                    break
+        finally:
+            self.inflight -= 1
+            if reg.enabled:
+                reg.gauge(
+                    "nbi_gateway_inflight_connections", "open client connections"
+                ).set(self.inflight)
+            try:
+                conn.close()
+            except OSError:
+                pass
+
+    def _handle(self, conn: socket.socket, req: dict) -> None:
+        method = str(req.get("method", ""))
+        params = req.get("params") or {}
+        if not isinstance(params, dict):
+            params = {}
+        user = str(params.get("user", "") or "") or "anonymous"
+        rid = req.get("id")
+        self.requests[method] = self.requests.get(method, 0) + 1
+        delay = self._bucket(user).reserve()
+        if delay > 0:
+            self.throttled += 1
+            reg = get_registry()
+            if reg.enabled:
+                reg.counter(
+                    "nbi_gateway_throttled_total",
+                    "requests delayed by fair-share rate limiting",
+                ).inc()
+            self._stop.wait(min(delay, self.max_throttle_s))
+        t0 = _time.perf_counter()
+        try:
+            handler = getattr(self, f"_rpc_{method}", None)
+            if handler is None:
+                raise GatewayError(f"unknown method {method!r}")
+            if method == "events_subscribe":
+                handler(conn, rid, user, params)  # streaming: owns the reply
+                return
+            result = handler(user, params)
+            send_frame(conn, {"id": rid, "ok": True, "result": result})
+        except (GatewayError, ValueError, KeyError, TypeError) as e:
+            try:
+                send_frame(conn, {"id": rid, "ok": False, "error": str(e)})
+            except OSError:
+                pass
+        except OSError:
+            pass  # client went away mid-reply
+        finally:
+            reg = get_registry()
+            if reg.enabled:
+                reg.counter(
+                    "nbi_gateway_requests_total", "gateway RPCs served",
+                    labels=("method",),
+                ).labels(method=method or "?").inc()
+                reg.histogram(
+                    "nbi_gateway_request_seconds", "gateway RPC latency",
+                    labels=("method",),
+                ).labels(method=method or "?").observe(_time.perf_counter() - t0)
+
+    def _bucket(self, user: str) -> TokenBucket:
+        with self._buckets_lock:
+            b = self._buckets.get(user)
+            if b is None:
+                b = self._buckets[user] = TokenBucket(
+                    self.rate, self.burst, clock=self._clock
+                )
+            return b
+
+    # -- pump (shared clock/event driver) -----------------------------------------
+
+    def _pump_once(self, step_s: float) -> None:
+        """One event-delivery step: advance the simulator, or take one
+        adapter poll + controller tick against a real backend."""
+        with self._lock:
+            if self._sim_like:
+                self.cache.advance(step_s)  # mutator wrapper invalidates
+            elif self._adapter is not None:
+                self.cache.invalidate()  # the adapter must see fresh rows
+                self._adapter.poll()
+                if self.controller is not None:
+                    self.controller.tick(datetime.now())
+        self._wait_wakeup.set()
+        self._wait_wakeup.clear()
+
+    def _pump_loop(self) -> None:
+        while not self._stop.wait(self.poll_s):
+            try:
+                self._pump_once(self.poll_s)
+            except Exception:  # noqa: BLE001 — the pump must survive squeue hiccups
+                pass
+
+    # -- RPC handlers --------------------------------------------------------------
+
+    def _rpc_ping(self, user: str, params: dict) -> dict:
+        return {
+            "pong": True,
+            "pid": os.getpid(),
+            "protocol": PROTOCOL_VERSION,
+            "backend": type(self.backend).__name__,
+        }
+
+    def _rpc_queue(self, user: str, params: dict) -> list:
+        with self._lock:
+            return self.cache.queue()
+
+    def _rpc_nodes_info(self, user: str, params: dict) -> list:
+        with self._lock:
+            return self.cache.nodes_info()
+
+    def _rpc_submit_batch(self, user: str, params: dict) -> dict:
+        wires = params.get("jobs")
+        if not isinstance(wires, list) or not wires:
+            raise GatewayError("submit_batch needs a non-empty jobs list")
+        jobs = [job_from_wire(w) for w in wires]
+        eco = params.get("eco")
+        eco = self._eco_default if eco is None else bool(eco)
+        from .engine import SubmitEngine
+
+        with self._lock:
+            engine = SubmitEngine(
+                self.cache,
+                coalesce=bool(params.get("coalesce", True)),
+                eco=eco,
+                controller=self.controller if eco else None,
+                predictor=self.predictor,
+            )
+            result = engine.submit_many(jobs)
+        from .federation import array_base_id
+
+        for base in result.base_ids:
+            self.owners[array_base_id(str(base))] = user
+        return {
+            "ids": list(result.ids),
+            "base_ids": [str(b) for b in result.base_ids],
+            "sbatch_calls": result.sbatch_calls,
+            "coalesced": result.coalesced,
+            "eco_deferred": result.eco_deferred,
+            "placements": sorted(p for p in result.placements if p),
+        }
+
+    def _partition_owned(self, user: str, ids: list) -> "tuple[list, list]":
+        """Split requested ids into (allowed, denied-by-namespacing)."""
+        from .federation import array_base_id
+
+        allowed, denied = [], []
+        for jid in ids:
+            owner = self.owners.get(array_base_id(str(jid)))
+            if owner is not None and owner != user:
+                denied.append(str(jid))
+            else:
+                allowed.append(str(jid))
+        return allowed, denied
+
+    def _rpc_cancel(self, user: str, params: dict) -> dict:
+        ids = list(params.get("ids") or [])
+        allowed, denied = self._partition_owned(user, ids)
+        if allowed:
+            with self._lock:
+                self.cache.cancel(allowed)
+        return {"cancelled": allowed, "denied": denied}
+
+    def _rpc_release(self, user: str, params: dict) -> dict:
+        ids = list(params.get("ids") or [])
+        allowed, denied = self._partition_owned(user, ids)
+        if allowed:
+            with self._lock:
+                self.cache.release(allowed)
+        return {"released": allowed, "denied": denied}
+
+    def _rpc_advance(self, user: str, params: dict) -> dict:
+        if not self._sim_like:
+            raise GatewayError("advance is only available on simulated backends")
+        seconds = float(params.get("seconds", 0.0))
+        self._pump_once(seconds)
+        now = getattr(self.backend, "now", None)
+        return {"now": now.isoformat() if now is not None else ""}
+
+    def _rpc_wait(self, user: str, params: dict) -> dict:
+        """Block until the watch set drains; returns per-job final states.
+
+        The daemon waits on its own bus — one subscription serves the
+        request regardless of how many jobs are watched, and against a
+        simulated backend the wait itself advances simulated time (the
+        RPC is the clock, exactly like ``waitjobs`` in-process).
+        """
+        from repro.cli.waitjobs import _final_states, _id_matches, _norm_state
+
+        ids = params.get("ids") or None
+        watch_user = params.get("watch_user") or None
+        name = params.get("name") or None
+        poll_s = float(params.get("poll_s", self.poll_s) or self.poll_s)
+        timeout_s = float(params.get("timeout_s", 0.0) or 0.0)
+
+        from .queue import Queue
+
+        with self._lock:
+            q = Queue(user=watch_user, name=name, backend=self.cache)
+            if ids:
+                want = {str(i) for i in ids}
+                watched = {j.jobid for j in q
+                           if any(_id_matches(j.jobid, req) for req in want)}
+            else:
+                watched = set(q.ids())
+        states: dict[str, str] = {}
+        snapshots = 1
+        if ids:
+            gone = [req for req in {str(i) for i in ids}
+                    if not any(_id_matches(w, req) for w in watched)]
+            if gone:
+                with self._lock:
+                    states.update(_final_states(self.backend, gone))
+        remaining = set(watched)
+        ok = True
+        if remaining:
+            done_evt = threading.Event()
+
+            def on_event(event):
+                if event.jobid in remaining:
+                    states[event.jobid] = _norm_state(event.state) or event.type
+                    remaining.discard(event.jobid)
+                    if not remaining:
+                        done_evt.set()
+
+            token = self.bus.subscribe(on_event, types=ev.TERMINAL_EVENTS)
+            start = _time.monotonic()
+            try:
+                while remaining and not self._stop.is_set():
+                    if timeout_s and _time.monotonic() - start > timeout_s:
+                        ok = False
+                        break
+                    if self._sim_like:
+                        # native events: advancing IS the wait; no snapshots
+                        self._pump_once(poll_s)
+                        _time.sleep(0.001)  # yield; bounded CPU on long waits
+                    else:
+                        done_evt.wait(min(poll_s, 1.0))
+            finally:
+                self.bus.unsubscribe(token)
+            if ok and remaining:
+                with self._lock:
+                    states.update(_final_states(self.backend, remaining))
+        return {
+            "ok": ok,
+            "states": dict(sorted(states.items())),
+            "snapshots": snapshots,
+        }
+
+    def _rpc_events_subscribe(self, conn, rid, user: str, params: dict) -> None:
+        """Stream the daemon's aggregated event ticker to this client."""
+        import queue as _queue
+
+        poll_s = float(params.get("poll_s", 2.0) or 2.0)
+        duration_s = float(params.get("duration_s", 0.0) or 0.0)
+        max_events = int(params.get("max_events", 0) or 0)
+        pending: _queue.Queue = _queue.Queue()
+        token = self.bus.subscribe(pending.put)
+        sent = 0
+        try:
+            send_frame(conn, {"id": rid, "ok": True, "result": {"subscribed": True}})
+            start = _time.monotonic()
+            while not self._stop.is_set():
+                if duration_s and _time.monotonic() - start >= duration_s:
+                    break
+                if self._sim_like:
+                    self._pump_once(poll_s)
+                else:
+                    _time.sleep(min(poll_s, 0.5))
+                while True:
+                    try:
+                        event = pending.get_nowait()
+                    except _queue.Empty:
+                        break
+                    send_frame(conn, {"event": event_to_wire(event)})
+                    sent += 1
+                    if max_events and sent >= max_events:
+                        raise _StreamDone
+                if max_events and sent >= max_events:
+                    break
+                if self._sim_like and not self._any_active():
+                    break  # simulated queue drained — nothing left to stream
+        except (_StreamDone, OSError, BrokenPipeError):
+            pass
+        finally:
+            self.bus.unsubscribe(token)
+            try:
+                send_frame(conn, {"end": True, "events": sent})
+            except OSError:
+                pass
+
+    def _any_active(self) -> bool:
+        with self._lock:
+            return bool(self.cache.queue())
+
+    def _rpc_stats(self, user: str, params: dict) -> dict:
+        out = {
+            "daemon": {
+                "pid": os.getpid(),
+                "protocol": PROTOCOL_VERSION,
+                "socket": self.socket_path,
+                "backend": type(self.backend).__name__,
+                "uptime_s": _time.time() - self.started_at,
+                "connections": self.connections,
+                "inflight": self.inflight,
+                "requests": dict(sorted(self.requests.items())),
+                "throttled": self.throttled,
+                "rate": self.rate,
+                "burst": self.burst,
+                "owners": len(self.owners),
+            },
+            "queue_cache": {
+                "polls": self.cache.polls,
+                "hits": self.cache.hits,
+                "event_invalidations": self.cache.event_invalidations,
+            },
+        }
+        if self.controller is not None:
+            out["eco"] = {
+                "held": len(self.controller.held),
+                "released": len(self.controller.released),
+            }
+        reg = get_registry()
+        if getattr(reg, "enabled", False):
+            from repro.obs.export import snapshot
+
+            out["metrics"] = snapshot(reg)["metrics"]
+        return out
+
+    def _rpc_shutdown(self, user: str, params: dict) -> dict:
+        self._stop.set()
+        return {"stopping": True}
+
+
+class _StreamDone(Exception):
+    pass

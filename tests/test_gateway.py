@@ -1,0 +1,477 @@
+"""Gateway daemon: protocol round-trips, namespacing, fair share, the
+thin-client fallback, and the shared-cache detach regression.
+
+Everything runs the real Unix-socket path — a GatewayServer in a daemon
+thread over a dedicated simulator, GatewayClients connecting through the
+filesystem — so the frames, threading and lifecycle under test are
+exactly what production ``nbid`` runs.
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+
+import pytest
+
+from repro.cli.session import GatewayClient, resolve_backend
+from repro.core import Job, Opts, SimCluster, get_backend, get_queue_cache
+from repro.core.engine import QueueCache
+from repro.core.gateway import (
+    GatewayConnectionLost,
+    GatewayError,
+    GatewayServer,
+    TokenBucket,
+    job_from_wire,
+    job_to_wire,
+)
+
+
+def _job(name="j", duration=60, **opts):
+    return Job(name=name, command="true",
+               opts=Opts.new(threads=1, memory="1GB", time="1h", **opts),
+               sim_duration_s=duration)
+
+
+@pytest.fixture
+def daemon(tmp_path):
+    """A served gateway over a dedicated simulator; closed after the test."""
+    sim = SimCluster(default_user="alice")
+    sock = str(tmp_path / "gw.sock")
+    server = GatewayServer(sim, sock, rate=10_000, burst=10_000)
+    server.start()
+    try:
+        yield server, sock, sim
+    finally:
+        server.close()
+
+
+def _client(sock, user="alice"):
+    return GatewayClient(sock, user=user)
+
+
+class TestTokenBucket:
+    def test_burst_then_linear_delay(self):
+        now = [100.0]
+        b = TokenBucket(rate=10.0, burst=5.0, clock=lambda: now[0])
+        assert [b.reserve() for _ in range(5)] == [0.0] * 5
+        assert b.reserve() == pytest.approx(0.1)
+        assert b.reserve() == pytest.approx(0.2)
+
+    def test_refill_restores_credit(self):
+        now = [0.0]
+        b = TokenBucket(rate=10.0, burst=2.0, clock=lambda: now[0])
+        b.reserve(), b.reserve()
+        assert b.reserve() > 0
+        now[0] += 10.0  # long idle: bucket refills to burst, no further
+        assert b.reserve() == 0.0
+        assert b.reserve() == 0.0
+        assert b.reserve() > 0.0
+
+
+class TestWireFormat:
+    def test_job_round_trip_through_json(self):
+        job = _job(name="wire", duration=120, queue="short")
+        job.prelude = ["module load x"]
+        job.files = ["a.fastq", "b.fastq"]
+        wire = json.loads(json.dumps(job_to_wire(job)))
+        back = job_from_wire(wire)
+        assert back.name == "wire"
+        assert back.files == ["a.fastq", "b.fastq"]
+        assert back.prelude == ["module load x"]
+        assert back.sim_duration_s == 120
+        assert back.opts.queue == "short"
+        assert back.opts.threads == job.opts.threads
+        assert back.opts.memory_mb == job.opts.memory_mb
+
+    def test_unknown_opts_keys_dropped(self):
+        wire = job_to_wire(_job())
+        wire["opts"]["knob_from_the_future"] = 7
+        assert job_from_wire(wire).opts.threads == 1
+
+
+class TestServerRpc:
+    def test_ping_and_empty_queue(self, daemon):
+        server, sock, sim = daemon
+        c = _client(sock)
+        pong = c.ping()
+        assert pong["pong"] and pong["backend"] == "SimCluster"
+        assert c.queue() == []
+        assert c.nodes_info()[0]["name"] == "n000"
+
+    def test_submit_batch_coalesces_and_runs_to_completion(self, daemon):
+        server, sock, sim = daemon
+        c = _client(sock)
+        r = c.submit_batch([_job(name="sweep") for _ in range(6)], eco=False)
+        assert r["sbatch_calls"] == 1 and r["coalesced"] == 6
+        assert len(r["ids"]) == 6
+        assert len(c.queue()) == 6
+        c.advance(3600)
+        assert c.queue() == []
+        states = {j.state for j in sim.jobs.values()}
+        assert states == {"COMPLETED"}
+
+    def test_wait_rpc_drains_and_reports_states(self, daemon):
+        server, sock, sim = daemon
+        c = _client(sock)
+        r = c.submit_batch([_job(name="w", duration=300)], eco=False)
+        out = c.wait(ids=r["base_ids"], poll_s=600)
+        assert out["ok"]
+        assert set(out["states"].values()) == {"COMPLETED"}
+
+    def test_cancel_is_namespaced_per_user(self, daemon):
+        server, sock, sim = daemon
+        alice, bob = _client(sock, "alice"), _client(sock, "bob")
+        rid = alice.submit_batch([_job(name="mine", duration=9000)],
+                                 eco=False)["base_ids"][0]
+        denied = bob._call("cancel", ids=[rid])
+        assert denied == {"cancelled": [], "denied": [rid]}
+        assert len(alice.queue()) == 1  # still running: bob couldn't touch it
+        ok = alice._call("cancel", ids=[rid])
+        assert ok["cancelled"] == [rid] and ok["denied"] == []
+        assert alice.queue() == []
+
+    def test_unknown_ids_pass_through_namespacing(self, daemon):
+        server, sock, sim = daemon
+        bob = _client(sock, "bob")
+        # the daemon never saw this id — it cannot know the owner, so the
+        # request is forwarded rather than denied
+        out = bob._call("cancel", ids=["424242"])
+        assert out == {"cancelled": ["424242"], "denied": []}
+
+    def test_unknown_method_is_a_gateway_error(self, daemon):
+        server, sock, sim = daemon
+        with pytest.raises(GatewayError, match="unknown method"):
+            _client(sock)._call("frobnicate")
+
+    def test_events_stream_honours_max_events(self, daemon):
+        server, sock, sim = daemon
+        c = _client(sock)
+        c.submit_batch([_job(name=f"e{i}", duration=60 * (i + 1))
+                        for i in range(4)], eco=False, coalesce=False)
+        events = list(c.events(poll_s=120, max_events=3))
+        assert len(events) == 3
+        assert all(e.jobid for e in events)
+
+    def test_stats_counts_requests_and_cache_traffic(self, daemon):
+        server, sock, sim = daemon
+        c = _client(sock)
+        for _ in range(5):
+            c.queue()
+        s = c.stats()
+        assert s["daemon"]["requests"]["queue"] == 5
+        assert s["daemon"]["backend"] == "SimCluster"
+        qc = s["queue_cache"]
+        # one poll filled the snapshot; the rest were hits
+        assert qc["polls"] + qc["hits"] == 5
+        assert qc["polls"] == 1
+        assert "eco" in s
+
+    def test_throttle_counts_over_budget_users(self, tmp_path):
+        sim = SimCluster()
+        sock = str(tmp_path / "tb.sock")
+        server = GatewayServer(sim, sock, rate=1000.0, burst=1.0,
+                               max_throttle_s=0.0)
+        server.start()
+        try:
+            c = _client(sock, "flood")
+            for _ in range(4):
+                c.ping()
+            assert server.throttled >= 2  # burst of 1: back-to-back pings owe
+        finally:
+            server.close()
+
+
+class TestServerLifecycle:
+    def test_close_unlinks_socket_and_refuses_clients(self, tmp_path):
+        sim = SimCluster()
+        sock = str(tmp_path / "gone.sock")
+        server = GatewayServer(sim, sock, rate=1000, burst=1000)
+        server.start()
+        _client(sock).ping()
+        server.close()
+        import os
+
+        assert not os.path.exists(sock)
+        with pytest.raises(ConnectionError):
+            _client(sock).ping()
+
+    def test_close_leaves_no_stale_bus_subscribers(self, tmp_path):
+        sim = SimCluster()
+        baseline = len(sim.bus._subs)
+        server = GatewayServer(sim, str(tmp_path / "s.sock"))
+        server.start()
+        _client(server.socket_path).ping()
+        assert len(sim.bus._subs) > baseline  # the daemon's cache is bound
+        server.close()
+        assert len(sim.bus._subs) == baseline
+
+    def test_second_daemon_on_a_live_socket_refuses(self, daemon):
+        server, sock, sim = daemon
+        rival = GatewayServer(SimCluster(), sock)
+        with pytest.raises(GatewayError, match="another gateway is live"):
+            rival.bind()
+
+    def test_stale_socket_file_is_reclaimed(self, tmp_path):
+        sock = str(tmp_path / "stale.sock")
+        first = GatewayServer(SimCluster(), sock)
+        first.bind()
+        # simulate a crash: drop the listener without unlinking the path
+        first._listener.close()
+        first._listener = None
+        second = GatewayServer(SimCluster(), sock, rate=1000, burst=1000)
+        second.start()
+        try:
+            assert _client(sock).ping()["pong"]
+        finally:
+            second.close()
+
+    def test_shutdown_rpc_stops_the_server(self, tmp_path):
+        server = GatewayServer(SimCluster(), str(tmp_path / "x.sock"),
+                               rate=1000, burst=1000)
+        thread = server.start()
+        _client(server.socket_path).shutdown()
+        thread.join(timeout=5.0)
+        assert not thread.is_alive()
+        server.close()
+
+
+class TestResolveBackend:
+    def test_no_daemon_falls_back_to_shared_cache(self, tmp_path):
+        backend = resolve_backend(None, str(tmp_path / "absent.sock"))
+        assert isinstance(backend, QueueCache)
+        assert backend is get_queue_cache()
+
+    def test_gateway_required_raises_without_daemon(self, tmp_path):
+        with pytest.raises(GatewayConnectionLost):
+            resolve_backend(True, str(tmp_path / "absent.sock"))
+
+    def test_gateway_false_ignores_a_live_daemon(self, daemon):
+        server, sock, sim = daemon
+        assert isinstance(resolve_backend(False, sock), QueueCache)
+
+    def test_auto_detect_prefers_a_live_daemon(self, daemon, monkeypatch):
+        server, sock, sim = daemon
+        monkeypatch.setenv("NBI_GATEWAY_SOCKET", sock)
+        backend = resolve_backend(None, None)
+        assert isinstance(backend, GatewayClient)
+
+    def test_nbi_no_gateway_env_forces_in_process(self, daemon, monkeypatch):
+        server, sock, sim = daemon
+        monkeypatch.setenv("NBI_GATEWAY_SOCKET", sock)
+        monkeypatch.setenv("NBI_NO_GATEWAY", "1")
+        assert isinstance(resolve_backend(None, None), QueueCache)
+
+
+class TestCliEquivalence:
+    """The acceptance criterion: the no-daemon path is byte-identical, and
+    a live daemon serves the same rows the in-process path would."""
+
+    def _submit_shared(self, n=3):
+        from repro.core.engine import SubmitEngine
+
+        engine = SubmitEngine(get_queue_cache())
+        return engine.submit_many(
+            [_job(name=f"eq{i}", duration=7200) for i in range(n)]
+        )
+
+    def test_fallback_json_identical_to_no_gateway(self, tmp_path, capsys,
+                                                   monkeypatch):
+        from repro.cli import lsjobs
+
+        monkeypatch.setenv("NBI_GATEWAY_SOCKET", str(tmp_path / "none.sock"))
+        self._submit_shared()
+        assert lsjobs.main(["--all", "--json"]) == 0
+        auto = capsys.readouterr().out
+        assert lsjobs.main(["--all", "--json", "--no-gateway"]) == 0
+        forced = capsys.readouterr().out
+        assert auto == forced
+        assert len(json.loads(auto)) == 3
+
+    def test_daemon_serves_the_same_rows_as_in_process(self, tmp_path,
+                                                       capsys):
+        from repro.cli import lsjobs
+
+        self._submit_shared()
+        server = GatewayServer(get_backend(), str(tmp_path / "eq.sock"),
+                               rate=1000, burst=1000)
+        server.start()
+        try:
+            assert lsjobs.main(["--all", "--json", "--no-gateway"]) == 0
+            local = json.loads(capsys.readouterr().out)
+            assert lsjobs.main(["--all", "--json", "--gateway",
+                                "--gateway-socket", server.socket_path]) == 0
+            via_daemon = json.loads(capsys.readouterr().out)
+        finally:
+            server.close()
+        assert via_daemon == local
+
+    def test_runjob_submits_through_the_daemon(self, daemon, capsys):
+        from repro.cli import runjob
+
+        server, sock, sim = daemon
+        rc = runjob.main(["-n", "gwjob", "--no-eco", "--gateway",
+                          "--gateway-socket", sock, "echo hi"])
+        assert rc == 0
+        assert any(j.name == "gwjob" for j in sim.jobs.values())
+        # the shared in-process simulator never saw it: daemon-side submit
+        assert all(j.name != "gwjob" for j in
+                   getattr(get_backend(), "jobs", {}).values())
+
+
+class TestWaitjobsExitCodes:
+    def test_connection_refused_exits_3(self, tmp_path, capsys):
+        from repro.cli import waitjobs
+
+        rc = waitjobs.main(["--gateway",
+                            "--gateway-socket", str(tmp_path / "no.sock")])
+        assert rc == 3
+        assert "gateway connection failed" in capsys.readouterr().err
+
+    def test_connection_lost_mid_wait_exits_3(self, daemon, capsys,
+                                              monkeypatch):
+        from repro.cli import waitjobs
+
+        server, sock, sim = daemon
+        _client(sock).submit_batch([_job(duration=9000)], eco=False)
+
+        def lost(self, **kw):
+            raise GatewayConnectionLost("daemon died mid-wait")
+
+        monkeypatch.setattr(GatewayClient, "wait", lost)
+        rc = waitjobs.main(["--gateway", "--gateway-socket", sock, "--json"])
+        out = json.loads(capsys.readouterr().out)
+        assert rc == 3
+        assert out["connection_lost"] is True
+        assert out["timed_out"] is False
+
+    def test_native_wait_loop_connection_error_exits_3(self):
+        from repro.cli.waitjobs import wait_for_events
+
+        class DyingSim(SimCluster):
+            def advance(self, seconds):
+                raise ConnectionError("backend went away")
+
+        sim = DyingSim(default_user="alice")
+        jid = _job(duration=9000).run(sim)
+        result = wait_for_events(sim, ids=[jid], poll_s=60)
+        assert result.connection_lost and not result.ok
+        assert result.exit_code == 3
+        d = result.to_dict()
+        assert d["connection_lost"] is True and d["timed_out"] is False
+
+    def test_timeout_still_exits_2_not_3(self, daemon):
+        server, sock, sim = daemon
+        c = _client(sock)
+        slow = Job(name="slow", command="true",
+                   opts=Opts.new(threads=1, memory="1GB", time="9000h"),
+                   sim_duration_s=10_000_000)
+        r = c.submit_batch([slow], eco=False)
+        out = c.wait(ids=r["base_ids"], poll_s=60, timeout_s=0.2)
+        assert out["ok"] is False  # the daemon observed it but it was slow
+        from repro.cli.waitjobs import WaitResult
+
+        assert WaitResult(ok=False).exit_code == 2
+
+
+class TestSharedCacheDetach:
+    """Satellite regression: dropping a shared backend must unbind the
+    shared QueueCache from its bus first — no stale subscribers."""
+
+    def test_reset_queue_cache_unbinds_the_bus(self):
+        sim = get_backend()
+        baseline = len(sim.bus._subs)
+        cache = get_queue_cache()
+        assert len(sim.bus._subs) == baseline + 1
+        from repro.core import reset_queue_cache
+
+        reset_queue_cache()
+        assert len(sim.bus._subs) == baseline
+        assert cache._bus_token is None
+
+    def test_reset_backend_is_the_public_alias(self):
+        from repro.core import reset_backend
+
+        first = get_backend()
+        get_queue_cache()
+        reset_backend()
+        assert get_backend() is not first
+
+    def test_federation_rebuild_detaches_the_shared_cache(self, tmp_path,
+                                                          monkeypatch):
+        cfg = tmp_path / "fed.config"
+        cfg.write_text("[cluster.a]\nkind=sim\n[cluster.b]\nkind=sim\n")
+        monkeypatch.setenv("NBISLURM_CONFIG", str(cfg))
+        monkeypatch.setenv("REPRO_BACKEND", "federated")
+        from repro.core import reset_backend
+
+        reset_backend()
+        fed = get_backend()
+        old_bus = fed.bus
+        before_bind = len(old_bus._subs)
+        cache = get_queue_cache()
+        assert cache.inner is fed
+        assert len(old_bus._subs) == before_bind + 1
+        # config change → the shared federation is rebuilt; the outgoing
+        # bus must shed the cache's subscription as part of the teardown
+        cfg.write_text("[cluster.a]\nkind=sim\nnodes=2\n[cluster.b]\nkind=sim\n")
+        rebuilt = get_backend()
+        assert rebuilt is not fed
+        # the cache's subscription is gone (fed.close() also drops the
+        # federation's own internal subscribers, hence <=, not ==)
+        assert cache._bus_token is None
+        assert len(old_bus._subs) <= before_bind
+        reset_backend()
+
+
+class TestNbimonGateway:
+    def test_live_streams_the_daemon_ticker(self, daemon, capsys):
+        from repro.cli import nbimon
+
+        server, sock, sim = daemon
+        _client(sock).submit_batch(
+            [_job(name=f"mon{i}", duration=60 * (i + 1)) for i in range(3)],
+            eco=False, coalesce=False,
+        )
+        rc = nbimon.main(["--live", "--poll", "120", "--json",
+                          "--gateway", "--gateway-socket", sock])
+        captured = capsys.readouterr()
+        assert rc == 0
+        payload = json.loads(captured.out)
+        assert payload["events_streamed"] > 0
+        assert payload["daemon"]["backend"] == "SimCluster"
+        # ticker lines went to stderr so stdout stayed machine-readable
+        assert "COMPLETED" in captured.err
+
+    def test_scrape_renders_daemon_counters(self, daemon, capsys):
+        from repro.cli import nbimon
+        from repro.obs.metrics import disable
+
+        disable()  # an enabled registry switches the scrape to Prometheus text
+        server, sock, sim = daemon
+        _client(sock).queue()
+        rc = nbimon.main(["--gateway", "--gateway-socket", sock])
+        out = capsys.readouterr().out
+        assert rc == 0
+        assert "gateway pid" in out and "poll(s)" in out
+
+
+class TestNbidCli:
+    def test_status_and_stop(self, daemon, capsys):
+        from repro.cli import nbid
+
+        server, sock, sim = daemon
+        assert nbid.main(["--status", "--socket", sock]) == 0
+        assert "nbid pid" in capsys.readouterr().out
+        assert nbid.main(["--status", "--json", "--socket", sock]) == 0
+        assert json.loads(capsys.readouterr().out)["daemon"]["socket"] == sock
+        assert nbid.main(["--stop", "--socket", sock]) == 0
+        server._stop.wait(5.0)
+        assert server._stop.is_set()
+
+    def test_status_without_daemon_fails(self, tmp_path, capsys):
+        from repro.cli import nbid
+
+        rc = nbid.main(["--status", "--socket", str(tmp_path / "no.sock")])
+        assert rc == 1
+        assert "nbid:" in capsys.readouterr().err

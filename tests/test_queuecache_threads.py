@@ -1,0 +1,154 @@
+"""QueueCache under concurrent readers (the gateway daemon's access
+pattern: N connection threads hammering ``queue()`` while bus events
+invalidate the snapshot).
+
+The contract under test:
+
+* **no torn snapshots** — every list a reader gets back is internally
+  consistent (all rows from the same backend generation), even when an
+  invalidation lands mid-refresh;
+* **single-flight refresh** — one invalidation window costs exactly one
+  real ``backend.queue()`` poll no matter how many readers race it;
+* **monotonic staleness** — a reader never sees the generation go
+  backwards.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from datetime import datetime
+
+from repro.core.engine import QueueCache
+from repro.core.events import EventBus, JobEvent
+
+
+class GenerationBackend:
+    """Backend whose rows are stamped with a generation counter.
+
+    ``queue()`` reads the generation once, then sleeps mid-build before
+    stamping the remaining rows — a deliberately wide window for a racing
+    ``bump()`` to tear the snapshot if the cache ever let two refreshes
+    (or a refresh and an invalidation-then-refresh) interleave.
+    """
+
+    def __init__(self, rows: int = 16):
+        self.bus = EventBus()
+        self.n_rows = rows
+        self.generation = 0
+        self.calls = 0
+
+    def queue(self) -> list[dict]:
+        self.calls += 1
+        gen = self.generation
+        out = [{"jobid": str(i), "gen": gen} for i in range(self.n_rows // 2)]
+        time.sleep(0.003)  # hold the refresh open across a potential bump
+        out += [{"jobid": str(i), "gen": gen}
+                for i in range(self.n_rows // 2, self.n_rows)]
+        return out
+
+    def bump(self) -> None:
+        """Advance the world and announce it (event-invalidates the cache)."""
+        self.generation += 1
+        self.bus.emit(JobEvent(type="COMPLETED", jobid=str(self.generation), at=datetime(2026, 3, 18)))
+
+
+def _snapshot_gen(rows: list[dict]) -> int:
+    """The snapshot's uniform generation; fails the test if it is torn."""
+    gens = {r["gen"] for r in rows}
+    assert len(gens) == 1, f"torn snapshot: mixed generations {sorted(gens)}"
+    return gens.pop()
+
+
+def test_concurrent_readers_single_flight_and_untorn():
+    backend = GenerationBackend()
+    cache = QueueCache(backend, ttl_s=3600.0)  # staleness is event-driven only
+
+    n_readers = 8
+    windows = 12
+    stop = threading.Event()
+    per_reader_gens: list[list[int]] = [[] for _ in range(n_readers)]
+    errors: list[BaseException] = []
+
+    def reader(slot: int):
+        try:
+            while not stop.is_set():
+                per_reader_gens[slot].append(_snapshot_gen(cache.queue()))
+        except BaseException as e:  # noqa: BLE001 — surfaced on the main thread
+            errors.append(e)
+
+    threads = [threading.Thread(target=reader, args=(i,), daemon=True)
+               for i in range(n_readers)]
+    for t in threads:
+        t.start()
+
+    deadline = time.monotonic() + 30.0
+    for _ in range(windows):
+        backend.bump()
+        # wait for the refresh this window owes us, so windows never merge
+        want = backend.generation
+        while time.monotonic() < deadline:
+            rows = cache._rows
+            if rows is not None and rows[0]["gen"] == want:
+                break
+            time.sleep(0.001)
+    stop.set()
+    for t in threads:
+        t.join(timeout=10.0)
+    assert not errors, errors[0]
+
+    # single-flight: the initial fill plus exactly one poll per window —
+    # 8 racing readers must not multiply the refreshes
+    assert backend.calls == windows + 1, (
+        f"{backend.calls} backend polls for {windows} invalidation windows"
+    )
+    assert cache.polls == windows + 1
+    total_reads = sum(len(g) for g in per_reader_gens)
+    assert cache.hits == total_reads - cache.polls
+    assert cache.event_invalidations == windows
+
+    # every reader observed a monotonically non-decreasing world
+    for slot, gens in enumerate(per_reader_gens):
+        assert gens, f"reader {slot} never completed a read"
+        assert all(a <= b for a, b in zip(gens, gens[1:])), (
+            f"reader {slot} saw the generation go backwards"
+        )
+    # and the readers did collectively reach the final generation
+    assert max(g[-1] for g in per_reader_gens) == windows
+
+
+def test_event_invalidation_forces_repoll_within_ttl():
+    """A bus event must drop the snapshot immediately — long before the
+    TTL would — and the drop must cost exactly one re-poll."""
+    backend = GenerationBackend(rows=4)
+    cache = QueueCache(backend, ttl_s=3600.0)
+
+    assert _snapshot_gen(cache.queue()) == 0
+    backend.bump()
+    assert _snapshot_gen(cache.queue()) == 1
+    assert backend.calls == 2
+    # no event since the refresh: served from the snapshot
+    assert _snapshot_gen(cache.queue()) == 1
+    assert backend.calls == 2
+
+
+def test_reentrant_invalidation_from_refresh_thread():
+    """A backend that emits events synchronously from inside ``queue()``
+    (the simulator does on lazy transitions) must not deadlock the
+    refreshing thread against its own lock."""
+    backend = GenerationBackend(rows=2)
+    original = backend.queue
+
+    def chatty_queue():
+        rows = original()
+        backend.bus.emit(JobEvent(type="STARTED", jobid="x", at=datetime(2026, 3, 18)))  # re-enters cache
+        return rows
+
+    backend.queue = chatty_queue
+    cache = QueueCache(backend, ttl_s=3600.0)
+    assert _snapshot_gen(cache.queue()) == 0  # completes — no deadlock
+    # the event was emitted BY the refresh, so it describes state the rows
+    # already capture: the snapshot survives and the next read is a hit
+    assert _snapshot_gen(cache.queue()) == 0
+    assert backend.calls == 1
+    assert cache.hits == 1
