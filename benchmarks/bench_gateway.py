@@ -1,7 +1,7 @@
-"""Gateway daemon benchmark — the poll-amplification claim, gated in CI.
+"""Gateway daemon benchmark — poll amplification + the read storm, gated in CI.
 
-Eight concurrent clients monitor a simulated day, submitting batches as
-it unfolds. Two deployments of the *same* workload:
+**Poll amplification.** Eight concurrent clients monitor a simulated day,
+submitting batches as it unfolds. Two deployments of the *same* workload:
 
 * **direct** — 8 independent CLI processes, modelled as 8 per-process
   :class:`QueueCache`\\ s over the same cluster whose TTL has lapsed by
@@ -15,24 +15,45 @@ The headline invariant (``check_bench.py`` fails CI when false): the
 daemon takes **>= 8x fewer** backend polls, and the cluster ends the day
 in an identical state — same job ids, same names, same final states —
 so the dedup is free, not a behaviour change.
+
+**Read storm.** 100k pending jobs (``NBI_BENCH_STORM_JOBS``), 16 watchers
+hammering the ``queue`` RPC. The PR-9 read path (re-pinned here as
+:class:`_LegacyServer`: thread-per-connection, every request JSON-encodes
+the full snapshot under the backend lock) against the v2 daemon (shared
+per-generation frames, filter pushdown, delta protocol). Gated:
+``throughput_ratio_ok`` (>=10x queue RPCs/s), ``filtered_bytes_ratio_ok``
+(>=20x fewer wire bytes per poll for a per-user watcher), the latency
+invariant (v2 p99 below legacy p50), and row-identity between the two
+protocols on the same snapshot.
 """
 
 from __future__ import annotations
 
+import json as _json
+import os
+import socket as _socket
+import struct as _struct
 import tempfile
+import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
 from pathlib import Path
 
 from repro.cli.session import GatewayClient
-from repro.core import Job, Opts, SimCluster
+from repro.core import Job, Opts, SimCluster, SimNode
 from repro.core.engine import QueueCache, SubmitEngine
-from repro.core.gateway import GatewayServer
+from repro.core.gateway import GatewayServer, recv_frame
 
 N_CLIENTS = 8
 BATCHES = 16  # one batch submitted per tick until exhausted
 JOBS_PER_BATCH = 5
 TICK_S = 120.0
+
+STORM_JOBS = int(os.environ.get("NBI_BENCH_STORM_JOBS", "100000"))
+STORM_WATCHERS = 16
+STORM_USERS = 32
+STORM_LEGACY_POLLS = 2  # per watcher: each one re-encodes the snapshot
+STORM_POLLS = 40  # per watcher against the v2 daemon (deltas make it cheap)
 
 
 class _CountingBackend:
@@ -138,9 +159,303 @@ def run_daemon() -> dict:
     }
 
 
+# ---------------------------------------------------------------------------
+# Read storm
+# ---------------------------------------------------------------------------
+
+
+class _LegacyServer:
+    """The PR-9 gateway read path, pinned as the storm baseline.
+
+    Thread-per-connection; every ``queue`` RPC takes the backend lock and
+    ``json.dumps`` the full snapshot from scratch. This is what the
+    shared-frame encoder replaced — keeping it here (not importing the
+    production class) pins the baseline even as the real server evolves.
+    """
+
+    _LEN = _struct.Struct(">I")
+
+    def __init__(self, cache: QueueCache, socket_path: str):
+        self.cache = cache
+        self.socket_path = socket_path
+        self._lock = threading.RLock()
+        self._stop = threading.Event()
+        self._listener: "_socket.socket | None" = None
+
+    def start(self) -> None:
+        listener = _socket.socket(_socket.AF_UNIX, _socket.SOCK_STREAM)
+        listener.bind(self.socket_path)
+        listener.listen(64)
+        listener.settimeout(0.2)
+        self._listener = listener
+        threading.Thread(target=self._accept_loop, daemon=True).start()
+
+    def close(self) -> None:
+        self._stop.set()
+        if self._listener is not None:
+            self._listener.close()
+        if os.path.exists(self.socket_path):
+            os.unlink(self.socket_path)
+
+    def _accept_loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                conn, _ = self._listener.accept()
+            except _socket.timeout:
+                continue
+            except OSError:
+                return
+            threading.Thread(target=self._serve_conn, args=(conn,),
+                             daemon=True).start()
+
+    def _serve_conn(self, conn: _socket.socket) -> None:
+        try:
+            while not self._stop.is_set():
+                req = recv_frame(conn)
+                if req is None:
+                    return
+                rid = req.get("id") if isinstance(req, dict) else None
+                method = (req or {}).get("method", "")
+                if method == "queue":
+                    with self._lock:
+                        rows = self.cache.queue()
+                    result = rows
+                elif method == "ping":
+                    result = {"pong": True}
+                else:
+                    result = None
+                payload = _json.dumps(
+                    {"id": rid, "ok": True, "result": result},
+                    separators=(",", ":"), default=str,
+                ).encode("utf-8")
+                conn.sendall(self._LEN.pack(len(payload)) + payload)
+        except OSError:
+            pass
+        finally:
+            try:
+                conn.close()
+            except OSError:
+                pass
+
+
+class _CountingSocket:
+    """Socket proxy counting bytes in both directions."""
+
+    def __init__(self, sock: _socket.socket, counter: dict):
+        self._sock = sock
+        self._counter = counter
+
+    def recv(self, n: int) -> bytes:
+        data = self._sock.recv(n)
+        self._counter["rx"] += len(data)
+        return data
+
+    def sendall(self, data) -> None:
+        self._counter["tx"] += len(data)
+        return self._sock.sendall(data)
+
+    def __getattr__(self, name):
+        return getattr(self._sock, name)
+
+
+class _MeteredClient(GatewayClient):
+    """GatewayClient that meters wire bytes and per-RPC latency."""
+
+    def __init__(self, *args, **kwargs):
+        self.bytes = {"rx": 0, "tx": 0}
+        self.latencies_s: list = []
+        super().__init__(*args, **kwargs)
+
+    def _connect(self, timeout_s):
+        return _CountingSocket(super()._connect(timeout_s), self.bytes)
+
+    def _call(self, method, **kwargs):
+        t0 = time.perf_counter()
+        try:
+            return super()._call(method, **kwargs)
+        finally:
+            self.latencies_s.append(time.perf_counter() - t0)
+
+
+def _percentile(values: list, pct: float) -> float:
+    if not values:
+        return 0.0
+    ordered = sorted(values)
+    idx = min(len(ordered) - 1, int(round(pct / 100.0 * (len(ordered) - 1))))
+    return ordered[idx]
+
+
+def _storm_cluster() -> SimCluster:
+    """STORM_JOBS long-running jobs across STORM_USERS users, nearly all
+    pending (tiny cluster): the 100k-row snapshot every watcher polls."""
+    from datetime import datetime
+
+    sim = SimCluster(
+        nodes=[SimNode(f"n{i:02d}", cpus=64, memory_mb=262144)
+               for i in range(8)],
+        now=datetime(2026, 3, 18, 8, 0, 0), default_user="bench",
+    )
+    per_user = max(1, STORM_JOBS // STORM_USERS)
+    submitted = 0
+    for u in range(STORM_USERS):
+        n = per_user if u < STORM_USERS - 1 else STORM_JOBS - submitted
+        sim.default_user = f"u{u:02d}"
+        sim.submit_many([
+            Job(name=f"storm-{u:02d}-{i}", command="true",
+                opts=Opts(threads=2, memory_mb=2048, time_s=14400),
+                sim_duration_s=7200)
+            for i in range(n)
+        ])
+        submitted += n
+    sim.default_user = "bench"
+    return sim
+
+
+def run_storm() -> dict:
+    sim = _storm_cluster()
+    tmp = Path(tempfile.mkdtemp(prefix="nbi-bench-storm-"))
+
+    # -- legacy baseline: every RPC re-encodes the full snapshot -----------
+    legacy_cache = QueueCache(sim, ttl_s=3600.0)
+    legacy = _LegacyServer(legacy_cache, str(tmp / "legacy.sock"))
+    legacy.start()
+    legacy_watchers = [
+        _MeteredClient(legacy.socket_path, user=f"w{i:02d}")
+        for i in range(STORM_WATCHERS)
+    ]
+    legacy_rows: list = []
+
+    def _legacy_poll(client):
+        rows = client._call("queue")  # the v1 request shape, verbatim
+        if not legacy_rows:
+            legacy_rows.append(rows)
+
+    t0 = time.perf_counter()
+    with ThreadPoolExecutor(max_workers=STORM_WATCHERS) as pool:
+        list(pool.map(
+            lambda c: [_legacy_poll(c) for _ in range(STORM_LEGACY_POLLS)],
+            legacy_watchers,
+        ))
+    legacy_wall = time.perf_counter() - t0
+    legacy.close()
+    legacy_cache.unbind_bus()
+    legacy_polls = STORM_WATCHERS * STORM_LEGACY_POLLS
+    legacy_rx = sum(c.bytes["rx"] for c in legacy_watchers)
+    legacy_lat = [lat for c in legacy_watchers for lat in c.latencies_s]
+
+    # -- v2 daemon: shared frames, pushdown, deltas ------------------------
+    server = GatewayServer(sim, str(tmp / "gw.sock"), ttl_s=3600.0,
+                           eco=False, rate=1e9, burst=1e9)
+    server.start()
+    # half the watchers read everything (delta protocol), half watch one
+    # user's jobs (filter pushdown + deltas)
+    full_watchers = [
+        _MeteredClient(server.socket_path, user=f"w{i:02d}")
+        for i in range(STORM_WATCHERS // 2)
+    ]
+    user_watchers = [
+        _MeteredClient(server.socket_path, user=f"w{i:02d}")
+        for i in range(STORM_WATCHERS // 2)
+    ]
+    v2_rows: list = []
+    filtered_counts: list = []
+
+    def _v2_poll(idx_client):
+        idx, client = idx_client
+        rows = client.queue()
+        if not v2_rows:
+            v2_rows.append(rows)
+
+    def _filtered_poll(idx_client):
+        idx, client = idx_client
+        rows = client.queue_filtered(user=f"u{idx % STORM_USERS:02d}")
+        filtered_counts.append(len(rows))
+
+    half = STORM_POLLS // 2
+    t0 = time.perf_counter()
+    with ThreadPoolExecutor(max_workers=STORM_WATCHERS) as pool:
+        for rounds in (half, STORM_POLLS - half):
+            list(pool.map(
+                lambda ic: [_v2_poll(ic) for _ in range(rounds)],
+                enumerate(full_watchers),
+            ))
+            list(pool.map(
+                lambda ic: [_filtered_poll(ic) for _ in range(rounds)],
+                enumerate(user_watchers),
+            ))
+            # a burst of real cluster motion between the halves: deltas,
+            # not snapshots, should carry it to the watchers
+            server.cache.advance(60)
+    v2_wall = time.perf_counter() - t0
+    snap_stats = server.snapshots.stats()
+    server.close()
+    v2_polls = STORM_WATCHERS * STORM_POLLS
+    v2_lat = ([lat for c in full_watchers for lat in c.latencies_s]
+              + [lat for c in user_watchers for lat in c.latencies_s])
+    filtered_rx = sum(c.bytes["rx"] for c in user_watchers)
+    filtered_polls = len(user_watchers) * STORM_POLLS
+
+    legacy_rps = legacy_polls / max(legacy_wall, 1e-9)
+    v2_rps = v2_polls / max(v2_wall, 1e-9)
+    throughput_ratio = v2_rps / max(legacy_rps, 1e-9)
+    legacy_bpp = legacy_rx / max(legacy_polls, 1)
+    filtered_bpp = filtered_rx / max(filtered_polls, 1)
+    bytes_ratio = legacy_bpp / max(filtered_bpp, 1e-9)
+    legacy_p50 = _percentile(legacy_lat, 50) * 1e3
+    legacy_p99 = _percentile(legacy_lat, 99) * 1e3
+    v2_p50 = _percentile(v2_lat, 50) * 1e3
+    v2_p99 = _percentile(v2_lat, 99) * 1e3
+
+    def _keyed(rows):
+        return sorted((r["jobid"], r["name"], r["state"]) for r in rows)
+
+    rows_identical = bool(legacy_rows and v2_rows
+                          and _keyed(legacy_rows[0]) == _keyed(v2_rows[0]))
+    out = {
+        "jobs": STORM_JOBS,
+        "watchers": STORM_WATCHERS,
+        "legacy_polls": legacy_polls,
+        "legacy_wall_s": legacy_wall,
+        "legacy_queue_rps": legacy_rps,
+        "legacy_bytes_per_poll": legacy_bpp,
+        "legacy_p50_ms": legacy_p50,
+        "legacy_p99_ms": legacy_p99,
+        "storm_polls": v2_polls,
+        "storm_wall_s": v2_wall,
+        "storm_queue_rps": v2_rps,
+        "storm_p50_ms": v2_p50,
+        "storm_p99_ms": v2_p99,
+        "filtered_bytes_per_poll": filtered_bpp,
+        "throughput_ratio_x": throughput_ratio,
+        "throughput_ratio_ok": throughput_ratio >= 10.0,
+        "filtered_bytes_ratio_x": bytes_ratio,
+        "filtered_bytes_ratio_ok": bytes_ratio >= 20.0,
+        # relative latency gate (absolute ms are CI-runner noise): the v2
+        # tail must stay below the legacy *median*
+        "latency_ok": v2_p99 <= legacy_p50,
+        "rows_identical": rows_identical,
+        "filtered_rows_seen": max(filtered_counts) if filtered_counts else 0,
+        "snapshot_encodes": snap_stats["encodes"],
+        "delta_hits": snap_stats["delta_hits"],
+        "unchanged_hits": snap_stats["unchanged_hits"],
+    }
+    print(f"  storm: {STORM_JOBS} jobs x {STORM_WATCHERS} watchers | "
+          f"queue rps {legacy_rps:.1f} -> {v2_rps:.0f} "
+          f"({throughput_ratio:.0f}x, ok={out['throughput_ratio_ok']})")
+    print(f"  wire bytes/poll: legacy {legacy_bpp / 1e6:.2f} MB -> filtered "
+          f"{filtered_bpp / 1e3:.1f} kB ({bytes_ratio:.0f}x fewer, "
+          f"ok={out['filtered_bytes_ratio_ok']})")
+    print(f"  latency ms: legacy p50/p99 {legacy_p50:.1f}/{legacy_p99:.1f} "
+          f"-> v2 {v2_p50:.2f}/{v2_p99:.2f} | encodes "
+          f"{snap_stats['encodes']}, deltas {snap_stats['delta_hits']}, "
+          f"unchanged {snap_stats['unchanged_hits']}")
+    return out
+
+
 def run() -> dict:
     direct = run_direct()
     daemon = run_daemon()
+    storm = run_storm()
     amplification = direct["polls"] / max(1, daemon["polls"])
     out = {
         "clients": N_CLIENTS,
@@ -158,6 +473,7 @@ def run() -> dict:
         "daemon_wall_s": daemon["wall_s"],
         "daemon_queue_rps": daemon["queue_rpcs"] / max(daemon["wall_s"], 1e-9),
         "daemon_throttled": daemon["throttled"],
+        "storm": storm,
     }
     print(f"  {out['jobs']} jobs over {out['ticks']} ticks x "
           f"{N_CLIENTS} clients")

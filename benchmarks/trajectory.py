@@ -91,12 +91,23 @@ TRACKED = {
     "gateway": {
         "rates": {
             "daemon_queue_rps": ("daemon_queue_rps",),
+            "storm_queue_rps": ("storm", "storm_queue_rps"),
         },
         "invariants": {
             # >= N_CLIENTS x fewer backend polls than independent processes
             "poll_amplification_ok": ("poll_amplification_ok",),
             # same job ids / names / final states in both deployments
             "outcomes_identical": ("outcomes_identical",),
+            # read storm (protocol v2): >=10x queue-RPC throughput over the
+            # pinned PR-9 thread-per-connection baseline...
+            "storm_throughput_ratio_ok": ("storm", "throughput_ratio_ok"),
+            # ...>=20x fewer wire bytes/poll for a per-user filtered watcher...
+            "storm_filtered_bytes_ratio_ok": ("storm", "filtered_bytes_ratio_ok"),
+            # ...v2 tail latency below the legacy median (relative, so CI
+            # runner speed cancels out)...
+            "storm_latency_ok": ("storm", "latency_ok"),
+            # ...and both protocols serve identical rows off one snapshot
+            "storm_rows_identical": ("storm", "rows_identical"),
         },
         "extra": {
             "poll_amplification_x": ("poll_amplification_x",),
@@ -104,6 +115,20 @@ TRACKED = {
             "daemon_polls": ("daemon_polls",),
             "clients": ("clients",),
             "jobs": ("jobs",),
+            "storm_jobs": ("storm", "jobs"),
+            "storm_throughput_ratio_x": ("storm", "throughput_ratio_x"),
+            "storm_filtered_bytes_ratio_x": ("storm", "filtered_bytes_ratio_x"),
+            "storm_legacy_queue_rps": ("storm", "legacy_queue_rps"),
+            "storm_p50_ms": ("storm", "storm_p50_ms"),
+            "storm_p99_ms": ("storm", "storm_p99_ms"),
+            "storm_legacy_p50_ms": ("storm", "legacy_p50_ms"),
+            "storm_legacy_p99_ms": ("storm", "legacy_p99_ms"),
+            "storm_legacy_bytes_per_poll": ("storm", "legacy_bytes_per_poll"),
+            "storm_filtered_bytes_per_poll":
+                ("storm", "filtered_bytes_per_poll"),
+            "storm_snapshot_encodes": ("storm", "snapshot_encodes"),
+            "storm_delta_hits": ("storm", "delta_hits"),
+            "storm_unchanged_hits": ("storm", "unchanged_hits"),
         },
     },
     "accounting": {

@@ -56,9 +56,7 @@ def main(argv=None) -> int:
         except Exception:
             user = None
     q = Queue(user=user, state=args.state, name=args.name,
-              queue=args.partition, backend=backend)
-    if args.cluster is not None:
-        q.jobs = [j for j in q.jobs if j.cluster == args.cluster]
+              queue=args.partition, cluster=args.cluster, backend=backend)
 
     if args.cancel:
         ids = q.ids()

@@ -29,14 +29,69 @@ import socket
 from repro.cli.runjob import memory_mb_from_cli
 from repro.core import format_slurm_time, load_config, parse_time_s
 from repro.core.gateway import (
+    EMPTY_FILTER_KEY,
     GatewayConnectionLost,
     GatewayError,
+    canonical_filter_key,
     default_socket_path,
     event_from_wire,
     job_to_wire,
     recv_frame,
+    row_filter,
     send_frame,
 )
+
+#: materialized queue views kept per client (distinct filter sets)
+_VIEW_CAP = 32
+
+
+class _QueueView:
+    """Client-side materialized queue snapshot for one filter set.
+
+    Holds the last full snapshot the daemon sent (generation-tagged) and
+    applies per-job add/update/remove deltas to it, so a steady-state
+    watcher pays O(changes) wire bytes per poll instead of O(jobs).
+    """
+
+    __slots__ = ("generation", "by_id", "order")
+
+    def __init__(self, generation: int, rows: list):
+        self.generation = generation
+        self.by_id = {str(r.get("jobid", "")): r for r in rows}
+        self.order = list(self.by_id)
+
+    def rows(self) -> list:
+        return [self.by_id[i] for i in self.order]
+
+    def apply(self, delta: dict, order: "list | None") -> None:
+        """Apply a server delta; raises KeyError on any inconsistency
+        (the caller then falls back to a full snapshot)."""
+        removed = set()
+        for jid in delta.get("remove") or []:
+            jid = str(jid)
+            removed.add(jid)
+            self.by_id.pop(jid, None)
+        for row in delta.get("update") or []:
+            jid = str(row.get("jobid", ""))
+            if jid not in self.by_id:
+                raise KeyError(f"update for unknown job {jid}")
+            self.by_id[jid] = row
+        added = []
+        for row in delta.get("add") or []:
+            jid = str(row.get("jobid", ""))
+            self.by_id[jid] = row
+            added.append(jid)
+        if order is not None:
+            new_order = [str(i) for i in order]
+            if len(new_order) != len(self.by_id) or any(
+                i not in self.by_id for i in new_order
+            ):
+                raise KeyError("delta order does not match row set")
+            self.order = new_order
+        else:
+            # the server's append rule: survivors keep their order, adds
+            # go to the back (it ships an explicit order otherwise)
+            self.order = [i for i in self.order if i not in removed] + added
 
 
 # ---------------------------------------------------------------------------
@@ -66,6 +121,11 @@ class GatewayClient:
         self.user = user
         self.timeout_s = timeout_s
         self._next_id = 1
+        #: filter key → _QueueView (LRU, capped at _VIEW_CAP)
+        self._views: "dict[tuple, _QueueView]" = {}
+        #: set False after a plain-list reply (v1 daemon): stop sending
+        #: since/filters it would ignore anyway
+        self._server_v2 = True
 
     # -- plumbing -------------------------------------------------------------
 
@@ -110,7 +170,94 @@ class GatewayClient:
     # -- Backend protocol -----------------------------------------------------
 
     def queue(self) -> list[dict]:
-        return self._call("queue")
+        return self.queue_filtered()
+
+    def queue_filtered(self, *, user=None, states=None, cluster=None,
+                       ids=None) -> list[dict]:
+        """Queue snapshot with **server-side filter pushdown** and the
+        **delta protocol** (protocol v2).
+
+        The daemon ships only matching rows, and — once this client holds
+        a snapshot for the same filter set — only what changed since the
+        generation it last saw (or ``{"unchanged": true}``). Against a v1
+        daemon the reply is a plain full row list; filters are then
+        applied locally, so results are identical either way.
+        """
+        filters: dict = {}
+        if user:
+            filters["user"] = str(user)
+        if cluster is not None:
+            filters["cluster"] = str(cluster)
+        if ids:
+            filters["ids"] = [str(i) for i in ids]
+        if states:
+            filters["states"] = [str(s).upper() for s in states]
+        key = canonical_filter_key(filters)
+        if not self._server_v2:
+            resp = self._call("queue")
+        else:
+            view = self._views.get(key)
+            params: dict = {"v": 2}
+            if filters:
+                params["filters"] = filters
+            if view is not None:
+                params["since"] = view.generation
+            resp = self._call("queue", **params)
+        return self._materialize(key, resp, filters)
+
+    def _materialize(self, key: tuple, resp, filters: dict) -> list:
+        if isinstance(resp, list):
+            # v1 daemon: a plain full snapshot; filter locally
+            self._server_v2 = False
+            self._views.pop(key, None)
+            if key == EMPTY_FILTER_KEY:
+                return resp
+            pred = row_filter(key)
+            return [r for r in resp if pred(r)]
+        if not isinstance(resp, dict):
+            raise GatewayError(
+                f"bad queue response type: {type(resp).__name__}"
+            )
+        gen = resp.get("generation")
+        view = self._views.get(key)
+        if resp.get("unchanged"):
+            if view is None or view.generation != gen:
+                return self._refetch_full(key, filters)
+            return view.rows()
+        delta = resp.get("delta")
+        if delta is not None:
+            if view is None or view.generation != resp.get("since"):
+                return self._refetch_full(key, filters)
+            try:
+                view.apply(delta, resp.get("order"))
+            except KeyError:
+                return self._refetch_full(key, filters)
+            view.generation = gen
+            return view.rows()
+        jobs = resp.get("jobs")
+        if jobs is None:
+            raise GatewayError("queue response carries neither jobs nor delta")
+        view = _QueueView(int(gen), jobs)
+        if key not in self._views and len(self._views) >= _VIEW_CAP:
+            self._views.pop(next(iter(self._views)))
+        self._views[key] = view
+        return view.rows()
+
+    def _refetch_full(self, key: tuple, filters: dict) -> list:
+        """Defensive resync: drop the stale view, ask for a fresh full
+        snapshot (no ``since`` → the daemon cannot answer with a delta)."""
+        self._views.pop(key, None)
+        params: dict = {"v": 2}
+        if filters:
+            params["filters"] = filters
+        resp = self._call("queue", **params)
+        if isinstance(resp, dict) and (
+            resp.get("delta") is not None or resp.get("unchanged")
+        ):
+            # no ``since`` went out, so a delta back is a protocol breach
+            raise GatewayError("daemon answered a full-snapshot request "
+                               "with a delta")
+        return self._materialize(key, resp, filters)
 
     def nodes_info(self) -> list[dict]:
         return self._call("nodes_info")

@@ -78,11 +78,10 @@ class WaitResult:
 
 
 def matching_ids(backend, *, user=None, name=None, ids=None) -> list[str]:
-    q = Queue(user=user, name=name, backend=backend)
-    if ids:
-        want = {str(i) for i in ids}
-        return [j.jobid for j in q
-                if any(_id_matches(j.jobid, req) for req in want)]
+    # ids travel with the Queue so a gateway backend ships the handful of
+    # watched rows, not the whole snapshot (filters re-applied locally)
+    q = Queue(user=user, name=name, jobids=list(ids) if ids else None,
+              backend=backend)
     return q.ids()
 
 
@@ -188,19 +187,12 @@ def wait_for_events(
 
 
 def _id_matches(watched_id: str, requested: str) -> bool:
-    """Does a queue row id cover a requested id?
+    """Back-compat alias: the one shared matcher lives in
+    :func:`repro.core.federation.id_covers` (also used by the gateway's
+    server-side ``ids`` filter pushdown)."""
+    from repro.core.federation import id_covers
 
-    A request may name the row exactly, its array base (with or without
-    the federation cluster prefix), or the bare id without the prefix —
-    ``1000001``, ``green:1000001`` and ``green:1000001_3`` all match the
-    row ``green:1000001_3``. Cluster names may themselves contain ``_``.
-    """
-    from repro.core.federation import array_base_id, split_cluster_id
-
-    bare = split_cluster_id(watched_id)[1]
-    return requested in (
-        watched_id, array_base_id(watched_id), bare, bare.partition("_")[0],
-    )
+    return id_covers(watched_id, requested)
 
 
 def _norm_state(state: str) -> str:

@@ -87,7 +87,10 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     backend = resolve_backend(args.gateway, args.gateway_socket)
-    q = Queue(queue=args.partition, backend=backend)
+    # only RUNNING/PENDING rows feed the utilisation table: push the
+    # state filter to the daemon so it ships two states, not the queue
+    q = Queue(state=["RUNNING", "PENDING"], queue=args.partition,
+              backend=backend)
     if args.as_json:
         emit_json(utilisation_records(q))
         return 0

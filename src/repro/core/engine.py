@@ -78,6 +78,12 @@ class QueueCache:
         # invalidate() on this same thread.
         self._mu = threading.RLock()
         self._bus_token: "tuple | None" = None  # (bus, token)
+        #: monotonically bumped whenever the cached snapshot changes
+        #: identity — on every refresh and on every invalidation — so a
+        #: ``(generation, rows)`` pair is immutable: one generation never
+        #: maps to two different snapshots. The gateway's snapshot encoder
+        #: keys its pre-serialised wire frames on this.
+        self.generation = 0
         # observability (the queue-tools benchmark reports these)
         self.polls = 0  # real backend.queue() calls
         self.hits = 0  # calls served from the snapshot
@@ -104,6 +110,7 @@ class QueueCache:
                 rows = self.inner.queue()
             self._rows = rows
             self._fetched_at = now
+            self.generation += 1
             self.polls += 1
             reg.counter(
                 "nbi_queuecache_polls_total", "real backend.queue() polls"
@@ -137,7 +144,33 @@ class QueueCache:
     def invalidate(self) -> None:
         """Drop the snapshot; the next ``queue()`` re-polls the backend."""
         with self._mu:
+            if self._rows is not None:
+                self.generation += 1
             self._rows = None
+
+    def snapshot_generation(self) -> "int | None":
+        """Generation of the currently *valid* snapshot, or None when a
+        fresh ``queue()`` would re-poll (invalidated or TTL-lapsed).
+
+        Deliberately lock-free — plain attribute reads — so the gateway's
+        serve loop can check frame currency without ever blocking behind a
+        refresh in progress. The race is benign: at worst a frame one
+        generation behind is served once more, and generations are
+        immutable so it is a *consistent* stale snapshot, never a torn one.
+        """
+        rows = self._rows
+        if rows is None:
+            return None
+        if self._clock() - self._fetched_at >= self.ttl_s:
+            return None
+        return self.generation
+
+    def queue_with_generation(self) -> "tuple[list, int]":
+        """Atomic ``(rows, generation)`` pair — the seam the gateway's
+        snapshot encoder refreshes through (a concurrent invalidation
+        cannot slip between serving the rows and reading their tag)."""
+        with self._mu:
+            return self.queue(), self.generation
 
     def bind_bus(self, bus) -> None:
         """Invalidate on every :class:`~repro.core.events.JobEvent` on ``bus``."""
@@ -167,6 +200,7 @@ class QueueCache:
                     "nbi_queuecache_event_invalidations_total",
                     "snapshots dropped by bus events",
                 ).inc()
+                self.generation += 1
             self._rows = None
 
     def __getattr__(self, name):

@@ -86,6 +86,24 @@ def array_base_id(jobid) -> str:
     return join_cluster_id(cluster, bare.partition("_")[0])
 
 
+def id_covers(row_id, requested) -> bool:
+    """Does a queue row id cover a requested id?
+
+    A request may name the row exactly, its array base (with or without
+    the federation cluster prefix), or the bare id without the prefix —
+    ``1000001``, ``green:1000001`` and ``green:1000001_3`` all match the
+    row ``green:1000001_3``. Cluster names may themselves contain ``_``.
+    One matcher shared by ``waitjobs``, the gateway's server-side ``ids``
+    filter pushdown, and the thin client's local fallback filtering, so
+    every path resolves the same watch set.
+    """
+    row_id = str(row_id)
+    bare = split_cluster_id(row_id)[1]
+    return str(requested) in (
+        row_id, array_base_id(row_id), bare, bare.partition("_")[0],
+    )
+
+
 # ---------------------------------------------------------------------------
 # Registry
 # ---------------------------------------------------------------------------

@@ -24,10 +24,37 @@ Methods: ``ping``, ``queue``, ``nodes_info``, ``submit_batch``,
 ``cancel``, ``release``, ``wait``, ``events_subscribe``, ``stats``,
 ``advance`` (simulated backends only) and ``shutdown``.
 
+**Protocol v2 — the read hot path.** The daemon's serve loop is a
+single-threaded non-blocking ``selectors`` reactor. Read-only RPCs
+(``ping``/``queue``/``nodes_info``/``stats``) are answered from
+*immutable pre-encoded frames* without taking the backend lock: a
+:class:`SnapshotEncoder` serialises the QueueCache snapshot to wire
+bytes once per cache **generation** (invalidated off the EventBus — the
+same hook the cache already uses) and every client gets a spliced copy
+of the cached bytes. On top of that, v2 clients can
+
+* push **filters** down (``user``/``cluster``/``ids``/``states``) so a
+  watcher of one user's jobs never ships the other 100k rows — filtered
+  encodings are memoised per (generation, filter);
+* send their last seen generation (``since``) and receive
+  ``{"unchanged": true}`` or a per-job **add/update/remove delta**
+  instead of the full snapshot.
+
+v1 clients (no ``v``/``since``/``filters`` markers in the ``queue``
+params) receive the plain row-list result, byte-identical to the PR-9
+protocol. Mutating RPCs (``submit_batch``/``cancel``/``release``/
+``advance``) and simulated-time pumping keep their serialized semantics
+behind the backend lock; ``wait`` blocks in a per-request worker thread;
+``events_subscribe`` fanout goes through per-subscriber bounded queues
+drained by the serve loop, so a slow subscriber can never block the
+bus callback.
+
 Fair share: every request draws one token from the calling user's
 token bucket (``rate`` tokens/s, ``burst`` capacity); an empty bucket
 delays the request instead of rejecting it, so a flood from one user
-slows that user down without starving the others.
+slows that user down without starving the others. Delays are scheduled
+on the reactor — a throttled user's requests wait in a heap, everyone
+else keeps being served.
 
 Namespacing: job ids submitted through the daemon are recorded against
 the submitting user; ``cancel``/``release`` refuse to touch another
@@ -42,12 +69,15 @@ what gives every existing CLI daemon mode without code churn.
 
 from __future__ import annotations
 
+import heapq
 import json
 import os
+import selectors
 import socket
 import struct
 import threading
 import time as _time
+from collections import OrderedDict, deque
 from datetime import datetime
 
 from repro.obs.metrics import get_registry
@@ -55,11 +85,27 @@ from repro.obs.metrics import get_registry
 from . import events as ev
 from .engine import QueueCache
 
-PROTOCOL_VERSION = 1
+PROTOCOL_VERSION = 2
 
 #: frames above this are refused — a corrupt length prefix must not make
 #: the daemon try to allocate gigabytes
 MAX_FRAME_BYTES = 32 * 1024 * 1024
+
+#: per-subscriber bounded event queue: a slow ``events_subscribe`` client
+#: drops its oldest undelivered events instead of backing up the bus
+EVENT_QUEUE_CAP = 4096
+
+#: stop copying events into a subscriber's write buffer past this point —
+#: they stay in the bounded queue until the socket drains
+WRITE_BUFFER_SOFT_CAP = 1 << 20
+
+#: how many past generations the snapshot encoder keeps for delta
+#: computation; clients further behind transparently get a full snapshot
+DELTA_HISTORY = 4
+
+#: memoised encodings per generation (distinct filter keys); beyond this
+#: frames are computed per-request rather than cached
+ENCODER_MEMO_CAP = 128
 
 _LEN = struct.Struct(">I")
 
@@ -77,16 +123,39 @@ class GatewayConnectionLost(ConnectionError):
 # ---------------------------------------------------------------------------
 
 
-def send_frame(sock: socket.socket, obj) -> None:
-    """Serialise ``obj`` as one length-prefixed JSON frame."""
-    payload = json.dumps(obj, separators=(",", ":"), default=str).encode("utf-8")
+def dumps_wire(obj) -> bytes:
+    """Canonical wire serialisation: compact separators, strict types.
+
+    Non-JSON values raise :class:`GatewayError` naming the offender —
+    the codec must fail loudly, not ``default=str`` a datetime into a
+    string the other side silently misparses.
+    """
+    try:
+        return json.dumps(obj, separators=(",", ":"), allow_nan=False).encode("utf-8")
+    except (TypeError, ValueError) as e:
+        raise GatewayError(f"unserializable value on the wire: {e}") from e
+
+
+def encode_frame(obj) -> bytes:
+    """``obj`` as one length-prefixed wire frame (bytes)."""
+    payload = dumps_wire(obj)
     if len(payload) > MAX_FRAME_BYTES:
         raise GatewayError(f"frame too large ({len(payload)} bytes)")
-    sock.sendall(_LEN.pack(len(payload)) + payload)
+    return _LEN.pack(len(payload)) + payload
+
+
+def send_frame(sock: socket.socket, obj) -> None:
+    """Serialise ``obj`` as one length-prefixed JSON frame."""
+    sock.sendall(encode_frame(obj))
 
 
 def recv_frame(sock: socket.socket):
-    """Read one frame; returns the decoded object, or None on clean EOF."""
+    """Read one frame; returns the decoded object, or None on clean EOF.
+
+    An oversized length prefix is rejected *before* any allocation —
+    a corrupt or malicious peer cannot make the reader reserve
+    gigabytes of buffer.
+    """
     header = _recv_exact(sock, _LEN.size)
     if header is None:
         return None
@@ -119,6 +188,63 @@ def default_socket_path() -> str:
     if run and os.path.isdir(run):
         return os.path.join(run, "nbi-gateway.sock")
     return f"/tmp/nbi-gateway-{os.getuid()}.sock"
+
+
+# ---------------------------------------------------------------------------
+# Filter pushdown (shared by server-side pushdown and client-side fallback)
+# ---------------------------------------------------------------------------
+
+#: the canonical "no filters" key (full snapshot)
+EMPTY_FILTER_KEY = (None, None, (), ())
+
+
+def canonical_filter_key(filters) -> tuple:
+    """Normalise a wire ``filters`` dict to a hashable memoisation key.
+
+    ``(user, cluster, ids, states)`` — ``None`` means "not filtered on
+    this dimension" (distinct from ``cluster=""``, which matches plain
+    single-cluster rows). Ids and states are sorted tuples so the same
+    logical filter always produces the same key.
+    """
+    if not isinstance(filters, dict) or not filters:
+        return EMPTY_FILTER_KEY
+    user = filters.get("user")
+    user = str(user) if user not in (None, "") else None
+    cluster = filters.get("cluster")
+    cluster = None if cluster is None else str(cluster)
+    ids = filters.get("ids")
+    ids = tuple(sorted({str(i) for i in ids})) if ids else ()
+    states = filters.get("states")
+    states = tuple(sorted({str(s).upper() for s in states})) if states else ()
+    return (user, cluster, ids, states)
+
+
+def row_filter(key: tuple):
+    """Predicate over squeue-shaped row dicts for a canonical filter key.
+
+    One implementation shared by the daemon's pushdown, the thin
+    client's local fallback against a v1 daemon, and the tests — every
+    path must select the same rows.
+    """
+    user, cluster, ids, states = key
+    state_set = set(states)
+    if ids:
+        from .federation import id_covers
+
+    def pred(row: dict) -> bool:
+        if user is not None and str(row.get("user", "")) != user:
+            return False
+        if cluster is not None and str(row.get("cluster", "")) != cluster:
+            return False
+        if state_set and str(row.get("state", "")) not in state_set:
+            return False
+        if ids:
+            jid = row.get("jobid", "")
+            if not any(id_covers(jid, req) for req in ids):
+                return False
+        return True
+
+    return pred
 
 
 # ---------------------------------------------------------------------------
@@ -253,6 +379,269 @@ def event_from_wire(wire: dict):
 
 
 # ---------------------------------------------------------------------------
+# Snapshot encoder — serialize once per generation, serve everyone
+# ---------------------------------------------------------------------------
+
+
+class SnapshotEncoder:
+    """Generation-tagged pre-encoded queue frames.
+
+    The QueueCache bumps its ``generation`` whenever its snapshot
+    changes identity (event invalidation, TTL refresh, mutator
+    invalidation). The encoder serialises the snapshot — full, filtered,
+    and as deltas against recent generations — to wire bytes **once**
+    per (generation, view) and serves every subsequent request the
+    cached bytes. On a 100k-job day that turns O(clients × jobs) JSON
+    encoding into O(changes).
+
+    Single-writer: all mutation happens on the daemon's serve-loop
+    thread; only plain-int stats are read cross-thread.
+    """
+
+    def __init__(self, cache: QueueCache, lock: threading.RLock, *,
+                 history: int = DELTA_HISTORY, memo_cap: int = ENCODER_MEMO_CAP):
+        self.cache = cache
+        self._lock = lock  # the daemon's backend lock, taken only to refresh
+        self.history = int(history)
+        self.memo_cap = int(memo_cap)
+        self.generation: "int | None" = None
+        self._rows: list = []
+        self._by_id: dict = {}
+        self._order: list = []
+        #: filter key → (ordered jobids, encoded row-list bytes)
+        self._full: dict = {}
+        #: filter key → v2 full-result bytes ({"generation":g,"jobs":[...]})
+        self._v2full: dict = {}
+        #: (since, filter key) → delta-result bytes (None = delta not worth it)
+        self._delta: dict = {}
+        #: generation → (by_id, ordered jobids) for recent snapshots
+        self._history: OrderedDict = OrderedDict()
+        self._nodes_gen: "int | None" = None
+        self._nodes_bytes: bytes = b"[]"
+        # plain-int stats (exact even with metrics disabled)
+        self.refreshes = 0      # snapshot re-materialisations (gen changes seen)
+        self.encodes = 0        # JSON serialisations actually performed
+        self.frame_hits = 0     # requests served from a cached encoding
+        self.delta_hits = 0     # requests answered with a delta
+        self.unchanged_hits = 0  # requests answered {"unchanged": true}
+        self.full_serves = 0    # v2 requests answered with a full snapshot
+
+    # -- snapshot currency -----------------------------------------------------
+
+    def ensure_current(self) -> None:
+        """Bring the encoder to the cache's current generation.
+
+        The fast path is lock-free: while the cached frame generation
+        matches the cache's valid snapshot generation, nothing happens.
+        Only a stale snapshot takes the backend lock for the one
+        single-flight refresh of this generation.
+        """
+        gen = self.cache.snapshot_generation()
+        if gen is not None and gen == self.generation:
+            return
+        with self._lock:
+            rows, gen = self.cache.queue_with_generation()
+        if gen == self.generation:
+            return
+        if self.generation is not None:
+            self._history[self.generation] = (self._by_id, self._order)
+            while len(self._history) > self.history:
+                self._history.popitem(last=False)
+        self._rows = rows
+        self._by_id = {str(r.get("jobid", "")): r for r in rows}
+        self._order = list(self._by_id)
+        self.generation = gen
+        self._full.clear()
+        self._v2full.clear()
+        self._delta.clear()
+        self.refreshes += 1
+
+    def any_rows(self) -> bool:
+        self.ensure_current()
+        return bool(self._rows)
+
+    # -- encodings -------------------------------------------------------------
+
+    def _full_entry(self, key: tuple) -> "tuple[list, bytes]":
+        entry = self._full.get(key)
+        if entry is not None:
+            self.frame_hits += 1
+            return entry
+        if key == EMPTY_FILTER_KEY:
+            ids, rows = self._order, self._rows
+        else:
+            pred = row_filter(key)
+            rows = [r for r in self._rows if pred(r)]
+            ids = [str(r.get("jobid", "")) for r in rows]
+        entry = (ids, dumps_wire(rows))
+        self.encodes += 1
+        reg = get_registry()
+        if reg.enabled:
+            reg.counter(
+                "nbi_gateway_snapshot_encodes_total",
+                "queue snapshot JSON serialisations (once per generation+filter)",
+            ).inc()
+        if len(self._full) < self.memo_cap:
+            self._full[key] = entry
+        return entry
+
+    def result_v1(self, key: tuple) -> bytes:
+        """The PR-9 wire result: the plain (filtered) row list."""
+        return self._full_entry(key)[1]
+
+    def result_v2(self, key: tuple, since) -> bytes:
+        """Generation-wrapped result: unchanged / delta / full snapshot."""
+        gen = self.generation
+        if since is not None and since == gen:
+            self.unchanged_hits += 1
+            return b'{"generation":%d,"unchanged":true}' % gen
+        if since is not None:
+            delta = self._delta_bytes(int(since), key)
+            if delta is not None:
+                self.delta_hits += 1
+                reg = get_registry()
+                if reg.enabled:
+                    reg.counter(
+                        "nbi_gateway_delta_hits_total",
+                        "queue RPCs answered with a generation delta",
+                    ).inc()
+                return delta
+        buf = self._v2full.get(key)
+        if buf is None:
+            buf = b'{"generation":%d,"jobs":' % gen + self._full_entry(key)[1] + b"}"
+            if len(self._v2full) < self.memo_cap:
+                self._v2full[key] = buf
+        else:
+            self.frame_hits += 1
+        self.full_serves += 1
+        return buf
+
+    def _delta_bytes(self, since: int, key: tuple) -> "bytes | None":
+        memo_key = (since, key)
+        if memo_key in self._delta:
+            hit = self._delta[memo_key]
+            if hit is not None:
+                self.frame_hits += 1
+            return hit
+        hist = self._history.get(since)
+        if hist is None:
+            return None  # too far behind: fall back to a full snapshot
+        old_by_id, old_order = hist
+        if key == EMPTY_FILTER_KEY:
+            old_ids = old_order
+            new_ids = self._order
+        else:
+            pred = row_filter(key)
+            old_ids = [i for i in old_order if pred(old_by_id[i])]
+            new_ids = self._full_entry(key)[0]
+        old_set = set(old_ids)
+        new_set = set(new_ids)
+        add = [self._by_id[i] for i in new_ids if i not in old_set]
+        update = [
+            self._by_id[i] for i in new_ids
+            if i in old_set and self._by_id[i] != old_by_id[i]
+        ]
+        remove = [i for i in old_ids if i not in new_set]
+        payload = {
+            "generation": self.generation,
+            "since": since,
+            "delta": {"add": add, "update": update, "remove": remove},
+        }
+        # the client reconstructs order as survivors-then-adds; when the
+        # true order differs (rare: priority reshuffles), ship it
+        survivors = [i for i in old_ids if i in new_set]
+        survivors += [i for i in new_ids if i not in old_set]
+        if survivors != new_ids:
+            payload["order"] = new_ids
+        buf = dumps_wire(payload)
+        self.encodes += 1
+        if len(buf) >= len(self._full_entry(key)[1]):
+            buf = None  # delta bigger than the snapshot: not worth it
+        if len(self._delta) < self.memo_cap * 2:
+            self._delta[memo_key] = buf
+        return buf
+
+    def nodes_result(self) -> bytes:
+        """Node info, re-encoded once per generation (node occupancy only
+        changes on job transitions, which bump the generation)."""
+        self.ensure_current()
+        if self._nodes_gen == self.generation:
+            self.frame_hits += 1
+            return self._nodes_bytes
+        with self._lock:
+            rows = self.cache.nodes_info()
+        self._nodes_bytes = dumps_wire(rows)
+        self._nodes_gen = self.generation
+        self.encodes += 1
+        return self._nodes_bytes
+
+    def stats(self) -> dict:
+        return {
+            "generation": self.generation,
+            "refreshes": self.refreshes,
+            "encodes": self.encodes,
+            "frame_hits": self.frame_hits,
+            "delta_hits": self.delta_hits,
+            "unchanged_hits": self.unchanged_hits,
+            "full_serves": self.full_serves,
+            "cached_filters": len(self._full),
+            "delta_history": len(self._history),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Serve-loop plumbing
+# ---------------------------------------------------------------------------
+
+
+class _Conn:
+    """One client connection in the reactor: buffers + optional sub."""
+
+    __slots__ = ("sock", "rbuf", "wbuf", "alive", "close_after_flush", "sub")
+
+    def __init__(self, sock: socket.socket):
+        self.sock = sock
+        self.rbuf = bytearray()
+        self.wbuf = bytearray()
+        self.alive = True
+        self.close_after_flush = False
+        self.sub: "_EventSub | None" = None
+
+
+class _EventSub:
+    """An ``events_subscribe`` stream: bounded queue drained by the loop."""
+
+    __slots__ = ("conn", "poll_s", "duration_s", "max_events",
+                 "started", "sent", "queue", "dropped")
+
+    def __init__(self, conn: _Conn, poll_s: float, duration_s: float,
+                 max_events: int):
+        self.conn = conn
+        self.poll_s = poll_s
+        self.duration_s = duration_s
+        self.max_events = max_events
+        self.started = _time.monotonic()
+        self.sent = 0
+        self.queue: deque = deque(maxlen=EVENT_QUEUE_CAP)
+        self.dropped = 0
+
+
+class _EventItem:
+    """One bus event, wire-encoded once and shared across subscribers."""
+
+    __slots__ = ("wire", "frame")
+
+    def __init__(self, wire: dict):
+        self.wire = wire
+        self.frame: "bytes | None" = None
+
+    def encoded(self) -> bytes:
+        if self.frame is None:
+            self.frame = encode_frame({"event": self.wire})
+        return self.frame
+
+
+# ---------------------------------------------------------------------------
 # The daemon
 # ---------------------------------------------------------------------------
 
@@ -281,6 +670,13 @@ class GatewayServer:
         Background pump cadence against non-simulated backends (the
         PollingEventAdapter poll / controller tick interval).
     """
+
+    #: read-only RPCs answered from immutable cached frames on the serve
+    #: loop, never behind the backend lock
+    _READONLY = frozenset({"ping", "queue", "nodes_info", "stats"})
+    #: RPCs that mutate cluster state (or simulated time): serialized
+    #: behind the backend lock, exactly the PR-9 semantics
+    _MUTATING = frozenset({"submit_batch", "cancel", "release", "advance"})
 
     def __init__(
         self,
@@ -311,9 +707,10 @@ class GatewayServer:
         self.burst = float(burst)
         self.max_throttle_s = float(max_throttle_s)
         self.poll_s = float(poll_s)
-        #: one advance()/poll-capable lock serialising every backend touch
-        #: from the per-connection threads (the simulator is not
-        #: thread-safe; real squeue/sbatch calls gain nothing from racing)
+        #: serialises every backend mutation — from the serve loop's
+        #: mutating RPCs, wait workers and the background pump (the
+        #: simulator is not thread-safe; real squeue/sbatch calls gain
+        #: nothing from racing). Read RPCs never take it.
         self._lock = threading.RLock()
         self._sim_like = hasattr(inner, "advance")
         self._adapter = None
@@ -343,17 +740,32 @@ class GatewayServer:
         self.owners: dict[str, str] = {}
         self._buckets: dict[str, TokenBucket] = {}
         self._buckets_lock = threading.Lock()
+        self.snapshots = SnapshotEncoder(self.cache, self._lock)
         # plain-int daemon stats (exact even with metrics disabled)
         self.started_at = _time.time()
         self.connections = 0
         self.inflight = 0
         self.requests: dict[str, int] = {}
         self.throttled = 0
+        self.events_dropped = 0
         self._stop = threading.Event()
         self._listener: socket.socket | None = None
-        self._threads: list[threading.Thread] = []
         self._pump_thread: threading.Thread | None = None
         self._wait_wakeup = threading.Event()
+        # reactor state (owned by the serve-loop thread)
+        self._sel: "selectors.BaseSelector | None" = None
+        self._conns: dict[int, _Conn] = {}
+        self._delayed: list = []  # (due, seq, conn, req) throttled requests
+        self._delay_seq = 0
+        #: wait-RPC worker threads, pruned every loop pass (the PR-9
+        #: ``_threads`` list was only pruned when a NEW client connected,
+        #: so long-lived wait/subscribe connections accumulated forever)
+        self._workers: list[threading.Thread] = []
+        self._outbox: deque = deque()  # (conn, obj) replies from workers
+        self._subs: list[_EventSub] = []
+        self._fanout_token = None
+        self._wake_r: socket.socket | None = None
+        self._wake_w: socket.socket | None = None
 
     # -- lifecycle -------------------------------------------------------------
 
@@ -384,8 +796,8 @@ class GatewayServer:
             os.chmod(path, 0o666)
         except OSError:
             pass
-        listener.listen(64)
-        listener.settimeout(0.2)  # periodic stop-flag checks
+        listener.listen(128)
+        listener.setblocking(False)
         self._listener = listener
         return self
 
@@ -393,33 +805,96 @@ class GatewayServer:
         """Serve in a daemon thread (tests, benchmarks, embedded use)."""
         self.bind()
         t = threading.Thread(target=self.serve_forever, daemon=True,
-                             name="nbi-gateway-accept")
+                             name="nbi-gateway-serve")
         t.start()
         return t
 
     def serve_forever(self) -> None:
-        """Accept loop; returns after :meth:`close` (or ``shutdown`` RPC)."""
+        """The reactor: accept, read, dispatch, write — one thread,
+        no blocking syscalls. Returns after :meth:`close` (or the
+        ``shutdown`` RPC)."""
         self.bind()
         if not self._sim_like and self._pump_thread is None:
             self._pump_thread = threading.Thread(
                 target=self._pump_loop, daemon=True, name="nbi-gateway-pump"
             )
             self._pump_thread.start()
-        while not self._stop.is_set():
+        sel = selectors.DefaultSelector()
+        self._sel = sel
+        self._wake_r, self._wake_w = socket.socketpair()
+        self._wake_r.setblocking(False)
+        self._wake_w.setblocking(False)
+        sel.register(self._listener, selectors.EVENT_READ, "accept")
+        sel.register(self._wake_r, selectors.EVENT_READ, "wake")
+        try:
+            while not self._stop.is_set():
+                try:
+                    events = sel.select(self._loop_timeout())
+                except OSError:
+                    break  # listener closed under us (close())
+                for key, mask in events:
+                    if key.data == "accept":
+                        self._accept_ready()
+                    elif key.data == "wake":
+                        try:
+                            while self._wake_r.recv(4096):
+                                pass
+                        except (BlockingIOError, OSError):
+                            pass
+                    else:
+                        conn = key.data
+                        if mask & selectors.EVENT_READ:
+                            self._on_readable(conn)
+                        if mask & selectors.EVENT_WRITE and conn.alive:
+                            self._flush_conn(conn)
+                self._drain_outbox()
+                self._run_due_throttled()
+                self._pump_subscribers()
+                if self._workers:
+                    self._workers = [t for t in self._workers if t.is_alive()]
+        finally:
+            self._teardown_reactor()
+
+    def _loop_timeout(self) -> float:
+        if self._subs and self._sim_like:
+            return 0.0  # simulated time only moves when we pump
+        timeout = 0.2
+        if self._delayed:
+            timeout = min(timeout, max(0.0, self._delayed[0][0] - self._clock()))
+        return timeout
+
+    def _teardown_reactor(self) -> None:
+        for sub in list(self._subs):
+            self._end_sub(sub)  # stream clients get their {"end": ...} frame
+        if self._fanout_token is not None:
+            self.bus.unsubscribe(self._fanout_token)
+            self._fanout_token = None
+        self._subs.clear()
+        for conn in list(self._conns.values()):
+            self._close_conn(conn)
+        self._conns.clear()
+        for s in (self._wake_r, self._wake_w):
+            if s is not None:
+                try:
+                    s.close()
+                except OSError:
+                    pass
+        self._wake_r = self._wake_w = None
+        if self._sel is not None:
             try:
-                conn, _ = self._listener.accept()
-            except socket.timeout:
-                continue
+                self._sel.close()
             except OSError:
-                break  # listener closed under us (close())
-            self.connections += 1
-            t = threading.Thread(
-                target=self._serve_conn, args=(conn,), daemon=True,
-                name=f"nbi-gateway-conn-{self.connections}",
-            )
-            t.start()
-            self._threads.append(t)
-            self._threads = [x for x in self._threads if x.is_alive()]
+                pass
+            self._sel = None
+
+    def _wake(self) -> None:
+        """Nudge the reactor out of ``select`` (cross-thread safe)."""
+        w = self._wake_w
+        if w is not None:
+            try:
+                w.send(b"x")
+            except (BlockingIOError, OSError):
+                pass
 
     def close(self) -> None:
         """Stop serving and detach everything the daemon subscribed.
@@ -431,6 +906,7 @@ class GatewayServer:
         """
         self._stop.set()
         self._wait_wakeup.set()
+        self._wake()
         if self._listener is not None:
             try:
                 self._listener.close()
@@ -445,49 +921,159 @@ class GatewayServer:
             self.controller.detach()
         self.cache.unbind_bus()
 
-    # -- connection handling -----------------------------------------------------
+    # -- reactor: connections --------------------------------------------------
 
-    def _serve_conn(self, conn: socket.socket) -> None:
-        reg = get_registry()
-        self.inflight += 1
-        if reg.enabled:
-            reg.gauge(
-                "nbi_gateway_inflight_connections", "open client connections"
-            ).set(self.inflight)
-            reg.counter(
-                "nbi_gateway_connections_total", "client connections accepted"
-            ).inc()
-        try:
-            while not self._stop.is_set():
-                try:
-                    req = recv_frame(conn)
-                except (GatewayError, GatewayConnectionLost, OSError,
-                        json.JSONDecodeError):
-                    break
-                if req is None:
-                    break
-                self._handle(conn, req if isinstance(req, dict) else {})
-                if isinstance(req, dict) and req.get("method") == "shutdown":
-                    break
-        finally:
-            self.inflight -= 1
+    def _accept_ready(self) -> None:
+        while True:
+            try:
+                sock, _ = self._listener.accept()
+            except (BlockingIOError, OSError):
+                return
+            sock.setblocking(False)
+            conn = _Conn(sock)
+            self._conns[sock.fileno()] = conn
+            self._sel.register(sock, selectors.EVENT_READ, conn)
+            self.connections += 1
+            self.inflight += 1
+            reg = get_registry()
             if reg.enabled:
                 reg.gauge(
                     "nbi_gateway_inflight_connections", "open client connections"
                 ).set(self.inflight)
-            try:
-                conn.close()
-            except OSError:
-                pass
+                reg.counter(
+                    "nbi_gateway_connections_total", "client connections accepted"
+                ).inc()
 
-    def _handle(self, conn: socket.socket, req: dict) -> None:
-        method = str(req.get("method", ""))
+    def _close_conn(self, conn: _Conn) -> None:
+        if not conn.alive:
+            return
+        conn.alive = False
+        if conn.sub is not None:
+            if conn.sub in self._subs:
+                self._subs.remove(conn.sub)
+            conn.sub = None
+            self._maybe_drop_fanout()
+        try:
+            fd = conn.sock.fileno()
+        except OSError:
+            fd = -1
+        self._conns.pop(fd, None)
+        if self._sel is not None:
+            try:
+                self._sel.unregister(conn.sock)
+            except (KeyError, ValueError, OSError):
+                pass
+        try:
+            conn.sock.close()
+        except OSError:
+            pass
+        self.inflight -= 1
+        reg = get_registry()
+        if reg.enabled:
+            reg.gauge(
+                "nbi_gateway_inflight_connections", "open client connections"
+            ).set(self.inflight)
+
+    def _on_readable(self, conn: _Conn) -> None:
+        try:
+            while True:
+                chunk = conn.sock.recv(65536)
+                if not chunk:
+                    self._close_conn(conn)
+                    return
+                conn.rbuf += chunk
+                if len(chunk) < 65536:
+                    break
+        except BlockingIOError:
+            pass
+        except OSError:
+            self._close_conn(conn)
+            return
+        self._parse_frames(conn)
+
+    def _parse_frames(self, conn: _Conn) -> None:
+        while conn.alive and not conn.close_after_flush:
+            if len(conn.rbuf) < _LEN.size:
+                return
+            (length,) = _LEN.unpack_from(conn.rbuf, 0)
+            if length > MAX_FRAME_BYTES:
+                # structured refusal BEFORE any allocation, then hang up —
+                # the stream is unrecoverable once framing is suspect
+                self._send_obj(conn, {
+                    "id": None, "ok": False,
+                    "error": f"frame too large ({length} bytes, "
+                             f"cap {MAX_FRAME_BYTES})",
+                })
+                conn.close_after_flush = True
+                self._flush_conn(conn)
+                return
+            if len(conn.rbuf) < _LEN.size + length:
+                return
+            payload = bytes(conn.rbuf[_LEN.size:_LEN.size + length])
+            del conn.rbuf[:_LEN.size + length]
+            try:
+                req = json.loads(payload.decode("utf-8"))
+            except (UnicodeDecodeError, json.JSONDecodeError) as e:
+                self._send_obj(conn, {
+                    "id": None, "ok": False, "error": f"invalid frame: {e}",
+                })
+                conn.close_after_flush = True
+                self._flush_conn(conn)
+                return
+            self._dispatch(conn, req if isinstance(req, dict) else {})
+
+    # -- reactor: writes -------------------------------------------------------
+
+    def _send_obj(self, conn: _Conn, obj) -> None:
+        try:
+            self._send_bytes(conn, encode_frame(obj))
+        except GatewayError:
+            # the RESULT was unserializable; tell the client loudly
+            rid = obj.get("id") if isinstance(obj, dict) else None
+            self._send_bytes(conn, encode_frame({
+                "id": rid, "ok": False, "error": "unserializable result",
+            }))
+
+    def _send_bytes(self, conn: _Conn, data: bytes) -> None:
+        if not conn.alive:
+            return
+        conn.wbuf += data
+        self._flush_conn(conn)
+
+    def _flush_conn(self, conn: _Conn) -> None:
+        if not conn.alive:
+            return
+        try:
+            while conn.wbuf:
+                sent = conn.sock.send(conn.wbuf)
+                if sent <= 0:
+                    break
+                del conn.wbuf[:sent]
+        except BlockingIOError:
+            pass
+        except OSError:
+            self._close_conn(conn)
+            return
+        want = selectors.EVENT_READ
+        if conn.wbuf:
+            want |= selectors.EVENT_WRITE
+        elif conn.close_after_flush:
+            self._close_conn(conn)
+            return
+        if self._sel is None:
+            return
+        try:
+            self._sel.modify(conn.sock, want, conn)
+        except (KeyError, ValueError, OSError):
+            pass
+
+    # -- reactor: dispatch -----------------------------------------------------
+
+    def _dispatch(self, conn: _Conn, req: dict) -> None:
         params = req.get("params") or {}
         if not isinstance(params, dict):
             params = {}
         user = str(params.get("user", "") or "") or "anonymous"
-        rid = req.get("id")
-        self.requests[method] = self.requests.get(method, 0) + 1
         delay = self._bucket(user).reserve()
         if delay > 0:
             self.throttled += 1
@@ -497,24 +1083,61 @@ class GatewayServer:
                     "nbi_gateway_throttled_total",
                     "requests delayed by fair-share rate limiting",
                 ).inc()
-            self._stop.wait(min(delay, self.max_throttle_s))
+            due = self._clock() + min(delay, self.max_throttle_s)
+            if due > self._clock():
+                self._delay_seq += 1
+                heapq.heappush(self._delayed, (due, self._delay_seq, conn, req))
+                return
+        self._process(conn, req)
+
+    def _run_due_throttled(self) -> None:
+        now = self._clock()
+        while self._delayed and self._delayed[0][0] <= now:
+            _, _, conn, req = heapq.heappop(self._delayed)
+            if conn.alive:
+                self._process(conn, req)
+
+    def _process(self, conn: _Conn, req: dict) -> None:
+        method = str(req.get("method", ""))
+        params = req.get("params") or {}
+        if not isinstance(params, dict):
+            params = {}
+        user = str(params.get("user", "") or "") or "anonymous"
+        rid = req.get("id")
+        self.requests[method] = self.requests.get(method, 0) + 1
         t0 = _time.perf_counter()
         try:
-            handler = getattr(self, f"_rpc_{method}", None)
-            if handler is None:
+            if method == "queue":
+                self._handle_queue(conn, rid, params)
+            elif method == "nodes_info":
+                self._send_result_bytes(conn, rid, self.snapshots.nodes_result())
+            elif method == "ping":
+                self._send_obj(conn, {"id": rid, "ok": True,
+                                      "result": self._rpc_ping(user, params)})
+            elif method == "stats":
+                self._send_obj(conn, {"id": rid, "ok": True,
+                                      "result": self._rpc_stats(user, params)})
+            elif method == "wait":
+                self._spawn_wait_worker(conn, rid, user, params)
+            elif method == "events_subscribe":
+                self._subscribe(conn, rid, user, params)
+            elif method == "shutdown":
+                self._send_obj(conn, {"id": rid, "ok": True,
+                                      "result": {"stopping": True}})
+                self._flush_blocking(conn)
+                self._stop.set()
+            elif method in self._MUTATING:
+                handler = getattr(self, f"_rpc_{method}")
+                with self._lock:
+                    result = handler(user, params)
+                self._send_obj(conn, {"id": rid, "ok": True, "result": result})
+            else:
                 raise GatewayError(f"unknown method {method!r}")
-            if method == "events_subscribe":
-                handler(conn, rid, user, params)  # streaming: owns the reply
-                return
-            result = handler(user, params)
-            send_frame(conn, {"id": rid, "ok": True, "result": result})
         except (GatewayError, ValueError, KeyError, TypeError) as e:
-            try:
-                send_frame(conn, {"id": rid, "ok": False, "error": str(e)})
-            except OSError:
-                pass
-        except OSError:
-            pass  # client went away mid-reply
+            self._send_obj(conn, {"id": rid, "ok": False, "error": str(e)})
+        except Exception as e:  # noqa: BLE001 — a backend hiccup must not
+            # take down the reactor (there is only one serve thread now)
+            self._send_obj(conn, {"id": rid, "ok": False, "error": str(e)})
         finally:
             reg = get_registry()
             if reg.enabled:
@@ -526,6 +1149,51 @@ class GatewayServer:
                     "nbi_gateway_request_seconds", "gateway RPC latency",
                     labels=("method",),
                 ).labels(method=method or "?").observe(_time.perf_counter() - t0)
+
+    def _flush_blocking(self, conn: _Conn) -> None:
+        """Best-effort synchronous drain (shutdown reply must land)."""
+        if not conn.alive or not conn.wbuf:
+            return
+        try:
+            conn.sock.setblocking(True)
+            conn.sock.settimeout(1.0)
+            conn.sock.sendall(bytes(conn.wbuf))
+            conn.wbuf.clear()
+        except OSError:
+            pass
+        finally:
+            try:
+                conn.sock.setblocking(False)
+            except OSError:
+                pass
+
+    def _send_result_bytes(self, conn: _Conn, rid, result: bytes) -> None:
+        """Splice pre-encoded result bytes into a response frame.
+
+        Byte-identical to ``send_frame(conn, {"id": rid, "ok": True,
+        "result": <decoded>})`` — same key order, same separators — so a
+        v1 client cannot tell cached frames from per-request encoding.
+        """
+        body = b'{"id":' + dumps_wire(rid) + b',"ok":true,"result":' + result + b"}"
+        if len(body) > MAX_FRAME_BYTES:
+            self._send_obj(conn, {
+                "id": rid, "ok": False,
+                "error": f"result too large ({len(body)} bytes)",
+            })
+            return
+        self._send_bytes(conn, _LEN.pack(len(body)) + body)
+
+    def _handle_queue(self, conn: _Conn, rid, params: dict) -> None:
+        enc = self.snapshots
+        enc.ensure_current()
+        v2 = bool(params.get("v")) or "since" in params or "filters" in params
+        key = canonical_filter_key(params.get("filters"))
+        if not v2:
+            self._send_result_bytes(conn, rid, enc.result_v1(key))
+            return
+        since = params.get("since")
+        since = int(since) if isinstance(since, (int, float)) else None
+        self._send_result_bytes(conn, rid, enc.result_v2(key, since))
 
     def _bucket(self, user: str) -> TokenBucket:
         with self._buckets_lock:
@@ -559,6 +1227,114 @@ class GatewayServer:
             except Exception:  # noqa: BLE001 — the pump must survive squeue hiccups
                 pass
 
+    # -- event fanout (bounded per-subscriber queues) ------------------------------
+
+    def _subscribe(self, conn: _Conn, rid, user: str, params: dict) -> None:
+        if conn.sub is not None:
+            raise GatewayError("connection already has an event subscription")
+        sub = _EventSub(
+            conn,
+            poll_s=float(params.get("poll_s", 2.0) or 2.0),
+            duration_s=float(params.get("duration_s", 0.0) or 0.0),
+            max_events=int(params.get("max_events", 0) or 0),
+        )
+        conn.sub = sub
+        self._subs.append(sub)
+        if self._fanout_token is None:
+            self._fanout_token = self.bus.subscribe(self._on_bus_event)
+        self._send_obj(conn, {"id": rid, "ok": True,
+                              "result": {"subscribed": True}})
+
+    def _on_bus_event(self, event) -> None:
+        """Bus callback: append to every subscriber's bounded queue and
+        return — never encodes into sockets, never blocks on a slow
+        client. May run on any thread (pump, wait worker, serve loop)."""
+        subs = self._subs
+        if not subs:
+            return
+        item = _EventItem(event_to_wire(event))
+        for sub in list(subs):
+            if len(sub.queue) == sub.queue.maxlen:
+                sub.dropped += 1
+                self.events_dropped += 1
+                reg = get_registry()
+                if reg.enabled:
+                    reg.counter(
+                        "nbi_gateway_events_dropped_total",
+                        "events dropped at full subscriber queues",
+                    ).inc()
+            sub.queue.append(item)
+        self._wake()
+
+    def _maybe_drop_fanout(self) -> None:
+        if not self._subs and self._fanout_token is not None:
+            self.bus.unsubscribe(self._fanout_token)
+            self._fanout_token = None
+
+    def _pump_subscribers(self) -> None:
+        """Serve-loop stage: advance simulated time for streaming clients,
+        drain subscriber queues into write buffers, retire finished
+        streams."""
+        if not self._subs:
+            return
+        if self._sim_like:
+            self._pump_once(min(s.poll_s for s in self._subs))
+        now = _time.monotonic()
+        drained = self._sim_like and not self.snapshots.any_rows()
+        for sub in list(self._subs):
+            conn = sub.conn
+            done = False
+            while sub.queue:
+                if len(conn.wbuf) > WRITE_BUFFER_SOFT_CAP:
+                    break  # back-pressure: keep events queued, not buffered
+                item = sub.queue.popleft()
+                self._send_bytes(conn, item.encoded())
+                sub.sent += 1
+                if sub.max_events and sub.sent >= sub.max_events:
+                    done = True
+                    break
+            if not done and sub.duration_s and now - sub.started >= sub.duration_s:
+                done = True
+            if not done and drained and not sub.queue:
+                done = True  # simulated queue empty: nothing left to stream
+            if done:
+                self._end_sub(sub)
+
+    def _end_sub(self, sub: _EventSub) -> None:
+        conn = sub.conn
+        if sub in self._subs:
+            self._subs.remove(sub)
+        conn.sub = None
+        self._maybe_drop_fanout()
+        self._send_obj(conn, {"end": True, "events": sub.sent})
+
+    # -- wait workers --------------------------------------------------------------
+
+    def _spawn_wait_worker(self, conn: _Conn, rid, user: str,
+                           params: dict) -> None:
+        """``wait`` legitimately blocks for minutes; it gets a worker
+        thread and posts its reply back through the reactor's outbox."""
+
+        def run():
+            try:
+                result = self._rpc_wait(user, params)
+                reply = {"id": rid, "ok": True, "result": result}
+            except (GatewayError, ValueError, KeyError, TypeError) as e:
+                reply = {"id": rid, "ok": False, "error": str(e)}
+            self._outbox.append((conn, reply))
+            self._wake()
+
+        t = threading.Thread(target=run, daemon=True,
+                             name=f"nbi-gateway-wait-{rid}")
+        self._workers.append(t)
+        t.start()
+
+    def _drain_outbox(self) -> None:
+        while self._outbox:
+            conn, obj = self._outbox.popleft()
+            if conn.alive:
+                self._send_obj(conn, obj)
+
     # -- RPC handlers --------------------------------------------------------------
 
     def _rpc_ping(self, user: str, params: dict) -> dict:
@@ -569,14 +1345,6 @@ class GatewayServer:
             "backend": type(self.backend).__name__,
         }
 
-    def _rpc_queue(self, user: str, params: dict) -> list:
-        with self._lock:
-            return self.cache.queue()
-
-    def _rpc_nodes_info(self, user: str, params: dict) -> list:
-        with self._lock:
-            return self.cache.nodes_info()
-
     def _rpc_submit_batch(self, user: str, params: dict) -> dict:
         wires = params.get("jobs")
         if not isinstance(wires, list) or not wires:
@@ -586,15 +1354,14 @@ class GatewayServer:
         eco = self._eco_default if eco is None else bool(eco)
         from .engine import SubmitEngine
 
-        with self._lock:
-            engine = SubmitEngine(
-                self.cache,
-                coalesce=bool(params.get("coalesce", True)),
-                eco=eco,
-                controller=self.controller if eco else None,
-                predictor=self.predictor,
-            )
-            result = engine.submit_many(jobs)
+        engine = SubmitEngine(
+            self.cache,
+            coalesce=bool(params.get("coalesce", True)),
+            eco=eco,
+            controller=self.controller if eco else None,
+            predictor=self.predictor,
+        )
+        result = engine.submit_many(jobs)
         from .federation import array_base_id
 
         for base in result.base_ids:
@@ -625,16 +1392,14 @@ class GatewayServer:
         ids = list(params.get("ids") or [])
         allowed, denied = self._partition_owned(user, ids)
         if allowed:
-            with self._lock:
-                self.cache.cancel(allowed)
+            self.cache.cancel(allowed)
         return {"cancelled": allowed, "denied": denied}
 
     def _rpc_release(self, user: str, params: dict) -> dict:
         ids = list(params.get("ids") or [])
         allowed, denied = self._partition_owned(user, ids)
         if allowed:
-            with self._lock:
-                self.cache.release(allowed)
+            self.cache.release(allowed)
         return {"released": allowed, "denied": denied}
 
     def _rpc_advance(self, user: str, params: dict) -> dict:
@@ -715,52 +1480,6 @@ class GatewayServer:
             "snapshots": snapshots,
         }
 
-    def _rpc_events_subscribe(self, conn, rid, user: str, params: dict) -> None:
-        """Stream the daemon's aggregated event ticker to this client."""
-        import queue as _queue
-
-        poll_s = float(params.get("poll_s", 2.0) or 2.0)
-        duration_s = float(params.get("duration_s", 0.0) or 0.0)
-        max_events = int(params.get("max_events", 0) or 0)
-        pending: _queue.Queue = _queue.Queue()
-        token = self.bus.subscribe(pending.put)
-        sent = 0
-        try:
-            send_frame(conn, {"id": rid, "ok": True, "result": {"subscribed": True}})
-            start = _time.monotonic()
-            while not self._stop.is_set():
-                if duration_s and _time.monotonic() - start >= duration_s:
-                    break
-                if self._sim_like:
-                    self._pump_once(poll_s)
-                else:
-                    _time.sleep(min(poll_s, 0.5))
-                while True:
-                    try:
-                        event = pending.get_nowait()
-                    except _queue.Empty:
-                        break
-                    send_frame(conn, {"event": event_to_wire(event)})
-                    sent += 1
-                    if max_events and sent >= max_events:
-                        raise _StreamDone
-                if max_events and sent >= max_events:
-                    break
-                if self._sim_like and not self._any_active():
-                    break  # simulated queue drained — nothing left to stream
-        except (_StreamDone, OSError, BrokenPipeError):
-            pass
-        finally:
-            self.bus.unsubscribe(token)
-            try:
-                send_frame(conn, {"end": True, "events": sent})
-            except OSError:
-                pass
-
-    def _any_active(self) -> bool:
-        with self._lock:
-            return bool(self.cache.queue())
-
     def _rpc_stats(self, user: str, params: dict) -> dict:
         out = {
             "daemon": {
@@ -776,12 +1495,17 @@ class GatewayServer:
                 "rate": self.rate,
                 "burst": self.burst,
                 "owners": len(self.owners),
+                "subscribers": len(self._subs),
+                "wait_workers": len(self._workers),
+                "events_dropped": self.events_dropped,
             },
             "queue_cache": {
                 "polls": self.cache.polls,
                 "hits": self.cache.hits,
                 "event_invalidations": self.cache.event_invalidations,
+                "generation": self.cache.generation,
             },
+            "snapshot": self.snapshots.stats(),
         }
         if self.controller is not None:
             out["eco"] = {
@@ -798,7 +1522,3 @@ class GatewayServer:
     def _rpc_shutdown(self, user: str, params: dict) -> dict:
         self._stop.set()
         return {"stopping": True}
-
-
-class _StreamDone(Exception):
-    pass

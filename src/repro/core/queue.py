@@ -87,12 +87,24 @@ class QueuedJob:
 
 @dataclass
 class Queue:
-    """A filtered snapshot of the queue (fetched on construction)."""
+    """A filtered snapshot of the queue (fetched on construction).
+
+    When the backend supports **server-side filter pushdown** (the gateway
+    thin client's ``queue_filtered``), the ``user``/``state``/``cluster``/
+    ``ids`` filters travel with the RPC so the daemon ships only the
+    matching rows instead of the whole 100k-job snapshot. Every filter is
+    *re-applied* locally afterwards — pushdown is a transport optimisation,
+    never a semantic one, so results are identical whether or not the
+    backend understood the filters (an old daemon simply returns the full
+    snapshot and the rows are trimmed here as before).
+    """
 
     user: str | None = None
     state: "str | list[str] | None" = None
     name: str | None = None  # regex on job name
     queue: str | None = None  # partition
+    cluster: str | None = None  # federation member
+    jobids: "list | None" = None  # job ids (exact / array-base / bare forms)
     backend: object = None
     jobs: list[QueuedJob] = field(default_factory=list)
 
@@ -106,21 +118,42 @@ class Queue:
 
             be = get_backend()
             self.backend = be
-        rows = [QueuedJob.from_record(r) for r in be.queue()]
+        qf = getattr(be, "queue_filtered", None)
+        if qf is not None:
+            raw = qf(
+                user=self.user or None,
+                states=self._states() or None,
+                cluster=self.cluster if self.cluster is not None else None,
+                ids=[str(i) for i in self.jobids] if self.jobids else None,
+            )
+        else:
+            raw = be.queue()
+        rows = [QueuedJob.from_record(r) for r in raw]
         self.jobs = [j for j in rows if self._match(j)]
         return self
+
+    def _states(self) -> list[str]:
+        if not self.state:
+            return []
+        states = [self.state] if isinstance(self.state, str) else self.state
+        return [s.upper() for s in states]
 
     def _match(self, j: QueuedJob) -> bool:
         if self.user and j.user != self.user:
             return False
-        if self.state:
-            states = [self.state] if isinstance(self.state, str) else self.state
-            if j.state not in [s.upper() for s in states]:
-                return False
+        if self.state and j.state not in self._states():
+            return False
         if self.name and not re.search(self.name, j.name):
             return False
         if self.queue and j.queue != self.queue:
             return False
+        if self.cluster is not None and j.cluster != self.cluster:
+            return False
+        if self.jobids:
+            from .federation import id_covers
+
+            if not any(id_covers(j.jobid, req) for req in self.jobids):
+                return False
         return True
 
     # -- conveniences used by the CLI tools ----------------------------------

@@ -162,9 +162,13 @@ class TestServerRpc:
         assert s["daemon"]["requests"]["queue"] == 5
         assert s["daemon"]["backend"] == "SimCluster"
         qc = s["queue_cache"]
-        # one poll filled the snapshot; the rest were hits
-        assert qc["polls"] + qc["hits"] == 5
+        # one poll filled the snapshot; every request after that was
+        # served from the encoder's pre-framed bytes without touching
+        # the cache at all (v2: repeats collapse to "unchanged")
         assert qc["polls"] == 1
+        snap = s["snapshot"]
+        assert snap["refreshes"] == 1
+        assert snap["unchanged_hits"] >= 4  # delta protocol kicked in
         assert "eco" in s
 
     def test_throttle_counts_over_budget_users(self, tmp_path):

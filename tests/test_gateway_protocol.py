@@ -1,0 +1,446 @@
+"""Gateway wire protocol v2: framing hardening, v1 byte-identity, the
+delta protocol, filter pushdown, and bounded event fanout.
+
+Everything here runs against real Unix sockets — raw byte-level clients
+where the claim is about bytes (a v1 client must receive frames
+byte-identical to the PR-9 daemon's), GatewayClients where the claim is
+about semantics (a delta-materialized view must equal a fresh snapshot).
+"""
+
+from __future__ import annotations
+
+import json
+import socket
+import struct
+import threading
+import time
+
+import pytest
+
+from repro.cli.session import GatewayClient, _QueueView
+from repro.core import Job, Opts, SimCluster
+from repro.core import gateway as gw
+from repro.core.gateway import (
+    EMPTY_FILTER_KEY,
+    GatewayError,
+    GatewayServer,
+    canonical_filter_key,
+    dumps_wire,
+    row_filter,
+)
+
+_LEN = struct.Struct(">I")
+
+
+def _job(name="j", duration=600, **opts):
+    return Job(name=name, command="true",
+               opts=Opts.new(threads=1, memory="1GB", time="1h", **opts),
+               sim_duration_s=duration)
+
+
+@pytest.fixture
+def daemon(tmp_path):
+    sim = SimCluster(default_user="alice")
+    sock = str(tmp_path / "gw.sock")
+    server = GatewayServer(sim, sock, rate=1e6, burst=1e6)
+    server.start()
+    try:
+        yield server, sock, sim
+    finally:
+        server.close()
+
+
+def _recv_exact(sock, n):
+    buf = b""
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            return buf
+        buf += chunk
+    return buf
+
+
+def _recv_raw_frame(sock) -> bytes:
+    """One frame's payload bytes, exactly as they came off the wire."""
+    header = _recv_exact(sock, _LEN.size)
+    assert len(header) == _LEN.size
+    (length,) = _LEN.unpack(header)
+    return _recv_exact(sock, length)
+
+
+def _raw_conn(sock_path) -> socket.socket:
+    s = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+    s.settimeout(10.0)
+    s.connect(sock_path)
+    return s
+
+
+def _v1_request(rid, method, params) -> bytes:
+    """A request frame exactly as the PR-9 GatewayClient would send it."""
+    payload = json.dumps(
+        {"id": rid, "method": method, "params": params},
+        separators=(",", ":"),
+    ).encode("utf-8")
+    return _LEN.pack(len(payload)) + payload
+
+
+class TestCodecHardening:
+    def test_dumps_wire_refuses_non_json_values(self):
+        from datetime import datetime
+
+        with pytest.raises(GatewayError, match="unserializable"):
+            dumps_wire({"at": datetime(2026, 1, 1)})
+        with pytest.raises(GatewayError):
+            dumps_wire({"s": {1, 2}})
+        with pytest.raises(GatewayError):
+            dumps_wire(float("nan"))
+
+    def test_oversized_length_prefix_rejected_without_allocation(self, daemon):
+        server, sock_path, sim = daemon
+        s = _raw_conn(sock_path)
+        try:
+            # a corrupt 2 GB length prefix: the daemon must answer with a
+            # structured error (not allocate, not silently hang up)
+            s.sendall(_LEN.pack(2_000_000_000))
+            resp = json.loads(_recv_raw_frame(s))
+            assert resp["ok"] is False
+            assert "frame too large" in resp["error"]
+            # ... and then close the unrecoverable stream
+            assert s.recv(1) == b""
+        finally:
+            s.close()
+
+    def test_invalid_json_frame_gets_structured_error(self, daemon):
+        server, sock_path, sim = daemon
+        s = _raw_conn(sock_path)
+        try:
+            garbage = b"\xff\xfe not json"
+            s.sendall(_LEN.pack(len(garbage)) + garbage)
+            resp = json.loads(_recv_raw_frame(s))
+            assert resp["ok"] is False and "invalid frame" in resp["error"]
+        finally:
+            s.close()
+
+    def test_truncated_frame_then_disconnect_leaves_daemon_serving(self, daemon):
+        server, sock_path, sim = daemon
+        s = _raw_conn(sock_path)
+        s.sendall(_LEN.pack(100) + b"only twenty bytes...")  # never finished
+        s.close()
+        # the daemon shrugged it off and keeps serving everyone else
+        assert GatewayClient(sock_path, user="bob").ping()["pong"]
+
+    def test_split_reads_reassemble(self, daemon):
+        """A request dribbled in byte-by-byte is still one request."""
+        server, sock_path, sim = daemon
+        frame = _v1_request(5, "ping", {"user": "alice"})
+        s = _raw_conn(sock_path)
+        try:
+            for i in range(len(frame)):
+                s.sendall(frame[i:i + 1])
+                time.sleep(0.0005 if i < 8 else 0)
+            resp = json.loads(_recv_raw_frame(s))
+            assert resp["id"] == 5 and resp["ok"] and resp["result"]["pong"]
+        finally:
+            s.close()
+
+    def test_pipelined_requests_each_get_a_reply(self, daemon):
+        server, sock_path, sim = daemon
+        s = _raw_conn(sock_path)
+        try:
+            s.sendall(_v1_request(1, "ping", {"user": "a"})
+                      + _v1_request(2, "queue", {"user": "a"})
+                      + _v1_request(3, "ping", {"user": "a"}))
+            ids = [json.loads(_recv_raw_frame(s))["id"] for _ in range(3)]
+            assert ids == [1, 2, 3]
+        finally:
+            s.close()
+
+
+class TestV1ByteIdentity:
+    """An old (PR-9) client must not be able to tell the new daemon from
+    the old one: same request shape in, byte-identical frames out."""
+
+    def test_queue_frame_bytes_match_v1_encoding(self, daemon):
+        server, sock_path, sim = daemon
+        GatewayClient(sock_path, user="alice").submit_batch(
+            [_job(name=f"b{i}") for i in range(4)], eco=False)
+        expected_rows = sim.queue()
+        expected = json.dumps(
+            {"id": 9, "ok": True, "result": expected_rows},
+            separators=(",", ":"),
+        ).encode("utf-8")
+        s = _raw_conn(sock_path)
+        try:
+            # the exact v1 request: params carry only the caller user
+            s.sendall(_v1_request(9, "queue", {"user": "alice"}))
+            payload = _recv_raw_frame(s)
+        finally:
+            s.close()
+        assert payload == expected
+        # and the cached-frame fast path (second request) is identical too
+        s = _raw_conn(sock_path)
+        try:
+            s.sendall(_v1_request(9, "queue", {"user": "bob"}))
+            assert _recv_raw_frame(s) == expected
+        finally:
+            s.close()
+
+    def test_v1_client_never_sees_generations(self, daemon):
+        server, sock_path, sim = daemon
+        s = _raw_conn(sock_path)
+        try:
+            s.sendall(_v1_request(1, "queue", {"user": "alice"}))
+            resp = json.loads(_recv_raw_frame(s))
+        finally:
+            s.close()
+        assert isinstance(resp["result"], list)  # not a v2 wrapper dict
+
+
+class _V1StubServer:
+    """A daemon that predates protocol v2: ignores filters/since and
+    answers ``queue`` with the plain full row list."""
+
+    def __init__(self, rows, sock_path):
+        self.rows = rows
+        self.sock_path = sock_path
+        self._listener = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        self._listener.bind(sock_path)
+        self._listener.listen(8)
+        self._stop = threading.Event()
+        threading.Thread(target=self._loop, daemon=True).start()
+
+    def close(self):
+        self._stop.set()
+        self._listener.close()
+
+    def _loop(self):
+        self._listener.settimeout(0.2)
+        while not self._stop.is_set():
+            try:
+                conn, _ = self._listener.accept()
+            except socket.timeout:
+                continue
+            except OSError:
+                return
+            try:
+                req = gw.recv_frame(conn)
+                if req is None:
+                    continue
+                result = self.rows if req.get("method") == "queue" else {}
+                gw.send_frame(conn, {"id": req.get("id"), "ok": True,
+                                     "result": result})
+            except OSError:
+                pass
+            finally:
+                conn.close()
+
+
+class TestV2ClientAgainstV1Daemon:
+    def test_filters_fall_back_to_local_application(self, tmp_path):
+        rows = [
+            {"jobid": "1", "user": "alice", "state": "RUNNING", "name": "a"},
+            {"jobid": "2", "user": "bob", "state": "PENDING", "name": "b"},
+            {"jobid": "3", "user": "alice", "state": "PENDING", "name": "c"},
+        ]
+        stub = _V1StubServer(rows, str(tmp_path / "v1.sock"))
+        try:
+            c = GatewayClient(stub.sock_path, user="alice")
+            got = c.queue_filtered(user="alice")
+            assert [r["jobid"] for r in got] == ["1", "3"]
+            assert c._server_v2 is False  # stops sending v2 markers
+            assert c.queue_filtered(states=["PENDING"]) == [rows[1], rows[2]]
+            assert c.queue() == rows
+        finally:
+            stub.close()
+
+
+class TestDeltaProtocol:
+    def test_unchanged_short_circuit(self, daemon):
+        server, sock_path, sim = daemon
+        c = GatewayClient(sock_path, user="alice")
+        c.submit_batch([_job(name="x")], eco=False)
+        first = c.queue()
+        before = server.snapshots.unchanged_hits
+        again = c.queue()
+        assert again == first
+        assert server.snapshots.unchanged_hits == before + 1
+
+    def test_delta_materializes_to_fresh_snapshot(self, daemon):
+        server, sock_path, sim = daemon
+        c = GatewayClient(sock_path, user="alice")
+        c.submit_batch([_job(name=f"j{i}", duration=9000) for i in range(8)],
+                       eco=False)
+        c.queue()  # view at generation g0
+        # one newcomer among 8 survivors: the delta (1 add) is far smaller
+        # than the full 9-row snapshot, so the server ships the delta
+        c.submit_batch([_job(name="late", duration=9000)], eco=False)
+        before = server.snapshots.delta_hits
+        via_delta = c.queue()
+        assert server.snapshots.delta_hits == before + 1
+        fresh = GatewayClient(sock_path, user="alice").queue()
+        assert via_delta == fresh  # same rows, same order
+
+    def test_far_behind_client_gets_full_snapshot(self, daemon):
+        server, sock_path, sim = daemon
+        c = GatewayClient(sock_path, user="alice")
+        c.submit_batch([_job(name="seed", duration=30000)], eco=False)
+        c.queue()
+        # burn through more generations than the encoder's delta history
+        for i in range(gw.DELTA_HISTORY + 3):
+            c.submit_batch([_job(name=f"g{i}", duration=30000)], eco=False)
+            GatewayClient(sock_path, user="alice").queue()  # re-encode each gen
+        assert c.queue() == GatewayClient(sock_path, user="alice").queue()
+
+    def test_removals_travel_as_deltas(self, daemon):
+        server, sock_path, sim = daemon
+        c = GatewayClient(sock_path, user="alice")
+        r = c.submit_batch([_job(name=f"d{i}", duration=9000)
+                            for i in range(4)], eco=False, coalesce=False)
+        assert len(c.queue()) == 4
+        c.cancel(r["base_ids"][:1])
+        rows = c.queue()
+        assert rows == GatewayClient(sock_path, user="alice").queue()
+        assert len(rows) == 3
+
+    def test_stale_view_is_resynced_defensively(self, daemon):
+        server, sock_path, sim = daemon
+        c = GatewayClient(sock_path, user="alice")
+        c.submit_batch([_job(name="r", duration=9000)], eco=False)
+        c.queue()
+        # corrupt the client's view: claim a generation the server never
+        # produced — the client must fall back to a full snapshot
+        view = c._views[EMPTY_FILTER_KEY]
+        view.generation = 999_999
+        assert c.queue() == GatewayClient(sock_path, user="alice").queue()
+
+
+class TestFilterPushdown:
+    def test_user_filter_matches_local_filtering(self, daemon):
+        server, sock_path, sim = daemon
+        alice = GatewayClient(sock_path, user="alice")
+        alice.submit_batch([_job(name=f"a{i}", duration=9000)
+                            for i in range(3)], eco=False)
+        sim.default_user = "bob"
+        alice.submit_batch([_job(name="b0", duration=9000)], eco=False)
+        sim.default_user = "alice"
+        full = alice.queue()
+        mine = alice.queue_filtered(user="alice")
+        assert mine == [r for r in full if r["user"] == "alice"]
+        assert len(mine) == 3
+
+    def test_states_and_ids_filters(self, daemon):
+        server, sock_path, sim = daemon
+        c = GatewayClient(sock_path, user="alice")
+        r = c.submit_batch([_job(name=f"s{i}", duration=9000)
+                            for i in range(5)], eco=False)
+        running = c.queue_filtered(states=["RUNNING"])
+        assert all(row["state"] == "RUNNING" for row in running)
+        want = r["base_ids"][0]
+        picked = c.queue_filtered(ids=[want])
+        assert picked and all(
+            row["jobid"] == want or row["jobid"].startswith(f"{want}_")
+            for row in picked
+        )
+
+    def test_filtered_deltas_stay_consistent(self, daemon):
+        server, sock_path, sim = daemon
+        c = GatewayClient(sock_path, user="alice")
+        c.submit_batch([_job(name=f"f{i}", duration=300) for i in range(4)],
+                       eco=False)
+        c.queue_filtered(user="alice")
+        c.advance(600)  # all four finish
+        assert c.queue_filtered(user="alice") == []
+
+    def test_canonical_key_and_row_filter_round_trip(self):
+        key = canonical_filter_key(
+            {"user": "u", "states": ["running", "PENDING"], "ids": ["7", "7"]}
+        )
+        assert key == ("u", None, ("7",), ("PENDING", "RUNNING"))
+        pred = row_filter(key)
+        assert pred({"jobid": "7_3", "user": "u", "state": "RUNNING"})
+        assert not pred({"jobid": "8", "user": "u", "state": "RUNNING"})
+        assert not pred({"jobid": "7_3", "user": "v", "state": "RUNNING"})
+        assert canonical_filter_key({}) == EMPTY_FILTER_KEY
+        assert canonical_filter_key(None) == EMPTY_FILTER_KEY
+
+
+class TestQueueViewOrdering:
+    def test_append_rule_matches_server_side_simulation(self):
+        view = _QueueView(1, [{"jobid": "1"}, {"jobid": "2"}, {"jobid": "3"}])
+        view.apply({"add": [{"jobid": "4"}], "remove": ["2"],
+                    "update": [{"jobid": "3", "state": "RUNNING"}]}, None)
+        assert view.order == ["1", "3", "4"]
+        assert view.by_id["3"]["state"] == "RUNNING"
+
+    def test_explicit_order_wins(self):
+        view = _QueueView(1, [{"jobid": "1"}, {"jobid": "2"}])
+        view.apply({"add": [{"jobid": "9"}]}, ["9", "2", "1"])
+        assert [r["jobid"] for r in view.rows()] == ["9", "2", "1"]
+
+    def test_inconsistent_delta_raises(self):
+        view = _QueueView(1, [{"jobid": "1"}])
+        with pytest.raises(KeyError):
+            view.apply({"update": [{"jobid": "77"}]}, None)
+        view = _QueueView(1, [{"jobid": "1"}])
+        with pytest.raises(KeyError):
+            view.apply({}, ["1", "ghost"])
+
+
+class TestBoundedEventFanout:
+    def test_slow_subscriber_drops_instead_of_blocking(self, daemon,
+                                                       monkeypatch):
+        server, sock_path, sim = daemon
+        monkeypatch.setattr(gw, "EVENT_QUEUE_CAP", 8)
+        c = GatewayClient(sock_path, user="alice")
+        # keep the simulated queue non-empty for the whole test, or the
+        # stream would end itself ("queue drained") before the flood
+        c.submit_batch([_job(name="anchor", duration=100_000)], eco=False)
+        # subscribe but never read: the subscriber's bounded queue fills
+        s = _raw_conn(sock_path)
+        try:
+            s.sendall(_v1_request(1, "events_subscribe",
+                                  {"user": "slow", "duration_s": 60.0,
+                                   "poll_s": 0.01}))
+            deadline = time.monotonic() + 5.0
+            while not server._subs and time.monotonic() < deadline:
+                time.sleep(0.01)
+            assert server._subs, "subscription never registered"
+            # generate far more events than the queue holds; the bus
+            # callback (and the submitting client) must never block
+            c.submit_batch([_job(name=f"e{i}", duration=60)
+                            for i in range(30)], eco=False)
+            t0 = time.monotonic()
+            c.advance(3600)  # 30 starts + 30 finishes while nobody reads
+            assert time.monotonic() - t0 < 5.0
+            assert server.events_dropped > 0
+        finally:
+            s.close()
+
+    def test_subscriber_stream_still_delivers_events(self, daemon):
+        server, sock_path, sim = daemon
+        c = GatewayClient(sock_path, user="alice")
+        c.submit_batch([_job(name="ev1", duration=120),
+                        _job(name="ev2", duration=240)],
+                       eco=False, coalesce=False)
+        # both completions stream out (the starts predate the subscribe)
+        got = list(c.events(poll_s=60, duration_s=30, max_events=2))
+        assert len(got) == 2
+        assert {e.name for e in got} == {"ev1", "ev2"}
+        assert all(e.state == "COMPLETED" for e in got)
+
+
+class TestWorkerBookkeeping:
+    def test_wait_workers_are_pruned(self, daemon):
+        server, sock_path, sim = daemon
+        c = GatewayClient(sock_path, user="alice")
+        for i in range(3):
+            r = c.submit_batch([_job(name=f"w{i}", duration=60)], eco=False)
+            out = c.wait(ids=r["base_ids"], poll_s=600)
+            assert out["ok"]
+        deadline = time.monotonic() + 5.0
+        while time.monotonic() < deadline:
+            c.ping()  # each pass lets the serve loop prune dead workers
+            if not server._workers:
+                break
+            time.sleep(0.05)
+        assert server._workers == []
